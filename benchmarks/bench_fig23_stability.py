@@ -1,0 +1,39 @@
+"""Figures 2-3: TTFT / TBT stability — on-device is stable, on-server has
+heavy tails (coefficient of variation + P99/median ratios).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import DEVICE_PROFILES, make_server_model
+
+from .common import Row, timed
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for trace in ("gpt", "deepseek", "command", "llama"):
+        def stats():
+            s = make_server_model(trace, np.random.default_rng(1))
+            t = s.sample_ttft(np.random.default_rng(2), 1000)
+            tbt = s.sample_tbt(np.random.default_rng(3), 1000)
+            return (
+                float(np.std(t) / np.mean(t)),
+                float(np.percentile(t, 99) / np.median(t)),
+                float(np.std(tbt) / np.mean(tbt)),
+            )
+        (cv, tailratio, tbt_cv), us = timed(stats)
+        rows.append(Row(
+            f"fig2_3/server_{trace}", us,
+            f"ttft_cv={cv:.2f};p99_over_median={tailratio:.2f};tbt_cv={tbt_cv:.2f}",
+        ))
+    dev = DEVICE_PROFILES["xiaomi14-qwen05b"]
+    def dstats():
+        lengths = np.full(1000, 64)
+        t = dev.ttft(lengths) + rng.normal(0, 0.01, 1000)
+        return float(np.std(t) / np.mean(t))
+    cv, us = timed(dstats)
+    rows.append(Row("fig2_3/device_xiaomi14", us,
+                    f"ttft_cv={cv:.3f} (stable, paper Fig.2)"))
+    return rows

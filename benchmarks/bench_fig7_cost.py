@@ -1,0 +1,62 @@
+"""Figure 7: end-to-end cost with vs without token-level migration
+(DiSCo-D / DiSCo-S vs their no-migration ablations).
+
+Paper: cost reductions up to 72.7% (device-constr.) / 83.6% (server-constr.).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    LengthDistribution,
+    MigrationConfig,
+    make_policy,
+    simulate_full,
+    summarize,
+)
+from repro.sim import (
+    DEVICE_PROFILES,
+    build_cost_model,
+    make_requests,
+    make_server_model,
+)
+
+from .common import Row, pct_reduction, timed
+
+N_REQ = 120
+BUDGET = 0.7
+
+
+def run() -> list[Row]:
+    rows = []
+    for trace in ("gpt", "llama", "deepseek", "command"):
+        for constraint, label in (("device", "DiSCo-D"), ("server", "DiSCo-S")):
+            for device_name in ("xiaomi14-qwen05b", "pixel7pro-bloom1b1"):
+                def cell():
+                    rng = np.random.default_rng(0)
+                    server = make_server_model(trace, rng)
+                    device = DEVICE_PROFILES[device_name]
+                    cm = build_cost_model(trace, device_name, constraint)
+                    lengths_profile = np.random.default_rng(1)
+                    from repro.sim import sample_prompt_lengths
+                    ld = LengthDistribution.from_samples(
+                        sample_prompt_lengths(lengths_profile, 2000)
+                    )
+                    pol = make_policy(cm, server.ttft, ld, BUDGET)
+                    reqs = make_requests(np.random.default_rng(2), N_REQ)
+                    base = summarize(simulate_full(
+                        reqs, pol, cm, server, device,
+                        np.random.default_rng(3), migration=None,
+                    ))
+                    mig = summarize(simulate_full(
+                        reqs, pol, cm, server, device,
+                        np.random.default_rng(3), migration=MigrationConfig(),
+                    ))
+                    return base.mean_cost, mig.mean_cost, mig.p99_tbt
+                (c0, c1, tbt), us = timed(cell)
+                rows.append(Row(
+                    f"fig7/{label}_{trace}_{device_name}", us,
+                    f"cost_reduction={pct_reduction(c0, c1):.1f}%"
+                    f";tbt_p99={tbt:.3f}s",
+                ))
+    return rows

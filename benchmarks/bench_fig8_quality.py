@@ -1,0 +1,77 @@
+"""Figure 8 / Appendix D: migration preserves generation quality within the
+bounds of the two endpoint models (Eq. 6).
+
+The paper uses LLM judges (GPT-4o etc.) — unavailable offline — so we use a
+log-likelihood quality proxy: score a generation by its mean per-token
+log-probability under an independently-initialized reference model. For each
+max-first-endpoint-length in {0, 4, 16, 64}, generate with migration
+(small->large and large->small) and check Eq. 6:
+
+    min(Q_A, Q_B) - tol <= Q_M <= max(Q_A, Q_B) + tol
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import forward, init_params
+from repro.serving import InferenceEngine
+
+from .common import Row, timed
+
+MAX_LEN = 48
+N_PROMPTS = 4
+
+
+def _score(ref_params, ref_cfg, prompt: np.ndarray, generated: list[int]) -> float:
+    """Mean log-prob of ``generated`` under the reference model."""
+    toks = np.concatenate([prompt, np.asarray(generated, np.int32)])[None, :]
+    logits, _ = forward(ref_params, ref_cfg, jnp.asarray(toks))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    idx = np.arange(len(prompt) - 1, len(toks[0]) - 1)
+    sel = logp[0, idx, jnp.asarray(generated)]
+    return float(sel.mean())
+
+
+def run() -> list[Row]:
+    dev_cfg, srv_cfg = paper_models.TINY_DEVICE, paper_models.TINY_SERVER
+    ref_cfg = paper_models.TINY_SERVER
+    a = InferenceEngine(dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), MAX_LEN)
+    b = InferenceEngine(srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)), MAX_LEN)
+    ref_params = init_params(ref_cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(0)
+    rows = []
+    gen_len = 24
+    for first, second, label in ((a, b, "small->large"), (b, a, "large->small")):
+        def sweep():
+            violations = 0
+            qms = []
+            for cut in (0, 4, 16):
+                for p in range(N_PROMPTS):
+                    prompt = rng.integers(0, 1024, size=8).astype(np.int32)
+                    qa = _score(ref_params, ref_cfg,
+                                prompt, first.generate(prompt, gen_len).tokens)
+                    qb = _score(ref_params, ref_cfg,
+                                prompt, second.generate(prompt, gen_len).tokens)
+                    if cut == 0:
+                        mtoks = second.generate(prompt, gen_len).tokens
+                    else:
+                        head = first.generate(prompt, cut).tokens
+                        _, cont = second.replay_then_continue(
+                            prompt, head, gen_len - cut
+                        )
+                        mtoks = head + list(cont)
+                    qm = _score(ref_params, ref_cfg, prompt, mtoks)
+                    qms.append(qm)
+                    tol = 0.35 * abs(max(qa, qb) - min(qa, qb)) + 0.3
+                    if not (min(qa, qb) - tol <= qm <= max(qa, qb) + tol):
+                        violations += 1
+            return violations, float(np.mean(qms))
+        (viol, qmean), us = timed(sweep)
+        rows.append(Row(
+            f"fig8/quality_bounds_{label}", us,
+            f"violations={viol}/{3*N_PROMPTS};mean_quality={qmean:.3f}",
+        ))
+    return rows

@@ -1,0 +1,33 @@
+"""Table 1: Pearson correlation between prompt length and TTFT.
+
+Paper: |rho| <= 0.04 for all four server traces; rho = 0.84 on-device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import DEVICE_PROFILES, SERVER_TRACES, make_server_model, sample_prompt_lengths
+
+from .common import Row, timed
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    lengths = sample_prompt_lengths(rng, 1000)
+    rows = []
+    for trace in SERVER_TRACES:
+        def corr():
+            server = make_server_model(trace, np.random.default_rng(1))
+            ttft = server.sample_ttft(np.random.default_rng(2), lengths.size)
+            return float(np.corrcoef(lengths, ttft)[0, 1])
+        r, us = timed(corr)
+        rows.append(Row(f"table1/pearson_server_{trace}", us, f"rho={r:+.4f}"))
+    dev = DEVICE_PROFILES["pixel7pro-bloom1b1"]
+    def dev_corr():
+        # multiplicative runtime noise (thermal/governor effects on phones)
+        r3 = np.random.default_rng(3)
+        jitter = r3.lognormal(0.0, 0.35, lengths.size)
+        return float(np.corrcoef(lengths, dev.ttft(lengths) * jitter)[0, 1])
+    r, us = timed(dev_corr)
+    rows.append(Row("table1/pearson_device_bloom1b1", us, f"rho={r:+.4f} (paper: 0.8424)"))
+    return rows

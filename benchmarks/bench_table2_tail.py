@@ -1,0 +1,61 @@
+"""Table 2: tail (P99) TTFT reduction vs stochastic dispatch, averaged over
+the budget range — 4 traces × 3 device configs × 2 constraints.
+
+Paper band: 0-52% (most cells 11-52%).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Endpoint,
+    LengthDistribution,
+    StochasticPolicy,
+    make_policy,
+    simulate_ttft,
+)
+from repro.sim import (
+    DEVICE_PROFILES,
+    build_cost_model,
+    make_server_model,
+    sample_prompt_lengths,
+)
+
+from .common import Row, pct_reduction, timed
+
+BUDGETS = (0.1, 0.3, 0.5, 0.7, 0.9)
+N_REQ = 2000
+
+
+def run() -> list[Row]:
+    rows = []
+    for trace in ("gpt", "llama", "deepseek", "command"):
+        for device_name, device in DEVICE_PROFILES.items():
+            for constraint in ("server", "device"):
+                def cell():
+                    rng = np.random.default_rng(0)
+                    server = make_server_model(trace, rng)
+                    lengths = sample_prompt_lengths(rng, N_REQ)
+                    ld = LengthDistribution.from_samples(lengths)
+                    cm = build_cost_model(trace, device_name, constraint)
+                    cons = (
+                        Endpoint.SERVER if constraint == "server" else Endpoint.DEVICE
+                    )
+                    reds = []
+                    for b in BUDGETS:
+                        disco = make_policy(cm, server.ttft, ld, b)
+                        stoch = StochasticPolicy(cons, b, seed=1)
+                        p_d = np.percentile(
+                            simulate_ttft(lengths, disco, server, device,
+                                          np.random.default_rng(2))["ttft"], 99)
+                        p_s = np.percentile(
+                            simulate_ttft(lengths, stoch, server, device,
+                                          np.random.default_rng(2))["ttft"], 99)
+                        reds.append(pct_reduction(p_s, p_d))
+                    return float(np.mean(reds))
+                red, us = timed(cell)
+                rows.append(Row(
+                    f"table2/{trace}_{device_name}_{constraint}", us,
+                    f"tail_ttft_reduction={red:.2f}%",
+                ))
+    return rows

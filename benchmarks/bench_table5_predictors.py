@@ -1,0 +1,39 @@
+"""Appendix C / Table 5: lightweight TTFT predictors are NOT accurate enough
+(MAPE 20-54% in the paper) — the negative result motivating DiSCo's
+distribution-based scheduling.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.predictors import (
+    boosted_stumps_forecast,
+    exponential_smoothing_forecast,
+    mae,
+    mape,
+    moving_average_forecast,
+)
+from repro.sim import SERVER_TRACES
+
+from .common import Row, timed
+
+
+def run() -> list[Row]:
+    rows = []
+    methods = {
+        "moving_average": moving_average_forecast,
+        "exp_smoothing": exponential_smoothing_forecast,
+        "boosted_stumps": boosted_stumps_forecast,
+    }
+    for trace, spec in SERVER_TRACES.items():
+        series = spec.sample(np.random.default_rng(0), 1000)
+        for mname, fn in methods.items():
+            (preds), us = timed(fn, series)
+            half = series.size // 2  # evaluate on the second half (held out)
+            m1 = mape(series[half:], preds[half:])
+            m2 = mae(series[half:], preds[half:])
+            rows.append(Row(
+                f"table5/{trace}_{mname}", us,
+                f"MAPE={m1:.1f}%;MAE={m2:.3f}s",
+            ))
+    return rows

@@ -1,0 +1,35 @@
+"""Shared benchmark helpers: timing + row emission.
+
+Every bench module exposes ``run() -> list[Row]``; ``benchmarks/run.py``
+prints one CSV line per row: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
+    """Returns (result_of_last_call, microseconds_per_call)."""
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def pct_reduction(base: float, new: float) -> float:
+    return 100.0 * (base - new) / max(base, 1e-12)

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (stdout). Select subsets with
+``python -m benchmarks.run table2 fig7``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (
+    bench_fig23_stability,
+    bench_roofline_endpoints,
+    bench_table4_coldstart,
+    bench_fig5_intervals,
+    bench_fig6_ttft,
+    bench_fig7_cost,
+    bench_fig8_quality,
+    bench_fig9_overhead,
+    bench_table1_correlation,
+    bench_table2_tail,
+    bench_table3_tbt,
+    bench_table5_predictors,
+    bench_table6_flops,
+)
+
+MODULES = {
+    "table1": bench_table1_correlation,
+    "fig2_3": bench_fig23_stability,
+    "fig5": bench_fig5_intervals,
+    "fig6": bench_fig6_ttft,
+    "table2": bench_table2_tail,
+    "table3": bench_table3_tbt,
+    "fig7": bench_fig7_cost,
+    "fig9": bench_fig9_overhead,
+    "table5": bench_table5_predictors,
+    "table6": bench_table6_flops,
+    "fig8": bench_fig8_quality,
+    "roofline_endpoints": bench_roofline_endpoints,
+    "table4": bench_table4_coldstart,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for key in wanted:
+        mod = MODULES[key]
+        for row in mod.run():
+            print(row.csv(), flush=True)
+    print(f"# total_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

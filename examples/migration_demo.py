@@ -1,0 +1,81 @@
+"""Token-level migration walkthrough (Fig. 4): prints the delivery timeline
+of one request as generation hands off between endpoints, showing the buffer
+masking the migration latency.
+
+    PYTHONPATH=src python examples/migration_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (
+    CostModel,
+    Endpoint,
+    MigrationConfig,
+    MigrationController,
+    TokenBuffer,
+)
+
+
+def main() -> None:
+    # device decode is 10x the server price -> migrate device -> server
+    cm = CostModel(
+        server_prefill=1.0, server_decode=1.0,
+        device_prefill_energy=10.0, device_decode_energy=10.0,
+        exchange_rate=1.0,
+    )
+    cfg = MigrationConfig(consumption_rate=4.8, network_rtt=0.05)
+    ctrl = MigrationController(cm, cfg)
+
+    prompt_len, total_tokens = 60, 80
+    r_gen_device, r_gen_server = 14.0, 30.0   # tokens/s
+    t = 0.42                                  # device won the race at 420 ms
+    buf = TokenBuffer(cfg.consumption_rate, t)
+    print("Fig.4 walkthrough — device wins prefill, server is the cheap decoder\n")
+    print(f"t={t:6.2f}s  first token (device)")
+
+    plan = ctrl.plan(
+        current=Endpoint.DEVICE, prompt_len=prompt_len, generated=1,
+        expected_total_tokens=total_tokens, target_prefill_rate=400.0,
+    )
+    assert plan is not None
+    print(f"           migration plan: target={plan.target.value}, "
+          f"buffer B={plan.buffer_needed} tokens (Eq.5: r_c x t_m="
+          f"{cfg.consumption_rate:.1f}x{plan.est_handoff_time:.2f}s), "
+          f"projected savings={plan.projected_savings:.1f} units")
+
+    gen, handoff_at = 1, None
+    while buf.occupancy(t) < plan.buffer_needed:
+        t += 1.0 / r_gen_device
+        buf.push(t)
+        gen += 1
+    handoff_at = t
+    print(f"t={t:6.2f}s  buffer holds {buf.occupancy(t)} undelivered tokens "
+          f">= B={plan.buffer_needed} -> hand-off starts (token {gen})")
+
+    ready = handoff_at + plan.est_handoff_time
+    while t + 1.0 / r_gen_device < ready:       # Row A keeps generating
+        t += 1.0 / r_gen_device
+        buf.push(t)
+        gen += 1
+    print(f"t={ready:6.2f}s  server re-prefilled {prompt_len}+{gen} token IDs "
+          f"(no KV transfer) -> Row B takes over")
+    t = ready
+    while gen < total_tokens:
+        t += 1.0 / r_gen_server
+        buf.push(t)
+        gen += 1
+    print(f"t={t:6.2f}s  generation done on server\n")
+
+    tbts = buf.tbt_series()
+    print(f"delivered {buf.n_tokens} tokens; TBT mean={np.mean(tbts):.3f}s "
+          f"max={np.max(tbts):.3f}s (pace 1/r_c={1/cfg.consumption_rate:.3f}s)")
+    print(f"tokens delayed by migration: {buf.delayed_tokens()} — "
+          "the buffer fully masked the hand-off" if buf.delayed_tokens() == 0
+          else f"tokens delayed: {buf.delayed_tokens()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Quickstart: DiSCo's dispatch + migration on calibrated traces in <30 s.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the whole public API: trace calibration, cost model, Algorithm 1
+regime selection, both dispatch policies, the TTFT race, migration and the
+delivery buffer — and prints DiSCo vs the paper's baselines.
+"""
+import numpy as np
+
+from repro.core import (
+    Endpoint,
+    LengthDistribution,
+    MigrationConfig,
+    SingleEndpointPolicy,
+    StochasticPolicy,
+    make_policy,
+    simulate_full,
+    simulate_ttft,
+    summarize,
+)
+from repro.sim import (
+    DEVICE_PROFILES,
+    build_cost_model,
+    make_requests,
+    make_server_model,
+    sample_prompt_lengths,
+)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    trace, device_name = "gpt", "xiaomi14-qwen05b"
+    server = make_server_model(trace, rng)          # profiled server TTFT CDF
+    device = DEVICE_PROFILES[device_name]           # measured phone rates
+    lengths = sample_prompt_lengths(rng, 2000)      # Alpaca-like workload
+    ld = LengthDistribution.from_samples(lengths)
+
+    print(f"=== DiSCo quickstart: {trace} x {device.name}")
+    for constraint in ("server", "device"):
+        cm = build_cost_model(trace, device_name, constraint)
+        print(f"\n--- {constraint}-constrained (Algorithm 1 -> "
+              f"{cm.regime().value}); budget sweep, mean/p99 TTFT [s]")
+        print(f"{'policy':<12} {'b':>4} {'mean':>8} {'p99':>8}")
+        for b in (0.2, 0.5, 0.8):
+            disco = make_policy(cm, server.ttft, ld, b)
+            cons = Endpoint.SERVER if constraint == "server" else Endpoint.DEVICE
+            stoch = StochasticPolicy(cons, b, seed=1)
+            for name, pol in (("DiSCo", disco), ("Stoch", stoch)):
+                r = simulate_ttft(lengths, pol, server, device,
+                                  np.random.default_rng(2))
+                print(f"{name:<12} {b:>4.1f} {r['ttft'].mean():>8.3f} "
+                      f"{np.percentile(r['ttft'], 99):>8.3f}")
+        for name, pol in (
+            ("vLLM", SingleEndpointPolicy(Endpoint.SERVER)),
+            ("llama.cpp", SingleEndpointPolicy(Endpoint.DEVICE)),
+        ):
+            r = simulate_ttft(lengths, pol, server, device, np.random.default_rng(2))
+            print(f"{name:<12} {'-':>4} {r['ttft'].mean():>8.3f} "
+                  f"{np.percentile(r['ttft'], 99):>8.3f}")
+
+    # --- migration: cost with/without (Fig. 7) -----------------------------
+    cm = build_cost_model(trace, device_name, "device")
+    reqs = make_requests(np.random.default_rng(3), 200)
+    pol = SingleEndpointPolicy(Endpoint.DEVICE)
+    base = summarize(simulate_full(reqs, pol, cm, server, device,
+                                   np.random.default_rng(4), migration=None))
+    mig = summarize(simulate_full(reqs, pol, cm, server, device,
+                                  np.random.default_rng(4),
+                                  migration=MigrationConfig()))
+    red = 100 * (base.mean_cost - mig.mean_cost) / base.mean_cost
+    print(f"\n--- token-level migration (r_c=4.8 tok/s)")
+    print(f"cost/request: {base.mean_cost:.3e} -> {mig.mean_cost:.3e} "
+          f"({red:.1f}% saved; paper: up to 72.7%)")
+    print(f"p99 TBT: {mig.p99_tbt:.3f}s (pace 1/r_c = 0.208s) — "
+          f"delivery uninterrupted, {mig.mean_delayed:.1f} tokens delayed on avg")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end driver: DiSCo serving over REAL JAX engines with batched
+requests — the device endpoint is a small transformer, the server endpoint a
+larger one behind a simulated network + continuous-batching queue.
+
+    PYTHONPATH=src python examples/serve_disco.py --requests 12
+
+Demonstrates (1) dispatch racing with real prefill wall-times, (2) token-ID
+migration with re-prefill on the target, (3) the delivery buffer keeping TBT
+smooth, and (4) the server-side BatchedServer that creates the queueing
+tails DiSCo protects against.
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import paper_models
+from repro.launch.serve import build_stack
+from repro.models import init_params
+from repro.serving import BatchedServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=20)
+    args = ap.parse_args()
+
+    # --- 1. the server-side reality: continuous batching queues requests ---
+    srv_cfg = paper_models.TINY_SERVER
+    bs = BatchedServer(srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)),
+                       max_slots=2, max_len=96)
+    rng = np.random.default_rng(0)
+    rids = [bs.submit(rng.integers(0, 1024, size=8).astype(np.int32), 8)
+            for _ in range(6)]
+    bs.run_to_completion()
+    ttfts = sorted(bs.ttft(r) for r in rids)
+    print("BatchedServer TTFTs (2 slots, 6 requests) — queueing tail:")
+    print("  " + "  ".join(f"{t*1e3:.0f}ms" for t in ttfts))
+
+    # --- 2. DiSCo over device+server engines -------------------------------
+    disco, dev_engine, srv_engine = build_stack("server", budget=0.5)
+    prompts = [
+        rng.integers(0, 1024, size=int(n)).astype(np.int32)
+        for n in np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64)
+    ]
+    print(f"\nDiSCo serving {args.requests} requests "
+          f"(device={dev_engine.cfg.name}, server={srv_engine.cfg.name}):")
+    results = []
+    for i, p in enumerate(prompts):
+        r = disco.serve(p, args.max_new)
+        results.append(r)
+        tbt_max = max(r.tbt_series) if r.tbt_series else 0.0
+        print(f"  req{i:02d} len={len(p):3d} ttft={r.ttft*1e3:7.1f}ms "
+              f"winner={r.winner.value:6s} migrated={str(r.migrated):5s} "
+              f"tokens={len(r.tokens):3d} max_tbt={tbt_max*1e3:6.1f}ms")
+    ttfts = np.array([r.ttft for r in results])
+    print(f"\n  mean TTFT {ttfts.mean()*1e3:.1f}ms | p99 {np.percentile(ttfts,99)*1e3:.1f}ms"
+          f" | migrations {sum(r.migrated for r in results)}/{len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+from . import (
+    arctic_480b,
+    chameleon_34b,
+    codeqwen1p5_7b,
+    gemma3_1b,
+    hubert_xlarge,
+    hymba_1p5b,
+    mamba2_2p7b,
+    minicpm3_4b,
+    nemotron_4_340b,
+    olmoe_1b_7b,
+    paper_models,
+)
+from .shapes import INPUT_SHAPES, InputShape, input_specs, shape_supported
+
+_MODULES = {
+    "arctic-480b": arctic_480b,
+    "chameleon-34b": chameleon_34b,
+    "gemma3-1b": gemma3_1b,
+    "mamba2-2.7b": mamba2_2p7b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "hubert-xlarge": hubert_xlarge,
+    "nemotron-4-340b": nemotron_4_340b,
+    "minicpm3-4b": minicpm3_4b,
+    "codeqwen1.5-7b": codeqwen1p5_7b,
+    "hymba-1.5b": hymba_1p5b,
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = _MODULES[arch]
+    return mod.SMOKE if smoke else mod.FULL
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "get_config",
+    "input_specs",
+    "shape_supported",
+    "paper_models",
+]

@@ -1,0 +1,38 @@
+"""arctic-480b [moe] — Snowflake Arctic base: 35L, d_model 7168, 56 heads
+(GQA kv=8), per-expert d_ff 4864, vocab 32000, MoE 128 experts top-2 with a
+dense FFN residual branch. [hf:Snowflake/snowflake-arctic-base]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    vocab=32000,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    act="swiglu",
+    n_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    num_microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=96,
+    act="swiglu",
+    n_experts=4,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    capacity_factor=2.0,  # = E/k: drop-free for exact decode/forward parity
+    remat=False,
+)

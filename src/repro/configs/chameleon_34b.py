@@ -1,0 +1,35 @@
+"""chameleon-34b [vlm] — early-fusion mixed-modal decoder: 48L, d_model 8192,
+64 heads (GQA kv=8), d_ff 22016, vocab 65536 (text + VQ image codes in one
+codebook — image tokens are ordinary ids, so the frontend "stub" is simply
+token ids from the extended vocab). QK-norm per the Chameleon recipe.
+[arXiv:2405.09818]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    vocab=65536,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    act="swiglu",
+    qk_norm=True,
+    num_microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="chameleon-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=256,
+    act="swiglu",
+    qk_norm=True,
+    remat=False,
+)

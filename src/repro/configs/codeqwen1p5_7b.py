@@ -1,0 +1,32 @@
+"""codeqwen1.5-7b [dense] — 32L, d_model 4096, 32 heads (kv=32), d_ff 13440,
+vocab 92416 (Qwen1.5 architecture). This is the paper's "7B-class on-device"
+regime (§2.3: an iPhone running a 7B LLM lasts < 2 h).
+[hf:Qwen/CodeQwen1.5-7B]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    vocab=92416,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    act="swiglu",
+    num_microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="codeqwen-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    act="swiglu",
+    remat=False,
+)

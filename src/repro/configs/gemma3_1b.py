@@ -1,0 +1,40 @@
+"""gemma3-1b [dense] — 26L, d_model 1152, 4 heads (GQA kv=1), d_ff 6912,
+vocab 262144; 5:1 local:global attention pattern (sliding window 512 on local
+layers), 128k+ context. [hf:google/gemma-3-1b-pt]
+
+This is the canonical *device endpoint* for DiSCo serving examples.
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    vocab=262144,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=6912,
+    act="swiglu",
+    attention="pattern",
+    window=512,
+    global_interval=6,   # layers 6,12,18,24 are global (5 local : 1 global)
+    rope_theta=1_000_000.0,
+    num_microbatches=1,
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=256,
+    act="swiglu",
+    attention="pattern",
+    window=8,
+    global_interval=2,
+    remat=False,
+)

@@ -1,0 +1,37 @@
+"""hubert-xlarge [audio] — encoder-only transformer backbone: 48L,
+d_model 1280, 16 heads (kv=16), d_ff 5120, vocab 504 (k-means cluster codes
+for masked prediction). The conv/mel frontend is a STUB — ``input_specs``
+provides precomputed frame embeddings of shape (batch, frames, d_model).
+Bidirectional attention; no decode phase. [arXiv:2106.07447]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    vocab=504,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    act="gelu",
+    is_encoder=True,
+    embed_inputs=False,   # frontend embeddings come in directly
+    num_microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=128,
+    vocab=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    act="gelu",
+    is_encoder=True,
+    embed_inputs=False,
+    remat=False,
+)

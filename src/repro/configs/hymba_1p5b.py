@@ -1,0 +1,53 @@
+"""hymba-1.5b [hybrid] — 32L, d_model 1600, 25 attention heads (GQA kv=5,
+head_dim 64) in PARALLEL with Mamba(SSD) heads in every layer, d_ff 5504,
+vocab 32001, ssm_state 16. Attention uses a sliding window (Hymba keeps a
+few global layers; we window all attention heads — the SSM path carries
+global context — noted as a TPU-adaptation in DESIGN.md). [arXiv:2411.13676]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    vocab=32001,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    act="swiglu",
+    hybrid=True,
+    attention="window",
+    window=1024,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=128,
+    num_microbatches=1,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke",
+    family="hybrid",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=5,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=256,
+    act="swiglu",
+    hybrid=True,
+    attention="window",
+    window=8,
+    ssm_state=8,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=16,
+    remat=False,
+)

@@ -1,0 +1,37 @@
+"""mamba2-2.7b [ssm] — attention-free SSD (state-space duality): 64L,
+d_model 2560, vocab 50280, d_state 128, expand 2 (d_inner 5120, 80 heads of
+dim 64). [arXiv:2405.21060]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    vocab=50280,
+    n_heads=0,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=128,
+    num_microbatches=1,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=0,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=32,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=16,
+    remat=False,
+)

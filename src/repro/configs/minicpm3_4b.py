@@ -1,0 +1,45 @@
+"""minicpm3-4b [dense, MLA] — 62L, d_model 2560, 40 heads, d_ff 6400,
+vocab 73448, multi-head latent attention (q_lora 768, kv_lora 256,
+qk_nope 64, qk_rope 32, v_head 64). The MLA-compressed KV cache makes this
+the smallest decode memory footprint among the dense archs.
+[hf:openbmb/MiniCPM3-4B]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    vocab=73448,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    act="swiglu",
+    use_mla=True,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    num_microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    act="swiglu",
+    use_mla=True,
+    q_lora_rank=48,
+    kv_lora_rank=32,
+    qk_nope_head_dim=16,
+    qk_rope_head_dim=8,
+    v_head_dim=16,
+    remat=False,
+)

@@ -1,0 +1,32 @@
+"""nemotron-4-340b [dense] — 96L, d_model 18432, 96 heads (GQA kv=8),
+d_ff 73728, vocab 256000, squared-ReLU MLP. The largest dense config;
+exercises 340B-parameter sharding + Adafactor training states.
+[arXiv:2402.16819]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    vocab=256000,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    act="squared_relu",
+    num_microbatches=16,
+)
+
+SMOKE = ModelConfig(
+    name="nemotron-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=192,
+    vocab=512,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=768,
+    act="squared_relu",
+    remat=False,
+)

@@ -1,0 +1,36 @@
+"""olmoe-1b-7b [moe] — 16L, d_model 2048, 16 heads (kv=16), per-expert
+d_ff 1024, vocab 50304, 64 experts top-8 (1B active / 7B total).
+[arXiv:2409.02060]
+"""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    vocab=50304,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    act="swiglu",
+    n_experts=64,
+    experts_per_token=8,
+    num_microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="olmoe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=128,
+    vocab=512,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    act="swiglu",
+    n_experts=4,
+    experts_per_token=2,
+    capacity_factor=2.0,  # = E/k: drop-free for exact decode/forward parity
+    remat=False,
+)

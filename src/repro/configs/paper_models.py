@@ -1,0 +1,31 @@
+"""The paper's own endpoint models (§5.1 / App. E.1), as runnable configs.
+
+FULL configs mirror the paper's stated hyperparameters (BLOOM-1.1B/560M,
+Qwen1.5-0.5B — all 24 layers; see App. E.1). TINY variants are CPU-runnable
+models used by the end-to-end serving examples, where an actual small JAX
+model plays the device endpoint and a larger one plays the server endpoint.
+"""
+from repro.models.config import ModelConfig
+
+BLOOM_1B1 = ModelConfig(
+    name="bloom-1.1b", family="dense", n_layers=24, d_model=1024, vocab=250880,
+    n_heads=16, n_kv_heads=16, d_ff=4096, act="gelu",
+)
+BLOOM_560M = ModelConfig(
+    name="bloom-560m", family="dense", n_layers=24, d_model=512, vocab=250880,
+    n_heads=8, n_kv_heads=8, d_ff=2048, act="gelu",
+)
+QWEN_05B = ModelConfig(
+    name="qwen1.5-0.5b", family="dense", n_layers=24, d_model=768, vocab=151936,
+    n_heads=12, n_kv_heads=12, d_ff=2048, act="swiglu",
+)
+
+# CPU-runnable stand-ins for the serving examples (device = small, server = big)
+TINY_DEVICE = ModelConfig(
+    name="tiny-device", family="dense", n_layers=2, d_model=128, vocab=1024,
+    n_heads=4, n_kv_heads=2, d_ff=256, act="swiglu", remat=False,
+)
+TINY_SERVER = ModelConfig(
+    name="tiny-server", family="dense", n_layers=4, d_model=256, vocab=1024,
+    n_heads=8, n_kv_heads=4, d_ff=512, act="swiglu", remat=False,
+)

@@ -1,0 +1,72 @@
+"""The four assigned input shapes + per-(arch,shape) applicability rules and
+ShapeDtypeStruct input specs for the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+__all__ = ["InputShape", "INPUT_SHAPES", "shape_supported", "input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not). Skips are documented in DESIGN.md."""
+    if shape.kind == "decode" and cfg.is_encoder:
+        return False, f"{cfg.name} is encoder-only: no autoregressive decode"
+    if shape.name == "long_500k":
+        subquadratic = cfg.has_ssm or cfg.attention in ("window", "pattern")
+        if not subquadratic:
+            return False, (
+                f"{cfg.name} is pure full-attention; long_500k requires "
+                "sub-quadratic attention (SSM/hybrid/sliding-window)"
+            )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step function
+    selected by ``shape.kind`` (weak-type-correct, shardable, no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    f = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+
+    def token_inputs():
+        if cfg.embed_inputs:
+            return S((b, s), i32)
+        return S((b, s, cfg.d_model), f)  # audio/VLM frontend embeddings (stub)
+
+    if shape.kind == "train":
+        specs = {"inputs": token_inputs(), "targets": S((b, s), i32)}
+        if cfg.is_encoder:
+            specs["loss_mask"] = S((b, s), jnp.bool_)  # HuBERT masked prediction
+        return specs
+    if shape.kind == "prefill":
+        return {"inputs": token_inputs()}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        # decode starts from a full cache: lengths = seq_len (the dry-run
+        # measures one new token against a KV/state of `seq_len` context)
+        return {"token": S((b,), i32), "cache": cache}
+    raise ValueError(shape.kind)

@@ -1,0 +1,48 @@
+"""DiSCo core: the paper's contribution (cost-aware dispatch + token-level
+migration for device-server cooperative LLM text streaming)."""
+from .cost import CostModel, Endpoint, Regime
+from .dispatch import (
+    DEFAULT_TAIL_RATIO,
+    DevicePolicy,
+    DispatchDecision,
+    DispatchPolicy,
+    ServerPolicy,
+    SingleEndpointPolicy,
+    StochasticPolicy,
+    make_policy,
+)
+from .distributions import EmpiricalCDF, LengthDistribution, lognormal_fit
+from .energy import (
+    BLOOM_1B1,
+    BLOOM_560M,
+    QWEN_05B,
+    DeviceModelSpec,
+    FlopsBreakdown,
+    energy_cost_per_token,
+    flops_per_token,
+)
+from .migration import MigrationConfig, MigrationController, MigrationPlan, TokenBuffer
+from .scheduler import DiSCoScheduler
+from .simulator import (
+    DeviceModel,
+    Request,
+    RequestResult,
+    ServerModel,
+    SimSummary,
+    simulate_full,
+    simulate_ttft,
+    summarize,
+)
+
+__all__ = [
+    "CostModel", "Endpoint", "Regime",
+    "DEFAULT_TAIL_RATIO", "DevicePolicy", "DispatchDecision", "DispatchPolicy",
+    "ServerPolicy", "SingleEndpointPolicy", "StochasticPolicy", "make_policy",
+    "EmpiricalCDF", "LengthDistribution", "lognormal_fit",
+    "BLOOM_1B1", "BLOOM_560M", "QWEN_05B", "DeviceModelSpec", "FlopsBreakdown",
+    "energy_cost_per_token", "flops_per_token",
+    "MigrationConfig", "MigrationController", "MigrationPlan", "TokenBuffer",
+    "DiSCoScheduler",
+    "DeviceModel", "Request", "RequestResult", "ServerModel", "SimSummary",
+    "simulate_full", "simulate_ttft", "summarize",
+]

@@ -1,0 +1,114 @@
+"""Unified cost model (§4.1).
+
+Combines monetary server costs (USD/token, split prefill/decode — commercial
+APIs price input and output tokens differently, App. E.2) with device energy
+costs, converted to a common unit via a user-tunable exchange rate λ.
+
+The dominant-cost *regime* (Algorithm 1) picks which dispatch policy applies:
+
+  device-constrained  iff  min(c_d^p, c_d^d) > max(c_s^p, c_s^d)
+  server-constrained  iff  max(c_s^p, c_s^d) > min(c_d^p, c_d^d)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Regime(enum.Enum):
+    DEVICE_CONSTRAINED = "device"
+    SERVER_CONSTRAINED = "server"
+
+
+class Endpoint(enum.Enum):
+    DEVICE = "device"
+    SERVER = "server"
+
+    @property
+    def other(self) -> "Endpoint":
+        return Endpoint.SERVER if self is Endpoint.DEVICE else Endpoint.DEVICE
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-token costs, all expressed in the unified (monetary) unit.
+
+    server_prefill / server_decode: USD per token (API pricing, App. E.2).
+    device_prefill_energy / device_decode_energy: energy units per token
+        (FLOPs-derived, App. E.1).
+    exchange_rate: λ — USD per energy unit; user-tunable (battery level,
+        charging status, spend preference).
+    """
+
+    server_prefill: float
+    server_decode: float
+    device_prefill_energy: float
+    device_decode_energy: float
+    exchange_rate: float = 1.0
+
+    def __post_init__(self):
+        for name in ("server_prefill", "server_decode",
+                     "device_prefill_energy", "device_decode_energy",
+                     "exchange_rate"):
+            v = getattr(self, name)
+            if not (v >= 0.0):
+                raise ValueError(f"{name} must be nonnegative, got {v}")
+
+    # -- unified per-token costs ------------------------------------------
+    @property
+    def device_prefill(self) -> float:
+        return self.device_prefill_energy * self.exchange_rate
+
+    @property
+    def device_decode(self) -> float:
+        return self.device_decode_energy * self.exchange_rate
+
+    def prefill_cost(self, endpoint: Endpoint) -> float:
+        return self.device_prefill if endpoint is Endpoint.DEVICE else self.server_prefill
+
+    def decode_cost(self, endpoint: Endpoint) -> float:
+        return self.device_decode if endpoint is Endpoint.DEVICE else self.server_decode
+
+    # -- Algorithm 1 -------------------------------------------------------
+    def regime(self) -> Regime:
+        if min(self.device_prefill, self.device_decode) > max(
+            self.server_prefill, self.server_decode
+        ):
+            return Regime.DEVICE_CONSTRAINED
+        return Regime.SERVER_CONSTRAINED
+
+    @property
+    def constrained_endpoint(self) -> Endpoint:
+        return (
+            Endpoint.DEVICE
+            if self.regime() is Regime.DEVICE_CONSTRAINED
+            else Endpoint.SERVER
+        )
+
+    # -- migration economics (§4.3, Eq. 4) ---------------------------------
+    def decode_cost_delta(self) -> float:
+        """Δc_decode = |c_s^d − c_d^d| (per-token decode cost difference)."""
+        return abs(self.server_decode - self.device_decode)
+
+    def cheaper_decode_endpoint(self) -> Endpoint:
+        return (
+            Endpoint.DEVICE
+            if self.device_decode <= self.server_decode
+            else Endpoint.SERVER
+        )
+
+    def request_cost(
+        self,
+        *,
+        server_prefill_tokens: float = 0.0,
+        server_decode_tokens: float = 0.0,
+        device_prefill_tokens: float = 0.0,
+        device_decode_tokens: float = 0.0,
+    ) -> float:
+        """Total unified cost of one request given token counts per phase/endpoint."""
+        return (
+            self.server_prefill * server_prefill_tokens
+            + self.server_decode * server_decode_tokens
+            + self.device_prefill * device_prefill_tokens
+            + self.device_decode * device_decode_tokens
+        )

@@ -1,0 +1,282 @@
+"""Dispatch controller: cost-aware request routing (§4.2, Algorithms 1-3).
+
+Two policies, selected by the cost regime (Algorithm 1):
+
+* Device-constrained (Algorithm 2 / Eq. 1-2): a *wait-time* policy. Every
+  request goes to the server immediately; the device starts local inference
+  only after a per-length wait w(l). Short prompts (cheap on device) start
+  immediately (w=0); the rest wait, with a hard cap w_tail reserved for tail
+  protection so that worst-case TTFT is bounded.
+
+* Server-constrained (Algorithm 3 / Eq. 3): a *length-threshold* policy.
+  Prompts shorter than l_th run device-only (server budget saved where the
+  device is fast anyway); longer prompts race both endpoints.
+
+Both satisfy the budget constraint E[I_c(l) * l] <= b * E[l] on the
+constrained endpoint c, where I_c(l) indicates that endpoint executing
+*prefill* for a prompt of length l.
+
+Deviation from the paper, documented: Algorithm 2 line 18 of the paper's
+pseudocode ("F(w*)·length_cost + (b − available_budget) = b") is dimensionally
+garbled. We implement the budget-exhaustion intent exactly: at the boundary
+length, pick w* so the *incremental* expected device-token spend over the
+w_tail baseline equals the remaining budget:
+
+    p(l)·l·(F(w_tail) − F(w*)) / E[l] = available_budget
+
+which reduces to w* = F^{-1}( F(w_tail) − available·E[l] / (p(l)·l) ), and has
+the right limits (available→0 ⇒ w*→w_tail; available→full ⇒ w*→0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .cost import CostModel, Endpoint, Regime
+from .distributions import EmpiricalCDF, LengthDistribution
+
+__all__ = [
+    "DispatchDecision",
+    "DevicePolicy",
+    "ServerPolicy",
+    "StochasticPolicy",
+    "SingleEndpointPolicy",
+    "make_policy",
+    "DEFAULT_TAIL_RATIO",
+]
+
+DEFAULT_TAIL_RATIO = 0.05  # α — budget slice reserved for tail protection
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    """What to do with one request.
+
+    use_server / use_device: whether each endpoint runs prefill at all.
+    device_wait: seconds the device waits before starting local inference
+        (0 = start immediately; only meaningful when use_device).
+    """
+
+    use_server: bool
+    use_device: bool
+    device_wait: float = 0.0
+
+    def __post_init__(self):
+        if not (self.use_server or self.use_device):
+            raise ValueError("a request must run on at least one endpoint")
+        if self.device_wait < 0:
+            raise ValueError("device_wait must be nonnegative")
+
+
+class DispatchPolicy:
+    """Interface: map prompt length -> DispatchDecision."""
+
+    def decide(self, length: int, rng: Optional[np.random.Generator] = None) -> DispatchDecision:
+        raise NotImplementedError
+
+    # vectorized convenience used by the benchmarks; policies override with
+    # closed-form array versions (the paper's Fig. 9 overhead is measured on
+    # exactly this path)
+    def decide_batch(self, lengths: np.ndarray, rng: Optional[np.random.Generator] = None):
+        return [self.decide(int(l), rng) for l in lengths]
+
+    def wait_times_batch(self, lengths: np.ndarray) -> np.ndarray:
+        return np.array([self.decide(int(l)).device_wait for l in lengths])
+
+
+# ---------------------------------------------------------------------------
+# Device-constrained: wait-time policy (Algorithm 2, Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+
+class DevicePolicy(DispatchPolicy):
+    """Device-constrained scheduling (Algorithm 2).
+
+    Budget semantics: expected device-prefill tokens <= b * E[l]. The device
+    runs prefill for a prompt of length l iff the server has not produced its
+    first token within w(l) — probability 1 - F(w(l)).
+    """
+
+    def __init__(
+        self,
+        server_ttft: EmpiricalCDF,
+        lengths: LengthDistribution,
+        budget: float,
+        tail_ratio: float = DEFAULT_TAIL_RATIO,
+    ):
+        if not (0.0 <= budget <= 1.0):
+            raise ValueError(f"budget ratio must be in [0,1], got {budget}")
+        if not (0.0 < tail_ratio < 1.0):
+            raise ValueError(f"tail ratio must be in (0,1), got {tail_ratio}")
+        self.server_ttft = server_ttft
+        self.lengths = lengths
+        self.budget = float(budget)
+        self.tail_ratio = float(tail_ratio)
+        self._build()
+
+    def _build(self) -> None:
+        F = self.server_ttft
+        b, alpha = self.budget, self.tail_ratio
+        # Phase 1 — tail protection: device joins after w_tail at the latest,
+        # spending min(alpha, b) of the budget on the slowest server tail.
+        eff_alpha = min(alpha, b)
+        self.w_tail = float(F.quantile(1.0 - eff_alpha)) if b > 0 else float("inf")
+
+        ls = self.lengths.support()
+        ps = self.lengths.probs
+        mean_l = self.lengths.mean()
+        wait = np.full(ls.shape, self.w_tail, dtype=np.float64)
+
+        if b > alpha and np.isfinite(self.w_tail):
+            # Phase 2 — spend the remaining (b - alpha) on immediate starts for
+            # the cheapest (shortest) lengths first; fractional wait at the
+            # boundary length. Costs normalized by E[l] so budget is a ratio.
+            available = b - alpha
+            F_wtail = float(F.cdf(self.w_tail))
+            for i in range(ls.size):
+                # incremental spend of dropping this length's wait to 0:
+                # device-run prob rises from (1 - F(w_tail)) ~= alpha to 1.
+                length_cost = ps[i] * ls[i] * F_wtail / mean_l
+                if available >= length_cost:
+                    wait[i] = 0.0
+                    available -= length_cost
+                else:
+                    # boundary: spend exactly `available`
+                    target_F = F_wtail - available * mean_l / (ps[i] * ls[i])
+                    target_F = float(np.clip(target_F, 0.0, 1.0))
+                    wait[i] = float(F.quantile(target_F))
+                    break
+        self._wait_table = dict(zip(ls.tolist(), wait.tolist()))
+        # Eq. (1) parameters for out-of-support lengths: l_th = largest length
+        # with w=0; beta = slope fitted through the first nonzero wait.
+        zero_ls = ls[wait == 0.0]
+        self.l_th = float(zero_ls.max()) if zero_ls.size else 0.0
+        nonzero = wait > 0.0
+        if np.any(nonzero & (wait < self.w_tail)):
+            j = int(np.argmax(nonzero & (wait < self.w_tail)))
+            self.beta = float(wait[j] / ls[j])
+        else:
+            self.beta = float("inf")  # jump straight to w_tail
+
+    def wait_time(self, length: int) -> float:
+        """w(l) — Eq. (1), generalized to unseen lengths."""
+        w = self._wait_table.get(float(length))
+        if w is not None:
+            return w
+        if length <= self.l_th:
+            return 0.0
+        return float(min(self.beta * length, self.w_tail))
+
+    def decide(self, length: int, rng=None) -> DispatchDecision:
+        return DispatchDecision(
+            use_server=True, use_device=True, device_wait=self.wait_time(length)
+        )
+
+    def wait_times_batch(self, lengths: np.ndarray) -> np.ndarray:
+        """Vectorized w(l): table lookup via searchsorted + Eq. 1 for unseen
+        lengths. O(n log m) — the Fig. 9 scalability path."""
+        lengths = np.asarray(lengths, dtype=np.float64)
+        table_l = self.lengths.support()
+        table_w = np.array([self._wait_table[float(l)] for l in table_l])
+        idx = np.searchsorted(table_l, lengths)
+        hit = (idx < table_l.size) & (table_l[np.minimum(idx, table_l.size - 1)] == lengths)
+        eq1 = np.where(
+            lengths <= self.l_th, 0.0, np.minimum(self.beta * lengths, self.w_tail)
+        )
+        return np.where(hit, table_w[np.minimum(idx, table_w.size - 1)], eq1)
+
+    def expected_budget_use(self) -> float:
+        """E[I_d(l)·l] / E[l] under the policy — should be <= b (+ CDF granularity)."""
+        ls, ps = self.lengths.support(), self.lengths.probs
+        waits = np.array([self.wait_time(int(l)) for l in ls])
+        p_device = 1.0 - self.server_ttft.cdf(waits)
+        return float(np.dot(ps * p_device, ls) / self.lengths.mean())
+
+
+# ---------------------------------------------------------------------------
+# Server-constrained: length-threshold policy (Algorithm 3, Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+class ServerPolicy(DispatchPolicy):
+    """Server-constrained scheduling (Algorithm 3).
+
+    Eq. (3): choose l_th s.t. prompts shorter than l_th carry (1-b) of the
+    expected token mass; those run device-only. Longer prompts race both
+    endpoints, consuming exactly b·E[l] expected server-prefill tokens.
+    """
+
+    def __init__(self, lengths: LengthDistribution, budget: float):
+        if not (0.0 <= budget <= 1.0):
+            raise ValueError(f"budget ratio must be in [0,1], got {budget}")
+        self.lengths = lengths
+        self.budget = float(budget)
+        self.l_th = lengths.token_mass_threshold((1.0 - budget) * lengths.mean())
+
+    def decide(self, length: int, rng=None) -> DispatchDecision:
+        if length < self.l_th:
+            return DispatchDecision(use_server=False, use_device=True)
+        return DispatchDecision(use_server=True, use_device=True)
+
+    def route_batch(self, lengths: np.ndarray) -> np.ndarray:
+        """Vectorized routing: True where the server participates. O(n)."""
+        return np.asarray(lengths) >= self.l_th
+
+    def expected_budget_use(self) -> float:
+        """E[I_s(l)·l] / E[l] — should be <= b (+ granularity of one length bin)."""
+        ls, ps = self.lengths.support(), self.lengths.probs
+        mask = ls >= self.l_th
+        return float(np.dot(ps[mask], ls[mask]) / self.lengths.mean())
+
+
+# ---------------------------------------------------------------------------
+# Baselines (§5.1): Stoch-S / Stoch-D, vLLM (all-server), llama.cpp (all-device)
+# ---------------------------------------------------------------------------
+
+
+class StochasticPolicy(DispatchPolicy):
+    """Stoch-S / Stoch-D: include the constrained endpoint with probability b
+    (independent of prompt length), capping its expected token budget at
+    b·E[l]; otherwise run the unconstrained endpoint alone."""
+
+    def __init__(self, constrained: Endpoint, budget: float, seed: int = 0):
+        if not (0.0 <= budget <= 1.0):
+            raise ValueError(f"budget ratio must be in [0,1], got {budget}")
+        self.constrained = constrained
+        self.budget = float(budget)
+        self._rng = np.random.default_rng(seed)
+
+    def decide(self, length: int, rng=None) -> DispatchDecision:
+        r = (rng or self._rng).random()
+        include = r < self.budget
+        if self.constrained is Endpoint.SERVER:
+            return DispatchDecision(use_server=include, use_device=True)
+        return DispatchDecision(use_server=True, use_device=include)
+
+
+class SingleEndpointPolicy(DispatchPolicy):
+    """vLLM baseline (all-server) or llama.cpp baseline (all-device)."""
+
+    def __init__(self, endpoint: Endpoint):
+        self.endpoint = endpoint
+
+    def decide(self, length: int, rng=None) -> DispatchDecision:
+        return DispatchDecision(
+            use_server=self.endpoint is Endpoint.SERVER,
+            use_device=self.endpoint is Endpoint.DEVICE,
+        )
+
+
+def make_policy(
+    cost_model: CostModel,
+    server_ttft: EmpiricalCDF,
+    lengths: LengthDistribution,
+    budget: float,
+    tail_ratio: float = DEFAULT_TAIL_RATIO,
+) -> DispatchPolicy:
+    """Algorithm 1: pick the policy for the dominant cost regime."""
+    if cost_model.regime() is Regime.DEVICE_CONSTRAINED:
+        return DevicePolicy(server_ttft, lengths, budget, tail_ratio)
+    return ServerPolicy(lengths, budget)

@@ -1,0 +1,129 @@
+"""Empirical distributions used by the DiSCo dispatch policies.
+
+The paper (§4.2) models server TTFT as "a known distribution, obtained either
+from server-provided information or device-side profiling", and prompt lengths
+as an empirical distribution p(l). Both are represented here as sample-backed
+empirical distributions with CDF / inverse-CDF / partial-expectation queries —
+exactly the primitives Algorithms 1-3 need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "EmpiricalCDF",
+    "LengthDistribution",
+    "lognormal_fit",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmpiricalCDF:
+    """Empirical CDF F(t) over nonnegative samples (e.g. server TTFT seconds).
+
+    ``F(t)``      -> P[X <= t]
+    ``quantile(q)`` -> F^{-1}(q)  (the paper's w_tail = F^{-1}(1 - min(a, b)))
+    """
+
+    sorted_samples: np.ndarray
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[float]) -> "EmpiricalCDF":
+        arr = np.asarray(samples, dtype=np.float64)
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError("EmpiricalCDF needs a non-empty 1-D sample array")
+        if np.any(~np.isfinite(arr)) or np.any(arr < 0):
+            raise ValueError("samples must be finite and nonnegative")
+        return cls(np.sort(arr))
+
+    @property
+    def n(self) -> int:
+        return int(self.sorted_samples.size)
+
+    def cdf(self, t) -> np.ndarray:
+        """F(t) = fraction of samples <= t (right-continuous)."""
+        t = np.asarray(t, dtype=np.float64)
+        idx = np.searchsorted(self.sorted_samples, t, side="right")
+        return idx / self.n
+
+    def quantile(self, q) -> np.ndarray:
+        """F^{-1}(q), clipped to [0, 1]."""
+        q = np.clip(np.asarray(q, dtype=np.float64), 0.0, 1.0)
+        return np.quantile(self.sorted_samples, q, method="inverted_cdf")
+
+    def mean(self) -> float:
+        return float(self.sorted_samples.mean())
+
+    def sample(self, rng: np.random.Generator, size=None) -> np.ndarray:
+        return rng.choice(self.sorted_samples, size=size, replace=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDistribution:
+    """Empirical prompt-length distribution p(l) with the partial-expectation
+    queries needed by Eq. (2) and Eq. (3).
+
+    Lengths are integer token counts; ties are allowed (weights accumulate).
+    """
+
+    lengths: np.ndarray  # sorted unique lengths
+    probs: np.ndarray    # p(l), same shape
+
+    @classmethod
+    def from_samples(cls, samples: Sequence[int]) -> "LengthDistribution":
+        arr = np.asarray(samples)
+        if arr.size == 0:
+            raise ValueError("need at least one length sample")
+        if np.any(arr <= 0):
+            raise ValueError("prompt lengths must be positive")
+        lengths, counts = np.unique(arr, return_counts=True)
+        return cls(lengths.astype(np.float64), counts / counts.sum())
+
+    def mean(self) -> float:
+        """E[l]."""
+        return float(np.dot(self.lengths, self.probs))
+
+    def partial_token_mass(self, l_th: float) -> float:
+        """∫_0^{l_th} l p(l) dl  — expected tokens from prompts shorter than l_th.
+
+        Strict inequality (l < l_th) matches Algorithm 3's routing test.
+        """
+        mask = self.lengths < l_th
+        return float(np.dot(self.lengths[mask], self.probs[mask]))
+
+    def token_mass_threshold(self, target_mass: float) -> float:
+        """Solve Eq. (3): the smallest l_th with ∫_0^{l_th} l p(l) dl >= target.
+
+        Returns +inf if even the full distribution cannot reach the target
+        (then every prompt routes device-only / below-threshold).
+        """
+        if target_mass <= 0.0:
+            return 0.0
+        cum = np.cumsum(self.lengths * self.probs)
+        idx = np.searchsorted(cum, target_mass - 1e-12, side="left")
+        if idx >= self.lengths.size:
+            return float("inf")
+        # threshold strictly above lengths[idx] so that prompts of that length
+        # (inclusive) fall below the threshold.
+        return float(self.lengths[idx]) + 0.5
+
+    def sample(self, rng: np.random.Generator, size=None) -> np.ndarray:
+        return rng.choice(self.lengths, size=size, p=self.probs)
+
+    def support(self) -> np.ndarray:
+        return self.lengths
+
+
+def lognormal_fit(samples: Sequence[float]) -> tuple[float, float]:
+    """Fit (mu, sigma) of a log-normal by moment matching on log-samples.
+
+    The paper's scalability study (§5.3) generates synthetic workloads by
+    "fitting log-normal distributions to the prompt lengths and TTFT from the
+    real trace by following the mean and standard deviation of the logarithm".
+    """
+    arr = np.asarray(samples, dtype=np.float64)
+    logs = np.log(arr[arr > 0])
+    return float(logs.mean()), float(logs.std())

@@ -1,0 +1,151 @@
+"""Migration controller: cost-efficient token delivery (§4.3).
+
+When both endpoints race the prefill, the *constrained* endpoint may win the
+race yet be the more expensive decoder. The migration controller then hands
+generation off to the cheaper endpoint, token-by-token:
+
+* Efficient token transfer: only token IDs cross the link (shared vocab);
+  no KV-cache/state transfer. The target re-prefills prompt + generated
+  tokens locally. (For SSM targets this re-prefill is a linear scan — see
+  DESIGN.md §Arch-applicability.)
+* Trigger (Eq. 4): migrate iff projected savings
+      C_migration = Δc_decode · l_remaining
+  exceed the migration overhead (target re-prefill cost + link cost).
+* Buffer protocol (Eq. 5, Fig. 4): delivery is paced at the user consumption
+  rate r_c < r_g. Migration starts only once the undelivered-token buffer
+  holds B = r_c · t_m tokens, where t_m is the estimated hand-off time, so
+  the user never observes a stall; the source keeps generating during the
+  hand-off until the target is ready.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from .cost import CostModel, Endpoint
+
+__all__ = ["MigrationConfig", "MigrationController", "MigrationPlan", "TokenBuffer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    consumption_rate: float = 4.8       # r_c tokens/s (§2.2: 4-5 tok/s readers)
+    network_rtt: float = 0.04           # s, token-ID hop device<->server
+    per_token_link_cost: float = 0.0    # unified cost of shipping one token ID
+    min_remaining_tokens: int = 4       # don't bother migrating at the very end
+    handoff_noise_sigma: float = 0.3    # log-normal error of the t_m estimate
+    # (the estimate sizes the buffer — Eq. 5; the *actual* hand-off time
+    # differs in deployment, which is what delays tokens in Table 3)
+    source_continues: bool = True
+    # True  -> Fig. 4 protocol: Row A keeps generating (throttled to r_c)
+    #          until Row B is ready; zero delivery gaps, slightly higher cost.
+    # False -> the sequence freezes at hand-off start (the target replays a
+    #          fixed prefix); cheaper, but an underestimated t_m drains the
+    #          buffer and delays tokens — this is the regime Table 3 reports.
+
+    def buffer_tokens(self, t_migration: float) -> int:
+        """Eq. (5): B = r_c × t_m (rounded up)."""
+        return int(math.ceil(self.consumption_rate * max(t_migration, 0.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    target: Endpoint
+    buffer_needed: int      # B tokens that must sit undelivered before hand-off
+    est_handoff_time: float  # t_m: target prefill (prompt + generated) + RTT
+    projected_savings: float
+
+
+class TokenBuffer:
+    """Delivery-side pacing buffer (Fig. 4).
+
+    Tokens are *generated* at r_g and *delivered* at r_c. ``occupancy(t)``
+    is generated-but-undelivered tokens; migration may start when
+    occupancy >= B so the user drains the buffer during the hand-off.
+    """
+
+    def __init__(self, consumption_rate: float, first_token_time: float):
+        self.r_c = float(consumption_rate)
+        self.t0 = float(first_token_time)
+        self.generated_at: list[float] = [first_token_time]
+        self.delivered_at: list[float] = [first_token_time]
+
+    def push(self, gen_time: float) -> float:
+        """Record one generated token; returns its delivery time.
+
+        Delivery pace: token i leaves no earlier than one consumption gap
+        after token i-1, and never before it is generated.
+        """
+        self.generated_at.append(gen_time)
+        t = max(gen_time, self.delivered_at[-1] + 1.0 / self.r_c)
+        self.delivered_at.append(t)
+        return t
+
+    def occupancy(self, now: float) -> int:
+        """Generated-but-not-yet-delivered token count at time ``now``."""
+        gen = sum(1 for t in self.generated_at if t <= now)
+        dlv = sum(1 for t in self.delivered_at if t <= now)
+        return gen - dlv
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.generated_at)
+
+    def tbt_series(self) -> list[float]:
+        d = self.delivered_at
+        return [d[i] - d[i - 1] for i in range(1, len(d))]
+
+    def delayed_tokens(self, slack: float = 1e-9) -> int:
+        """Tokens whose delivery stalled on generation (TBT > 1/r_c)."""
+        gap = 1.0 / self.r_c + slack
+        return sum(1 for dt in self.tbt_series() if dt > gap)
+
+
+class MigrationController:
+    """Decides *whether*, *where to*, and *when* to migrate (§4.3)."""
+
+    def __init__(self, cost_model: CostModel, config: MigrationConfig = MigrationConfig()):
+        self.cost = cost_model
+        self.config = config
+
+    def plan(
+        self,
+        *,
+        current: Endpoint,
+        prompt_len: int,
+        generated: int,
+        expected_total_tokens: float,
+        target_prefill_rate: float,
+    ) -> Optional[MigrationPlan]:
+        """Return a MigrationPlan if migrating now is worthwhile, else None.
+
+        target_prefill_rate: tokens/s the target endpoint prefills at — used
+        to estimate t_m (it must re-prefill prompt + generated token IDs).
+        """
+        target = self.cost.cheaper_decode_endpoint()
+        if target is current:
+            return None
+        l_remaining = max(expected_total_tokens - generated, 0.0)
+        if l_remaining < self.config.min_remaining_tokens:
+            return None
+
+        # Eq. (4): projected savings from decoding the remainder on the target.
+        savings = self.cost.decode_cost_delta() * l_remaining
+
+        # Overhead: target re-prefill of (prompt + generated) tokens, plus link.
+        replay = prompt_len + generated
+        overhead = (
+            self.cost.prefill_cost(target) * replay
+            + self.config.per_token_link_cost * replay
+        )
+        if savings <= overhead:
+            return None
+
+        t_m = replay / max(target_prefill_rate, 1e-9) + self.config.network_rtt
+        return MigrationPlan(
+            target=target,
+            buffer_needed=self.config.buffer_tokens(t_m),
+            est_handoff_time=t_m,
+            projected_savings=savings - overhead,
+        )

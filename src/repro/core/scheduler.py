@@ -1,0 +1,103 @@
+"""DiSCo middleware facade (Fig. 1).
+
+``DiSCoScheduler`` is the object an application embeds: it owns the cost
+model, the fitted distributions, the regime-appropriate dispatch policy
+(Algorithm 1) and the migration controller, and exposes three calls:
+
+    plan_request(prompt_len)          -> DispatchDecision
+    plan_migration(...)               -> Optional[MigrationPlan]
+    observe_server_ttft(seconds)      -> online CDF refresh
+
+The online refresh matters: §4.2 models server TTFT as "a known distribution,
+obtained either from server-provided information or device-side profiling" —
+profiling is continuous in deployment, so the policy is rebuilt on a sliding
+window of observations.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .cost import CostModel, Endpoint, Regime
+from .dispatch import (
+    DEFAULT_TAIL_RATIO,
+    DispatchDecision,
+    DispatchPolicy,
+    make_policy,
+)
+from .distributions import EmpiricalCDF, LengthDistribution
+from .migration import MigrationConfig, MigrationController, MigrationPlan
+
+__all__ = ["DiSCoScheduler"]
+
+
+class DiSCoScheduler:
+    def __init__(
+        self,
+        cost_model: CostModel,
+        server_ttft_samples,
+        prompt_length_samples,
+        budget: float,
+        tail_ratio: float = DEFAULT_TAIL_RATIO,
+        migration: MigrationConfig = MigrationConfig(),
+        ttft_window: int = 2048,
+        refresh_every: int = 64,
+    ):
+        self.cost_model = cost_model
+        self.budget = budget
+        self.tail_ratio = tail_ratio
+        self._ttft_obs: deque[float] = deque(
+            np.asarray(server_ttft_samples, dtype=float).tolist(), maxlen=ttft_window
+        )
+        self._length_obs: deque[int] = deque(
+            np.asarray(prompt_length_samples).astype(int).tolist(), maxlen=ttft_window
+        )
+        self._refresh_every = refresh_every
+        self._since_refresh = 0
+        self.migration_controller = MigrationController(cost_model, migration)
+        self._rebuild()
+
+    # -- policy lifecycle ---------------------------------------------------
+    def _rebuild(self) -> None:
+        self.server_ttft = EmpiricalCDF.from_samples(list(self._ttft_obs))
+        self.lengths = LengthDistribution.from_samples(list(self._length_obs))
+        self.policy: DispatchPolicy = make_policy(
+            self.cost_model, self.server_ttft, self.lengths, self.budget, self.tail_ratio
+        )
+
+    def observe_server_ttft(self, seconds: float) -> None:
+        self._ttft_obs.append(float(seconds))
+        self._since_refresh += 1
+        if self._since_refresh >= self._refresh_every:
+            self._since_refresh = 0
+            self._rebuild()
+
+    def observe_prompt_length(self, length: int) -> None:
+        self._length_obs.append(int(length))
+
+    # -- the two decisions --------------------------------------------------
+    def plan_request(self, prompt_len: int, rng=None) -> DispatchDecision:
+        return self.policy.decide(prompt_len, rng)
+
+    def plan_migration(
+        self,
+        *,
+        current: Endpoint,
+        prompt_len: int,
+        generated: int,
+        expected_total_tokens: float,
+        target_prefill_rate: float,
+    ) -> Optional[MigrationPlan]:
+        return self.migration_controller.plan(
+            current=current,
+            prompt_len=prompt_len,
+            generated=generated,
+            expected_total_tokens=expected_total_tokens,
+            target_prefill_rate=target_prefill_rate,
+        )
+
+    @property
+    def regime(self) -> Regime:
+        return self.cost_model.regime()

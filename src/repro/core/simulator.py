@@ -1,0 +1,334 @@
+"""Trace-driven QoE simulator for device-server cooperative serving.
+
+This is the evaluation harness behind every paper figure: it plays a stream
+of requests against two endpoint models (a trace-driven server and a
+profile-driven device), applies a dispatch policy (§4.2) and optionally the
+migration controller (§4.3), and records per-request QoE (TTFT, delivered
+TBT series) and unified cost.
+
+Two entry points:
+
+* ``simulate_ttft`` — vectorized TTFT-only evaluation (used by the mean/tail
+  TTFT benchmarks, Figs. 5-6 / Table 2, where decode does not matter).
+* ``simulate_full`` — per-request event simulation including decode, the
+  token delivery buffer and migration (Tables 3, Fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .cost import CostModel, Endpoint
+from .dispatch import DispatchDecision, DispatchPolicy
+from .distributions import EmpiricalCDF
+from .migration import MigrationConfig, MigrationController, TokenBuffer
+
+__all__ = [
+    "ServerModel",
+    "DeviceModel",
+    "Request",
+    "RequestResult",
+    "SimSummary",
+    "simulate_ttft",
+    "simulate_full",
+    "summarize",
+]
+
+
+# ---------------------------------------------------------------------------
+# Endpoint models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerModel:
+    """Trace-driven server endpoint: TTFT ~ empirical CDF (length-independent,
+    §3 Table 1), decode TBT sampled from a trace-calibrated distribution."""
+
+    ttft: EmpiricalCDF
+    tbt_mean: float = 0.03          # packetized streaming → near-zero TBT (§3)
+    tbt_shape: float = 2.0          # gamma shape; heavier tail = more jitter
+
+    def sample_ttft(self, rng: np.random.Generator, size=None):
+        return self.ttft.sample(rng, size)
+
+    def sample_tbt(self, rng: np.random.Generator, size=None):
+        scale = self.tbt_mean / self.tbt_shape
+        return rng.gamma(self.tbt_shape, scale, size=size)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Profile-driven device endpoint: TTFT = l / prefill_rate + overhead
+    (linear in prompt length, §3), deterministic decode rate (Fig. 3).
+
+    ``cold_start_s`` models App. B: loading the model before first use adds
+    seconds to TTFT (paper Table 4: 1.29-13.43 s depending on model/GPU);
+    ``cold_prob`` is the fraction of requests finding the model unloaded
+    (evicted for memory/battery reasons).
+    """
+
+    prefill_rate: float             # tokens/s
+    decode_rate: float              # tokens/s
+    ttft_overhead: float = 0.08     # runtime dispatch + tokenizer, seconds
+    cold_start_s: float = 0.0       # model load time when cold (App. B)
+    cold_prob: float = 0.0
+    name: str = "device"
+
+    def ttft(self, length, rng: np.random.Generator | None = None) -> np.ndarray:
+        base = np.asarray(length, dtype=np.float64) / self.prefill_rate + self.ttft_overhead
+        if self.cold_start_s and self.cold_prob and rng is not None:
+            cold = rng.random(np.shape(base) or None) < self.cold_prob
+            base = base + np.where(cold, self.cold_start_s, 0.0)
+        return base
+
+    def tbt(self) -> float:
+        return 1.0 / self.decode_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    arrival: float
+    prompt_len: int
+    gen_len: int
+
+
+@dataclasses.dataclass
+class RequestResult:
+    ttft: float
+    winner: Endpoint
+    cost: float
+    tbt_series: list[float] = dataclasses.field(default_factory=list)
+    migrated: bool = False
+    delayed_tokens: int = 0      # tokens whose *delivery* stalled (buffer ran dry)
+    deferred_tokens: int = 0     # tokens whose *generation* moved to the target
+                                 # during the hand-off (= buffer B, Eq. 5 — the
+                                 # paper's Table 3 "delay_num" magnitude)
+    decision: Optional[DispatchDecision] = None
+
+
+# ---------------------------------------------------------------------------
+# Vectorized TTFT-only simulation
+# ---------------------------------------------------------------------------
+
+
+def simulate_ttft(
+    lengths: np.ndarray,
+    policy: DispatchPolicy,
+    server: ServerModel,
+    device: DeviceModel,
+    rng: np.random.Generator,
+) -> dict[str, np.ndarray]:
+    """TTFT of each request under ``policy``; returns arrays for analysis.
+
+    The race semantics (§4.2): server starts at t=0 when used; device starts
+    at t=w(l) when used; TTFT = min over used endpoints of their first-token
+    times. The device is considered *started* (budget + energy spent) iff the
+    server has not delivered a first token by the device start time.
+    """
+    lengths = np.asarray(lengths)
+    n = lengths.size
+    server_ttft = server.sample_ttft(rng, n)
+    device_ttft = device.ttft(lengths)
+
+    use_server = np.zeros(n, dtype=bool)
+    use_device = np.zeros(n, dtype=bool)
+    wait = np.zeros(n, dtype=np.float64)
+    for i, l in enumerate(lengths):
+        d = policy.decide(int(l), rng)
+        use_server[i], use_device[i], wait[i] = d.use_server, d.use_device, d.device_wait
+
+    t_server = np.where(use_server, server_ttft, np.inf)
+    t_device = np.where(use_device, wait + device_ttft, np.inf)
+    ttft = np.minimum(t_server, t_device)
+    winner_is_device = t_device < t_server
+    # device spends energy iff it actually started before the server won
+    device_started = use_device & (t_server > wait)
+    server_started = use_server
+    return {
+        "ttft": ttft,
+        "winner_is_device": winner_is_device,
+        "device_started": device_started,
+        "server_started": server_started,
+        "server_ttft": server_ttft,
+        "device_ttft": device_ttft,
+        "lengths": lengths,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full event simulation (decode + buffer + migration)
+# ---------------------------------------------------------------------------
+
+
+def simulate_full(
+    requests: Sequence[Request],
+    policy: DispatchPolicy,
+    cost_model: CostModel,
+    server: ServerModel,
+    device: DeviceModel,
+    rng: np.random.Generator,
+    migration: Optional[MigrationConfig] = None,
+    expected_gen_len: Optional[float] = None,
+) -> list[RequestResult]:
+    controller = MigrationController(cost_model, migration) if migration else None
+    results = []
+    for req in requests:
+        results.append(
+            _simulate_one(
+                req, policy, cost_model, server, device, rng, controller,
+                expected_gen_len,
+            )
+        )
+    return results
+
+
+def _endpoint_tbt(ep: Endpoint, server, device, rng) -> float:
+    return float(server.sample_tbt(rng)) if ep is Endpoint.SERVER else device.tbt()
+
+
+def _simulate_one(
+    req: Request,
+    policy: DispatchPolicy,
+    cost: CostModel,
+    server: ServerModel,
+    device: DeviceModel,
+    rng: np.random.Generator,
+    controller: Optional[MigrationController],
+    expected_gen_len: Optional[float],
+) -> RequestResult:
+    decision = policy.decide(req.prompt_len, rng)
+    t_server = float(server.sample_ttft(rng)) if decision.use_server else np.inf
+    t_device = (
+        decision.device_wait + float(device.ttft(req.prompt_len))
+        if decision.use_device
+        else np.inf
+    )
+    first = min(t_server, t_device)
+    winner = Endpoint.DEVICE if t_device < t_server else Endpoint.SERVER
+
+    # prefill costs: server billed if used; device billed iff it started
+    total_cost = 0.0
+    if decision.use_server:
+        total_cost += cost.server_prefill * req.prompt_len
+    if decision.use_device and t_server > decision.device_wait:
+        total_cost += cost.device_prefill * req.prompt_len
+
+    r_c = controller.config.consumption_rate if controller else 4.8
+    buf = TokenBuffer(r_c, req.arrival + first)
+    current = winner
+    gen_time = req.arrival + first
+    generated = 1
+    total_cost += cost.decode_cost(current)  # first token decode-accounted
+    migrated = False
+    plan = None
+    migration_start: Optional[float] = None
+    target_ready: Optional[float] = None
+
+    exp_total = expected_gen_len if expected_gen_len is not None else float(req.gen_len)
+
+    while generated < req.gen_len:
+        if controller and not migrated and plan is None:
+            t_rate = (
+                device.prefill_rate
+                if cost.cheaper_decode_endpoint() is Endpoint.DEVICE
+                else (req.prompt_len + generated) / max(float(server.ttft.mean()), 1e-9)
+            )
+            plan = controller.plan(
+                current=current,
+                prompt_len=req.prompt_len,
+                generated=generated,
+                expected_total_tokens=exp_total,
+                target_prefill_rate=t_rate,
+            )
+        # start hand-off once the delivery buffer can mask it (Eq. 5 / Fig. 4)
+        if (
+            plan is not None
+            and not migrated
+            and migration_start is None
+            and buf.occupancy(gen_time) >= plan.buffer_needed
+        ):
+            migration_start = gen_time
+            if plan.target is Endpoint.DEVICE:
+                t_m = (
+                    (req.prompt_len + generated) / device.prefill_rate
+                    + controller.config.network_rtt
+                )
+            else:
+                t_m = float(server.sample_ttft(rng)) + controller.config.network_rtt
+            # the buffer was sized from the t_m ESTIMATE; the actual hand-off
+            # differs (network/queue variance) — this is what delays tokens
+            t_m *= float(np.exp(rng.normal(0.0, controller.config.handoff_noise_sigma)))
+            target_ready = migration_start + t_m
+            # replay prefill on the target is paid now
+            total_cost += cost.prefill_cost(plan.target) * (req.prompt_len + generated)
+
+        if migration_start is not None and not migrated:
+            if not controller.config.source_continues:
+                # sequence freezes at hand-off start: the target replays the
+                # fixed prefix; generation resumes only once it is ready.
+                current = plan.target
+                migrated = True
+                gen_time = max(gen_time, target_ready)
+            elif gen_time >= target_ready:
+                # Fig. 4: source kept generating until this instant
+                current = plan.target
+                migrated = True
+                gen_time = max(gen_time, target_ready)
+
+        step = _endpoint_tbt(current, server, device, rng)
+        if migration_start is not None and not migrated:
+            # Fig. 4 Row A, throttled: during the hand-off the source only
+            # needs to keep the delivery buffer fed — generation outpacing the
+            # user's consumption rate r_c buys no QoE and wastes the source's
+            # (expensive) decode budget, so it paces down to r_c.
+            step = max(step, 1.0 / buf.r_c)
+        gen_time += step
+        buf.push(gen_time)
+        generated += 1
+        total_cost += cost.decode_cost(current)
+
+    return RequestResult(
+        ttft=first,
+        winner=winner,
+        cost=total_cost,
+        tbt_series=buf.tbt_series(),
+        migrated=migrated,
+        delayed_tokens=buf.delayed_tokens() if migrated else 0,
+        deferred_tokens=plan.buffer_needed if migrated and plan else 0,
+        decision=decision,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Summaries
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSummary:
+    mean_ttft: float
+    p99_ttft: float
+    mean_cost: float
+    p99_tbt: float
+    mean_delayed: float
+    migration_rate: float
+
+
+def summarize(results: Sequence[RequestResult]) -> SimSummary:
+    ttfts = np.array([r.ttft for r in results])
+    costs = np.array([r.cost for r in results])
+    tbts = np.concatenate([r.tbt_series for r in results if r.tbt_series]) if any(
+        r.tbt_series for r in results
+    ) else np.array([0.0])
+    migrated = [r for r in results if r.migrated]
+    return SimSummary(
+        mean_ttft=float(ttfts.mean()),
+        p99_ttft=float(np.percentile(ttfts, 99)),
+        mean_cost=float(costs.mean()),
+        p99_tbt=float(np.percentile(tbts, 99)),
+        mean_delayed=float(np.mean([r.delayed_tokens for r in migrated])) if migrated else 0.0,
+        migration_rate=len(migrated) / max(len(results), 1),
+    )

@@ -1,0 +1,3 @@
+from .pipeline import lm_batches, masked_audio_batches, zipf_prompt
+
+__all__ = ["lm_batches", "masked_audio_batches", "zipf_prompt"]

@@ -1,0 +1,78 @@
+"""Deterministic synthetic data pipeline.
+
+Two generators:
+* ``lm_batches`` — token-LM batches with a learnable structure (a noisy
+  k-th order Markov chain over the vocab), so tiny models show real loss
+  decrease in the training examples/tests.
+* ``masked_audio_batches`` — HuBERT-style: frontend frame embeddings + mask
+  + cluster-code labels (the conv/mel frontend is the documented stub).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["lm_batches", "masked_audio_batches", "zipf_prompt"]
+
+
+def lm_batches(
+    vocab: int, batch: int, seq: int, seed: int = 0, noise: float = 0.1,
+) -> Iterator[dict]:
+    """Yields {"inputs": (B,S) int32, "targets": (B,S) int32} forever.
+
+    Sequences follow a fixed random permutation chain (x_{t+1} = perm[x_t]
+    with prob 1-noise, else uniform) — a deterministic 1st-order structure a
+    tiny model learns in tens of steps, with CE floor ≈ H(noise).
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(vocab)
+    while True:
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, vocab, size=batch)
+        for t in range(seq):
+            nxt = perm[toks[:, t]]
+            noisy = rng.random(batch) < noise
+            toks[:, t + 1] = np.where(noisy, rng.integers(0, vocab, batch), nxt)
+        yield {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def masked_audio_batches(
+    d_model: int, vocab: int, batch: int, frames: int, seed: int = 0,
+    mask_prob: float = 0.3,
+) -> Iterator[dict]:
+    """HuBERT-style masked prediction batches.
+
+    Frame embeddings carry the label signal (label-dependent mean + noise).
+    Masked frames keep only an attenuated (0.3x), heavily-noised embedding —
+    recoverable from context (labels are locally constant) plus a faint local
+    cue, so the smoke-scale models can demonstrably learn the objective; the
+    loss is evaluated on masked frames only, as in HuBERT.
+    """
+    rng = np.random.default_rng(seed)
+    codebook = rng.normal(0.0, 1.0, size=(vocab, d_model)).astype(np.float32)
+    while True:
+        labels = rng.integers(0, vocab, size=(batch, frames))
+        # smooth labels over time (audio codes are locally constant), so
+        # masked frames are predictable from their neighbours
+        for _ in range(4):
+            labels[:, 1:] = np.where(
+                rng.random((batch, frames - 1)) < 0.75, labels[:, :-1], labels[:, 1:]
+            )
+        embeds = codebook[labels] + 0.1 * rng.normal(size=(batch, frames, d_model))
+        mask = rng.random((batch, frames)) < mask_prob
+        corrupted = 0.3 * codebook[labels] + 0.5 * rng.normal(
+            size=(batch, frames, d_model)
+        )
+        embeds = np.where(mask[..., None], corrupted, embeds).astype(np.float32)
+        yield {
+            "inputs": embeds,
+            "targets": labels.astype(np.int32),
+            "loss_mask": mask,
+        }
+
+
+def zipf_prompt(rng: np.random.Generator, vocab: int, length: int) -> np.ndarray:
+    """Zipf-distributed token ids (natural-language-like frequencies)."""
+    ranks = rng.zipf(1.3, size=length)
+    return np.clip(ranks - 1, 0, vocab - 1).astype(np.int32)

@@ -1,0 +1,3 @@
+from .ops import decode_attention_op, flash_prefill_op, on_tpu, ssd_scan_op
+
+__all__ = ["decode_attention_op", "flash_prefill_op", "on_tpu", "ssd_scan_op"]

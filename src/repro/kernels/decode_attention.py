@@ -1,0 +1,137 @@
+"""Flash-decode kernel (Pallas TPU): one query token per sequence against a
+long (padded) KV cache — the serving hot spot behind decode_32k / long_500k.
+
+Grid: (batch, kv_heads, kv_blocks) with the KV-length dimension innermost.
+Per (batch, kv_head) the n_rep grouped query heads are processed together as
+a (n_rep, D) × (D, block_k) MXU matmul. Online softmax state (m, l, acc)
+lives in VMEM scratch across kv iterations. Valid-length + sliding-window
+masking uses the per-row ``lengths`` passed via scalar prefetch (SMEM).
+
+TARGET: TPU v5e. Validated with interpret=True against ``ref.decode_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+__all__ = ["decode_attention"]
+
+
+def _kernel(
+    lengths_ref,                       # SMEM (B,)
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    window: int,
+    block_k: int,
+    n_kv_blocks: int,
+):
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (n_rep, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (block_k, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # (n_rep, block_k)
+
+    length = lengths_ref[bi]
+    k_pos = si * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1
+    )
+    ok = k_pos < length
+    if window > 0:
+        ok &= (length - 1 - k_pos) < window
+    logits = jnp.where(ok, logits, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(si == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, S, K, D)
+    v_cache: jnp.ndarray,  # (B, S, K, D)
+    lengths: jnp.ndarray,  # (B,) int32 — valid entries incl. current token
+    *,
+    window: int = 0,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, s, kh, d = k_cache.shape
+    h = q.shape[1]
+    assert h % kh == 0
+    n_rep = h // kh
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    ns = s // block_k
+
+    qg = q.reshape(b, kh, n_rep, d)
+    kt = k_cache.transpose(0, 2, 1, 3)   # (B, K, S, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, d), lambda bi, ki, si, *_: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, ki, si, *_: (bi, ki, si, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, ki, si, *_: (bi, ki, si, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, n_rep, d), lambda bi, ki, si, *_: (bi, ki, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep,), jnp.float32),
+            pltpu.VMEM((n_rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=1.0 / (d**0.5),
+            window=window,
+            block_k=block_k,
+            n_kv_blocks=ns,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, n_rep, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, d)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (independent, naive math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_reference", "decode_reference", "ssd_reference"]
+
+NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jnp.ndarray,   # (B, Sq, H, D)
+    k: jnp.ndarray,   # (B, Sk, K, D)
+    v: jnp.ndarray,   # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(float(d))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    diff = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_reference(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, S, K, D)
+    v_cache: jnp.ndarray,  # (B, S, K, D)
+    lengths: jnp.ndarray,  # (B,)
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, s, kh, d = k_cache.shape
+    h = q.shape[1]
+    rep = h // kh
+    k = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) / jnp.sqrt(float(d))
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos < lengths[:, None]
+    if window > 0:
+        ok &= (lengths[:, None] - 1 - kpos) < window
+    logits = jnp.where(ok[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v).astype(q.dtype)
+
+
+def ssd_reference(
+    x: jnp.ndarray,    # (B, T, H, P)
+    dt: jnp.ndarray,   # (B, T, H)
+    A: jnp.ndarray,    # (H,)
+    Bm: jnp.ndarray,   # (B, T, G, N)
+    Cm: jnp.ndarray,   # (B, T, G, N)
+    initial_state: jnp.ndarray | None = None,
+):
+    """Sequential (token-at-a-time) SSD recurrence — the ground truth.
+    Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * Af[None, :])                  # (B, H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    final, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            xf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2),
+            Bh.transpose(1, 0, 2, 3),
+            Ch.transpose(1, 0, 2, 3),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

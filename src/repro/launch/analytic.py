@@ -1,0 +1,198 @@
+"""Analytic FLOPs / HBM-byte models for the roofline report.
+
+WHY ANALYTIC: XLA's ``compiled.cost_analysis()`` counts a while-loop body
+ONCE regardless of trip count (verified empirically — a 10-step scan of
+512³ matmuls reports exactly one matmul's FLOPs). Our step functions are
+scan-over-layers (× scan-over-microbatches × blockwise-attention scans), so
+raw HLO numbers undercount by 1-3 orders of magnitude depending on
+architecture — and *differently* per architecture, which would corrupt any
+cross-arch comparison. The dry-run records the raw HLO numbers for
+reference; the roofline terms use these analytic models, which are exact
+for the matmul-dominated parts (we control every architecture's math).
+
+Conventions: 1 MAC = 2 FLOPs. Causal attention counts the triangular half.
+Bytes are per-device HBM traffic per step: parameter reads (sharded resident
+size × passes), KV/state cache traffic, and activation write+read traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+__all__ = ["step_flops", "step_bytes", "AnalyticCosts", "analytic_costs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticCosts:
+    flops_total: float          # whole-step, all devices
+    bytes_per_device: float     # HBM traffic per device
+    flops_per_device: float
+
+
+def _attn_flops_layer(cfg: ModelConfig, batch: int, seq: int, window_layers_frac: float = None) -> float:
+    """Attention score+value FLOPs for one layer, full sequence."""
+    if not cfg.has_attention:
+        return 0.0
+    h = cfg.n_heads
+    hd = cfg.resolved_head_dim
+    vd = cfg.resolved_v_head_dim
+    def ctx(kv_span: float) -> float:
+        # qk^T and p·v, 2 FLOPs per MAC each
+        return 2.0 * batch * seq * kv_span * h * (hd + vd)
+    if cfg.attention == "full":
+        return ctx(seq / 2 if cfg.causal else seq)
+    if cfg.attention == "window":
+        return ctx(min(cfg.window, seq))
+    # pattern: 1/global_interval layers are global
+    g = 1.0 / cfg.global_interval
+    return g * ctx(seq / 2) + (1 - g) * ctx(min(cfg.window, seq))
+
+
+def _proj_flops_layer(cfg: ModelConfig, tokens: float) -> float:
+    """QKV/O, FFN/MoE, SSM projection FLOPs for one layer (2 FLOPs/MAC)."""
+    d = cfg.d_model
+    fl = 0.0
+    if cfg.has_attention:
+        if cfg.use_mla:
+            hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            q_in = cfg.q_lora_rank or d
+            if cfg.q_lora_rank:
+                fl += 2 * tokens * d * cfg.q_lora_rank
+            fl += 2 * tokens * q_in * cfg.n_heads * hd
+            fl += 2 * tokens * d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+            fl += 2 * tokens * cfg.kv_lora_rank * cfg.n_heads * (
+                cfg.qk_nope_head_dim + cfg.v_head_dim
+            )
+            fl += 2 * tokens * cfg.n_heads * cfg.v_head_dim * d
+        else:
+            hd = cfg.resolved_head_dim
+            fl += 2 * tokens * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            fl += 2 * tokens * cfg.n_heads * hd * d
+    if cfg.has_ssm:
+        di = cfg.d_inner
+        gn = cfg.ssm_groups * cfg.ssm_state
+        fl += 2 * tokens * d * (2 * di + 2 * gn + cfg.ssm_heads)   # in_proj
+        fl += 2 * tokens * di * d                                   # out_proj
+        fl += 2 * tokens * (di + 2 * gn) * cfg.conv_width           # conv
+    if cfg.has_ffn:
+        mult = 3 if cfg.act == "swiglu" else 2
+        if cfg.is_moe:
+            routed = tokens * cfg.experts_per_token * cfg.capacity_factor
+            fl += 2 * routed * mult * d * cfg.d_ff
+            fl += 2 * tokens * d * cfg.n_experts                    # router
+            if cfg.moe_dense_residual:
+                fl += 2 * tokens * mult * d * cfg.d_ff
+        else:
+            fl += 2 * tokens * mult * d * cfg.d_ff
+    return fl
+
+
+def _ssd_flops_layer(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Chunked SSD: intra-chunk dual form + state pass (2 FLOPs/MAC)."""
+    if not cfg.has_ssm:
+        return 0.0
+    q = cfg.ssm_chunk
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    nc = max(seq // q, 1)
+    per_chunk = 2 * q * q * n + 2 * q * q * p + 2 * 2 * q * n * p  # scores, y_intra, states+y_inter
+    return batch * nc * h * per_chunk
+
+
+def step_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """Whole-step FLOPs across all devices."""
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    if kind == "decode":
+        tokens = float(batch)
+        per_layer = _proj_flops_layer(cfg, tokens)
+        if cfg.has_attention:
+            h, hd, vd = cfg.n_heads, cfg.resolved_head_dim, cfg.resolved_v_head_dim
+            if cfg.attention == "full":
+                span = seq
+            elif cfg.attention == "window":
+                span = min(cfg.window, seq)
+            else:
+                g = 1.0 / cfg.global_interval
+                span = g * seq + (1 - g) * min(cfg.window, seq)
+            per_layer += 2.0 * batch * span * h * (hd + vd)
+            if cfg.use_mla:  # expansion of compressed cache per step
+                per_layer += 2.0 * batch * seq * cfg.kv_lora_rank * cfg.n_heads * (
+                    cfg.qk_nope_head_dim + cfg.v_head_dim
+                )
+        if cfg.has_ssm:
+            per_layer += 2.0 * batch * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 2
+        head = 2.0 * tokens * d * V
+        return L * per_layer + head
+
+    tokens = float(batch) * seq
+    per_layer = (
+        _proj_flops_layer(cfg, tokens)
+        + _attn_flops_layer(cfg, batch, seq)
+        + _ssd_flops_layer(cfg, batch, seq)
+    )
+    head = 2.0 * tokens * d * V
+    fwd = L * per_layer + head
+    if kind == "prefill":
+        return fwd
+    # train: fwd + 2x bwd (+1x remat recompute of the forward)
+    mult = 4.0 if cfg.remat else 3.0
+    return mult * fwd
+
+
+def _param_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * 2.0  # bf16
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    L = cfg.n_layers
+    b = 0.0
+    if cfg.has_attention:
+        if cfg.use_mla:
+            b += L * batch * seq * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2
+        else:
+            span = seq  # cache is allocated full-length (uniform scan layers)
+            b += L * batch * span * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    if cfg.has_ssm:
+        b += L * batch * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        b += L * batch * (cfg.conv_width - 1) * (cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) * 2
+    return b
+
+
+def step_bytes(cfg: ModelConfig, kind: str, batch: int, seq: int, n_devices: int,
+               model_shard: int) -> float:
+    """Per-device HBM traffic estimate.
+
+    params: resident shard read once per pass (train: fwd+bwd+remat ≈ 3
+    passes × num_microbatches; prefill/decode: 1).
+    activations: ~6 residual-stream reads/writes per layer per token
+    (pre-norm x2, mixer io, ffn io) in bf16 — a deliberately coarse but
+    uniform estimate.
+    cache: decode reads the full (sharded) cache once and writes one slot;
+    prefill writes it once.
+    """
+    passes = (3.0 * cfg.num_microbatches) if kind == "train" else 1.0
+    p_bytes = _param_bytes(cfg) / model_shard * passes
+    batch_shard = n_devices // model_shard
+    if kind == "decode":
+        tokens_dev = max(batch / batch_shard, batch / n_devices, 1)
+        act = tokens_dev * cfg.n_layers * cfg.d_model * 6 * 2
+        cache = _cache_bytes(cfg, batch, seq) / n_devices  # sharded read
+        return p_bytes + act + cache
+    tokens_dev = batch * seq / batch_shard
+    act = tokens_dev * cfg.n_layers * cfg.d_model * 6 * 2
+    if kind == "train":
+        act *= 3.0  # fwd + bwd + remat recompute traffic
+    cache = _cache_bytes(cfg, batch, seq) / n_devices if kind == "prefill" else 0.0
+    head = tokens_dev * cfg.vocab / model_shard * 4.0  # fp32 logits
+    return p_bytes + act + cache + head
+
+
+def analytic_costs(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                   n_devices: int, model_shard: int = 16) -> AnalyticCosts:
+    fl = step_flops(cfg, kind, batch, seq)
+    by = step_bytes(cfg, kind, batch, seq, n_devices, model_shard)
+    return AnalyticCosts(
+        flops_total=fl,
+        bytes_per_device=by,
+        flops_per_device=fl / n_devices,
+    )

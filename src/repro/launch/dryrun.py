@@ -1,0 +1,542 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the appropriate step function — train_step (train_4k), prefill_step
+(prefill_32k) or serve/decode_step (decode_32k, long_500k) — against
+ShapeDtypeStruct inputs (no allocation), then records:
+
+  * compiled.memory_analysis()  (per-device bytes: proves it fits 16 GiB)
+  * compiled.cost_analysis()    (per-device HLO FLOPs / bytes accessed)
+  * collective bytes parsed from the optimized HLO text, by collective type
+
+into experiments/dryrun/<arch>__<shape>__<mesh>.json for §Roofline.
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count at first init. Do not set it globally — smoke tests and benches
+see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs, shape_supported
+from repro.models import decode_step, init_params, param_shapes, prefill
+from repro.models.config import ModelConfig
+from repro.training import make_optimizer, make_train_step
+
+from .analytic import analytic_costs
+from .mesh import HW, make_production_mesh, mesh_batch_axes
+from .sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    opt_state_pspecs,
+    param_pspecs,
+)
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _line_output_bytes(lhs: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _loop_depth(line: str) -> int:
+    """Scan-nesting depth of an HLO op, from its op_name metadata path.
+
+    XLA preserves the jax op_name trace: ops inside a lax.scan/while carry
+    "/while/body/" path segments — one per nesting level. XLA's
+    cost_analysis counts while bodies ONCE (verified empirically), so
+    collective bytes must be scaled by the enclosing loops' trip counts.
+    """
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return 0
+    return m.group(1).count("/while/")
+
+
+def depth_multipliers(cfg: ModelConfig, kind: str, seq: int) -> list[float]:
+    """Trip-count multiplier per loop depth (cumulative), from the known
+    step-function structure:
+
+      train:   [microbatch scan]? -> layer scan -> (SSD chunk scan)
+      prefill: layer scan -> blockwise-attn q-map / SSD chunks -> kv scan
+      decode:  layer scan
+    """
+    L = cfg.n_layers
+    if kind == "train":
+        levels = ([cfg.num_microbatches] if cfg.num_microbatches > 1 else []) + [L]
+        if cfg.has_ssm:
+            levels.append(max(seq // cfg.ssm_chunk, 1))
+    elif kind == "prefill":
+        levels = [L]
+        inner = []
+        if cfg.has_attention and seq > 4096:
+            inner = [seq // 512, seq // 1024]      # q-block map, kv scan
+        if cfg.has_ssm:
+            inner = [max(max(seq // cfg.ssm_chunk, 1), inner[0] if inner else 1)]
+        levels.extend(inner)
+    else:
+        levels = [L]
+    cum, out = 1.0, []
+    for t in levels:
+        cum *= max(t, 1)
+        out.append(cum)
+    return out
+
+
+def collective_stats(hlo_text: str, multipliers: list[float]) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO (the
+    partitioned per-device module => per-device traffic), scaling each op by
+    the trip count of its enclosing scan loops (see depth_multipliers)."""
+    stats = {c: {"count": 0, "bytes": 0, "bytes_raw": 0} for c in _COLLECTIVES}
+    by_depth: dict[int, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        for c in _COLLECTIVES:
+            # match op name at the call position, skip "-done" halves of
+            # async pairs (the "-start" carries the shape)
+            if re.match(rf"(\w+\[|\()?.*\b{c}(-start)?\(", rhs) and f"{c}-done" not in rhs:
+                depth = _loop_depth(line)
+                mult = (
+                    multipliers[min(depth, len(multipliers)) - 1]
+                    if depth > 0 and multipliers
+                    else 1.0
+                )
+                raw = _line_output_bytes(rhs.split(c)[0] + " " + lhs)
+                stats[c]["count"] += 1
+                stats[c]["bytes_raw"] += raw
+                stats[c]["bytes"] += int(raw * mult)
+                by_depth[depth] = by_depth.get(depth, 0) + int(raw * mult)
+                break
+    stats["total_bytes"] = sum(v["bytes"] for v in stats.values() if isinstance(v, dict))
+    stats["total_bytes_raw"] = sum(
+        v["bytes_raw"] for v in stats.values() if isinstance(v, dict)
+    )
+    stats["total_count"] = sum(v["count"] for v in stats.values() if isinstance(v, dict))
+    stats["bytes_by_depth"] = by_depth
+    return stats
+
+
+def _model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+def build_step(cfg: ModelConfig, kind: str, seq_len: int):
+    if kind == "train":
+        opt = make_optimizer(cfg.name)
+        step_fn = make_train_step(cfg, opt)
+        return step_fn, opt
+    if kind == "prefill":
+        def prefill_fn(params, inputs):
+            return prefill(params, cfg, inputs, max_len=seq_len)
+        return prefill_fn, None
+    def decode_fn(params, cache, token):
+        return decode_step(params, cfg, cache, token)
+    return decode_fn, None
+
+
+# §Perf hillclimb variants: config and/or sharding overrides measured against
+# the baselines. See EXPERIMENTS.md §Perf for the hypothesis->result log.
+import dataclasses as _dc
+
+VARIANTS = {
+    # inference should not remat (training-only concern); removes the
+    # checkpoint-induced copies/resharding in prefill.
+    "noremat": dict(cfg=lambda c: _dc.replace(c, remat=False)),
+    # small models don't need tensor parallelism: replicate params, shard
+    # batch only => zero per-layer collectives.
+    "dp-only": dict(dp_only=True),
+    "dp-noremat": dict(cfg=lambda c: _dc.replace(c, remat=False), dp_only=True),
+    # MLA weight absorption: decode attends in compressed c_kv space.
+    "mla-absorb": dict(cfg=lambda c: _dc.replace(c, mla_absorb=True)),
+    # distributed flash-decode over seq-sharded KV (shard_map combine).
+    "shmap-decode": dict(shmap_decode=True),
+    # prefill cache emitted batch-sharded only (replicated over "model"):
+    # prevents the cache's seq-sharding from propagating backwards into the
+    # blockwise-attention kv scan (per-block all-gathers). Valid when the
+    # batch-sharded cache fits HBM.
+    "cache-batch-only": dict(cache_batch_only=True),
+    "dp-cache-noremat": dict(
+        cfg=lambda c: _dc.replace(c, remat=False), dp_only=True, cache_batch_only=True,
+    ),
+    # 256-way tensor parallelism over BOTH mesh axes for the big matrices:
+    # the 340B-class decode param shard must drop below HBM (42.5 GiB at
+    # TP=16 -> ~3 GiB at TP=256); 1-token activations make the extra
+    # row-parallel all-reduces negligible.
+    "tp-wide": dict(tp_wide=True),
+    "tp-wide-shmap": dict(tp_wide=True, shmap_decode=True),
+    # MLA prefill residual: the low-rank factors are tiny (2.6 MB) — replicate
+    # them so the per-token expansion never contracts a sharded dim.
+    "mla-repl-factors": dict(mla_repl=True, cache_batch_only=True),
+    # MLA iteration 2: seq-sharded compressed cache + shard_map flash combine
+    "mla-absorb-shmap": dict(
+        cfg=lambda c: _dc.replace(c, mla_absorb=True),
+        shmap_decode=True, cache_seq_shard=True,
+    ),
+    # iteration 3: row-parallel kv projections (kv=8 unshardable over model),
+    # one-hot embedding (no table gather), FFN over both axes
+    "tp-wide2-shmap": dict(
+        cfg=lambda c: _dc.replace(c, embed_onehot=True),
+        tp_wide2=True, shmap_decode=True,
+    ),
+    # combined winners
+    "mla-absorb-noremat": dict(cfg=lambda c: _dc.replace(c, mla_absorb=True, remat=False)),
+    "shmap-noremat": dict(cfg=lambda c: _dc.replace(c, remat=False), shmap_decode=True),
+}
+
+_TP_WIDE_RULES = {
+    "embed": [{0: ("data", "model")}, {0: "model"}],
+    "lm_head": [{1: ("data", "model")}, {1: "model"}],
+    "wq": [{1: "model", 2: "data"}, {1: "model"}],
+    "wk": [{2: "data"}, {}],
+    "wv": [{2: "data"}, {}],
+    "wo": [{0: "model", 1: "data"}, {0: "model"}],
+    "w_gate": [{1: ("data", "model")}, {1: "model"}],
+    "w_up": [{1: ("data", "model")}, {1: "model"}],
+    "w_down": [{0: ("data", "model")}, {0: "model"}],
+}
+
+_TP_WIDE2_RULES = {
+    "embed": [{0: ("data", "model")}, {0: "model"}],
+    "lm_head": [{1: ("data", "model")}, {1: "model"}],
+    "wq": [{1: "model"}],             # 96 heads / 16
+    "wk": [{0: "model"}],             # row-parallel: kv heads unshardable
+    "wv": [{0: "model"}],
+    "wo": [{0: "model"}],
+    "w_gate": [{1: ("data", "model")}, {1: "model"}],
+    "w_up": [{1: ("data", "model")}, {1: "model"}],
+    "w_down": [{0: ("data", "model")}, {0: "model"}],
+}
+
+
+def _tp_wide_pspecs(cfg, mesh, pshapes, rules=None):
+    from .sharding import _spec_with_fallbacks
+    from jax.sharding import PartitionSpec as _P
+    rules = rules or _TP_WIDE_RULES
+    base = param_pspecs(cfg, mesh, pshapes)
+    for k, shape in pshapes["layers"].items():
+        if k in rules:
+            spec = _spec_with_fallbacks(mesh, shape[1:], *rules[k])
+            base["layers"][k] = _P(None, *spec)
+    for k in ("embed", "lm_head"):
+        if k in pshapes:
+            base[k] = _spec_with_fallbacks(mesh, pshapes[k], *rules[k])
+    return base
+
+
+def _batch_only_cache_spec(cache_shapes, mesh):
+    from jax.sharding import PartitionSpec as _P
+    from .mesh import mesh_batch_axes as _mba
+    baxes = _mba(mesh)
+    import math as _m
+    bsz = _m.prod(mesh.shape[a] for a in baxes)
+    out = {}
+    for k, leaf in cache_shapes.items():
+        if k == "lengths":
+            out[k] = _P(None)
+            continue
+        b_ax = baxes if leaf.shape[1] % bsz == 0 and leaf.shape[1] >= bsz else None
+        out[k] = _P(None, b_ax, *([None] * (len(leaf.shape) - 2)))
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool, variant: str | None = None) -> dict:
+    cfg = get_config(arch)
+    vspec = VARIANTS.get(variant, {}) if variant else {}
+    if "cfg" in vspec:
+        cfg = vspec["cfg"](cfg)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    base = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant or "baseline",
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        return {**base, "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    specs = input_specs(cfg, shape)
+    pshapes = param_shapes(cfg)
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    if vspec.get("dp_only"):
+        from jax.sharding import PartitionSpec as _P
+        pspec = jax.tree.map(
+            lambda s: _P(*([None] * len(s))) if isinstance(s, tuple) else s,
+            pshapes_tree(pshapes),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+    elif vspec.get("tp_wide"):
+        pspec = _tp_wide_pspecs(cfg, mesh, pshapes)
+    elif vspec.get("tp_wide2"):
+        pspec = _tp_wide_pspecs(cfg, mesh, pshapes, rules=_TP_WIDE2_RULES)
+    elif vspec.get("mla_repl"):
+        from jax.sharding import PartitionSpec as _P
+        pspec = param_pspecs(cfg, mesh, pshapes)
+        for k in ("wkv_b", "wq_b", "wkv_a", "wq_a"):
+            if k in pspec["layers"]:
+                n = len(pshapes["layers"][k])
+                pspec["layers"][k] = _P(*([None] * n))
+    else:
+        pspec = param_pspecs(cfg, mesh, pshapes)
+    p_sh = named(mesh, pspec)
+
+    import contextlib
+    from repro.models.distributed import decode_context
+    dist_ctx = (
+        decode_context(mesh, seq_axis="model", batch_axes=mesh_batch_axes(mesh))
+        if vspec.get("shmap_decode")
+        else contextlib.nullcontext()
+    )
+
+    t0 = time.time()
+    with mesh, dist_ctx:
+        if shape.kind == "train":
+            step_fn, opt = build_step(cfg, "train", shape.seq_len)
+            opt_s = jax.eval_shape(opt.init, params_s)
+            ospec = opt_state_pspecs(opt_s, pspec, pshapes_tree(pshapes))
+            o_sh = named(mesh, ospec)
+            b_spec = batch_pspecs(cfg, mesh, specs)
+            b_sh = named(mesh, b_spec)
+            step0 = jax.ShapeDtypeStruct((), jnp.int32)
+            from jax.sharding import PartitionSpec as P
+            scalar = named(mesh, P())
+            metrics_spec = jax.tree.map(
+                lambda _: scalar,
+                jax.eval_shape(step_fn, params_s, opt_s, step0, specs)[3],
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, scalar, b_sh),
+                out_shardings=(p_sh, o_sh, scalar, metrics_spec),
+                donate_argnums=(0, 1),  # params/opt updated in place
+            )
+            lowered = jitted.lower(params_s, opt_s, step0, specs)
+        elif shape.kind == "prefill":
+            step_fn, _ = build_step(cfg, "prefill", shape.seq_len)
+            b_spec = batch_pspecs(cfg, mesh, specs)
+            b_sh = named(mesh, b_spec)
+            out_shape = jax.eval_shape(step_fn, params_s, specs["inputs"])
+            if vspec.get("cache_batch_only"):
+                cache_spec = _batch_only_cache_spec(out_shape[1], mesh)
+            else:
+                cache_spec = cache_pspecs(cfg, mesh, out_shape[1])
+            from jax.sharding import PartitionSpec as P
+            baxes = mesh_batch_axes(mesh)
+            logits_spec = P(
+                baxes if shape.global_batch % _ax(mesh, baxes) == 0 else None, None
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, b_sh["inputs"]),
+                out_shardings=(
+                    named(mesh, logits_spec),
+                    named(mesh, cache_spec),
+                ),
+            )
+            lowered = jitted.lower(params_s, specs["inputs"])
+        else:  # decode
+            step_fn, _ = build_step(cfg, "decode", shape.seq_len)
+            cache_spec = cache_pspecs(cfg, mesh, specs["cache"])
+            if vspec.get("cache_seq_shard"):
+                from jax.sharding import PartitionSpec as _P
+                for _k in ("ckv", "krope"):
+                    if _k in cache_spec:
+                        old = list(cache_spec[_k])
+                        cache_spec[_k] = _P(old[0], old[1], "model", None)
+            c_sh = named(mesh, cache_spec)
+            from jax.sharding import PartitionSpec as P
+            baxes = mesh_batch_axes(mesh)
+            tok_ax = baxes if shape.global_batch % _ax(mesh, baxes) == 0 else None
+            t_sh = named(mesh, P(tok_ax))
+            logits_spec = named(mesh, P(tok_ax, None))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, c_sh, t_sh),
+                out_shardings=(logits_spec, c_sh),
+                donate_argnums=(1,),   # in-place cache update (serving)
+            )
+            lowered = jitted.lower(params_s, specs["cache"], specs["token"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes
+            ),
+        }
+        print(ma)
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+
+    mults = depth_multipliers(cfg, shape.kind, shape.seq_len)
+    coll = collective_stats(compiled.as_text(), mults)
+
+    # raw HLO numbers (while bodies counted once — see analytic.py docstring)
+    flops_dev_raw = float(cost.get("flops", 0.0))
+    bytes_dev_raw = float(cost.get("bytes accessed", 0.0))
+    model_shard = 1 if vspec.get("dp_only") else mesh.shape.get("model", 1)
+    ac = analytic_costs(
+        cfg, shape.kind, shape.global_batch, shape.seq_len, n_dev,
+        model_shard=model_shard,
+    )
+    model_fl = _model_flops(cfg, shape.kind, shape.global_batch, shape.seq_len)
+    compute_s = ac.flops_per_device / HW.PEAK_FLOPS_BF16
+    memory_s = ac.bytes_per_device / HW.HBM_BW
+    collective_s = coll["total_bytes"] / HW.ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        **base,
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": ac.flops_per_device,
+        "bytes_per_device": ac.bytes_per_device,
+        "hlo_flops_per_device_raw": flops_dev_raw,
+        "hlo_bytes_per_device_raw": bytes_dev_raw,
+        "loop_multipliers": mults,
+        "collective_bytes_per_device": coll["total_bytes"],
+        "collectives": coll,
+        "memory": mem,
+        "model_flops_total": model_fl,
+        "useful_flops_ratio": model_fl / ac.flops_total if ac.flops_total else None,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+        },
+    }
+
+
+def _ax(mesh, axes) -> int:
+    import math as _m
+    if axes is None:
+        return 1
+    if isinstance(axes, tuple):
+        return _m.prod(mesh.shape[a] for a in axes)
+    return mesh.shape[axes]
+
+
+def pshapes_tree(pshapes: dict):
+    """param_shapes dict (tuples) -> tree of shape-tuples matching params."""
+    out = {}
+    for k, v in pshapes.items():
+        out[k] = {kk: vv for kk, vv in v.items()} if k == "layers" else v
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="every supported (arch×shape)")
+    ap.add_argument("--variant", choices=sorted(VARIANTS), default=None)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for arch, shape, m in combos:
+        tag = f"{arch}__{shape}__{m}" + (f"__{args.variant}" if args.variant else "")
+        out_path = os.path.join(args.out_dir, tag + ".json")
+        print(f"=== dryrun {tag}", flush=True)
+        try:
+            rec = dryrun_one(arch, shape, multi_pod=(m == "multi"), variant=args.variant)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape, "mesh": m,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(json.dumps({k: rec.get(k) for k in (
+            "status", "compile_s", "flops_per_device",
+            "collective_bytes_per_device", "reason", "error")}), flush=True)
+    print(f"done: {len(combos) - failures}/{len(combos)} ok")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

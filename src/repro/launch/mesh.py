@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 TPU v5e chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis extends data parallelism across the DCN/ICI boundary.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. The dry-run entrypoint force-creates 512 host devices via
+XLA_FLAGS *before* any jax import (see dryrun.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_batch_axes", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline model."""
+
+    PEAK_FLOPS_BF16 = 197e12       # per chip, FLOP/s
+    HBM_BW = 819e9                 # per chip, B/s
+    ICI_BW = 50e9                  # per link, B/s
+    HBM_BYTES = 16 * 2**30         # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the {'multi' if multi_pod else 'single'}-pod "
+            f"mesh, found {len(devices)}. Set "
+            'XLA_FLAGS="--xla_force_host_platform_device_count=512" BEFORE '
+            "importing jax (dryrun.py does this)."
+        )
+    return jax.make_mesh(
+        shape,
+        axes,
+        devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The axes that shard the batch dimension: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,254 @@
+"""Sharding rules: PartitionSpecs for params, optimizer states, caches and
+batches on the production mesh.
+
+Tensor-parallel layout (Megatron-style) on the "model" axis with per-tensor
+divisibility fallbacks:
+
+  embed (V,d)            -> vocab on model (fallback: d on model)
+  lm_head (d,V)          -> V on model (fallback: d on model)
+  attention wq/wk/wv     -> heads on model (fallback: replicate)
+  attention wo           -> heads on model
+  MLA low-rank factors   -> rank on model
+  dense FFN w_up/w_gate  -> d_ff on model; w_down: d_ff on model (row-parallel)
+  MoE expert weights     -> experts on model (expert parallelism; 128/64 both
+                            divide 16); router replicated
+  SSM in/out projections -> row/col parallel over model
+  norms / scalar vectors -> replicated
+
+Caches (decode): batch over ("pod","data") when divisible; KV heads on
+"model" when divisible, else the sequence axis takes every still-unused mesh
+axis (this is what lets nemotron's kv=8 < 16 cache and the long_500k
+batch=1 cache fit). Batches: leading dim over ("pod","data").
+
+These are BASELINE rules — §Perf hillclimbing changes them per-experiment.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+from .mesh import mesh_batch_axes
+
+__all__ = [
+    "param_pspecs",
+    "opt_state_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "named",
+]
+
+
+def _axsize(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return math.prod(mesh.shape[a] for a in name)
+    return mesh.shape[name]
+
+
+def _fit(mesh: Mesh, dim_size: int, axis) -> bool:
+    return dim_size % _axsize(mesh, axis) == 0
+
+
+def _spec_with_fallbacks(mesh: Mesh, shape: tuple, *rules) -> P:
+    """Each rule is a dict {dim_index: axis}; the first rule whose every
+    assignment divides evenly wins; otherwise fully replicated."""
+    for rule in rules:
+        ok = all(_fit(mesh, shape[d], ax) for d, ax in rule.items())
+        if ok:
+            entries = [rule.get(d) for d in range(len(shape))]
+            return P(*entries)
+    return P(*([None] * len(shape)))
+
+
+# per-param rules: list of {dim: axis} fallbacks, dims indexed WITHOUT the
+# leading layer-stacking dim (added automatically for layer params)
+_RULES: dict[str, list[dict[int, str]]] = {
+    "embed": [{0: "model"}, {1: "model"}],
+    "lm_head": [{1: "model"}, {0: "model"}],
+    "in_proj": [{1: "model"}],
+    # GQA attention
+    "wq": [{1: "model"}, {0: "model"}],
+    "wk": [{1: "model"}, {0: "model"}],
+    "wv": [{1: "model"}, {0: "model"}],
+    "wo": [{0: "model"}, {2: "model"}],
+    # MLA
+    "wq_a": [{1: "model"}],
+    "wq_b": [{0: "model"}],
+    "wkv_a": [{}],
+    "wkv_b": [{0: "model"}],
+    # FFN
+    "w_gate": [{1: "model"}],
+    "w_up": [{1: "model"}],
+    "w_down": [{0: "model"}],
+    # MoE
+    "router": [{}],
+    "moe_gate": [{0: "model"}, {2: "model"}],
+    "moe_up": [{0: "model"}, {2: "model"}],
+    "moe_down": [{0: "model"}, {1: "model"}],
+    # SSM
+    "ssm_in": [{0: "model"}],       # row-parallel (contracting dim sharded)
+    "ssm_out": [{1: "model"}],      # col-parallel output
+    "conv_w": [{}],
+    "conv_b": [{}],
+}
+
+_LAYER_STACKED_EXEMPT = {"embed", "lm_head", "in_proj", "final_norm"}
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, shapes: dict[str, Any]) -> dict:
+    """PartitionSpec tree matching ``models.param_shapes(cfg)`` layout.
+
+    ``shapes``: the param_shapes(cfg) dict (tuples), so divisibility checks
+    run against real dimensions.
+    """
+    out: dict[str, Any] = {}
+    for name, shape in shapes.items():
+        if name == "layers":
+            out["layers"] = {}
+            for k, s in shape.items():
+                inner = s[1:]  # strip layer dim
+                rules = _RULES.get(k)
+                if rules is None:
+                    spec = P(*([None] * len(inner)))
+                else:
+                    spec = _spec_with_fallbacks(mesh, inner, *rules)
+                out["layers"][k] = P(None, *spec)
+        else:
+            rules = _RULES.get(name)
+            if rules is None:
+                spec = P(*([None] * len(shape)))
+            else:
+                spec = _spec_with_fallbacks(mesh, shape, *rules)
+            out[name] = spec
+    return out
+
+
+def opt_state_pspecs(opt_state_shapes: Any, pspecs: dict, params_shapes: Any) -> Any:
+    """Optimizer-state specs derived from param specs.
+
+    AdamW m/v mirror the param layout. Adafactor vr drops the last dim's
+    entry, vc drops the second-to-last. Works by structural matching.
+    """
+
+    def match(state_leaf_shape, pshape, pspec: P) -> P:
+        if tuple(state_leaf_shape) == tuple(pshape):
+            return pspec
+        entries = list(pspec) + [None] * (len(pshape) - len(pspec))
+        if tuple(state_leaf_shape) == tuple(pshape[:-1]):      # vr
+            return P(*entries[:-1])
+        if tuple(state_leaf_shape) == tuple(pshape[:-2] + pshape[-1:]):  # vc
+            return P(*(entries[:-2] + entries[-1:]))
+        return P(*([None] * len(state_leaf_shape)))
+
+    def walk(state_node, pspec_node, pshape_node):
+        if isinstance(state_node, dict):
+            keys = set(state_node)
+            if keys <= {"m", "v"}:  # adamw: same tree as params
+                return {k: walk(v, pspec_node, pshape_node) for k, v in state_node.items()}
+            if keys <= {"v", "vr", "vc"} and not isinstance(
+                next(iter(state_node.values())), dict
+            ):
+                return {
+                    k: match(v.shape, pshape_node, pspec_node)
+                    for k, v in state_node.items()
+                }
+            return {
+                k: walk(v, pspec_node[k], pshape_node[k]) for k, v in state_node.items()
+            }
+        return match(state_node.shape, pshape_node, pspec_node)
+
+    return walk(opt_state_shapes, pspecs, params_shapes)
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_shapes: dict) -> dict:
+    """Leading (batch) dim over ("pod","data") when divisible."""
+    baxes = mesh_batch_axes(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape
+        lead = baxes if shape and _fit(mesh, shape[0], baxes) else None
+        out[k] = P(lead, *([None] * (len(shape) - 1))) if shape else P()
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shapes: dict) -> dict:
+    """Decode-cache specs: see module docstring."""
+    baxes = mesh_batch_axes(mesh)
+    out: dict[str, P] = {}
+    for name, leaf in cache_shapes.items():
+        shape = leaf.shape
+        if name == "lengths":
+            out[name] = P(None)
+            continue
+        # (L, B, ...) layout
+        used: list = []
+        b_ax = None
+        if _fit(mesh, shape[1], baxes) and shape[1] >= _axsize(mesh, baxes):
+            b_ax = baxes
+            used += list(baxes)
+        entries: list = [None, b_ax]
+        if name in ("k", "v"):
+            L, B, S, K, hd = shape
+            if _fit(mesh, K, "model"):
+                entries += [None, "model", None]
+                used.append("model")
+            else:
+                free = tuple(a for a in mesh.axis_names if a not in used)
+                seq_ax = _seq_axes(mesh, S, free)
+                entries += [seq_ax, None, None]
+        elif name == "ckv":
+            L, B, S, r = shape
+            if _fit(mesh, r, "model"):
+                entries += [None, "model"]
+            else:
+                free = tuple(a for a in mesh.axis_names if a not in used)
+                entries += [_seq_axes(mesh, S, free), None]
+        elif name == "krope":
+            L, B, S, r = shape
+            free = tuple(a for a in mesh.axis_names if a not in used)
+            entries += [_seq_axes(mesh, S, free), None]
+        elif name == "ssm_state":
+            L, B, H, Pp, N = shape
+            if _fit(mesh, H, "model"):
+                entries += ["model", None, None]
+            elif _fit(mesh, Pp, "model"):
+                entries += [None, "model", None]
+            else:
+                entries += [None, None, None]
+        elif name == "conv_state":
+            L, B, W, C = shape
+            entries += [None, "model" if _fit(mesh, C, "model") else None]
+        else:
+            entries += [None] * (len(shape) - 2)
+        out[name] = P(*entries)
+    return out
+
+
+def _seq_axes(mesh: Mesh, seq: int, free: tuple):
+    """Assign the largest prefix of free axes whose product divides seq."""
+    chosen = []
+    for a in free:
+        cand = chosen + [a]
+        if seq % math.prod(mesh.shape[x] for x in cand) == 0:
+            chosen = cand
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

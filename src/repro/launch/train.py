@@ -1,0 +1,104 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On real hardware this runs the pjit-sharded train step on the production
+mesh; on this CPU container it runs the same code path over the available
+devices (mesh (1,1)) with smoke-scale configs. The dry-run
+(``repro.launch.dryrun``) is the multi-pod proof; this is the runnable loop
+(checkpointing included).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import lm_batches, masked_audio_batches
+from repro.models import init_params, param_shapes
+from repro.training import (
+    latest_step,
+    load_checkpoint,
+    make_optimizer,
+    make_train_step,
+    save_checkpoint,
+)
+
+from .mesh import mesh_batch_axes
+from .sharding import batch_pspecs, named, opt_state_pspecs, param_pspecs
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    n = len(jax.devices())
+    model = 1
+    data = n
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="codeqwen1.5-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full config (needs a real TPU pod)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_local_mesh()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    opt = make_optimizer(cfg.name, lr=args.lr)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    start = 0
+    if args.ckpt_dir and (s := latest_step(args.ckpt_dir)) is not None:
+        params, opt_state, _ = load_checkpoint(args.ckpt_dir, s, params, opt_state)
+        start = s
+        step = jnp.asarray(s, jnp.int32)
+        print(f"resumed from step {s}")
+
+    if cfg.family == "audio":
+        batches = masked_audio_batches(cfg.d_model, cfg.vocab, args.batch, args.seq)
+    else:
+        batches = lm_batches(cfg.vocab, args.batch, args.seq)
+
+    pspec = param_pspecs(cfg, mesh, param_shapes(cfg))
+    p_sh = named(mesh, pspec)
+    o_sh = named(mesh, opt_state_pspecs(
+        jax.eval_shape(lambda: opt_state), pspec, param_shapes(cfg)
+    ))
+    step_fn = jax.jit(
+        make_train_step(cfg, opt, num_microbatches=1),
+        in_shardings=(p_sh, o_sh, None, None),
+        donate_argnums=(0, 1),
+    )
+
+    with mesh:
+        params = jax.device_put(params, p_sh)
+        for i in range(start, start + args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            params, opt_state, step, metrics = step_fn(params, opt_state, step, batch)
+            if i % args.log_every == 0 or i == start + args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(f"step {i:5d} loss={m['loss']:.4f} gnorm={m['grad_norm']:.2f}")
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, start + args.steps, params, opt_state,
+                        meta={"arch": cfg.name})
+        print(f"checkpointed at {start + args.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from .config import ModelConfig
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+    window_vector,
+)
+
+__all__ = [
+    "ModelConfig", "decode_step", "forward", "init_cache", "init_params",
+    "param_shapes", "prefill", "window_vector",
+]

@@ -1,0 +1,198 @@
+"""Attention primitives: GQA with causal / sliding-window / bidirectional
+masking, in two equivalent implementations:
+
+* ``attention_dense`` — materializes (B, H, S, S) scores; fine for short S
+  (training at 4k, smoke tests) and serves as the numerical oracle.
+* ``attention_blockwise`` — lax.scan over KV blocks with an online-softmax
+  running (max, sum, acc); memory O(S·block) instead of O(S²). This is the
+  XLA-level flash attention used for the 32k/512k dry-runs (the Pallas kernel
+  implements the same schedule for real TPUs; it cannot lower on the CPU
+  dry-run backend).
+
+Decode attention (one query token against a KV cache) is a separate, simpler
+primitive ``decode_attention``.
+
+All math in float32 accumulators, inputs/outputs in the model dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "repeat_kv",
+    "attention_dense",
+    "attention_blockwise",
+    "attention",
+    "decode_attention",
+]
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, K, D) -> (B, S, K*n_rep, D) by repeating each KV head."""
+    if n_rep == 1:
+        return x
+    b, s, k, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, n_rep, d)).reshape(
+        b, s, k * n_rep, d
+    )
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,      # (Sq,)
+    k_pos: jnp.ndarray,      # (Sk,)
+    causal: bool,
+    window: jnp.ndarray | int,  # 0 or traced scalar => no window bound
+) -> jnp.ndarray:
+    """Additive mask bias (Sq, Sk) in float32."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, diff < w, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_dense(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Sk, K, D)
+    v: jnp.ndarray,          # (B, Sk, K, Dv)
+    *,
+    causal: bool = True,
+    window: jnp.ndarray | int = 0,
+    q_offset: jnp.ndarray | int = 0,
+) -> jnp.ndarray:
+    """Reference attention; returns (B, Sq, H, Dv)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, dv = v.shape
+    k = repeat_kv(k, h // kh)
+    v = repeat_kv(v, h // kh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    logits = logits + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention_blockwise(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Sk, K, D)
+    v: jnp.ndarray,          # (B, Sk, K, Dv)
+    *,
+    causal: bool = True,
+    window: jnp.ndarray | int = 0,
+    q_offset: jnp.ndarray | int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax flash attention expressed in XLA ops.
+
+    Requires Sq % block_q == 0 and Sk % block_k == 0 (configs pad to this).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, dv = v.shape
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_rep = h // kh
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    nq, nk = sq // block_q, sk // block_k
+    qb = q.reshape(b, nq, block_q, h, d)
+    kb = k.reshape(b, nk, block_k, h, d)
+    vb = v.reshape(b, nk, block_k, h, dv)
+
+    def q_block_body(qi, q_block):
+        # q_block: (B, block_q, H, D)
+        q_pos = qi * block_q + jnp.arange(block_q) + q_offset
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_block, v_block = inputs
+            k_pos = ki * block_k + jnp.arange(block_k)
+            logits = (
+                jnp.einsum(
+                    "bqhd,bkhd->bhqk", q_block, k_block,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )
+            logits = logits + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_block.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        acc0 = jnp.zeros((b, h, block_q, dv), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0), (ks, kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # (B, block_q, H, Dv)
+
+    outs = jax.lax.map(
+        lambda args: q_block_body(args[0], args[1]),
+        (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)),
+    )  # (nq, B, block_q, H, Dv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention(
+    q, k, v, *, causal=True, window=0, q_offset=0,
+    dense_threshold: int = 4096, block_q: int = 512, block_k: int = 1024,
+) -> jnp.ndarray:
+    """Dispatch: dense for short sequences, blockwise beyond."""
+    sk = k.shape[1]
+    if sk <= dense_threshold or sk % block_k or q.shape[1] % block_q:
+        return attention_dense(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return attention_blockwise(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+    )
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, H, D) — one new token per sequence
+    k_cache: jnp.ndarray,    # (B, S, K, D)
+    v_cache: jnp.ndarray,    # (B, S, K, Dv)
+    lengths: jnp.ndarray,    # (B,) valid cache lengths (the new token is at lengths-1... see note)
+    *,
+    window: jnp.ndarray | int = 0,
+) -> jnp.ndarray:
+    """Single-step attention against a (padded) KV cache.
+
+    ``lengths[b]`` = number of valid cache entries for row b **including** the
+    current token's K/V (callers insert the new K/V before attending).
+    Returns (B, H, Dv).
+    """
+    b, s, kh, d = k_cache.shape
+    h = q.shape[1]
+    n_rep = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kr = repeat_kv(k_cache, n_rep)
+    vr = repeat_kv(v_cache, n_rep)
+    logits = jnp.einsum("bhd,bkhd->bhk", q, kr, preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(s)[None, :]                      # (1, S)
+    valid = k_pos < lengths[:, None]
+    w = jnp.asarray(window)
+    q_pos = lengths[:, None] - 1
+    valid &= jnp.where(w > 0, q_pos - k_pos < w, True)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", probs.astype(vr.dtype), vr)

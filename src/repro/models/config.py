@@ -1,0 +1,191 @@
+"""Composable model configuration covering all assigned architecture families:
+dense (GQA / MLA / sliding-window / squared-ReLU), MoE (top-k, optional dense
+residual), SSM (Mamba2 SSD), hybrid (parallel attention+SSM heads), and
+encoder-only (HuBERT-style masked prediction).
+
+A single ``ModelConfig`` drives parameter init, the train/prefill/decode step
+functions, the sharding rules and the dry-run input specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    # ---- attention ----
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    attention: str = "full"     # full | window | pattern (local:global mix)
+    window: int = 0             # sliding-window size (attention != full)
+    global_interval: int = 0    # pattern: every Nth layer is global (gemma3: 6)
+    qk_norm: bool = False       # chameleon-style QK-norm
+    rope_theta: float = 10000.0
+    # ---- MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style) ----
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    mla_absorb: bool = False   # decode in compressed space (weight absorption:
+                               # fold W^UK/W^UV into the query/output paths so
+                               # the c_kv cache is never expanded per step)
+    # ---- FFN ----
+    d_ff: int = 0
+    act: str = "swiglu"         # swiglu | squared_relu | gelu
+    # ---- MoE ----
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False   # Arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01      # load-balance loss weight (train)
+    # ---- SSM (Mamba2 / SSD) ----
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 64               # SSD chunk length
+    # ---- hybrid (Hymba): parallel attention + SSM heads per layer ----
+    hybrid: bool = False
+    # ---- encoder-only (HuBERT) ----
+    is_encoder: bool = False          # bidirectional, no decode phase
+    embed_inputs: bool = True         # False: inputs are frontend embeddings
+    # ---- numerics ----
+    embed_onehot: bool = False  # vocab-sharded-friendly lookup: one-hot @ table
+                                # (decode-scale token counts only)
+    dtype: str = "bfloat16"
+    # ---- training-time knobs (per-arch defaults; launch may override) ----
+    remat: bool = True
+    num_microbatches: int = 1
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.family not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm" and self.n_heads <= 0:
+            raise ValueError(f"{self.name}: attention families need n_heads")
+        if self.n_heads and self.n_kv_heads and self.n_heads % self.n_kv_heads:
+            raise ValueError(f"{self.name}: n_heads % n_kv_heads != 0")
+        if self.family in ("moe",) and (self.n_experts <= 0 or self.experts_per_token <= 0):
+            raise ValueError(f"{self.name}: moe needs experts")
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.use_mla:
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        if self.use_mla:
+            return self.v_head_dim
+        return self.resolved_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family == "ssm" or self.hybrid
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def causal(self) -> bool:
+        return not self.is_encoder
+
+    def layer_is_global(self, i: int) -> bool:
+        """Pattern attention (gemma3 5:1 local:global): every
+        ``global_interval``-th layer attends globally; others use the window."""
+        if self.attention == "full":
+            return True
+        if self.attention == "window":
+            return False
+        return (i + 1) % self.global_interval == 0
+
+    # ---- accounting ----------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D MODEL_FLOPS and memory
+        sanity checks in the roofline report)."""
+        d, L = self.d_model, self.n_layers
+        n = self.vocab * d  # input embedding
+        if not self.is_encoder:
+            n += self.vocab * d  # untied lm head
+        else:
+            n += self.vocab * d  # encoder prediction head over cluster codes
+        per_layer = 0
+        if self.has_attention:
+            if self.use_mla:
+                hd = self.qk_nope_head_dim + self.qk_rope_head_dim
+                q_in = self.q_lora_rank if self.q_lora_rank else d
+                per_layer += (d * self.q_lora_rank if self.q_lora_rank else 0)
+                per_layer += q_in * self.n_heads * hd
+                per_layer += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                per_layer += self.kv_lora_rank * self.n_heads * (
+                    self.qk_nope_head_dim + self.v_head_dim
+                )
+                per_layer += self.n_heads * self.v_head_dim * d
+            else:
+                hd = self.resolved_head_dim
+                per_layer += d * self.n_heads * hd
+                per_layer += 2 * d * self.n_kv_heads * hd
+                per_layer += self.n_heads * hd * d
+        if self.has_ssm:
+            di = self.d_inner
+            conv_dim = di + 2 * self.ssm_groups * self.ssm_state
+            per_layer += d * (2 * di + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads)
+            per_layer += conv_dim * self.conv_width
+            per_layer += self.ssm_heads * 2  # A_log, D
+            per_layer += di * d              # out proj
+        if self.has_ffn:
+            ffn = 0
+            mult = 3 if self.act == "swiglu" else 2
+            if self.is_moe:
+                ffn += self.n_experts * mult * d * self.d_ff
+                ffn += d * self.n_experts  # router
+                if self.moe_dense_residual:
+                    ffn += mult * d * self.d_ff
+            else:
+                ffn += mult * d * self.d_ff
+            per_layer += ffn
+        per_layer += 2 * d  # norms
+        return n + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        mult = 3 if self.act == "swiglu" else 2
+        inactive = L * (self.n_experts - self.experts_per_token) * mult * d * self.d_ff
+        return self.param_count() - inactive

@@ -1,0 +1,210 @@
+"""Distributed flash-decode over a sequence-sharded KV cache (shard_map).
+
+Why: when kv_heads < model-axis size (nemotron: kv=8 < 16), the decode cache
+shards its *sequence* dimension over "model". GSPMD's default lowering of
+one-token attention against a seq-sharded cache materializes full-length
+gathers per layer (~GBs/step). The roofline-correct schedule is the
+distributed flash-decode of Pope et al.: each shard computes a partial
+online-softmax over its KV slice, then the shards combine (max-rescaled)
+partial sums with two tiny psums of (B,H) statistics and one psum of the
+(B,H,D) partial outputs.
+
+The new token's K/V insertion also happens shard-locally (the shard owning
+position ``lengths-1`` updates; others no-op) — no cross-shard writes.
+
+Enabled per-run via ``decode_context`` (the §Perf variant path); the
+baseline keeps GSPMD's default for comparison.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "decode_context",
+    "active_decode_context",
+    "distributed_attn_decode",
+    "distributed_mla_decode_absorbed",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class _DecodeCtx:
+    mesh: Mesh
+    seq_axis: str
+    batch_axes: tuple
+
+
+_ACTIVE: list[_DecodeCtx] = []
+
+
+@contextlib.contextmanager
+def decode_context(mesh: Mesh, seq_axis: str = "model", batch_axes: tuple = ("data",)):
+    _ACTIVE.append(_DecodeCtx(mesh, seq_axis, tuple(batch_axes)))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_decode_context() -> Optional[_DecodeCtx]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def distributed_attn_decode(
+    q: jnp.ndarray,        # (B, H, D) — replicated over the seq axis
+    k_new: jnp.ndarray,    # (B, 1, K, D)
+    v_new: jnp.ndarray,
+    k_cache: jnp.ndarray,  # (B, S, K, D) — S sharded over ctx.seq_axis
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) — count INCLUDING the new token
+    window,
+    ctx: _DecodeCtx,
+):
+    """Returns (out (B,H,D), k_cache, v_cache) with shard-local insertion and
+    a max-rescaled cross-shard softmax combine."""
+    mesh = ctx.mesh
+    ax = ctx.seq_axis
+    bx = ctx.batch_axes if len(ctx.batch_axes) > 1 else (
+        ctx.batch_axes[0] if ctx.batch_axes else None
+    )
+
+    def local(q, k_new, v_new, kc, vc, lengths):
+        b, s_local, kh, d = kc.shape
+        h = q.shape[1]
+        n_rep = h // kh
+        shard = jax.lax.axis_index(ax)
+        start = shard * s_local
+
+        # --- shard-local insertion of the new token's K/V -------------------
+        idx = lengths - 1 - start
+        in_range = (idx >= 0) & (idx < s_local)
+        safe = jnp.clip(idx, 0, s_local - 1)
+        upd = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+        kc2 = jax.vmap(upd)(kc, k_new, safe)
+        vc2 = jax.vmap(upd)(vc, v_new, safe)
+        sel = in_range[:, None, None, None]
+        kc = jnp.where(sel, kc2, kc)
+        vc = jnp.where(sel, vc2, vc)
+
+        # --- local partial flash-decode --------------------------------------
+        kr = jnp.repeat(kc, n_rep, axis=2).astype(jnp.float32)
+        vr = jnp.repeat(vc, n_rep, axis=2).astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+        logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * scale
+        pos = start + jnp.arange(s_local)[None, :]
+        valid = pos < lengths[:, None]
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, (lengths[:, None] - 1 - pos) < w, True)
+        logits = jnp.where(valid[:, None, :], logits, -1e30)
+
+        m = logits.max(axis=-1)                              # (B,H)
+        p = jnp.exp(logits - m[..., None])
+        p = jnp.where(valid[:, None, :], p, 0.0)
+        l = p.sum(axis=-1)                                   # (B,H)
+        o = jnp.einsum("bhk,bkhd->bhd", p, vr)               # (B,H,D)
+
+        # --- cross-shard combine (2 scalar-field psums + 1 output psum) -----
+        m_glob = jax.lax.pmax(m, ax)
+        alpha = jnp.exp(m - m_glob)
+        l_tot = jax.lax.psum(l * alpha, ax)
+        o_tot = jax.lax.psum(o * alpha[..., None], ax)
+        out = (o_tot / jnp.maximum(l_tot, 1e-30)[..., None]).astype(q.dtype)
+        return out, kc, vc
+
+    out, kc, vc = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bx, None, None),
+            P(bx, None, None, None),
+            P(bx, None, None, None),
+            P(bx, ax, None, None),
+            P(bx, ax, None, None),
+            P(bx),
+        ),
+        out_specs=(P(bx, None, None), P(bx, ax, None, None), P(bx, ax, None, None)),
+        check_vma=False,
+    )(q, k_new, v_new, k_cache, v_cache, lengths)
+    return out, kc, vc
+
+
+def distributed_mla_decode_absorbed(
+    q_abs: jnp.ndarray,        # (B, H, r)  — absorbed no-pe query, replicated
+    q_rope: jnp.ndarray,       # (B, H, dr)
+    ckv_new: jnp.ndarray,      # (B, 1, r)
+    krope_new: jnp.ndarray,    # (B, 1, dr)
+    ckv_cache: jnp.ndarray,    # (B, S, r)  — S sharded over ctx.seq_axis
+    krope_cache: jnp.ndarray,  # (B, S, dr)
+    lengths: jnp.ndarray,
+    window,
+    scale: float,
+    ctx: _DecodeCtx,
+):
+    """Distributed flash-decode in the COMPRESSED MLA space: each seq shard
+    scores q against its c_kv slice and returns a partial (B,H,r) context;
+    the cross-shard combine psums tiny (B,H)/(B,H,r) tensors instead of the
+    baseline's per-layer (B,H,S) score all-reduce.
+
+    Returns (ctx_out (B,H,r) f32, ckv_cache, krope_cache).
+    """
+    mesh, ax = ctx.mesh, ctx.seq_axis
+    bx = ctx.batch_axes if len(ctx.batch_axes) > 1 else (
+        ctx.batch_axes[0] if ctx.batch_axes else None
+    )
+
+    def local(q_abs, q_rope, ckv_new, krope_new, cc, kr, lengths):
+        b, s_local, r = cc.shape
+        shard = jax.lax.axis_index(ax)
+        start = shard * s_local
+        idx = lengths - 1 - start
+        in_range = (idx >= 0) & (idx < s_local)
+        safe = jnp.clip(idx, 0, s_local - 1)
+        upd = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+        cc2 = jax.vmap(upd)(cc, ckv_new, safe)
+        kr2 = jax.vmap(upd)(kr, krope_new, safe)
+        sel = in_range[:, None, None]
+        cc = jnp.where(sel, cc2, cc)
+        kr = jnp.where(sel, kr2, kr)
+
+        f32 = jnp.float32
+        scores = (
+            jnp.einsum("bhr,bsr->bhs", q_abs.astype(f32), cc.astype(f32))
+            + jnp.einsum("bhd,bsd->bhs", q_rope.astype(f32), kr.astype(f32))
+        ) * scale
+        pos = start + jnp.arange(s_local)[None, :]
+        valid = pos < lengths[:, None]
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, (lengths[:, None] - 1 - pos) < w, True)
+        scores = jnp.where(valid[:, None, :], scores, -1e30)
+        m = scores.max(axis=-1)
+        p = jnp.exp(scores - m[..., None])
+        p = jnp.where(valid[:, None, :], p, 0.0)
+        l = p.sum(axis=-1)
+        ctx_part = jnp.einsum("bhs,bsr->bhr", p, cc.astype(f32))
+
+        m_glob = jax.lax.pmax(m, ax)
+        alpha = jnp.exp(m - m_glob)
+        l_tot = jax.lax.psum(l * alpha, ax)
+        c_tot = jax.lax.psum(ctx_part * alpha[..., None], ax)
+        out = c_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+        return out, cc, kr
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bx, None, None), P(bx, None, None),
+            P(bx, None, None), P(bx, None, None),
+            P(bx, ax, None), P(bx, ax, None),
+            P(bx),
+        ),
+        out_specs=(P(bx, None, None), P(bx, ax, None), P(bx, ax, None)),
+        check_vma=False,
+    )(q_abs, q_rope, ckv_new, krope_new, ckv_cache, krope_cache, lengths)

@@ -1,0 +1,347 @@
+"""Layer-level building blocks: norms, FFN variants, GQA/MLA attention
+blocks and the Mamba2 mixer, each in full-sequence (train/prefill) and
+single-token (decode) forms. ``model.py`` stitches these into scan-over-layer
+step functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention, attention_dense, decode_attention
+from .config import ModelConfig
+from .distributed import (
+    active_decode_context,
+    distributed_attn_decode,
+    distributed_mla_decode_absorbed,
+)
+from .moe import moe_ffn
+from .rope import apply_rope
+from .ssm import causal_conv1d, conv1d_step, ssd_chunked, ssd_decode_step
+
+__all__ = [
+    "rms_norm",
+    "ffn_apply",
+    "attn_full",
+    "attn_decode",
+    "mla_full",
+    "mla_decode",
+    "ssm_full",
+    "ssm_decode",
+]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense + MoE dispatch)
+# ---------------------------------------------------------------------------
+
+
+def ffn_apply(cfg: ModelConfig, lp: dict, x: jnp.ndarray):
+    """x: (B, S, d) -> (y, aux_loss). Handles dense / MoE / Arctic residual."""
+    b, s, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+
+    def dense(xf, w_gate, w_up, w_down):
+        if cfg.act == "swiglu":
+            z = jax.nn.silu(xf @ w_gate) * (xf @ w_up)
+        elif cfg.act == "squared_relu":
+            z = jnp.square(jax.nn.relu(xf @ w_up))
+        else:
+            z = jax.nn.gelu(xf @ w_up)
+        return z @ w_down
+
+    if cfg.is_moe:
+        flat = x.reshape(b * s, d)
+        out = moe_ffn(
+            flat,
+            lp["router"],
+            lp.get("moe_gate"),
+            lp["moe_up"],
+            lp["moe_down"],
+            k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            act=cfg.act,
+        )
+        y = out.y.reshape(b, s, d)
+        aux = out.aux_loss
+        if cfg.moe_dense_residual:  # Arctic: dense FFN in parallel
+            y = y + dense(x, lp.get("w_gate"), lp["w_up"], lp["w_down"])
+        return y, aux
+    return dense(x, lp.get("w_gate"), lp["w_up"], lp["w_down"]), aux
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, lp: dict, x: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    return q, k, v
+
+
+def attn_full(
+    cfg: ModelConfig,
+    lp: dict,
+    x: jnp.ndarray,             # (B, S, d) — already normed
+    window,                      # 0 = unbounded
+    positions: jnp.ndarray,      # (S,)
+):
+    """Full-sequence attention. Returns (out (B,S,d), k, v)."""
+    q, k, v = _qkv(cfg, lp, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=cfg.causal, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    return out, k, v
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    lp: dict,
+    x: jnp.ndarray,              # (B, 1, d) — normed
+    k_cache: jnp.ndarray,        # (B, S, K, hd)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,        # (B,) length INCLUDING the new token
+    window,
+):
+    q, k, v = _qkv(cfg, lp, x)
+    pos = (lengths - 1)[:, None]                     # (B,1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    ctx = active_decode_context()
+    if ctx is not None:
+        # §Perf variant: distributed flash-decode over seq-sharded caches
+        o, k_cache, v_cache = distributed_attn_decode(
+            q[:, 0], k, v, k_cache, v_cache, lengths, window, ctx
+        )
+        out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+        return out, k_cache, v_cache
+
+    # insert new K/V at position lengths-1
+    b = x.shape[0]
+    idx = lengths - 1
+    k_cache = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(c, kn, i, 0))(
+        k_cache, k, idx
+    )
+    v_cache = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice_in_dim(c, vn, i, 0))(
+        v_cache, v, idx
+    )
+    o = decode_attention(q[:, 0], k_cache, v_cache, lengths, window=window)
+    out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg: ModelConfig, lp: dict, x: jnp.ndarray, positions):
+    if cfg.q_lora_rank:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, lp["wq_a"]), lp["q_a_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, lp["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq_b"])
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_kv_expand(cfg: ModelConfig, lp: dict, c_kv: jnp.ndarray, k_rope: jnp.ndarray):
+    """c_kv: (B,S,r), k_rope: (B,S,rope_dim) -> k,v per head."""
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, lp["wkv_b"])
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :],
+        (*k_rope.shape[:2], cfg.n_heads, cfg.qk_rope_head_dim),
+    )
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def mla_full(cfg: ModelConfig, lp: dict, x: jnp.ndarray, window, positions):
+    """Returns (out, c_kv, k_rope) — the compressed cache entries."""
+    q = _mla_q(cfg, lp, x, positions)
+    ckv_kr = jnp.einsum("bsd,dr->bsr", x, lp["wkv_a"])
+    c_kv, k_rope = jnp.split(ckv_kr, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, lp["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    k, v = _mla_kv_expand(cfg, lp, c_kv, k_rope)
+    o = attention(q, k, v, causal=cfg.causal, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    return out, c_kv, k_rope
+
+
+def mla_decode_absorbed(cfg: ModelConfig, lp: dict, x, ckv_cache, krope_cache,
+                        lengths, window):
+    """Weight-absorbed MLA decode: attention runs in the compressed c_kv
+    space, so the (B,S,H,·) expansion — and, when the rank dim is sharded,
+    its per-layer all-reduce — never happens.
+
+      scores = (q_nope · W^UK) · c_kv + q_rope · k_rope
+      out    = (probs · c_kv) · W^UV · W^O
+
+    Exactly equivalent to mla_decode (associativity of the linear maps);
+    validated against it in tests. This is the §Perf 'beyond-paper'
+    optimization for minicpm3-4b × decode_32k.
+    """
+    b = x.shape[0]
+    pos = (lengths - 1)[:, None]
+    q = _mla_q(cfg, lp, x, pos)                       # (B,1,H,dn+dr)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+
+    ckv_kr = jnp.einsum("bsd,dr->bsr", x, lp["wkv_a"])
+    c_kv, k_rope = jnp.split(ckv_kr, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, lp["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    idx = lengths - 1
+    ckv_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        ckv_cache, c_kv, idx
+    )
+    krope_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        krope_cache, k_rope, idx
+    )
+
+    wk_b, wv_b = jnp.split(lp["wkv_b"], [cfg.qk_nope_head_dim], axis=-1)
+    # absorb W^UK into the query: (B,H,dn)·(r,H,dn) -> (B,H,r)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+    f32 = jnp.float32
+    scale = 1.0 / float(np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim))
+
+    dctx = active_decode_context()
+    if dctx is not None:
+        # §Perf variant: seq-sharded compressed cache + flash-decode combine
+        ctx_vec, ckv_cache, krope_cache = distributed_mla_decode_absorbed(
+            q_abs, q_rope[:, 0], c_kv, k_rope, ckv_cache, krope_cache,
+            lengths, window, scale, dctx,
+        )
+        o = jnp.einsum("bhr,rhd->bhd", ctx_vec, wv_b.astype(f32)).astype(x.dtype)
+        out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+        return out, ckv_cache, krope_cache
+
+    scores = jnp.einsum(
+        "bhr,bsr->bhs", q_abs.astype(f32), ckv_cache.astype(f32)
+    ) + jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, 0].astype(f32), krope_cache.astype(f32)
+    )
+    scores = scores * scale
+    s = ckv_cache.shape[1]
+    k_pos = jnp.arange(s)[None, :]
+    valid = k_pos < lengths[:, None]
+    w = jnp.asarray(window)
+    valid &= jnp.where(w > 0, (lengths[:, None] - 1 - k_pos) < w, True)
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(f32))  # (B,H,r)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(f32)).astype(x.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+    return out, ckv_cache, krope_cache
+
+
+def mla_decode(cfg: ModelConfig, lp: dict, x, ckv_cache, krope_cache, lengths, window):
+    """ckv_cache: (B,S,r); krope_cache: (B,S,rope_dim)."""
+    pos = (lengths - 1)[:, None]
+    q = _mla_q(cfg, lp, x, pos)                       # (B,1,H,hd)
+    ckv_kr = jnp.einsum("bsd,dr->bsr", x, lp["wkv_a"])
+    c_kv, k_rope = jnp.split(ckv_kr, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, lp["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    idx = lengths - 1
+    ckv_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        ckv_cache, c_kv, idx
+    )
+    krope_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        krope_cache, k_rope, idx
+    )
+    k, v = _mla_kv_expand(cfg, lp, ckv_cache, krope_cache)
+    o = decode_attention(q[:, 0], k, v, lengths, window=window)
+    out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+    return out, ckv_cache, krope_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer
+# ---------------------------------------------------------------------------
+
+
+def _ssm_split(cfg: ModelConfig, proj: jnp.ndarray):
+    di, gn, h = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def ssm_full(cfg: ModelConfig, lp: dict, x: jnp.ndarray):
+    """Mamba2 block over a full sequence. x: (B,S,d) normed.
+    Returns (out (B,S,d), final_ssm_state, final_conv_state)."""
+    b, s, _ = x.shape
+    di, g, n, h, p = (
+        cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim,
+    )
+    proj = jnp.einsum("bsd,de->bse", x, lp["ssm_in"])
+    z, xbc, dt_raw = _ssm_split(cfg, proj)
+    xbc_conv = causal_conv1d(xbc, lp["conv_w"], lp["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc_conv, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, p)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"][None, None, :])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    # pad to a chunk multiple: padded steps get dt=0 (identity state decay,
+    # zero input contribution), so states and outputs are unaffected.
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    if pad:
+        y = y[:, :s]
+        xs = xs[:, :s]
+    y = y + xs * lp["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["gnorm"])
+    out = jnp.einsum("bse,ed->bsd", y, lp["ssm_out"])
+    conv_state = jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[
+        :, s : s + cfg.conv_width - 1, :
+    ]  # last W-1 pre-activation conv inputs
+    return out, state, conv_state
+
+
+def ssm_decode(cfg: ModelConfig, lp: dict, x: jnp.ndarray, ssm_state, conv_state):
+    """One-token Mamba2 step. x: (B,1,d) normed. Returns (out, ssm_state, conv_state)."""
+    b = x.shape[0]
+    di, g, n, h, p = (
+        cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim,
+    )
+    proj = jnp.einsum("bsd,de->bse", x, lp["ssm_in"])[:, 0]
+    z, xbc, dt_raw = _ssm_split(cfg, proj)
+    xbc_c, conv_state = conv1d_step(conv_state, xbc, lp["conv_w"], lp["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc_c, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"][None, :])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(
+        ssm_state, xs.reshape(b, h, p), dt, A, Bm.reshape(b, g, n), Cm.reshape(b, g, n)
+    )
+    y = y + xs.reshape(b, h, p) * lp["D"][None, :, None]
+    y = rms_norm(y.reshape(b, di) * jax.nn.silu(z), lp["gnorm"])
+    out = jnp.einsum("be,ed->bd", y, lp["ssm_out"])[:, None, :]
+    return out, ssm_state, conv_state

@@ -1,0 +1,391 @@
+"""Composable transformer/SSM language model with scan-over-layers.
+
+Three step functions cover every (architecture × input shape) combination:
+
+  forward(params, cfg, inputs)                 -> (logits, aux)   [train]
+  prefill(params, cfg, inputs, max_len)        -> (last_logits, cache)
+  decode_step(params, cfg, cache, token)       -> (logits, cache)
+
+All layers of a model are homogeneous and stacked with a leading layer axis,
+so the whole depth is one ``lax.scan`` — tiny HLO, fast dry-run compiles, and
+remat applies per layer. Per-layer heterogeneity (gemma3's 5:1 local:global
+pattern) is expressed as a scanned ``window`` vector, not as distinct layer
+code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    attn_decode,
+    attn_full,
+    ffn_apply,
+    mla_decode,
+    mla_decode_absorbed,
+    mla_full,
+    rms_norm,
+    ssm_decode,
+    ssm_full,
+)
+
+__all__ = [
+    "init_params",
+    "param_shapes",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "window_vector",
+    "Cache",
+]
+
+Cache = dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _layer_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: dict[str, tuple] = {"mixer_norm": (d,)}
+    if cfg.has_attention:
+        if cfg.use_mla:
+            hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            if cfg.q_lora_rank:
+                shapes["wq_a"] = (d, cfg.q_lora_rank)
+                shapes["q_a_norm"] = (cfg.q_lora_rank,)
+                shapes["wq_b"] = (cfg.q_lora_rank, cfg.n_heads, hd)
+            else:
+                shapes["wq_b"] = (d, cfg.n_heads, hd)
+            shapes["wkv_a"] = (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+            shapes["kv_a_norm"] = (cfg.kv_lora_rank,)
+            shapes["wkv_b"] = (
+                cfg.kv_lora_rank,
+                cfg.n_heads,
+                cfg.qk_nope_head_dim + cfg.v_head_dim,
+            )
+            shapes["wo"] = (cfg.n_heads, cfg.v_head_dim, d)
+        else:
+            hd = cfg.resolved_head_dim
+            shapes["wq"] = (d, cfg.n_heads, hd)
+            shapes["wk"] = (d, cfg.n_kv_heads, hd)
+            shapes["wv"] = (d, cfg.n_kv_heads, hd)
+            shapes["wo"] = (cfg.n_heads, hd, d)
+            if cfg.qk_norm:
+                shapes["q_norm"] = (hd,)
+                shapes["k_norm"] = (hd,)
+    if cfg.has_ssm:
+        di = cfg.d_inner
+        gn = cfg.ssm_groups * cfg.ssm_state
+        h = cfg.ssm_heads
+        conv_dim = di + 2 * gn
+        shapes["ssm_in"] = (d, 2 * di + 2 * gn + h)
+        shapes["conv_w"] = (conv_dim, cfg.conv_width)
+        shapes["conv_b"] = (conv_dim,)
+        shapes["A_log"] = (h,)
+        shapes["D"] = (h,)
+        shapes["dt_bias"] = (h,)
+        shapes["gnorm"] = (di,)
+        shapes["ssm_out"] = (di, d)
+    if cfg.hybrid:
+        shapes["attn_out_norm"] = (d,)
+        shapes["ssm_out_norm"] = (d,)
+    if cfg.has_ffn:
+        shapes["ffn_norm"] = (d,)
+        if cfg.is_moe:
+            e = cfg.n_experts
+            shapes["router"] = (d, e)
+            if cfg.act == "swiglu":
+                shapes["moe_gate"] = (e, d, f)
+            shapes["moe_up"] = (e, d, f)
+            shapes["moe_down"] = (e, f, d)
+            if cfg.moe_dense_residual:
+                if cfg.act == "swiglu":
+                    shapes["w_gate"] = (d, f)
+                shapes["w_up"] = (d, f)
+                shapes["w_down"] = (f, d)
+        else:
+            if cfg.act == "swiglu":
+                shapes["w_gate"] = (d, f)
+            shapes["w_up"] = (d, f)
+            shapes["w_down"] = (f, d)
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    tree: dict[str, Any] = {
+        "layers": {
+            k: (cfg.n_layers, *s) for k, s in _layer_param_shapes(cfg).items()
+        },
+        "final_norm": (d,),
+        "lm_head": (d, cfg.vocab),
+    }
+    if cfg.embed_inputs:
+        tree["embed"] = (cfg.vocab, d)
+    else:
+        tree["in_proj"] = (d, d)  # frontend embeddings -> model width
+    return tree
+
+
+_NORM_KEYS = {
+    "mixer_norm", "ffn_norm", "q_norm", "k_norm", "q_a_norm", "kv_a_norm",
+    "gnorm", "attn_out_norm", "ssm_out_norm", "final_norm",
+}
+_F32_KEYS = _NORM_KEYS | {"A_log", "D", "dt_bias", "conv_b", "router"}
+
+
+def _param_dtype(name: str, cfg: ModelConfig):
+    return jnp.float32 if name in _F32_KEYS else jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Random init (trunc-normal 0.02 fan-in style; SSM specials per Mamba2)."""
+    shapes = param_shapes(cfg)
+    flat: dict[str, Any] = {}
+    keys = jax.random.split(key, 64)
+    ki = iter(range(64))
+
+    def init_one(name: str, shape: tuple) -> jnp.ndarray:
+        dt = _param_dtype(name, cfg)
+        if name in _NORM_KEYS:
+            return jnp.zeros(shape, dt)  # scales stored as (1 + s)
+        if name == "A_log":
+            base = jnp.tile(
+                jnp.log(jnp.linspace(1.0, 16.0, shape[-1], dtype=jnp.float32)),
+                (shape[0], 1) if len(shape) == 2 else (1,),
+            ).reshape(shape)
+            return base.astype(dt)
+        if name == "D":
+            return jnp.ones(shape, dt)
+        if name == "dt_bias":
+            return jnp.full(shape, -4.6, dt)  # softplus^-1(~0.01)
+        if name == "conv_b":
+            return jnp.zeros(shape, dt)
+        k = keys[next(ki) % 64]
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 0.02 if name in ("embed", "lm_head") else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dt)
+
+    for name, shape in shapes.items():
+        if name == "layers":
+            flat["layers"] = {k: init_one(k, s) for k, s in shape.items()}
+        else:
+            flat[name] = init_one(name, shape)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Layer meta
+# ---------------------------------------------------------------------------
+
+
+def window_vector(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) int32: 0 => unbounded attention, else sliding-window size."""
+    return jnp.array(
+        [0 if cfg.layer_is_global(i) else cfg.window for i in range(cfg.n_layers)],
+        dtype=jnp.int32,
+    )
+
+
+def _embed(params: dict, cfg: ModelConfig, inputs: jnp.ndarray) -> jnp.ndarray:
+    if cfg.embed_inputs:
+        if cfg.embed_onehot:
+            # vocab-sharded-friendly: contract a one-hot over the (sharded)
+            # vocab dim instead of gathering the table (decode-scale only)
+            oh = jax.nn.one_hot(inputs, params["embed"].shape[0], dtype=cfg.dtype)
+            return jnp.einsum("bsv,vd->bsd", oh, params["embed"])
+        return jnp.take(params["embed"], inputs, axis=0).astype(cfg.dtype)
+    return jnp.einsum("bsd,de->bse", inputs.astype(cfg.dtype), params["in_proj"])
+
+
+def _logits(params: dict, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train) and prefill
+# ---------------------------------------------------------------------------
+
+
+def _full_layer_body(cfg: ModelConfig, emit_cache: bool, seq_len: int):
+    positions = jnp.arange(seq_len)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        h = rms_norm(x, lp["mixer_norm"])
+        cache_out = {}
+        attn_out = ssm_out = None
+        if cfg.has_attention:
+            if cfg.use_mla:
+                attn_out, ckv, krope = mla_full(cfg, lp, h, window, positions)
+                if emit_cache:
+                    cache_out = {"ckv": ckv, "krope": krope}
+            else:
+                attn_out, k, v = attn_full(cfg, lp, h, window, positions)
+                if emit_cache:
+                    cache_out = {"k": k, "v": v}
+        if cfg.has_ssm:
+            ssm_out, sstate, cstate = ssm_full(cfg, lp, h)
+            if emit_cache:
+                cache_out.update({"ssm_state": sstate, "conv_state": cstate})
+        if cfg.hybrid:
+            mix = 0.5 * (
+                rms_norm(attn_out, lp["attn_out_norm"])
+                + rms_norm(ssm_out, lp["ssm_out_norm"])
+            )
+        else:
+            mix = attn_out if attn_out is not None else ssm_out
+        x = x + mix.astype(x.dtype)
+        if cfg.has_ffn:
+            f, a = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+            aux = aux + a
+        return (x, aux), cache_out
+
+    return body
+
+
+def _run_layers(params, cfg, h0, emit_cache: bool):
+    seq_len = h0.shape[1]
+    body = _full_layer_body(cfg, emit_cache, seq_len)
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), caches = jax.lax.scan(
+        body,
+        (h0, jnp.zeros((), jnp.float32)),
+        (params["layers"], window_vector(cfg)),
+    )
+    return h, aux, caches
+
+
+def forward(params: dict, cfg: ModelConfig, inputs: jnp.ndarray):
+    """Teacher-forced full forward. Returns (logits (B,S,V) f32, aux loss)."""
+    h0 = _embed(params, cfg, inputs)
+    h, aux, _ = _run_layers(params, cfg, h0, emit_cache=False)
+    return _logits(params, cfg, h), aux
+
+
+def prefill(params: dict, cfg: ModelConfig, inputs: jnp.ndarray, max_len: int):
+    """Prefill: full forward + cache construction, padded to ``max_len``.
+
+    Returns (last_logits (B, V), cache). Assumes uniform prompt length S
+    within the batch (the serving engine pads/groups accordingly).
+    """
+    b = inputs.shape[0]
+    s = inputs.shape[1]
+    h0 = _embed(params, cfg, inputs)
+    h, _, caches = _run_layers(params, cfg, h0, emit_cache=True)
+    last = _logits(params, cfg, h[:, -1:, :])[:, 0]
+
+    cache: Cache = {}
+    pad_s = max_len - s
+    for k, v in caches.items():
+        if k in ("k", "v", "ckv", "krope"):
+            pads = [(0, 0)] * v.ndim
+            pads[2] = (0, pad_s)  # (L, B, S, ...) -> pad seq axis
+            cache[k] = jnp.pad(v, pads)
+        else:
+            cache[k] = v
+    cache["lengths"] = jnp.full((b,), s, jnp.int32)
+    return last, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_layer_body(cfg: ModelConfig, lengths: jnp.ndarray):
+    def body(x, xs):
+        lp, window, cache_layer = xs
+        h = rms_norm(x, lp["mixer_norm"])
+        new_cache = {}
+        attn_out = ssm_out = None
+        if cfg.has_attention:
+            if cfg.use_mla:
+                mla_fn = mla_decode_absorbed if cfg.mla_absorb else mla_decode
+                attn_out, ckv, krope = mla_fn(
+                    cfg, lp, h, cache_layer["ckv"], cache_layer["krope"], lengths, window
+                )
+                new_cache.update({"ckv": ckv, "krope": krope})
+            else:
+                attn_out, kc, vc = attn_decode(
+                    cfg, lp, h, cache_layer["k"], cache_layer["v"], lengths, window
+                )
+                new_cache.update({"k": kc, "v": vc})
+        if cfg.has_ssm:
+            ssm_out, sstate, cstate = ssm_decode(
+                cfg, lp, h, cache_layer["ssm_state"], cache_layer["conv_state"]
+            )
+            new_cache.update({"ssm_state": sstate, "conv_state": cstate})
+        if cfg.hybrid:
+            mix = 0.5 * (
+                rms_norm(attn_out, lp["attn_out_norm"])
+                + rms_norm(ssm_out, lp["ssm_out_norm"])
+            )
+        else:
+            mix = attn_out if attn_out is not None else ssm_out
+        x = x + mix.astype(x.dtype)
+        if cfg.has_ffn:
+            f, _ = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+        return x, new_cache
+
+    return body
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: Cache, token: jnp.ndarray):
+    """One decode step. ``token``: (B,) int32 — the most recent token.
+
+    The cache's ``lengths`` already count the prompt (and prior generated
+    tokens); this step appends the new token's KV at position ``lengths``
+    and returns logits for the next token, with lengths advanced by 1.
+
+    Returns (logits (B, V) f32, new_cache).
+    """
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    lengths = cache["lengths"] + 1  # include the new token
+    h0 = _embed(params, cfg, token[:, None])
+    layer_caches = {k: v for k, v in cache.items() if k != "lengths"}
+    body = _decode_layer_body(cfg, lengths)
+    h, new_caches = jax.lax.scan(
+        body, h0, (params["layers"], window_vector(cfg), layer_caches)
+    )
+    logits = _logits(params, cfg, h)[:, 0]
+    new_caches["lengths"] = lengths
+    return logits, new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    """Zero-initialized cache pytree (for dry-run specs and fresh decode)."""
+    L = cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    cache: Cache = {}
+    if cfg.has_attention:
+        if cfg.use_mla:
+            cache["ckv"] = jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dt)
+            cache["krope"] = jnp.zeros((L, batch, max_len, cfg.qk_rope_head_dim), dt)
+        else:
+            hd = cfg.resolved_head_dim
+            cache["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt)
+            cache["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt)
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["ssm_state"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+        cache["conv_state"] = jnp.zeros((L, batch, cfg.conv_width - 1, conv_dim), dt)
+    cache["lengths"] = jnp.zeros((batch,), jnp.int32)
+    return cache

@@ -1,0 +1,92 @@
+"""Top-k Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Implements the expert-parallel pattern used by Arctic (128e top-2 + dense
+residual) and OLMoE (64e top-8): tokens are routed to their top-k experts,
+packed into per-expert capacity buffers (scatter), processed as batched
+einsums over the expert dimension (which shards over the "model"/"expert"
+mesh axis -> all-to-all under GSPMD), and combined back weighted by the
+router probabilities. Overflowing tokens are dropped (standard capacity
+semantics); the router aux loss (load balancing, Switch-style) is returned
+for the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn", "MoEOutput"]
+
+
+@dataclasses.dataclass
+class MoEOutput:
+    y: jnp.ndarray          # (T, d)
+    aux_loss: jnp.ndarray   # scalar load-balance loss
+    router_entropy: jnp.ndarray
+
+
+def _expert_ffn(h: jnp.ndarray, w_gate, w_up, w_down, act: str) -> jnp.ndarray:
+    """h: (E, C, d); weights: (E, d, f) / (E, f, d)."""
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", h, w_up)
+        z = jax.nn.silu(g) * u
+    elif act == "squared_relu":
+        u = jnp.einsum("ecd,edf->ecf", h, w_up)
+        z = jnp.square(jax.nn.relu(u))
+    else:
+        u = jnp.einsum("ecd,edf->ecf", h, w_up)
+        z = jax.nn.gelu(u)
+    return jnp.einsum("ecf,efd->ecd", z, w_down)
+
+
+def moe_ffn(
+    x: jnp.ndarray,            # (T, d) flattened tokens
+    router_w: jnp.ndarray,     # (d, E)
+    w_gate: jnp.ndarray | None,  # (E, d, f) — None for non-swiglu acts
+    w_up: jnp.ndarray,         # (E, d, f)
+    w_down: jnp.ndarray,       # (E, f, d)
+    *,
+    k: int,
+    capacity_factor: float,
+    act: str = "swiglu",
+) -> MoEOutput:
+    t, d = x.shape
+    e = router_w.shape[-1]
+    capacity = max(int(t * k / e * capacity_factor), 1)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- position of each (token, slot) inside its expert's buffer ----------
+    flat_e = top_e.reshape(-1)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                        # running count
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < capacity                                  # drop overflow
+
+    # --- scatter tokens into (E*C, d) buffers --------------------------------
+    buf_idx = jnp.where(keep, flat_e * capacity + flat_pos, e * capacity)
+    x_rep = jnp.repeat(x, k, axis=0)                            # (T*k, d)
+    buffers = jnp.zeros((e * capacity + 1, d), x.dtype).at[buf_idx].add(x_rep)
+    h = buffers[:-1].reshape(e, capacity, d)
+
+    out = _expert_ffn(h, w_gate, w_up, w_down, act)             # (E, C, d)
+
+    # --- gather back and combine ---------------------------------------------
+    flat_out = out.reshape(e * capacity, d)
+    gathered = jnp.where(
+        keep[:, None], flat_out[jnp.minimum(buf_idx, e * capacity - 1)], 0.0
+    )
+    weights = top_p.reshape(-1)[:, None].astype(x.dtype)        # (T*k, 1)
+    y = (gathered * weights).reshape(t, k, d).sum(axis=1)
+
+    # --- Switch-style load-balance aux loss ----------------------------------
+    me = probs.mean(axis=0)                                     # mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    entropy = -jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1).mean()
+    return MoEOutput(y=y, aux_loss=aux, router_entropy=entropy)

@@ -1,0 +1,25 @@
+"""Rotary position embeddings (applied on the fly — positions up to 512k)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope"]
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions``
+    of shape broadcastable to (..., seq). Computed in float32, cast back."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, hd/2)
+    angles = angles[..., None, :]                             # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)

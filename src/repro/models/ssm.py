@@ -1,0 +1,155 @@
+"""Mamba2 SSD (state-space duality) — chunked training/prefill form and the
+single-token recurrent decode form [arXiv:2405.21060].
+
+Shapes follow the Mamba2 convention:
+  x  : (B, T, H, P)   — inputs split into H heads of dim P
+  dt : (B, T, H)      — softplus-ed step sizes
+  A  : (H,)           — negative real decay per head
+  Bm : (B, T, G, N)   — input matrix (G groups broadcast over heads)
+  Cm : (B, T, G, N)   — output matrix
+  state: (B, H, P, N)
+
+The chunked form (``ssd_chunked``) computes, per chunk of length Q, the
+quadratic intra-chunk "attention-like" term and carries inter-chunk states
+with a linear scan — O(T·Q) work and O(T/Q) sequential steps. The recurrent
+form (``ssd_decode_step``) advances one token in O(1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "causal_conv1d", "conv1d_step"]
+
+
+def _broadcast_groups(m: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, T, G, N) -> (B, T, H, N) by repeating groups."""
+    b, t, g, n = m.shape
+    rep = n_heads // g
+    return jnp.broadcast_to(m[:, :, :, None, :], (b, t, g, rep, n)).reshape(
+        b, t, n_heads, n
+    )
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    initial_state: jnp.ndarray | None = None,
+):
+    """Returns (y: (B,T,H,P), final_state: (B,H,P,N)). T % chunk == 0."""
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    Bm = _broadcast_groups(Bm, h)
+    Cm = _broadcast_groups(Cm, h)
+
+    f32 = jnp.float32
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]            # (B,T,H,P)
+    dA = dt.astype(f32) * A.astype(f32)[None, None, :]          # (B,T,H) <= 0
+
+    # chunked views
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    Bc = Bm.reshape(b, nc, chunk, h, n).astype(f32)
+    Cc = Cm.reshape(b, nc, chunk, h, n).astype(f32)
+    dAc = dA.reshape(b, nc, chunk, h)
+    seg = jnp.cumsum(dAc, axis=2)                               # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic, "dual" attention form) -------------------
+    # L[i,j] = exp(seg_i - seg_j) for i >= j else 0
+    li = seg[:, :, :, None, :]                                  # (B,nc,Q,1,H)
+    lj = seg[:, :, None, :, :]                                  # (B,nc,1,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)           # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * L, xc)
+
+    # --- chunk states ------------------------------------------------------
+    seg_last = seg[:, :, -1:, :]                                # (B,nc,1,H)
+    decay_out = jnp.exp(seg_last - seg)                         # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bc, decay_out, xc)
+
+    # --- inter-chunk linear recurrence -------------------------------------
+    chunk_decay = jnp.exp(seg_last[:, :, 0, :])                 # (B,nc,H)
+
+    def step(h_carry, inp):
+        st, dec = inp                                           # (B,H,P,N), (B,H)
+        h_prev = h_carry
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), f32)
+    )
+    final_state, h_prevs = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution to outputs --------------------------------
+    in_decay = jnp.exp(seg)                                     # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Cc, h_prevs) * in_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,   # (B, H, P, N) float32
+    x: jnp.ndarray,       # (B, H, P)
+    dt: jnp.ndarray,      # (B, H)
+    A: jnp.ndarray,       # (H,)
+    Bm: jnp.ndarray,      # (B, G, N)
+    Cm: jnp.ndarray,      # (B, G, N)
+):
+    """One recurrent step. Returns (y: (B,H,P), new_state)."""
+    b, h, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[2]
+    rep = h // g
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (b, g, rep, n)).reshape(b, h, n)
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (b, g, rep, n)).reshape(b, h, n)
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])       # (B,H)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]             # (B,H,P)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, Bh.astype(f32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(f32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (the short conv in Mamba blocks)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, C), w: (C, W), b: (C,). Causal depthwise conv + silu."""
+    width = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[:, i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def conv1d_step(
+    conv_state: jnp.ndarray,  # (B, W-1, C) — previous inputs
+    x_new: jnp.ndarray,       # (B, C)
+    w: jnp.ndarray,           # (C, W)
+    b: jnp.ndarray,           # (C,)
+):
+    """One causal-conv step. Returns (y: (B,C), new_conv_state)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,cw->bc", window, w) + b[None, :]
+    new_state = window[:, 1:, :]
+    return jax.nn.silu(y), new_state

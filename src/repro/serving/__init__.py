@@ -1,0 +1,9 @@
+from .disco_driver import DiSCoServer, ServedRequest
+from .endpoint import DeviceEndpoint, NetworkModel, ServerEndpoint, TokenEvent
+from .engine import BatchedServer, GenerationResult, InferenceEngine
+
+__all__ = [
+    "DiSCoServer", "ServedRequest",
+    "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
+    "BatchedServer", "GenerationResult", "InferenceEngine",
+]

@@ -1,0 +1,174 @@
+"""DiSCo serving driver: the middleware loop over two real engines (Fig. 1).
+
+For each request:
+  1. dispatch (§4.2): plan_request gives {use_server, use_device, device_wait}
+  2. race: both endpoints stream tokens on a shared virtual timeline; the
+     first first-token wins, the loser is cancelled
+  3. migration (§4.3): if the winner is the expensive decoder, hand off to
+     the other endpoint once the delivery buffer holds B tokens; the target
+     re-prefills prompt + generated token IDs (no state transfer)
+  4. delivery: tokens are paced at the consumption rate r_c via TokenBuffer;
+     QoE (TTFT, TBT series) and unified cost are recorded
+
+Compute times are real JAX wall-clock; network and queueing are sampled
+(see serving.endpoint). Everything is deterministic given the rng.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (
+    CostModel,
+    DiSCoScheduler,
+    Endpoint,
+    MigrationConfig,
+    TokenBuffer,
+)
+
+from .endpoint import DeviceEndpoint, ServerEndpoint, TokenEvent
+
+__all__ = ["ServedRequest", "DiSCoServer"]
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    tokens: list[int]
+    ttft: float
+    tbt_series: list[float]
+    cost: float
+    winner: Endpoint
+    migrated: bool
+    delayed_tokens: int
+
+
+class DiSCoServer:
+    def __init__(
+        self,
+        scheduler: DiSCoScheduler,
+        device: DeviceEndpoint,
+        server: ServerEndpoint,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        self.sched = scheduler
+        self.device = device
+        self.server = server
+        self.rng = rng or np.random.default_rng(0)
+
+    def _prefill_cost(self, ep: Endpoint, n: int) -> float:
+        return self.sched.cost_model.prefill_cost(ep) * n
+
+    def _decode_cost(self, ep: Endpoint, n: int) -> float:
+        return self.sched.cost_model.decode_cost(ep) * n
+
+    def serve(self, prompt: np.ndarray, max_new: int) -> ServedRequest:
+        decision = self.sched.plan_request(len(prompt), self.rng)
+        cost = 0.0
+
+        streams: dict[Endpoint, list[TokenEvent]] = {}
+        if decision.use_server:
+            streams[Endpoint.SERVER] = self.server.stream(
+                prompt, max_new, self.rng, start_at=0.0
+            )
+            cost += self._prefill_cost(Endpoint.SERVER, len(prompt))
+        if decision.use_device:
+            streams[Endpoint.DEVICE] = self.device.stream(
+                prompt, max_new, self.rng, start_at=decision.device_wait
+            )
+
+        # race: earliest first token wins; the loser terminates (§4.2)
+        winner = min(streams, key=lambda e: streams[e][0].t)
+        events = streams[winner]
+        first_t = events[0].t
+        if decision.use_device:
+            # device energy is spent only if it actually started prefilling
+            # before the server produced a first token
+            server_first = (
+                streams[Endpoint.SERVER][0].t if decision.use_server else np.inf
+            )
+            if server_first > decision.device_wait:
+                cost += self._prefill_cost(Endpoint.DEVICE, len(prompt))
+        self.sched.observe_prompt_length(len(prompt))
+        if decision.use_server:
+            self.sched.observe_server_ttft(streams[Endpoint.SERVER][0].t)
+
+        # migration decision (§4.3)
+        mig_cfg = self.sched.migration_controller.config
+        buf = TokenBuffer(mig_cfg.consumption_rate, first_t)
+        tokens = [events[0].token]
+        cost += self._decode_cost(winner, 1)
+        migrated = False
+
+        target_ep = (
+            self.device if self.sched.cost_model.cheaper_decode_endpoint()
+            is Endpoint.DEVICE else self.server
+        )
+        plan = self.sched.plan_migration(
+            current=winner,
+            prompt_len=len(prompt),
+            generated=1,
+            expected_total_tokens=float(max_new),
+            target_prefill_rate=max(
+                len(prompt) / max(events[0].t, 1e-3), 1.0
+            ),
+        )
+
+        if plan is None:
+            for ev in events[1:]:
+                buf.push(ev.t)
+                tokens.append(ev.token)
+                cost += self._decode_cost(winner, 1)
+            return ServedRequest(
+                tokens=tokens,
+                ttft=first_t,
+                tbt_series=buf.tbt_series(),
+                cost=cost,
+                winner=winner,
+                migrated=False,
+                delayed_tokens=0,
+            )
+
+        # stream from the source until the buffer can mask the hand-off
+        handoff_idx = None
+        for i, ev in enumerate(events[1:], start=1):
+            buf.push(ev.t)
+            tokens.append(ev.token)
+            cost += self._decode_cost(winner, 1)
+            if buf.occupancy(ev.t) >= plan.buffer_needed:
+                handoff_idx = i
+                break
+        if handoff_idx is not None and handoff_idx < max_new - 1:
+            start = events[handoff_idx].t
+            cont = target_ep.replay_stream(
+                prompt, tokens, max_new - len(tokens), self.rng, start_at=start
+            )
+            cost += self._prefill_cost(plan.target, len(prompt) + len(tokens))
+            # Fig. 4: source keeps generating until the target is ready
+            target_ready = cont[0].t if cont else start
+            for ev in events[handoff_idx + 1 :]:
+                if ev.t >= target_ready:
+                    break
+                buf.push(ev.t)
+                tokens.append(ev.token)
+                cost += self._decode_cost(winner, 1)
+            for ev in cont:
+                if len(tokens) >= max_new:
+                    break
+                buf.push(max(ev.t, target_ready))
+                tokens.append(ev.token)
+                cost += self._decode_cost(plan.target, 1)
+            migrated = True
+        else:
+            pass  # buffer never filled: finish on the source
+
+        return ServedRequest(
+            tokens=tokens,
+            ttft=first_t,
+            tbt_series=buf.tbt_series(),
+            cost=cost,
+            winner=winner,
+            migrated=migrated,
+            delayed_tokens=buf.delayed_tokens(),
+        )

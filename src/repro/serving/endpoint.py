@@ -1,0 +1,105 @@
+"""DiSCo endpoints over real JAX engines, composed with a virtual network.
+
+Timing model (honest for a single-process CPU testbed): *compute* times are
+real wall-clock measurements of the JAX engines; *network/queue* latencies
+are sampled from configurable distributions and added to the timeline. The
+scheduler only ever sees timestamps, exactly as it would in deployment.
+
+DeviceEndpoint: local engine, no network; TTFT grows linearly with prompt
+length (§3) because prefill is compute-bound on dedicated hardware.
+ServerEndpoint: engine + network RTT + a queueing-delay process (the §2.3
+"high-load period" spikes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.cost import Endpoint
+
+from .engine import GenerationResult, InferenceEngine
+
+__all__ = ["NetworkModel", "DeviceEndpoint", "ServerEndpoint", "TokenEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    token: int
+    t: float          # virtual timeline, seconds since request arrival
+    endpoint: Endpoint
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    rtt_mean: float = 0.04
+    rtt_jitter: float = 0.01
+    queue_spike_prob: float = 0.06
+    queue_spike_scale: float = 1.5   # seconds added during a high-load episode
+
+    def sample_rtt(self, rng: np.random.Generator) -> float:
+        return max(self.rtt_mean + rng.normal(0.0, self.rtt_jitter), 0.001)
+
+    def sample_queue_delay(self, rng: np.random.Generator) -> float:
+        if rng.random() < self.queue_spike_prob:
+            return self.queue_spike_scale * (1.0 + rng.random())
+        return rng.exponential(0.02)
+
+
+class DeviceEndpoint:
+    kind = Endpoint.DEVICE
+
+    def __init__(self, engine: InferenceEngine, energy_per_prefill_token: float = 1.0,
+                 energy_per_decode_token: float = 1.0):
+        self.engine = engine
+        self.energy_per_prefill_token = energy_per_prefill_token
+        self.energy_per_decode_token = energy_per_decode_token
+
+    def stream(self, prompt: np.ndarray, max_new: int, rng, start_at: float = 0.0
+               ) -> list[TokenEvent]:
+        res = self.engine.generate(prompt, max_new)
+        return [
+            TokenEvent(tok, start_at + t, Endpoint.DEVICE)
+            for tok, t in zip(res.tokens, res.token_times)
+        ]
+
+    def replay_stream(self, prompt, generated, max_new, rng, start_at: float = 0.0):
+        """Migration-target path: re-prefill prompt + token IDs, then continue."""
+        replay_s, cont = self.engine.replay_then_continue(prompt, generated, max_new)
+        events = []
+        t0 = time.perf_counter()
+        for tok in cont:
+            now = time.perf_counter() - t0
+            events.append(TokenEvent(tok, start_at + replay_s + now, Endpoint.DEVICE))
+        return events
+
+
+class ServerEndpoint:
+    kind = Endpoint.SERVER
+
+    def __init__(self, engine: InferenceEngine, network: NetworkModel = NetworkModel()):
+        self.engine = engine
+        self.network = network
+
+    def stream(self, prompt: np.ndarray, max_new: int, rng: np.random.Generator,
+               start_at: float = 0.0) -> list[TokenEvent]:
+        delay = self.network.sample_rtt(rng) + self.network.sample_queue_delay(rng)
+        res = self.engine.generate(prompt, max_new)
+        return [
+            TokenEvent(tok, start_at + delay + t, Endpoint.SERVER)
+            for tok, t in zip(res.tokens, res.token_times)
+        ]
+
+    def replay_stream(self, prompt, generated, max_new, rng, start_at: float = 0.0):
+        delay = self.network.sample_rtt(rng) + self.network.sample_queue_delay(rng)
+        replay_s, cont = self.engine.replay_then_continue(prompt, generated, max_new)
+        t0 = time.perf_counter()
+        events = []
+        for tok in cont:
+            now = time.perf_counter() - t0
+            events.append(
+                TokenEvent(tok, start_at + delay + replay_s + now, Endpoint.SERVER)
+            )
+        return events

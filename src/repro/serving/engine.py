@@ -1,0 +1,236 @@
+"""Inference engine: jitted prefill / decode step functions + a
+continuous-batching scheduler for batched request serving.
+
+The engine is endpoint-agnostic: DiSCo's device and server endpoints each
+wrap one ``InferenceEngine`` (different model sizes / latency envelopes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["InferenceEngine", "GenerationResult", "BatchedServer"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: list[int]
+    ttft: float                  # seconds (compute only; network added by endpoint)
+    token_times: list[float]     # wall-clock time of each token, relative to start
+    prefill_s: float
+    decode_s_per_token: float
+
+
+class InferenceEngine:
+    """Single-model engine with jitted prefill/decode and greedy sampling."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+
+        @jax.jit
+        def _prefill(params, tokens):
+            logits, cache = prefill(params, cfg, tokens, max_len)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        @jax.jit
+        def _decode(params, cache, token):
+            logits, cache = decode_step(params, cfg, cache, token)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def warmup(self, batch: int = 1, prompt_len: int = 8) -> None:
+        tok = jnp.zeros((batch, prompt_len), jnp.int32)
+        t, cache = self._prefill(self.params, tok)
+        self._decode(self.params, cache, t)
+
+    def prefill(self, tokens: np.ndarray):
+        """tokens: (B, S) int32. Returns (first_token (B,), cache)."""
+        t, cache = self._prefill(self.params, jnp.asarray(tokens, jnp.int32))
+        return np.asarray(jax.block_until_ready(t)), cache
+
+    def decode(self, cache, token: np.ndarray):
+        t, cache = self._decode(self.params, cache, jnp.asarray(token, jnp.int32))
+        return np.asarray(jax.block_until_ready(t)), cache
+
+    def generate(self, prompt: np.ndarray, max_new: int, replay: bool = False) -> GenerationResult:
+        """Greedy generation for one prompt (1, S). Wall-clock timed."""
+        t0 = time.perf_counter()
+        tok, cache = self.prefill(prompt[None, :])
+        t_first = time.perf_counter()
+        tokens, times = [int(tok[0])], [t_first - t0]
+        for _ in range(max_new - 1):
+            if cache["lengths"][0] >= self.max_len - 1:
+                break
+            tok, cache = self.decode(cache, tok)
+            tokens.append(int(tok[0]))
+            times.append(time.perf_counter() - t0)
+        n_dec = max(len(tokens) - 1, 1)
+        return GenerationResult(
+            tokens=tokens,
+            ttft=t_first - t0,
+            token_times=times,
+            prefill_s=t_first - t0,
+            decode_s_per_token=(times[-1] - times[0]) / n_dec,
+        )
+
+    def replay_then_continue(
+        self, prompt: np.ndarray, generated: list[int], max_new: int
+    ) -> tuple[float, "Iterator[int]"]:
+        """Migration target path (§4.3): re-prefill prompt + received token IDs
+        (no KV transfer), then continue decoding. Returns (replay_seconds,
+        iterator of continuation tokens)."""
+        t0 = time.perf_counter()
+        full = np.concatenate([prompt, np.asarray(generated, np.int32)])
+        tok, cache = self.prefill(full[None, :])
+        replay_s = time.perf_counter() - t0
+
+        def continuation():
+            nonlocal tok, cache
+            yield int(tok[0])
+            for _ in range(max_new - 1):
+                if cache["lengths"][0] >= self.max_len - 1:
+                    return
+                tok, cache2 = self.decode(cache, tok)
+                cache = cache2
+                yield int(tok[0])
+
+        return replay_s, continuation()
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (server-side request batching, §2.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int
+    remaining: int
+    tokens: list
+
+
+class BatchedServer:
+    """Continuous-batching scheduler: one *batched* KV cache with per-row
+    lengths; requests join free rows after prefill and all active rows share
+    a single batched decode step.
+
+    This models the server-side request batching the paper identifies as the
+    source of TTFT tail latency (§2.3): arrivals beyond ``max_slots`` queue.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+
+        @jax.jit
+        def _prefill_row(params, batched_cache, tokens, row):
+            """Prefill (1, S) and write its cache into row ``row``."""
+            logits, cache = prefill(params, cfg, tokens, max_len)
+            new = {}
+            for k, v in batched_cache.items():
+                if k == "lengths":
+                    new[k] = v.at[row].set(cache[k][0])
+                else:
+                    new[k] = v.at[:, row].set(cache[k][:, 0])
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new
+
+        @jax.jit
+        def _decode_batch(params, cache, tokens, active):
+            """Batched decode; inactive rows keep their cache untouched."""
+            logits, new_cache = decode_step(params, cfg, cache, tokens)
+            merged = {}
+            for k, v in new_cache.items():
+                old = cache[k]
+                if k == "lengths":
+                    merged[k] = jnp.where(active, v, old)
+                else:  # cache arrays are (L, B, ...): broadcast over L and tails
+                    mask = active.reshape((1, -1) + (1,) * (v.ndim - 2))
+                    merged[k] = jnp.where(mask, v, old)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), merged
+
+        self._prefill_row = _prefill_row
+        self._decode_batch = _decode_batch
+        self.cache = init_cache(cfg, max_slots, max_len)
+        self.queue: deque = deque()
+        self.slots: dict[int, _Slot] = {}
+        self.rows: dict[int, int] = {}
+        self.free_rows = list(range(max_slots))
+        self.next_id = 0
+        self.completed: dict[int, list[int]] = {}
+        self.submit_time: dict[int, float] = {}
+        self.first_token_time: dict[int, float] = {}
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self.next_id
+        self.next_id += 1
+        self.queue.append((rid, prompt, max_new))
+        self.submit_time[rid] = time.perf_counter()
+        return rid
+
+    def _admit(self) -> None:
+        while self.queue and self.free_rows:
+            rid, prompt, max_new = self.queue.popleft()
+            row = self.free_rows.pop()
+            tok, self.cache = self._prefill_row(
+                self.params, self.cache, jnp.asarray(prompt[None, :], jnp.int32),
+                row,
+            )
+            jax.block_until_ready(tok)
+            self.first_token_time[rid] = time.perf_counter()
+            self.slots[rid] = _Slot(rid, max_new - 1, [int(tok)])
+            self.rows[rid] = row
+
+    def step(self) -> bool:
+        """One scheduler tick: admit, batched-decode all active rows.
+        Returns False when fully idle."""
+        self._admit()
+        if not self.slots:
+            return False
+        done = [
+            rid
+            for rid, slot in self.slots.items()
+            if slot.remaining <= 0
+            or int(self.cache["lengths"][self.rows[rid]]) >= self.max_len - 1
+        ]
+        for rid in done:
+            self.completed[rid] = self.slots.pop(rid).tokens
+            self.free_rows.append(self.rows.pop(rid))
+        if not self.slots:
+            return bool(self.queue)
+        tokens = np.zeros((self.max_slots,), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        for rid, slot in self.slots.items():
+            tokens[self.rows[rid]] = slot.tokens[-1]
+            active[self.rows[rid]] = True
+        toks, self.cache = self._decode_batch(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active)
+        )
+        toks = np.asarray(jax.block_until_ready(toks))
+        for rid, slot in self.slots.items():
+            slot.tokens.append(int(toks[self.rows[rid]]))
+            slot.remaining -= 1
+        return True
+
+    def run_to_completion(self) -> dict[int, list[int]]:
+        while self.step() or self.queue:
+            pass
+        return self.completed
+
+    def ttft(self, rid: int) -> float:
+        return self.first_token_time[rid] - self.submit_time[rid]

@@ -1,0 +1,19 @@
+from .costs import API_PRICING_PER_M, DEVICE_SPECS, build_cost_model
+from .traces import (
+    DEVICE_PROFILES,
+    SERVER_TRACES,
+    ServerTraceSpec,
+    bursty_arrivals,
+    make_requests,
+    make_server_model,
+    poisson_arrivals,
+    sample_generation_lengths,
+    sample_prompt_lengths,
+)
+
+__all__ = [
+    "API_PRICING_PER_M", "DEVICE_SPECS", "build_cost_model",
+    "DEVICE_PROFILES", "SERVER_TRACES", "ServerTraceSpec",
+    "bursty_arrivals", "make_requests", "make_server_model",
+    "poisson_arrivals", "sample_generation_lengths", "sample_prompt_lengths",
+]

@@ -1,0 +1,138 @@
+"""Trace generators calibrated to the paper's §3 / §5 measurements.
+
+This container has no internet path to OpenAI/DeepSeek/Cohere/Hyperbolic and
+no Pixel/Xiaomi hardware, so we regenerate the paper's traces from the
+statistics it reports:
+
+* Server TTFT: length-independent (Table 1, |Pearson| <= 0.04), log-normal
+  body with a high-load spike mixture producing the "0.3 s to several
+  seconds" tails (§2.3, Fig. 2). Scale parameters per service are anchored
+  to App. C Table 5 MAEs (predictor MAE ~ dispersion of the series):
+  Command ≈ 0.09 s, GPT-4o-mini ≈ 0.1 s, LLaMA-3-70b ≈ 0.33 s,
+  DeepSeek-V2.5 ≈ 0.4 s.
+* Device endpoints: the three §5.1 device-model pairs with their measured
+  prefill/decode rates (tokens/s) from Li et al. 2024b.
+* Prompt lengths: Alpaca-like log-normal (the paper samples 1,000 Alpaca
+  requests); §5.3 fits log-normals to lengths, which we mirror.
+* Arrivals: Poisson with 30 s mean interval (§3), or DiffusionDB-like
+  per-user bursty intervals (§5.3, Fig. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.distributions import EmpiricalCDF, LengthDistribution
+from repro.core.simulator import DeviceModel, Request, ServerModel
+
+__all__ = [
+    "ServerTraceSpec",
+    "SERVER_TRACES",
+    "DEVICE_PROFILES",
+    "make_server_model",
+    "sample_prompt_lengths",
+    "sample_generation_lengths",
+    "poisson_arrivals",
+    "bursty_arrivals",
+    "make_requests",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerTraceSpec:
+    """Log-normal body + spike mixture for one commercial service."""
+
+    name: str
+    mu: float          # log-mean of body (seconds)
+    sigma: float       # log-std of body
+    spike_prob: float  # high-load fraction (queueing episodes)
+    spike_scale: float # multiplier applied during a spike
+    tbt_mean: float    # mean decode TBT (packetized streaming, §3 fn.1)
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        body = rng.lognormal(self.mu, self.sigma, size=n)
+        spikes = rng.random(n) < self.spike_prob
+        mult = np.where(spikes, self.spike_scale * (1.0 + rng.random(n)), 1.0)
+        return body * mult
+
+
+# Anchors: medians from §3 narrative ("TTFT spikes for GPT-4o-mini from 0.3 s
+# to several seconds"), dispersions from App. C Table 5 MAE column.
+SERVER_TRACES: dict[str, ServerTraceSpec] = {
+    "gpt": ServerTraceSpec("gpt-4o-mini", mu=np.log(0.40), sigma=0.30,
+                           spike_prob=0.06, spike_scale=5.0, tbt_mean=0.022),
+    "deepseek": ServerTraceSpec("deepseek-v2.5", mu=np.log(1.30), sigma=0.28,
+                                spike_prob=0.08, spike_scale=3.0, tbt_mean=0.035),
+    "command": ServerTraceSpec("command", mu=np.log(0.22), sigma=0.35,
+                               spike_prob=0.05, spike_scale=6.0, tbt_mean=0.025),
+    "llama": ServerTraceSpec("llama3-70b", mu=np.log(0.70), sigma=0.40,
+                             spike_prob=0.07, spike_scale=4.0, tbt_mean=0.030),
+}
+
+# §5.1: (device, model, prefill tok/s, decode tok/s) from Li et al. 2024b.
+DEVICE_PROFILES: dict[str, DeviceModel] = {
+    "pixel7pro-bloom1b1": DeviceModel(prefill_rate=31.32, decode_rate=13.93,
+                                      name="Pixel 7 Pro / Bloom-1.1B"),
+    "pixel7pro-bloom560m": DeviceModel(prefill_rate=51.80, decode_rate=20.14,
+                                       name="Pixel 7 Pro / Bloom-560M"),
+    "xiaomi14-qwen05b": DeviceModel(prefill_rate=79.90, decode_rate=21.47,
+                                    name="Xiaomi 14 / Qwen-1.5-0.5B"),
+}
+
+
+def make_server_model(trace: str, rng: np.random.Generator, n_profile: int = 2000) -> ServerModel:
+    """Build a ServerModel whose TTFT CDF is an ``n_profile``-sample profile of
+    the named trace (device-side profiling, §4.2)."""
+    spec = SERVER_TRACES[trace]
+    samples = spec.sample(rng, n_profile)
+    return ServerModel(ttft=EmpiricalCDF.from_samples(samples), tbt_mean=spec.tbt_mean)
+
+
+def sample_prompt_lengths(rng: np.random.Generator, n: int,
+                          mu: float = 3.3, sigma: float = 0.9,
+                          max_len: int = 2048) -> np.ndarray:
+    """Alpaca-like prompt lengths (median ≈ 27 tokens, right-skewed)."""
+    l = rng.lognormal(mu, sigma, size=n)
+    return np.clip(np.round(l), 1, max_len).astype(int)
+
+
+def sample_generation_lengths(rng: np.random.Generator, n: int,
+                              mu: float = 4.4, sigma: float = 0.7,
+                              max_len: int = 128) -> np.ndarray:
+    """Generation lengths; App. E caps generation at 128 for cost runs."""
+    g = rng.lognormal(mu, sigma, size=n)
+    return np.clip(np.round(g), 4, max_len).astype(int)
+
+
+def poisson_arrivals(rng: np.random.Generator, n: int, mean_interval: float = 30.0) -> np.ndarray:
+    """§3: Poisson arrivals with 30 s mean inter-arrival."""
+    return np.cumsum(rng.exponential(mean_interval, size=n))
+
+
+def bursty_arrivals(rng: np.random.Generator, n: int, n_users: int = 10,
+                    within_burst: float = 4.0, between_burst: float = 120.0) -> np.ndarray:
+    """DiffusionDB-like activity (§5.3): users issue bursts of requests with
+    short intra-burst gaps and long idle periods; activity levels differ by
+    an order of magnitude across users (stratified sampling in the paper)."""
+    arrivals = []
+    for u in range(n_users):
+        rate = within_burst * (0.3 + 2.0 * u / max(n_users - 1, 1))
+        t = 0.0
+        k = n // n_users + (1 if u < n % n_users else 0)
+        for _ in range(k):
+            if rng.random() < 0.2:
+                t += rng.exponential(between_burst)
+            else:
+                t += rng.exponential(rate)
+            arrivals.append(t)
+    return np.sort(np.asarray(arrivals))
+
+
+def make_requests(rng: np.random.Generator, n: int,
+                  arrivals: np.ndarray | None = None,
+                  max_gen: int = 128) -> list[Request]:
+    lengths = sample_prompt_lengths(rng, n)
+    gens = sample_generation_lengths(rng, n, max_len=max_gen)
+    arr = arrivals if arrivals is not None else poisson_arrivals(rng, n)
+    return [Request(float(a), int(l), int(g)) for a, l, g in zip(arr, lengths, gens)]

@@ -1,0 +1,9 @@
+from .checkpoint import latest_step, load_checkpoint, save_checkpoint
+from .optimizer import Optimizer, adafactor, adamw, make_optimizer
+from .train_loop import TrainState, loss_fn, make_train_step, train
+
+__all__ = [
+    "latest_step", "load_checkpoint", "save_checkpoint",
+    "Optimizer", "adafactor", "adamw", "make_optimizer",
+    "TrainState", "loss_fn", "make_train_step", "train",
+]

@@ -1,0 +1,101 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary param/optimizer
+pytrees + a JSON manifest (step, config name). No external deps.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_SEP = "||"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None, meta: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = {f"params{_SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt{_SEP}{k}": v for k, v in _flatten(opt_state).items()})
+    # bfloat16 has no numpy dtype in .npz: store raw bytes + dtype tag
+    packed = {}
+    dtypes = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            packed[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            packed[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(path, **packed)
+    manifest = {"step": step, "dtypes": dtypes, **(meta or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[5:13]) for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, params_template: Any,
+                    opt_template: Any = None):
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    raw = dict(np.load(path))
+    flat = {}
+    for k, v in raw.items():
+        if manifest["dtypes"].get(k) == "bfloat16":
+            flat[k] = v.view(jnp.bfloat16)
+        else:
+            flat[k] = v
+    params_flat = {
+        k[len(f"params{_SEP}"):]: v for k, v in flat.items()
+        if k.startswith(f"params{_SEP}")
+    }
+    params = _unflatten_into(params_template, params_flat)
+    opt_state = None
+    if opt_template is not None:
+        opt_flat = {
+            k[len(f"opt{_SEP}"):]: v for k, v in flat.items()
+            if k.startswith(f"opt{_SEP}")
+        }
+        opt_state = _unflatten_into(opt_template, opt_flat)
+    return params, opt_state, manifest

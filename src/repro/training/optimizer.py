@@ -1,0 +1,138 @@
+"""Optimizers in pure JAX: AdamW and Adafactor.
+
+AdamW is the default. Adafactor (factored second moment, no momentum,
+bf16-friendly) is selected for the giant archs (arctic-480b,
+nemotron-4-340b): Adam's fp32 m+v for 340-480B parameters exceeds the
+256-chip v5e pod's HBM (12 B/param × 480e9 ≈ 5.8 TB > 4 TB) — see
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    warmup: int = 100,
+) -> Optimizer:
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / warmup)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        lr_t = schedule(step)
+        c1 = 1.0 - b1 ** (jnp.asarray(step, jnp.float32) + 1)
+        c2 = 1.0 - b2 ** (jnp.asarray(step, jnp.float32) + 1)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mhat, vhat = m_new / c1, v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decay matrices only (standard practice)
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    warmup: int = 100,
+) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum.
+
+    State per matrix (r, c): one row vector (r,) + one col vector (c,) in
+    fp32 — ~0 bytes/param instead of Adam's 8.
+    """
+
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / warmup)
+
+    def init(params):
+        def per_param(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_param, params)
+
+    def update(grads, state, params, step):
+        lr_t = schedule(step)
+        beta = 1.0 - (jnp.asarray(step, jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * vc[..., None, :], eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        leaves = jax.tree.map(
+            upd, grads, state, params,
+            is_leaf=lambda t: isinstance(t, dict) and ("v" in t or "vr" in t),
+        )
+        is_pair = lambda t: isinstance(t, tuple) and len(t) == 2
+        new_params = jax.tree.map(lambda t: t[0], leaves, is_leaf=is_pair)
+        new_state = jax.tree.map(lambda t: t[1], leaves, is_leaf=is_pair)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+_GIANT_ARCHS = {"arctic-480b", "nemotron-4-340b"}
+
+
+def make_optimizer(arch_name: str, lr: float = 3e-4) -> Optimizer:
+    """Per-arch default: Adafactor for the 340-480B archs, AdamW otherwise."""
+    if arch_name in _GIANT_ARCHS:
+        return adafactor(lr=lr)
+    return adamw(lr=lr)

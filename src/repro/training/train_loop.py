@@ -1,0 +1,118 @@
+"""Training step + loop: cross-entropy (causal LM) or masked prediction
+(HuBERT encoder), MoE aux loss, microbatch gradient accumulation (lax.scan)
+and per-layer remat (via the model's scan body).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+
+from .optimizer import Optimizer
+
+__all__ = ["loss_fn", "make_train_step", "train", "TrainState"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """Token-level CE. ``batch``: inputs, targets[, loss_mask]."""
+    logits, aux = forward(params, cfg, batch["inputs"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    if "loss_mask" in batch:  # masked prediction (HuBERT): only masked frames
+        mask = batch["loss_mask"].astype(jnp.float32)
+        ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        ce = nll.mean()
+    total = ce + cfg.router_aux_coef * aux if cfg.is_moe else ce
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    num_microbatches: Optional[int] = None) -> Callable:
+    """Returns train_step(state_tuple, batch) -> (state_tuple, metrics).
+
+    The global batch is split into ``num_microbatches`` along axis 0 and
+    gradients are accumulated with a lax.scan — constant peak activation
+    memory regardless of global batch size.
+    """
+    n_mb = num_microbatches or cfg.num_microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, step, batch):
+        if n_mb == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % n_mb == 0, (b, n_mb)
+                return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                loss, metrics, grads = grads_of(params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_mb, g_acc, grads
+                )
+                return (g_acc, l_acc + loss / n_mb), metrics
+
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (zero_grads, jnp.zeros((), jnp.float32)), mb
+            )
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params, step)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return new_params, new_opt_state, step + 1, out_metrics
+
+    return train_step
+
+
+def train(
+    cfg: ModelConfig,
+    params,
+    optimizer: Optimizer,
+    batches: Iterator[dict],
+    n_steps: int,
+    log_every: int = 10,
+    log_fn: Callable[[int, dict], None] | None = None,
+):
+    """Simple host loop (examples / tests). Returns (params, history)."""
+    step_fn = jax.jit(make_train_step(cfg, optimizer))
+    opt_state = optimizer.init(params)
+    step = jnp.zeros((), jnp.int32)
+    history = []
+    for i in range(n_steps):
+        batch = next(batches)
+        params, opt_state, step, metrics = step_fn(params, opt_state, step, batch)
+        if i % log_every == 0 or i == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append((i, m))
+            if log_fn:
+                log_fn(i, m)
+    return params, history

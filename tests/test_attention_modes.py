@@ -1,0 +1,116 @@
+"""Attention-mode equivalences across the three implementations and the
+window/pattern/bidirectional variants, plus SSD chunk invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    attention_blockwise,
+    attention_dense,
+    decode_attention,
+)
+from repro.models.ssm import ssd_chunked
+from repro.kernels.ref import decode_reference, ssd_reference
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("window", [0, 32, 128])
+@pytest.mark.parametrize("causal", [True, False])
+def test_blockwise_equals_dense(window, causal):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 256, 4, 32))
+    k = _rand(rng, (2, 256, 2, 32))
+    v = _rand(rng, (2, 256, 2, 32))
+    a = attention_dense(q, k, v, causal=causal, window=window)
+    b = attention_blockwise(q, k, v, causal=causal, window=window,
+                            block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+
+def test_blockwise_traced_window():
+    """window as a traced scalar (the per-layer scanned window vector)."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 128, 2, 16))
+    k = _rand(rng, (1, 128, 1, 16))
+    v = _rand(rng, (1, 128, 1, 16))
+
+    def f(w):
+        return attention_blockwise(q, k, v, window=w, block_q=64, block_k=64)
+
+    out = jax.jit(f)(jnp.asarray(16, jnp.int32))
+    ref = attention_dense(q, k, v, window=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_equals_full_last_row():
+    """decode_attention(q_last) == the last row of full causal attention."""
+    rng = np.random.default_rng(2)
+    s = 64
+    q = _rand(rng, (2, s, 4, 16))
+    k = _rand(rng, (2, s, 2, 16))
+    v = _rand(rng, (2, s, 2, 16))
+    full = attention_dense(q, k, v, causal=True)
+    lengths = jnp.full((2,), s, jnp.int32)
+    dec = decode_attention(q[:, -1], k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full[:, -1]), rtol=3e-5, atol=3e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sq=st.sampled_from([64, 128]),
+    window=st.sampled_from([0, 16, 48]),
+)
+def test_prop_blockwise_dense_agree(seed, sq, window):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (1, sq, 2, 16))
+    k = _rand(rng, (1, sq, 2, 16))
+    v = _rand(rng, (1, sq, 2, 16))
+    a = attention_dense(q, k, v, window=window)
+    b = attention_blockwise(q, k, v, window=window, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([8, 16, 32, 64]))
+def test_prop_ssd_chunk_invariance(seed, chunk):
+    """SSD output must not depend on the chunk size (math identity)."""
+    rng = np.random.default_rng(seed)
+    b, t, h, p, n = 1, 64, 2, 8, 4
+    x = _rand(rng, (b, t, h, p))
+    dt = jnp.asarray(rng.uniform(0.001, 0.2, (b, t, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    Bm = _rand(rng, (b, t, 1, n))
+    Cm = _rand(rng, (b, t, 1, n))
+    y, st_ = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(sr), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_initial_state_threading():
+    """Splitting a sequence in half and threading the state equals one pass."""
+    rng = np.random.default_rng(3)
+    b, t, h, p, n = 1, 64, 2, 8, 4
+    x = _rand(rng, (b, t, h, p))
+    dt = jnp.asarray(rng.uniform(0.001, 0.2, (b, t, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    Bm = _rand(rng, (b, t, 1, n))
+    Cm = _rand(rng, (b, t, 1, n))
+    y_full, s_full = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y1, s1 = ssd_chunked(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32], chunk=16)
+    y2, s2 = ssd_chunked(
+        x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:], chunk=16,
+        initial_state=s1,
+    )
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=3e-4, atol=3e-4)

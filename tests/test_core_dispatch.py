@@ -1,0 +1,210 @@
+"""Unit + property tests for the DiSCo dispatch controller (§4.2, Alg. 1-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostModel,
+    DevicePolicy,
+    Endpoint,
+    EmpiricalCDF,
+    LengthDistribution,
+    Regime,
+    ServerPolicy,
+    SingleEndpointPolicy,
+    StochasticPolicy,
+    make_policy,
+)
+
+
+def _lengths(seed=0, n=4000):
+    rng = np.random.default_rng(seed)
+    return LengthDistribution.from_samples(
+        np.clip(np.round(rng.lognormal(3.3, 0.9, n)), 1, 2048).astype(int)
+    )
+
+
+def _server_cdf(seed=1, n=4000):
+    rng = np.random.default_rng(seed)
+    return EmpiricalCDF.from_samples(rng.lognormal(np.log(0.4), 0.5, n))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: regime classification
+# ---------------------------------------------------------------------------
+
+def test_regime_device_constrained():
+    cm = CostModel(1e-7, 6e-7, 800.0, 790.0, exchange_rate=5e-6)
+    assert cm.regime() is Regime.DEVICE_CONSTRAINED
+    assert cm.constrained_endpoint is Endpoint.DEVICE
+
+
+def test_regime_server_constrained():
+    cm = CostModel(1e-6, 2e-6, 800.0, 790.0, exchange_rate=1e-12)
+    assert cm.regime() is Regime.SERVER_CONSTRAINED
+    assert cm.constrained_endpoint is Endpoint.SERVER
+
+
+def test_make_policy_matches_regime():
+    lengths, cdf = _lengths(), _server_cdf()
+    dev = make_policy(CostModel(1e-7, 6e-7, 800.0, 790.0, 5e-6), cdf, lengths, 0.3)
+    srv = make_policy(CostModel(1e-6, 2e-6, 800.0, 790.0, 1e-12), cdf, lengths, 0.3)
+    assert isinstance(dev, DevicePolicy)
+    assert isinstance(srv, ServerPolicy)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 / Eq. 3: server-constrained length threshold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [0.0, 0.1, 0.3, 0.5, 0.8, 1.0])
+def test_server_policy_budget_constraint(budget):
+    lengths = _lengths()
+    pol = ServerPolicy(lengths, budget)
+    used = pol.expected_budget_use()
+    # one length-bin of granularity is inherent to the empirical solve
+    max_bin = float(np.max(lengths.support() * lengths.probs) / lengths.mean())
+    assert used <= budget + max_bin + 1e-9
+
+
+def test_server_policy_extremes():
+    lengths = _lengths()
+    assert all(
+        ServerPolicy(lengths, 1.0).decide(int(l)).use_server
+        for l in lengths.support()
+    )
+    pol0 = ServerPolicy(lengths, 0.0)
+    assert not any(pol0.decide(int(l)).use_server for l in lengths.support())
+
+
+def test_server_policy_threshold_monotone_in_budget():
+    lengths = _lengths()
+    ths = [ServerPolicy(lengths, b).l_th for b in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert all(a >= b for a, b in zip(ths, ths[1:]))  # more budget -> lower l_th
+
+
+def test_server_policy_routes_short_to_device_only():
+    lengths = _lengths()
+    pol = ServerPolicy(lengths, 0.5)
+    short = pol.decide(1)
+    assert short.use_device and not short.use_server
+    long = pol.decide(2048)
+    assert long.use_device and long.use_server  # race
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 / Eq. 1-2: device-constrained wait times
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [0.02, 0.1, 0.3, 0.6, 0.9])
+def test_device_policy_budget_constraint(budget):
+    pol = DevicePolicy(_server_cdf(), _lengths(), budget, tail_ratio=0.05)
+    assert pol.expected_budget_use() <= budget + 0.02  # CDF granularity slack
+
+
+def test_device_policy_tail_protection():
+    cdf = _server_cdf()
+    pol = DevicePolicy(cdf, _lengths(), budget=0.3, tail_ratio=0.05)
+    # w_tail is the (1 - alpha) server quantile
+    assert pol.w_tail == pytest.approx(float(cdf.quantile(0.95)), rel=1e-6)
+    # every wait is capped by w_tail
+    for l in (1, 10, 100, 1000, 4096):
+        assert pol.wait_time(l) <= pol.w_tail + 1e-9
+
+
+def test_device_policy_wait_monotone_in_length():
+    pol = DevicePolicy(_server_cdf(), _lengths(), budget=0.3)
+    ls = np.array(sorted(pol.lengths.support()))
+    ws = np.array([pol.wait_time(int(l)) for l in ls])
+    assert np.all(np.diff(ws) >= -1e-9)  # short prompts start sooner (Eq. 1)
+
+
+def test_device_policy_low_budget_all_wait_tail():
+    # b <= alpha: Algorithm 2 returns w_tail for every length
+    pol = DevicePolicy(_server_cdf(), _lengths(), budget=0.03, tail_ratio=0.05)
+    for l in pol.lengths.support()[:50]:
+        assert pol.wait_time(int(l)) == pytest.approx(pol.w_tail)
+
+
+def test_device_policy_high_budget_mostly_immediate():
+    pol = DevicePolicy(_server_cdf(), _lengths(), budget=0.95, tail_ratio=0.05)
+    ls, ps = pol.lengths.support(), pol.lengths.probs
+    zero_frac = sum(p for l, p in zip(ls, ps) if pol.wait_time(int(l)) == 0.0)
+    assert zero_frac > 0.5
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def test_stochastic_budget():
+    rng = np.random.default_rng(0)
+    pol = StochasticPolicy(Endpoint.SERVER, budget=0.3, seed=7)
+    decisions = [pol.decide(10) for _ in range(20000)]
+    frac = np.mean([d.use_server for d in decisions])
+    assert frac == pytest.approx(0.3, abs=0.02)
+    assert all(d.use_device for d in decisions)
+
+
+def test_single_endpoint_policies():
+    s = SingleEndpointPolicy(Endpoint.SERVER).decide(42)
+    d = SingleEndpointPolicy(Endpoint.DEVICE).decide(42)
+    assert s.use_server and not s.use_device
+    assert d.use_device and not d.use_server
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): invariants over random distributions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    budget=st.floats(0.0, 1.0),
+    mu=st.floats(2.0, 5.0),
+    sigma=st.floats(0.3, 1.2),
+)
+def test_prop_server_policy_budget_holds(seed, budget, mu, sigma):
+    rng = np.random.default_rng(seed)
+    lengths = LengthDistribution.from_samples(
+        np.clip(np.round(rng.lognormal(mu, sigma, 600)), 1, 8192).astype(int)
+    )
+    pol = ServerPolicy(lengths, budget)
+    max_bin = float(np.max(lengths.support() * lengths.probs) / lengths.mean())
+    assert pol.expected_budget_use() <= budget + max_bin + 1e-9
+    # decisions are total and deterministic
+    for l in lengths.support()[:10]:
+        d1, d2 = pol.decide(int(l)), pol.decide(int(l))
+        assert (d1.use_server, d1.use_device) == (d2.use_server, d2.use_device)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    budget=st.floats(0.01, 1.0),
+    alpha=st.floats(0.01, 0.5),
+)
+def test_prop_device_policy_budget_and_cap(seed, budget, alpha):
+    rng = np.random.default_rng(seed)
+    lengths = LengthDistribution.from_samples(
+        np.clip(np.round(rng.lognormal(3.0, 0.8, 500)), 1, 4096).astype(int)
+    )
+    cdf = EmpiricalCDF.from_samples(rng.lognormal(-0.5, 0.6, 500))
+    pol = DevicePolicy(cdf, lengths, budget, tail_ratio=alpha)
+    # budget holds up to empirical-CDF granularity
+    assert pol.expected_budget_use() <= budget + alpha + 5e-3
+    # waits in [0, w_tail]
+    for l in lengths.support()[::37]:
+        w = pol.wait_time(int(l))
+        assert 0.0 <= w <= pol.w_tail + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), q=st.floats(0.01, 0.99))
+def test_prop_empirical_cdf_quantile_roundtrip(seed, q):
+    rng = np.random.default_rng(seed)
+    cdf = EmpiricalCDF.from_samples(rng.lognormal(0.0, 1.0, 400))
+    t = float(cdf.quantile(q))
+    assert cdf.cdf(t) >= q - 1e-9  # F(F^{-1}(q)) >= q
+    # monotonicity
+    assert cdf.quantile(min(q + 0.01, 1.0)) >= t - 1e-12

@@ -1,0 +1,138 @@
+"""Tests for the migration controller + token buffer (§4.3, Eq. 4-5, Fig. 4)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostModel,
+    Endpoint,
+    MigrationConfig,
+    MigrationController,
+    TokenBuffer,
+)
+
+# device decode much more expensive than server decode -> migrate device->server
+DEVICE_EXPENSIVE = CostModel(1e-7, 2e-7, 100.0, 100.0, exchange_rate=1e-5)
+# server decode more expensive -> migrate server->device
+SERVER_EXPENSIVE = CostModel(1e-3, 5e-3, 100.0, 100.0, exchange_rate=1e-9)
+
+
+def test_buffer_size_eq5():
+    cfg = MigrationConfig(consumption_rate=4.8)
+    assert cfg.buffer_tokens(1.0) == 5           # ceil(4.8)
+    assert cfg.buffer_tokens(2.5) == 12          # ceil(12.0)
+    assert cfg.buffer_tokens(0.0) == 0
+
+
+def test_migration_triggers_when_savings_exceed_overhead():
+    ctrl = MigrationController(DEVICE_EXPENSIVE, MigrationConfig())
+    plan = ctrl.plan(
+        current=Endpoint.DEVICE, prompt_len=50, generated=10,
+        expected_total_tokens=200.0, target_prefill_rate=500.0,
+    )
+    assert plan is not None
+    assert plan.target is Endpoint.SERVER
+    assert plan.projected_savings > 0
+    assert plan.buffer_needed == math.ceil(
+        MigrationConfig().consumption_rate * plan.est_handoff_time
+    )
+
+
+def test_no_migration_when_already_on_cheap_endpoint():
+    ctrl = MigrationController(DEVICE_EXPENSIVE, MigrationConfig())
+    assert ctrl.plan(
+        current=Endpoint.SERVER, prompt_len=50, generated=10,
+        expected_total_tokens=200.0, target_prefill_rate=500.0,
+    ) is None
+
+
+def test_no_migration_when_nearly_done():
+    ctrl = MigrationController(DEVICE_EXPENSIVE, MigrationConfig(min_remaining_tokens=4))
+    assert ctrl.plan(
+        current=Endpoint.DEVICE, prompt_len=50, generated=198,
+        expected_total_tokens=200.0, target_prefill_rate=500.0,
+    ) is None
+
+
+def test_no_migration_when_overhead_dominates():
+    # tiny decode delta, huge target prefill price -> Eq. 4 fails
+    cm = CostModel(5e-3, 1.01e-7, 100.0, 100.0, exchange_rate=1e-9)
+    ctrl = MigrationController(cm, MigrationConfig())
+    plan = ctrl.plan(
+        current=Endpoint.DEVICE, prompt_len=5000, generated=2,
+        expected_total_tokens=20.0, target_prefill_rate=100.0,
+    )
+    assert plan is None
+
+
+def test_server_to_device_direction():
+    ctrl = MigrationController(SERVER_EXPENSIVE, MigrationConfig())
+    plan = ctrl.plan(
+        current=Endpoint.SERVER, prompt_len=30, generated=5,
+        expected_total_tokens=150.0, target_prefill_rate=50.0,
+    )
+    assert plan is not None and plan.target is Endpoint.DEVICE
+
+
+# ---------------------------------------------------------------------------
+# TokenBuffer: delivery pacing invariants (Fig. 4)
+# ---------------------------------------------------------------------------
+
+def test_buffer_paces_at_consumption_rate():
+    buf = TokenBuffer(consumption_rate=5.0, first_token_time=0.0)
+    for i in range(1, 20):
+        buf.push(i * 0.05)  # generation at 20 tok/s > r_c = 5 tok/s
+    tbts = buf.tbt_series()
+    assert all(abs(t - 0.2) < 1e-9 for t in tbts)  # delivered exactly at 1/r_c
+    assert buf.delayed_tokens() == 0
+
+
+def test_buffer_stall_counts_delayed_tokens():
+    buf = TokenBuffer(consumption_rate=5.0, first_token_time=0.0)
+    buf.push(0.05)
+    buf.push(1.0)   # a 0.95 s generation gap > 0.2 s pace -> stall
+    buf.push(1.05)
+    assert buf.delayed_tokens() == 1
+    assert max(buf.tbt_series()) > 0.2
+
+
+def test_buffer_occupancy():
+    buf = TokenBuffer(consumption_rate=2.0, first_token_time=0.0)
+    for i in range(1, 11):
+        buf.push(i * 0.1)  # 10 tok/s gen vs 2 tok/s delivery
+    # at t=1.0 all 11 tokens generated; delivered: t0 + every 0.5 s -> 3
+    assert buf.occupancy(1.0) == 11 - 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r_c=st.floats(1.0, 10.0),
+    r_g=st.floats(10.0, 50.0),
+    n=st.integers(5, 80),
+)
+def test_prop_buffer_never_delivers_before_generation(seed, r_c, r_g, n):
+    rng = np.random.default_rng(seed)
+    buf = TokenBuffer(r_c, 0.0)
+    t = 0.0
+    for _ in range(n):
+        t += rng.exponential(1.0 / r_g)
+        buf.push(t)
+    for g, d in zip(buf.generated_at, buf.delivered_at):
+        assert d >= g - 1e-12
+    # delivery gaps never beat the consumption pace
+    assert all(dt >= 1.0 / r_c - 1e-9 for dt in buf.tbt_series())
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    rc=st.floats(0.5, 20.0),
+    tm=st.floats(0.0, 30.0),
+)
+def test_prop_buffer_size_masks_handoff(rc, tm):
+    """Eq. 5 invariant: B tokens at pace 1/r_c cover at least t_m seconds."""
+    B = MigrationConfig(consumption_rate=rc).buffer_tokens(tm)
+    assert B / rc >= tm - 1e-9
+    assert (B - 1) / rc < tm + 1.0 / rc  # and B is not wastefully large

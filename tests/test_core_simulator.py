@@ -1,0 +1,155 @@
+"""End-to-end behaviour tests for the QoE simulator + DiSCo scheduler facade.
+
+These validate the paper's *claims* hold in our reproduction:
+  - DiSCo beats stochastic dispatch on mean and tail TTFT (Fig. 6 / Table 2)
+  - migration reduces cost without breaking TBT (Fig. 7 / Table 3)
+  - server TTFT ~ length uncorrelated; device strongly correlated (Table 1)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    DiSCoScheduler,
+    Endpoint,
+    MigrationConfig,
+    Request,
+    ServerPolicy,
+    SingleEndpointPolicy,
+    StochasticPolicy,
+    make_policy,
+    simulate_full,
+    simulate_ttft,
+    summarize,
+)
+from repro.sim import (
+    DEVICE_PROFILES,
+    build_cost_model,
+    make_requests,
+    make_server_model,
+    sample_prompt_lengths,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(42)
+    server = make_server_model("gpt", rng)
+    device = DEVICE_PROFILES["xiaomi14-qwen05b"]
+    lengths = sample_prompt_lengths(rng, 3000)
+    return rng, server, device, lengths
+
+
+def test_table1_correlation_structure(setup):
+    rng, server, device, lengths = setup
+    server_ttft = server.sample_ttft(rng, lengths.size)
+    dev_ttft = device.ttft(lengths) + rng.normal(0, 0.02, lengths.size)
+    r_server = np.corrcoef(lengths, server_ttft)[0, 1]
+    r_device = np.corrcoef(lengths, dev_ttft)[0, 1]
+    assert abs(r_server) < 0.1          # Table 1: |rho| <= 0.04 for servers
+    assert r_device > 0.8               # Table 1: 0.84 on-device
+
+
+def test_disco_beats_stochastic_server_constrained(setup):
+    rng, server, device, lengths = setup
+    from repro.core.distributions import LengthDistribution
+
+    ld = LengthDistribution.from_samples(lengths)
+    cm = build_cost_model("gpt", "xiaomi14-qwen05b", "server")
+    for budget in (0.2, 0.5, 0.8):
+        disco = make_policy(cm, server.ttft, ld, budget)
+        stoch = StochasticPolicy(Endpoint.SERVER, budget, seed=1)
+        r_d = simulate_ttft(lengths, disco, server, device, np.random.default_rng(0))
+        r_s = simulate_ttft(lengths, stoch, server, device, np.random.default_rng(0))
+        assert r_d["ttft"].mean() <= r_s["ttft"].mean() * 1.02
+        p99_d, p99_s = np.percentile(r_d["ttft"], 99), np.percentile(r_s["ttft"], 99)
+        assert p99_d <= p99_s * 1.05
+
+
+def test_disco_beats_stochastic_device_constrained(setup):
+    rng, server, device, lengths = setup
+    from repro.core.distributions import LengthDistribution
+
+    ld = LengthDistribution.from_samples(lengths)
+    cm = build_cost_model("gpt", "xiaomi14-qwen05b", "device")
+    for budget in (0.2, 0.5):
+        disco = make_policy(cm, server.ttft, ld, budget)
+        stoch = StochasticPolicy(Endpoint.DEVICE, budget, seed=1)
+        r_d = simulate_ttft(lengths, disco, server, device, np.random.default_rng(0))
+        r_s = simulate_ttft(lengths, stoch, server, device, np.random.default_rng(0))
+        # tail is the paper's headline metric in the device-constrained setting
+        p99_d, p99_s = np.percentile(r_d["ttft"], 99), np.percentile(r_s["ttft"], 99)
+        assert p99_d <= p99_s * 1.05
+
+
+def test_budget_respected_in_simulation(setup):
+    """E[I_s(l)·l] <= b·E[l] measured on simulated executions."""
+    rng, server, device, lengths = setup
+    from repro.core.distributions import LengthDistribution
+
+    ld = LengthDistribution.from_samples(lengths)
+    budget = 0.3
+    pol = ServerPolicy(ld, budget)
+    r = simulate_ttft(lengths, pol, server, device, np.random.default_rng(0))
+    spent = lengths[r["server_started"]].sum() / lengths.sum()
+    max_bin = float(np.max(ld.support() * ld.probs) / ld.mean())
+    assert spent <= budget + max_bin + 0.02
+
+
+def test_migration_cuts_cost_keeps_tbt(setup):
+    rng, server, device, lengths = setup
+    cm = build_cost_model("gpt", "xiaomi14-qwen05b", "device")
+    reqs = make_requests(np.random.default_rng(3), 150)
+    pol = SingleEndpointPolicy(Endpoint.DEVICE)  # isolate migration effect
+    base = simulate_full(reqs, pol, cm, server, device, np.random.default_rng(5), migration=None)
+    mig = simulate_full(
+        reqs, pol, cm, server, device, np.random.default_rng(5),
+        migration=MigrationConfig(),
+    )
+    s_base, s_mig = summarize(base), summarize(mig)
+    assert s_mig.migration_rate > 0.5            # expensive decoder -> migrate
+    assert s_mig.mean_cost < s_base.mean_cost    # Fig. 7
+    # Table 3: delivery pace preserved; P99 TBT ~ 1/r_c
+    assert s_mig.p99_tbt <= 1.0 / MigrationConfig().consumption_rate + 0.15
+    assert s_mig.mean_delayed < 20               # "negligible number of tokens"
+
+
+def test_scheduler_facade_end_to_end(setup):
+    rng, server, device, lengths = setup
+    cm = build_cost_model("gpt", "xiaomi14-qwen05b", "server")
+    sched = DiSCoScheduler(
+        cm,
+        server_ttft_samples=server.ttft.sorted_samples[:500],
+        prompt_length_samples=lengths[:500],
+        budget=0.4,
+    )
+    d = sched.plan_request(10)
+    assert d.use_device  # short prompt -> device involved
+    # online refresh does not crash and rebuilds the policy
+    for t in server.ttft.sorted_samples[500:700]:
+        sched.observe_server_ttft(float(t))
+    d2 = sched.plan_request(2000)
+    assert d2.use_server  # long prompt races in server-constrained regime
+    plan = sched.plan_migration(
+        current=Endpoint.SERVER, prompt_len=10, generated=4,
+        expected_total_tokens=120.0, target_prefill_rate=80.0,
+    )
+    # server-constrained: cheaper decoder is the device -> migrate off server
+    assert plan is None or plan.target is Endpoint.DEVICE
+
+
+def test_all_server_vs_all_device_tradeoff(setup):
+    """Fig. 2/6 sanity: device is better for short prompts, server for long."""
+    rng, server, device, lengths = setup
+    short = np.full(500, 8)
+    long = np.full(500, 1500)
+    r = np.random.default_rng(0)
+    dev_pol, srv_pol = SingleEndpointPolicy(Endpoint.DEVICE), SingleEndpointPolicy(Endpoint.SERVER)
+    assert (
+        simulate_ttft(short, dev_pol, server, device, r)["ttft"].mean()
+        < simulate_ttft(short, srv_pol, server, device, np.random.default_rng(0))["ttft"].mean()
+    )
+    assert (
+        simulate_ttft(long, srv_pol, server, device, np.random.default_rng(1))["ttft"].mean()
+        < simulate_ttft(long, dev_pol, server, device, np.random.default_rng(1))["ttft"].mean()
+    )

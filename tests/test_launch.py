@@ -1,0 +1,248 @@
+"""Launch-layer tests: sharding rules, HLO collective parsing with loop
+trip-count correction, the analytic cost model, and a real (subprocess)
+dry-run compile.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.analytic import step_flops, analytic_costs
+from repro.launch.dryrun import (
+    _line_output_bytes,
+    collective_stats,
+    depth_multipliers,
+)
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)
+from repro.models import param_shapes
+from repro.training import make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeMesh:
+    """Duck-typed mesh exposing .shape / .axis_names (the only attributes the
+    pure sharding-rule functions use)."""
+    shape: dict
+    axis_names: tuple
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16}, ("data", "model"))
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16}, ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_param_specs_divisibility(arch, mesh):
+    """Every sharded dim must divide evenly by its mesh axes."""
+    cfg = get_config(arch)
+    shapes = param_shapes(cfg)
+    specs = param_pspecs(cfg, mesh, shapes)
+
+    def check(shape, spec, name):
+        assert len(spec) <= len(shape), name
+        for dim, ax in zip(shape, list(spec) + [None] * len(shape)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0, f"{name}: {dim} % {n}"
+
+    for name, shape in shapes.items():
+        if name == "layers":
+            for k, s in shape.items():
+                check(s, specs["layers"][k], f"{arch}.{k}")
+        else:
+            check(shape, specs[name], f"{arch}.{name}")
+
+
+@pytest.mark.parametrize("arch", ["nemotron-4-340b", "arctic-480b"])
+def test_giant_params_are_model_sharded(arch):
+    """The big tensors must actually shard (memory fit depends on it)."""
+    cfg = get_config(arch)
+    specs = param_pspecs(cfg, SINGLE, param_shapes(cfg))
+    layer = specs["layers"]
+    big_keys = [k for k in layer if k.startswith(("w_up", "w_down", "moe_"))]
+    assert big_keys
+    for k in big_keys:
+        assert any(ax == "model" for ax in layer[k] if ax), f"{k} not sharded"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_cover_all_entries(arch):
+    cfg = get_config(arch)
+    if cfg.is_encoder:
+        pytest.skip("no decode cache")
+    from repro.models import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 1024))
+    specs = cache_pspecs(cfg, SINGLE, cache)
+    assert set(specs) == set(cache)
+    for k, leaf in cache.items():
+        spec = specs[k]
+        if k == "lengths":
+            continue
+        for dim, ax in zip(leaf.shape, list(spec) + [None] * len(leaf.shape)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([SINGLE.shape[a] for a in axes]))
+            assert dim % n == 0, f"{arch}.{k}"
+
+
+def test_nemotron_kv8_cache_shards_sequence():
+    """kv=8 < model=16 -> the sequence axis must take the model shards."""
+    cfg = get_config("nemotron-4-340b")
+    from repro.models import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32768))
+    specs = cache_pspecs(cfg, SINGLE, cache)
+    assert specs["k"][3] is None           # kv heads unsharded
+    assert specs["k"][2] == "model"        # sequence takes model axis
+
+
+def test_long500k_batch1_cache_uses_all_axes():
+    cfg = get_config("gemma3-1b")
+    from repro.models import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524288))
+    specs = cache_pspecs(cfg, MULTI, cache)
+    k = specs["k"]
+    assert k[1] is None                    # batch=1 unshardable
+    seq_ax = k[2]
+    assert seq_ax is not None              # sequence sharded over free axes
+
+
+def test_opt_state_specs_follow_params():
+    cfg = get_config("nemotron-4-340b")
+    shapes = param_shapes(cfg)
+    pspecs = param_pspecs(cfg, SINGLE, shapes)
+    opt = make_optimizer(cfg.name)  # adafactor
+
+    import functools
+    from repro.models import init_params
+    params_s = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0)
+    )
+    opt_s = jax.eval_shape(opt.init, params_s)
+    from repro.launch.dryrun import pshapes_tree
+    ospecs = opt_state_pspecs(opt_s, pspecs, pshapes_tree(shapes))
+    # w_up (L, d, f) sharded (None, None, "model") -> vr drops last dim
+    assert ospecs["layers"]["w_up"]["vr"] == P(None, None)
+    assert ospecs["layers"]["w_up"]["vc"] == P(None, "model")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing + loop-depth correction
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-gather = f32[512,512]{0,1} all-gather(%copy), channel_id=1, metadata={op_name="jit(f)/while/body/dot_general" stack_frame_id=3}
+  %all-reduce.1 = bf16[16,128]{1,0} all-reduce(%x), channel_id=2, metadata={op_name="jit(f)/transpose"}
+  %ar-done = f32[8]{0} all-reduce-done(%start)
+  %rs = f32[4,4]{1,0} reduce-scatter(%y), channel_id=3, metadata={op_name="jit(f)/while/body/while/body/foo"}
+"""
+
+
+def test_line_output_bytes():
+    assert _line_output_bytes("f32[512,512]{0,1}") == 512 * 512 * 4
+    assert _line_output_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _line_output_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_collective_stats_depth_correction():
+    stats = collective_stats(HLO_SAMPLE, multipliers=[10.0, 40.0])
+    # all-gather at depth 1 -> x10; all-reduce at depth 0 -> x1;
+    # reduce-scatter at depth 2 -> x40; -done line skipped
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 512 * 512 * 4 * 10
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-reduce"]["bytes"] == 16 * 128 * 2
+    assert stats["reduce-scatter"]["bytes"] == 4 * 4 * 4 * 40
+    assert stats["total_count"] == 3
+
+
+def test_depth_multipliers_structure():
+    cfg = get_config("nemotron-4-340b")
+    m = depth_multipliers(cfg, "train", 4096)
+    assert m == [16.0, 16.0 * 96]
+    m = depth_multipliers(cfg, "decode", 32768)
+    assert m == [96.0]
+    cfg2 = get_config("mamba2-2.7b")
+    m2 = depth_multipliers(cfg2, "train", 4096)
+    assert m2 == [64.0, 64.0 * (4096 // cfg2.ssm_chunk)]
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model
+# ---------------------------------------------------------------------------
+
+def test_analytic_flops_close_to_6nd_for_dense_train():
+    cfg = get_config("codeqwen1.5-7b")
+    fl = step_flops(cfg, "train", 256, 4096)
+    six_nd = 6.0 * cfg.param_count() * 256 * 4096
+    # remat adds ~1 forward (x4/3), attention adds the quadratic term;
+    # embeddings don't matmul. Expect within a factor ~[0.8, 2.2].
+    assert 0.8 * six_nd < fl < 2.2 * six_nd
+
+
+def test_analytic_decode_flops_linear_in_batch():
+    cfg = get_config("gemma3-1b")
+    f1 = step_flops(cfg, "decode", 1, 32768)
+    f128 = step_flops(cfg, "decode", 128, 32768)
+    assert 100 < f128 / f1 <= 128.5
+
+
+def test_analytic_moe_counts_active_only():
+    cfg = get_config("arctic-480b")
+    fl = step_flops(cfg, "prefill", 1, 4096)
+    dense_equiv = 2.0 * cfg.param_count() * 4096
+    active_equiv = 2.0 * cfg.active_param_count() * 4096
+    assert fl < 0.5 * dense_equiv
+    assert fl > 0.5 * active_equiv
+
+
+def test_analytic_memory_decode_dominated_by_cache_and_params():
+    cfg = get_config("nemotron-4-340b")
+    ac = analytic_costs(cfg, "decode", 128, 32768, 256, model_shard=16)
+    # per-device param shard is 340e9*2/16 = 42.5 GB read once
+    assert ac.bytes_per_device > 340e9 * 2 / 16
+
+
+# ---------------------------------------------------------------------------
+# real dry-run compile (subprocess — needs fresh XLA_FLAGS)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-2.7b", "long_500k"),
+    ("olmoe-1b-7b", "decode_32k"),
+])
+def test_dryrun_compiles_in_subprocess(arch, shape, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", "single",
+         "--out-dir", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__single.json"))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,99 @@
+"""TTFT predictors (App. C) + FLOPs/energy model (App. E) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import BLOOM_1B1, BLOOM_560M, QWEN_05B, energy_cost_per_token, flops_per_token
+from repro.core.predictors import (
+    boosted_stumps_forecast,
+    exponential_smoothing_forecast,
+    mae,
+    mape,
+    moving_average_forecast,
+)
+
+
+# ---------------------------------------------------------------------------
+# Appendix E — the faithfulness anchors
+# ---------------------------------------------------------------------------
+
+def test_table6_bloom_1b1_decode_matches_paper():
+    g = flops_per_token(BLOOM_1B1, 128, "decode").total / 1e9
+    assert abs(g - 0.82) / 0.82 < 0.01  # paper: 0.82
+
+
+def test_table6_qwen_decode_matches_paper():
+    g = flops_per_token(QWEN_05B, 128, "decode").total / 1e9
+    assert abs(g - 0.37) / 0.37 < 0.01  # paper: 0.37
+
+
+def test_table6_prefill_l32_close():
+    g = flops_per_token(BLOOM_1B1, 32, "prefill").total / 1e9
+    assert abs(g - 0.85) / 0.85 < 0.05  # paper: 0.85
+
+
+def test_table7_component_ratios():
+    r = flops_per_token(BLOOM_1B1, 128, "prefill").ratios()
+    assert abs(r["Embedding"] - 0.3124) < 0.02
+    assert abs(r["Output"] - 0.3124) < 0.02
+    assert abs(r["FFN"] - 0.2448) < 0.02
+    assert r["LayerNorm"] < 0.001
+
+
+def test_decode_flops_constant_in_length_prefill_grows():
+    d32 = flops_per_token(BLOOM_1B1, 32, "decode").total
+    d128 = flops_per_token(BLOOM_1B1, 128, "decode").total
+    assert (d128 - d32) / d32 < 0.01  # KV caching kills the quadratic term
+    p32 = flops_per_token(BLOOM_1B1, 32, "prefill").total
+    p128 = flops_per_token(BLOOM_1B1, 128, "prefill").total
+    assert p128 > p32 * 1.02
+
+
+def test_energy_cost_scales_with_rate():
+    a = energy_cost_per_token(BLOOM_560M, 64, "decode", energy_to_money=0.3)
+    b = energy_cost_per_token(BLOOM_560M, 64, "decode", energy_to_money=5.0)
+    assert b / a == pytest.approx(5.0 / 0.3)
+
+
+# ---------------------------------------------------------------------------
+# Appendix C — predictors (the negative result)
+# ---------------------------------------------------------------------------
+
+def _spiky_series(n=500, seed=0):
+    rng = np.random.default_rng(seed)
+    body = rng.lognormal(np.log(0.4), 0.4, n)
+    spikes = np.where(rng.random(n) < 0.08, 4.0 * (1 + rng.random(n)), 1.0)
+    return body * spikes
+
+
+def test_predictors_one_step_shapes():
+    s = _spiky_series()
+    for fn in (moving_average_forecast, exponential_smoothing_forecast,
+               boosted_stumps_forecast):
+        p = fn(s)
+        assert p.shape == s.shape
+        assert np.all(np.isfinite(p))
+
+
+def test_predictors_fail_on_spiky_ttft():
+    """The paper's conclusion: point prediction is not accurate enough."""
+    s = _spiky_series()
+    half = s.size // 2
+    for fn in (moving_average_forecast, exponential_smoothing_forecast,
+               boosted_stumps_forecast):
+        p = fn(s)
+        assert mape(s[half:], p[half:]) > 15.0
+
+
+def test_predictors_track_smooth_series():
+    """Sanity: they DO work when the series is predictable."""
+    t = np.linspace(0, 8 * np.pi, 400)
+    s = 1.0 + 0.05 * np.sin(t)
+    p = exponential_smoothing_forecast(s, alpha=0.5)
+    assert mape(s[200:], p[200:]) < 3.0
+
+
+def test_mape_mae_basics():
+    y = np.array([1.0, 2.0, 4.0])
+    p = np.array([1.1, 1.8, 4.4])
+    assert mae(y, p) == pytest.approx((0.1 + 0.2 + 0.4) / 3)
+    assert mape(y, p) == pytest.approx((10 + 10 + 10) / 3, rel=1e-6)

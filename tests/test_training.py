@@ -1,0 +1,112 @@
+"""Training substrate tests: loss decreases, microbatching is exact,
+optimizers behave, checkpoints roundtrip."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import lm_batches, masked_audio_batches
+from repro.models import forward, init_params
+from repro.training import (
+    adafactor,
+    adamw,
+    load_checkpoint,
+    make_optimizer,
+    make_train_step,
+    save_checkpoint,
+    train,
+)
+
+
+def test_loss_decreases_tiny_lm():
+    cfg = get_config("codeqwen1.5-7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = lm_batches(cfg.vocab, batch=16, seq=64, seed=0)
+    params, history = train(cfg, params, adamw(lr=3e-3, warmup=10), batches, n_steps=60)
+    first, last = history[0][1]["loss"], history[-1][1]["loss"]
+    assert last < first - 1.5, f"loss did not decrease: {first} -> {last}"
+
+
+def test_loss_decreases_masked_audio():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = masked_audio_batches(cfg.d_model, cfg.vocab, batch=16, frames=64, seed=0)
+    params, history = train(cfg, params, adamw(lr=3e-3, warmup=10), batches, n_steps=100)
+    first, last = history[0][1]["loss"], history[-1][1]["loss"]
+    assert last < first - 0.4, f"masked loss did not decrease: {first} -> {last}"
+
+
+def test_microbatching_matches_full_batch():
+    """Gradient accumulation must be numerically equivalent (fp32, dense —
+    the MoE router aux loss is batch-nonlinear by construction)."""
+    cfg = get_config("codeqwen1.5-7b", smoke=True)
+    cfg = type(cfg)(**{**cfg.__dict__, "dtype": "float32"})
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = next(lm_batches(cfg.vocab, batch=8, seq=16, seed=1))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    opt = adamw(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+
+    s1 = make_train_step(cfg, opt, num_microbatches=1)
+    s4 = make_train_step(cfg, opt, num_microbatches=4)
+    p1, _, _, m1 = jax.jit(s1)(params, opt_state, step, batch)
+    p4, _, _, m4 = jax.jit(s4)(params, opt_state, step, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-6)
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_steps_reduce_quadratic(opt_name):
+    """Both optimizers minimize a simple quadratic."""
+    opt = adamw(lr=0.05, warmup=1) if opt_name == "adamw" else adafactor(lr=0.5, warmup=1)
+    params = {"w": jnp.ones((4, 8)) * 3.0, "b": jnp.ones((8,)) * -2.0}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, step)
+        step = step + 1
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((64, 128)), "b": jnp.zeros((128,))}
+    st = opt.init(params)
+    assert st["w"]["vr"].shape == (64,) and st["w"]["vc"].shape == (128,)
+    assert st["b"]["v"].shape == (128,)
+    # factored state is ~0.2% of Adam's m+v for this matrix
+    adam_bytes = 2 * 64 * 128 * 4
+    fact_bytes = (64 + 128) * 4
+    assert fact_bytes < 0.03 * adam_bytes
+
+
+def test_make_optimizer_selects_adafactor_for_giants():
+    assert make_optimizer("arctic-480b").init.__qualname__.startswith("adafactor")
+    assert make_optimizer("nemotron-4-340b").init.__qualname__.startswith("adafactor")
+    assert make_optimizer("gemma3-1b").init.__qualname__.startswith("adamw")
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("hymba-1.5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw()
+    opt_state = opt.init(params)
+    save_checkpoint(str(tmp_path), 7, params, opt_state, meta={"arch": cfg.name})
+    p2, o2, manifest = load_checkpoint(str(tmp_path), 7, params, opt_state)
+    assert manifest["step"] == 7 and manifest["arch"] == cfg.name
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(opt_state), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
