@@ -1,0 +1,285 @@
+"""Engine-level decode throughput: the seed code's decode hot path
+(reconstructed faithfully below) vs the current fused hot path.
+
+Seed baseline (what commit 21bffb5 shipped), reconstructed in-module for the
+dense-GQA bench model so both variants run in the same process:
+  * seq-major (L, B, S, K, D) KV cache,
+  * per-layer ``repeat_kv`` materialization of the whole cache every step,
+  * one jitted dispatch + one ``block_until_ready`` + numpy round-trip per
+    token, no buffer donation (full cache copy per step),
+  * the configured bfloat16 compute dtype, software-emulated on CPU.
+
+Current path: head-major (L, B, K, S, D) cache consumed in place (grouped
+query heads, no repeat/transpose), ``decode_n`` fusing ``decode_chunk`` steps
+per dispatch, donated cache buffers, one host sync per chunk, and the
+engine's backend-aware compute dtype (float32 on CPU, bf16 on TPU).
+
+The reconstruction is validated before timing: at equal dtype its greedy
+token stream must match the fused ``decode_n`` path exactly — the baseline is
+the same math, only the seed's data movement.
+
+Emits ``BENCH_decode.json`` at the repo root — the first entry of the decode
+perf trajectory — plus the usual CSV rows for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_decode.json"
+
+# (batch, prompt/context length, cache capacity) measurement points: the
+# device regime (batch 1, short context) plus the server continuous-batching
+# regime (batched, long cache) where the seed's per-step repeat_kv
+# materialization scales with B*S*H and dominates.
+_POINTS = [
+    (1, 32, 256),
+    (1, 128, 256),
+    (4, 128, 256),
+    (4, 512, 1024),
+    (8, 512, 1024),
+]
+_REPEATS = 5                 # median-of-N, variants interleaved (noisy box)
+_CHUNK = 8
+
+
+def _steps_for(max_len: int) -> int:
+    # longer timed runs at the cheap points for stabler medians
+    return 48 if max_len <= 256 else 24
+
+
+# ---------------------------------------------------------------------------
+# Seed decode path reconstruction (dense GQA models only — the bench model)
+# ---------------------------------------------------------------------------
+
+
+def _seed_repeat_kv(x, n_rep):
+    if n_rep == 1:
+        return x
+    b, s, k, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, n_rep, d)).reshape(
+        b, s, k * n_rep, d
+    )
+
+
+def _seed_decode_attention(q, k_cache, v_cache, lengths):
+    """Seed models.attention.decode_attention: seq-major cache, full
+    repeat_kv materialization per call."""
+    b, s, kh, d = k_cache.shape
+    h = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kr = _seed_repeat_kv(k_cache, h // kh)
+    vr = _seed_repeat_kv(v_cache, h // kh)
+    logits = jnp.einsum("bhd,bkhd->bhk", q, kr, preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", probs.astype(vr.dtype), vr)
+
+
+def _make_seed_decode(cfg):
+    """Jitted seed-style decode_step over a seq-major (L,B,S,K,D) cache."""
+    from repro.models.layers import ffn_apply, rms_norm, _qkv
+    from repro.models.model import _embed, _logits, window_vector
+    from repro.models.rope import apply_rope
+
+    def seed_decode_step(params, cache, token):
+        lengths = cache["lengths"] + 1
+
+        def body(x, xs):
+            lp, window, cl = xs
+            h = rms_norm(x, lp["mixer_norm"])
+            q, k, v = _qkv(cfg, lp, h)
+            pos = (lengths - 1)[:, None]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            idx = lengths - 1
+            upd = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+            kc = jax.vmap(upd)(cl["k"], k, idx)
+            vc = jax.vmap(upd)(cl["v"], v, idx)
+            o = _seed_decode_attention(q[:, 0], kc, vc, lengths)
+            out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+            x = x + out.astype(x.dtype)
+            f, _ = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+            return x, {"k": kc, "v": vc}
+
+        h0 = _embed(params, cfg, token[:, None])
+        h, new_caches = jax.lax.scan(
+            body, h0,
+            (params["layers"], window_vector(cfg),
+             {"k": cache["k"], "v": cache["v"]}),
+        )
+        logits = _logits(params, cfg, h)[:, 0]
+        new_caches["lengths"] = lengths
+        return logits, new_caches
+
+    @jax.jit  # seed had no donation: the cache is copied every step
+    def step(params, cache, token):
+        logits, cache = seed_decode_step(params, cache, token)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return step
+
+
+def _seed_loop(step, params, cache, tok, steps):
+    """Seed engine loop: one dispatch, one block_until_ready and one numpy
+    conversion per token. Returns (tokens, seconds)."""
+    out = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        tok, cache = step(params, cache, jnp.asarray(tok, jnp.int32))
+        tok = np.asarray(jax.block_until_ready(tok))
+        out.append(tok.copy())
+    return out, time.perf_counter() - t0
+
+
+def _fused_loop(engine, cache, tok, steps):
+    """Current hot path: decode_n chunks, one host sync per chunk."""
+    out = []
+    tok_dev = jnp.asarray(tok, jnp.int32)
+    t0 = time.perf_counter()
+    done = 0
+    while done < steps:
+        toks, cache = engine._decode_n(engine.params, cache, tok_dev, _CHUNK)
+        toks_np = np.asarray(jax.block_until_ready(toks))
+        out.extend(toks_np[: min(_CHUNK, steps - done)])
+        tok_dev = toks[-1]
+        done += _CHUNK
+    return out, time.perf_counter() - t0
+
+
+def _validate_reconstruction(cfg, params, seed_step):
+    """At equal dtype the seed reconstruction and the fused decode_n path
+    must emit identical greedy streams: same math, different data movement."""
+    from repro.models import decode_n, prefill
+
+    steps, max_len = 12, 128
+    prompt = (np.arange(2 * 24, dtype=np.int32) % cfg.vocab).reshape(2, 24)
+    logits, cache = jax.jit(lambda p, t: prefill(p, cfg, t, max_len))(
+        params, jnp.asarray(prompt)
+    )
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    fused, _ = jax.jit(lambda p, c, t: decode_n(p, cfg, c, t, steps))(
+        params, cache, tok
+    )
+    seed_cache = {
+        "k": cache["k"].transpose(0, 1, 3, 2, 4),
+        "v": cache["v"].transpose(0, 1, 3, 2, 4),
+        "lengths": cache["lengths"],
+    }
+    seed_toks, _ = _seed_loop(seed_step, params, seed_cache, np.asarray(tok), steps)
+    assert [list(t) for t in seed_toks] == [list(t) for t in np.asarray(fused)], (
+        "seed-path reconstruction diverged from the fused decode path"
+    )
+
+
+def run() -> list[Row]:
+    from repro.configs import paper_models
+    from repro.models import init_params, prefill
+    from repro.serving import InferenceEngine
+
+    cfg = paper_models.TINY_SERVER            # bfloat16: what the seed ran
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    seed_step = _make_seed_decode(cfg)
+    _validate_reconstruction(cfg, params, seed_step)
+
+    engines: dict[int, InferenceEngine] = {}
+    rows: list[Row] = []
+    points = []
+    for batch, ctx, max_len in _POINTS:
+        if max_len not in engines:
+            engines[max_len] = InferenceEngine(
+                cfg, params, max_len=max_len, decode_chunk=_CHUNK
+            )
+        engine = engines[max_len]
+        prompt = (np.arange(batch * ctx, dtype=np.int32) % cfg.vocab).reshape(
+            batch, ctx
+        )
+        seed_prefill = jax.jit(
+            lambda p, t, ml=max_len: prefill(p, cfg, t, ml)
+        )
+
+        def fresh_fused():
+            tok, cache = engine.prefill(prompt)
+            return tok, cache
+
+        def fresh_seed():
+            logits, cache = seed_prefill(params, jnp.asarray(prompt))
+            tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            # seed stored the cache seq-major (transpose outside the timing)
+            seed_cache = {
+                "k": cache["k"].transpose(0, 1, 3, 2, 4),
+                "v": cache["v"].transpose(0, 1, 3, 2, 4),
+                "lengths": cache["lengths"],
+            }
+            return tok, seed_cache
+
+        steps = _steps_for(max_len)
+        # warm both paths at this shape
+        tok, cache = fresh_fused()
+        _fused_loop(engine, cache, tok, _CHUNK)
+        tok, seed_cache = fresh_seed()
+        _seed_loop(seed_step, params, seed_cache, tok, 1)
+
+        seed_times, fused_times = [], []
+        for rep in range(_REPEATS):
+            # alternate variant order so machine-load drift cancels
+            order = ("seed", "fused") if rep % 2 == 0 else ("fused", "seed")
+            for variant in order:
+                if variant == "seed":
+                    tok, seed_cache = fresh_seed()
+                    _, t = _seed_loop(seed_step, params, seed_cache, tok, steps)
+                    seed_times.append(t)
+                else:
+                    tok, cache = fresh_fused()
+                    _, t = _fused_loop(engine, cache, tok, steps)
+                    fused_times.append(t)
+        base_s = float(np.median(seed_times))
+        fused_s = float(np.median(fused_times))
+
+        n_tok = steps * batch
+        point = {
+            "batch": batch,
+            "context": ctx,
+            "max_len": max_len,
+            "decode_tokens": n_tok,
+            "seed_us_per_token": base_s / n_tok * 1e6,
+            "fused_us_per_token": fused_s / n_tok * 1e6,
+            "seed_tokens_per_s": n_tok / base_s,
+            "fused_tokens_per_s": n_tok / fused_s,
+            "speedup": base_s / fused_s,
+        }
+        points.append(point)
+        rows.append(Row(
+            f"decode_b{batch}_ctx{ctx}_seed", point["seed_us_per_token"],
+            f"tok/s={point['seed_tokens_per_s']:.0f}",
+        ))
+        rows.append(Row(
+            f"decode_b{batch}_ctx{ctx}_fused", point["fused_us_per_token"],
+            f"tok/s={point['fused_tokens_per_s']:.0f};speedup={point['speedup']:.2f}x",
+        ))
+
+    payload = {
+        "bench": "engine_decode_throughput",
+        "model": cfg.name,
+        "decode_chunk": _CHUNK,
+        "backend": jax.default_backend(),
+        "seed_dtype": cfg.dtype,
+        "engine_dtype": next(iter(engines.values())).cfg.dtype,
+        "points": points,
+        "min_speedup": min(p["speedup"] for p in points),
+        "geomean_speedup": float(
+            np.exp(np.mean([np.log(p["speedup"]) for p in points]))
+        ),
+    }
+    _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return rows

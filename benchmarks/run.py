@@ -9,6 +9,7 @@ import sys
 import time
 
 from . import (
+    bench_decode_throughput,
     bench_fig23_stability,
     bench_roofline_endpoints,
     bench_table4_coldstart,
@@ -38,6 +39,7 @@ MODULES = {
     "fig8": bench_fig8_quality,
     "roofline_endpoints": bench_roofline_endpoints,
     "table4": bench_table4_coldstart,
+    "decode": bench_decode_throughput,
 }
 
 

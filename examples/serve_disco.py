@@ -27,12 +27,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=20)
+    ap.add_argument("--decode-chunk", type=int, default=4,
+                    help="tokens per fused decode dispatch (host syncs once "
+                         "per chunk; larger = higher throughput, coarser "
+                         "admission granularity)")
     args = ap.parse_args()
 
     # --- 1. the server-side reality: continuous batching queues requests ---
     srv_cfg = paper_models.TINY_SERVER
     bs = BatchedServer(srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)),
-                       max_slots=2, max_len=96)
+                       max_slots=2, max_len=96, decode_chunk=args.decode_chunk)
+    bs.warmup()  # precompile prefill bucket + tail scans outside the timing
     rng = np.random.default_rng(0)
     rids = [bs.submit(rng.integers(0, 1024, size=8).astype(np.int32), 8)
             for _ in range(6)]

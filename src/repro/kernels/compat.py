@@ -1,0 +1,24 @@
+"""Version-tolerant shims over the Pallas/TPU API surface.
+
+The Pallas TPU names moved across jax releases (``TPUCompilerParams`` →
+``CompilerParams``); the kernels route through these helpers so they lower
+on whichever jax the container ships.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["on_tpu", "tpu_compiler_params"]
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a real TPU (kernels lower
+    natively); False on CPU/GPU where Pallas-TPU must run interpreted."""
+    return jax.default_backend() == "tpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params under either API name."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -1,6 +1,10 @@
 """Flash-decode kernel (Pallas TPU): one query token per sequence against a
 long (padded) KV cache — the serving hot spot behind decode_32k / long_500k.
 
+The cache is HEAD-MAJOR ``(B, K, S, D)`` — the same layout the model keeps it
+in (``init_cache``) — so the kernel's BlockSpecs slice the seq dimension
+directly and no per-step transpose/copy of the cache ever happens.
+
 Grid: (batch, kv_heads, kv_blocks) with the KV-length dimension innermost.
 Per (batch, kv_head) the n_rep grouped query heads are processed together as
 a (n_rep, D) × (D, block_k) MXU matmul. Online softmax state (m, l, acc)
@@ -17,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .compat import on_tpu, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -80,17 +86,17 @@ def _kernel(
 @functools.partial(
     jax.jit, static_argnames=("window", "block_k", "interpret")
 )
-def decode_attention(
+def _decode_attention_impl(
     q: jnp.ndarray,        # (B, H, D)
-    k_cache: jnp.ndarray,  # (B, S, K, D)
-    v_cache: jnp.ndarray,  # (B, S, K, D)
+    k_cache: jnp.ndarray,  # (B, K, S, D) head-major
+    v_cache: jnp.ndarray,  # (B, K, S, D)
     lengths: jnp.ndarray,  # (B,) int32 — valid entries incl. current token
     *,
-    window: int = 0,
-    block_k: int = 256,
-    interpret: bool = True,
+    window: int,
+    block_k: int,
+    interpret: bool,
 ) -> jnp.ndarray:
-    b, s, kh, d = k_cache.shape
+    b, kh, s, d = k_cache.shape
     h = q.shape[1]
     assert h % kh == 0
     n_rep = h // kh
@@ -98,9 +104,9 @@ def decode_attention(
     assert s % block_k == 0, (s, block_k)
     ns = s // block_k
 
+    # zero-copy: the (B, K, S, D) cache feeds the BlockSpecs directly; only
+    # the single query token is reshaped (O(H·D) — no cache-sized movement).
     qg = q.reshape(b, kh, n_rep, d)
-    kt = k_cache.transpose(0, 2, 1, 3)   # (B, K, S, D)
-    vt = v_cache.transpose(0, 2, 1, 3)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -129,9 +135,32 @@ def decode_attention(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, n_rep, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), qg, kt, vt)
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
     return out.reshape(b, h, d)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Flash-decode over a head-major (B, K, S, D) cache.
+
+    ``interpret=None`` auto-detects the backend: native lowering on TPU,
+    interpreter elsewhere (never silently interprets on real hardware).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _decode_attention_impl(
+        q, k_cache, v_cache, lengths,
+        window=window, block_k=block_k, interpret=interpret,
+    )

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import on_tpu, tpu_compiler_params
+
 NEG_INF = -1e30
 
 __all__ = ["flash_prefill"]
@@ -98,8 +100,10 @@ def flash_prefill(
     window: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = not on_tpu()
     b, sq, h, d = q.shape
     _, sk, kh, _ = k.shape
     assert h % kh == 0, (h, kh)
@@ -145,7 +149,7 @@ def flash_prefill(
             pltpu.VMEM((block_q,), jnp.float32),      # running sum
             pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -5,11 +5,14 @@ CPU container they run via interpret=True (Python-level execution of the
 kernel body — correct but slow, so only tests exercise them). The pure-jnp
 paths in ``repro.models.attention`` / ``repro.models.ssm`` are the production
 CPU/dry-run fallbacks and the numerical oracles live in ``ref.py``.
+
+All kernels auto-detect the backend when ``interpret`` is left as None —
+``interpret`` is resolved through :func:`on_tpu`, never hardcoded, so a real
+TPU always gets the native lowering.
 """
 from __future__ import annotations
 
-import jax
-
+from .compat import on_tpu
 from .decode_attention import decode_attention as decode_attention_kernel
 from .flash_prefill import flash_prefill as flash_prefill_kernel
 from .ssd_scan import ssd_scan as ssd_scan_kernel
@@ -17,15 +20,9 @@ from .ssd_scan import ssd_scan as ssd_scan_kernel
 __all__ = ["flash_prefill_op", "decode_attention_op", "ssd_scan_op", "on_tpu"]
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def flash_prefill_op(q, k, v, *, causal=True, window=0,
                      block_q=128, block_k=128, interpret=None):
     """Fused causal/sliding-window GQA attention. (B,Sq,H,D)x(B,Sk,K,D)->(B,Sq,H,D)."""
-    if interpret is None:
-        interpret = not on_tpu()
     return flash_prefill_kernel(
         q, k, v, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=interpret,
@@ -34,9 +31,9 @@ def flash_prefill_op(q, k, v, *, causal=True, window=0,
 
 def decode_attention_op(q, k_cache, v_cache, lengths, *, window=0,
                         block_k=256, interpret=None):
-    """Flash-decode: (B,H,D) against (B,S,K,D) caches with valid lengths."""
-    if interpret is None:
-        interpret = not on_tpu()
+    """Flash-decode: (B,H,D) against head-major (B,K,S,D) caches with valid
+    lengths. The cache layout matches ``models.model.init_cache`` so no
+    per-step copy happens between the model cache and the kernel."""
     return decode_attention_kernel(
         q, k_cache, v_cache, lengths, window=window,
         block_k=block_k, interpret=interpret,
@@ -45,6 +42,4 @@ def decode_attention_op(q, k_cache, v_cache, lengths, *, window=0,
 
 def ssd_scan_op(x, dt, A, Bm, Cm, *, chunk=64, interpret=None):
     """Mamba2 SSD chunked scan: returns (y, final_state)."""
-    if interpret is None:
-        interpret = not on_tpu()
     return ssd_scan_kernel(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

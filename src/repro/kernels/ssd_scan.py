@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import on_tpu, tpu_compiler_params
+
 __all__ = ["ssd_scan"]
 
 
@@ -90,9 +92,11 @@ def ssd_scan(
     Cm: jnp.ndarray,   # (B, T, G, N)
     *,
     chunk: int = 64,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    if interpret is None:
+        interpret = not on_tpu()
     b, t, h, p = x.shape
     g, n = Bm.shape[2], Bm.shape[3]
     assert t % chunk == 0, (t, chunk)
@@ -130,7 +134,7 @@ def ssd_scan(
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

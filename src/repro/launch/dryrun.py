@@ -415,6 +415,8 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool, variant: str | None 
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     try:
         ma = compiled.memory_analysis()
         mem = {

@@ -38,12 +38,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             'XLA_FLAGS="--xla_force_host_platform_device_count=512" BEFORE '
             "importing jax (dryrun.py does this)."
         )
-    return jax.make_mesh(
-        shape,
-        axes,
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    # axis_types / AxisType only exist on newer jax; Auto is the default there
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {"axis_types": (axis_type.Auto,) * len(axes)} if axis_type else {}
+    return jax.make_mesh(shape, axes, devices=devices[:n], **kwargs)
 
 
 def mesh_batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

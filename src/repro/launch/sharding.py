@@ -197,14 +197,14 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shapes: dict) -> dict:
             used += list(baxes)
         entries: list = [None, b_ax]
         if name in ("k", "v"):
-            L, B, S, K, hd = shape
+            L, B, K, S, hd = shape  # head-major cache layout
             if _fit(mesh, K, "model"):
-                entries += [None, "model", None]
+                entries += ["model", None, None]
                 used.append("model")
             else:
                 free = tuple(a for a in mesh.axis_names if a not in used)
                 seq_ax = _seq_axes(mesh, S, free)
-                entries += [seq_ax, None, None]
+                entries += [None, seq_ax, None]
         elif name == "ckv":
             L, B, S, r = shape
             if _fit(mesh, r, "model"):

@@ -1,5 +1,6 @@
 from .config import ModelConfig
 from .model import (
+    decode_n,
     decode_step,
     forward,
     init_cache,
@@ -10,6 +11,6 @@ from .model import (
 )
 
 __all__ = [
-    "ModelConfig", "decode_step", "forward", "init_cache", "init_params",
-    "param_shapes", "prefill", "window_vector",
+    "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
+    "init_params", "param_shapes", "prefill", "window_vector",
 ]

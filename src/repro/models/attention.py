@@ -169,30 +169,37 @@ def attention(
 
 def decode_attention(
     q: jnp.ndarray,          # (B, H, D) — one new token per sequence
-    k_cache: jnp.ndarray,    # (B, S, K, D)
-    v_cache: jnp.ndarray,    # (B, S, K, Dv)
+    k_cache: jnp.ndarray,    # (B, K, S, D) — HEAD-MAJOR cache
+    v_cache: jnp.ndarray,    # (B, K, S, Dv)
     lengths: jnp.ndarray,    # (B,) valid cache lengths (the new token is at lengths-1... see note)
     *,
     window: jnp.ndarray | int = 0,
 ) -> jnp.ndarray:
-    """Single-step attention against a (padded) KV cache.
+    """Single-step attention against a (padded) head-major KV cache.
 
     ``lengths[b]`` = number of valid cache entries for row b **including** the
     current token's K/V (callers insert the new K/V before attending).
+
+    The cache stays in its storage layout ``(B, K, S, D)`` — the grouped
+    query heads contract against each KV head directly, so there is no
+    repeat_kv materialization and no transpose anywhere on this hot path.
     Returns (B, H, Dv).
     """
-    b, s, kh, d = k_cache.shape
+    b, kh, s, d = k_cache.shape
     h = q.shape[1]
     n_rep = h // kh
+    dv = v_cache.shape[-1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
-    kr = repeat_kv(k_cache, n_rep)
-    vr = repeat_kv(v_cache, n_rep)
-    logits = jnp.einsum("bhd,bkhd->bhk", q, kr, preferred_element_type=jnp.float32) * scale
+    qg = q.reshape(b, kh, n_rep, d)
+    logits = jnp.einsum(
+        "bgrd,bgsd->bgrs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                            # (B, K, n_rep, S)
     k_pos = jnp.arange(s)[None, :]                      # (1, S)
     valid = k_pos < lengths[:, None]
     w = jnp.asarray(window)
     q_pos = lengths[:, None] - 1
     valid &= jnp.where(w > 0, q_pos - k_pos < w, True)
-    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhk,bkhd->bhd", probs.astype(vr.dtype), vr)
+    out = jnp.einsum("bgrs,bgsd->bgrd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, dv)

@@ -26,6 +26,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+# shard_map moved to the jax namespace (and check_rep -> check_vma) across
+# jax releases; resolve whichever this container ships.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 __all__ = [
     "decode_context",
     "active_decode_context",
@@ -59,9 +68,9 @@ def active_decode_context() -> Optional[_DecodeCtx]:
 
 def distributed_attn_decode(
     q: jnp.ndarray,        # (B, H, D) — replicated over the seq axis
-    k_new: jnp.ndarray,    # (B, 1, K, D)
+    k_new: jnp.ndarray,    # (B, K, 1, D) — head-major, like the cache
     v_new: jnp.ndarray,
-    k_cache: jnp.ndarray,  # (B, S, K, D) — S sharded over ctx.seq_axis
+    k_cache: jnp.ndarray,  # (B, K, S, D) — S sharded over ctx.seq_axis
     v_cache: jnp.ndarray,
     lengths: jnp.ndarray,  # (B,) — count INCLUDING the new token
     window,
@@ -76,7 +85,7 @@ def distributed_attn_decode(
     )
 
     def local(q, k_new, v_new, kc, vc, lengths):
-        b, s_local, kh, d = kc.shape
+        b, kh, s_local, d = kc.shape
         h = q.shape[1]
         n_rep = h // kh
         shard = jax.lax.axis_index(ax)
@@ -86,29 +95,30 @@ def distributed_attn_decode(
         idx = lengths - 1 - start
         in_range = (idx >= 0) & (idx < s_local)
         safe = jnp.clip(idx, 0, s_local - 1)
-        upd = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+        upd = lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (0, i, 0))
         kc2 = jax.vmap(upd)(kc, k_new, safe)
         vc2 = jax.vmap(upd)(vc, v_new, safe)
         sel = in_range[:, None, None, None]
         kc = jnp.where(sel, kc2, kc)
         vc = jnp.where(sel, vc2, vc)
 
-        # --- local partial flash-decode --------------------------------------
-        kr = jnp.repeat(kc, n_rep, axis=2).astype(jnp.float32)
-        vr = jnp.repeat(vc, n_rep, axis=2).astype(jnp.float32)
+        # --- local partial flash-decode (grouped heads, no repeat_kv) -------
+        qg = q.reshape(b, kh, n_rep, d).astype(jnp.float32)
         scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
-        logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * scale
+        logits = jnp.einsum(
+            "bgrd,bgsd->bgrs", qg, kc.astype(jnp.float32)
+        ) * scale                                            # (B,K,n_rep,S)
         pos = start + jnp.arange(s_local)[None, :]
         valid = pos < lengths[:, None]
         w = jnp.asarray(window)
         valid &= jnp.where(w > 0, (lengths[:, None] - 1 - pos) < w, True)
-        logits = jnp.where(valid[:, None, :], logits, -1e30)
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
 
-        m = logits.max(axis=-1)                              # (B,H)
+        m = logits.max(axis=-1)                              # (B,K,n_rep)
         p = jnp.exp(logits - m[..., None])
-        p = jnp.where(valid[:, None, :], p, 0.0)
-        l = p.sum(axis=-1)                                   # (B,H)
-        o = jnp.einsum("bhk,bkhd->bhd", p, vr)               # (B,H,D)
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        l = p.sum(axis=-1)                                   # (B,K,n_rep)
+        o = jnp.einsum("bgrs,bgsd->bgrd", p, vc.astype(jnp.float32))
 
         # --- cross-shard combine (2 scalar-field psums + 1 output psum) -----
         m_glob = jax.lax.pmax(m, ax)
@@ -116,21 +126,21 @@ def distributed_attn_decode(
         l_tot = jax.lax.psum(l * alpha, ax)
         o_tot = jax.lax.psum(o * alpha[..., None], ax)
         out = (o_tot / jnp.maximum(l_tot, 1e-30)[..., None]).astype(q.dtype)
-        return out, kc, vc
+        return out.reshape(b, h, d), kc, vc
 
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = _shard_map(
         local,
         mesh=mesh,
         in_specs=(
             P(bx, None, None),
             P(bx, None, None, None),
             P(bx, None, None, None),
-            P(bx, ax, None, None),
-            P(bx, ax, None, None),
+            P(bx, None, ax, None),
+            P(bx, None, ax, None),
             P(bx),
         ),
-        out_specs=(P(bx, None, None), P(bx, ax, None, None), P(bx, ax, None, None)),
-        check_vma=False,
+        out_specs=(P(bx, None, None), P(bx, None, ax, None), P(bx, None, ax, None)),
+        **{_CHECK_KW: False},
     )(q, k_new, v_new, k_cache, v_cache, lengths)
     return out, kc, vc
 
@@ -196,7 +206,7 @@ def distributed_mla_decode_absorbed(
         out = c_tot / jnp.maximum(l_tot, 1e-30)[..., None]
         return out, cc, kr
 
-    return jax.shard_map(
+    return _shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -206,5 +216,5 @@ def distributed_mla_decode_absorbed(
             P(bx),
         ),
         out_specs=(P(bx, None, None), P(bx, ax, None), P(bx, ax, None)),
-        check_vma=False,
+        **{_CHECK_KW: False},
     )(q_abs, q_rope, ckv_new, krope_new, ckv_cache, krope_cache, lengths)

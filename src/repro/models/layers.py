@@ -115,7 +115,7 @@ def attn_decode(
     cfg: ModelConfig,
     lp: dict,
     x: jnp.ndarray,              # (B, 1, d) — normed
-    k_cache: jnp.ndarray,        # (B, S, K, hd)
+    k_cache: jnp.ndarray,        # (B, K, S, hd) — head-major
     v_cache: jnp.ndarray,
     lengths: jnp.ndarray,        # (B,) length INCLUDING the new token
     window,
@@ -124,25 +124,24 @@ def attn_decode(
     pos = (lengths - 1)[:, None]                     # (B,1)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
+    # (B,1,K,hd) -> (B,K,1,hd): only the single new token moves, not the cache
+    k_new = k.transpose(0, 2, 1, 3)
+    v_new = v.transpose(0, 2, 1, 3)
 
     ctx = active_decode_context()
     if ctx is not None:
         # §Perf variant: distributed flash-decode over seq-sharded caches
         o, k_cache, v_cache = distributed_attn_decode(
-            q[:, 0], k, v, k_cache, v_cache, lengths, window, ctx
+            q[:, 0], k_new, v_new, k_cache, v_cache, lengths, window, ctx
         )
         out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
         return out, k_cache, v_cache
 
-    # insert new K/V at position lengths-1
-    b = x.shape[0]
+    # insert new K/V at seq position lengths-1 (axis 1 of the (K,S,hd) row)
     idx = lengths - 1
-    k_cache = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(c, kn, i, 0))(
-        k_cache, k, idx
-    )
-    v_cache = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice_in_dim(c, vn, i, 0))(
-        v_cache, v, idx
-    )
+    ins = lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (0, i, 0))
+    k_cache = jax.vmap(ins)(k_cache, k_new, idx)
+    v_cache = jax.vmap(ins)(v_cache, v_new, idx)
     o = decode_attention(q[:, 0], k_cache, v_cache, lengths, window=window)
     out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
     return out, k_cache, v_cache
@@ -164,14 +163,28 @@ def _mla_q(cfg: ModelConfig, lp: dict, x: jnp.ndarray, positions):
     return jnp.concatenate([q_nope, q_rope], axis=-1)
 
 
-def _mla_kv_expand(cfg: ModelConfig, lp: dict, c_kv: jnp.ndarray, k_rope: jnp.ndarray):
-    """c_kv: (B,S,r), k_rope: (B,S,rope_dim) -> k,v per head."""
-    kv = jnp.einsum("bsr,rhk->bshk", c_kv, lp["wkv_b"])
+def _mla_kv_expand(
+    cfg: ModelConfig, lp: dict, c_kv: jnp.ndarray, k_rope: jnp.ndarray,
+    head_major: bool = False,
+):
+    """c_kv: (B,S,r), k_rope: (B,S,rope_dim) -> k,v per head.
+
+    ``head_major=True`` emits (B,H,S,·) — the decode layout — directly from
+    the expansion einsum, so the decode path never transposes the expansion.
+    Same math either way; only the output axis order differs.
+    """
+    b, s = k_rope.shape[:2]
+    spec = "bsr,rhk->bhsk" if head_major else "bsr,rhk->bshk"
+    kv = jnp.einsum(spec, c_kv, lp["wkv_b"])
     k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
-    k_rope_h = jnp.broadcast_to(
-        k_rope[:, :, None, :],
-        (*k_rope.shape[:2], cfg.n_heads, cfg.qk_rope_head_dim),
-    )
+    if head_major:
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, None, :, :], (b, cfg.n_heads, s, cfg.qk_rope_head_dim)
+        )
+    else:
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, :, None, :], (b, s, cfg.n_heads, cfg.qk_rope_head_dim)
+        )
     k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
     return k, v
 
@@ -270,7 +283,7 @@ def mla_decode(cfg: ModelConfig, lp: dict, x, ckv_cache, krope_cache, lengths, w
     krope_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
         krope_cache, k_rope, idx
     )
-    k, v = _mla_kv_expand(cfg, lp, ckv_cache, krope_cache)
+    k, v = _mla_kv_expand(cfg, lp, ckv_cache, krope_cache, head_major=True)
     o = decode_attention(q[:, 0], k, v, lengths, window=window)
     out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
     return out, ckv_cache, krope_cache

@@ -40,6 +40,7 @@ __all__ = [
     "forward",
     "prefill",
     "decode_step",
+    "decode_n",
     "init_cache",
     "window_vector",
     "Cache",
@@ -276,28 +277,59 @@ def forward(params: dict, cfg: ModelConfig, inputs: jnp.ndarray):
     return _logits(params, cfg, h), aux
 
 
-def prefill(params: dict, cfg: ModelConfig, inputs: jnp.ndarray, max_len: int):
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    inputs: jnp.ndarray,
+    max_len: int,
+    lengths: Optional[jnp.ndarray] = None,
+):
     """Prefill: full forward + cache construction, padded to ``max_len``.
 
-    Returns (last_logits (B, V), cache). Assumes uniform prompt length S
-    within the batch (the serving engine pads/groups accordingly).
+    Returns (last_logits (B, V), cache).
+
+    ``lengths`` (B,) optionally marks the true per-row prompt length when
+    ``inputs`` is right-padded to a bucketed shape S (the serving engine pads
+    prompts to a small set of bucket lengths so each distinct prompt length
+    no longer triggers a fresh XLA compile). Causal masking guarantees the
+    valid positions' activations and KV entries are unaffected by the pad
+    tokens; last-token logits are gathered at ``lengths - 1`` and the cache
+    ``lengths`` are set to the true lengths so decode masks the pad tail.
+    Not valid for SSM/hybrid models (recurrent state would absorb the pads) —
+    callers gate on ``cfg.has_ssm``.
+
+    K/V caches are emitted HEAD-MAJOR ``(L, B, K, S, D)``: one transpose here
+    (amortized over the whole generation) buys a zero-copy per-step decode.
     """
     b = inputs.shape[0]
     s = inputs.shape[1]
     h0 = _embed(params, cfg, inputs)
     h, _, caches = _run_layers(params, cfg, h0, emit_cache=True)
-    last = _logits(params, cfg, h[:, -1:, :])[:, 0]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+        last = _logits(params, cfg, h[:, -1:, :])[:, 0]
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,d)
+        last = _logits(params, cfg, h_last)[:, 0]
 
     cache: Cache = {}
     pad_s = max_len - s
     for k, v in caches.items():
-        if k in ("k", "v", "ckv", "krope"):
+        if k in ("k", "v"):
+            # (L, B, S, K, D) -> head-major (L, B, K, S, D), pad seq to max_len
+            v = v.transpose(0, 1, 3, 2, 4)
             pads = [(0, 0)] * v.ndim
-            pads[2] = (0, pad_s)  # (L, B, S, ...) -> pad seq axis
+            pads[3] = (0, pad_s)
+            cache[k] = jnp.pad(v, pads)
+        elif k in ("ckv", "krope"):
+            pads = [(0, 0)] * v.ndim
+            pads[2] = (0, pad_s)  # (L, B, S, r) -> pad seq axis
             cache[k] = jnp.pad(v, pads)
         else:
             cache[k] = v
-    cache["lengths"] = jnp.full((b,), s, jnp.int32)
+    cache["lengths"] = lengths
     return last, cache
 
 
@@ -368,8 +400,69 @@ def decode_step(params: dict, cfg: ModelConfig, cache: Cache, token: jnp.ndarray
     return logits, new_caches
 
 
+def decode_n(
+    params: dict,
+    cfg: ModelConfig,
+    cache: Cache,
+    token: jnp.ndarray,
+    num_steps: int,
+    *,
+    max_len: Optional[int] = None,
+    active: Optional[jnp.ndarray] = None,
+):
+    """Fused greedy multi-token decode: ``num_steps`` decode_steps under one
+    ``lax.scan`` so a whole chunk of tokens costs a single dispatch (and the
+    caller a single host sync), instead of one per token.
+
+    ``token``: (B,) int32 — the most recent token per row.
+    Returns (tokens (num_steps, B) int32, new_cache).
+
+    Row-freeze semantics (both optional; when neither is given the scan body
+    is the bare decode_step — no cache merge, zero extra copies):
+      * ``max_len``: rows stop advancing once ``lengths`` reaches
+        ``max_len - 1`` (the same guard the per-token engine loop applies),
+        so a saturated row's cache is never clobbered by clamped writes.
+      * ``active``: (B,) bool — rows marked inactive keep cache and lengths
+        frozen (continuous-batching servers leave free slots untouched).
+    Frozen rows re-emit their input token; callers discard those positions.
+    """
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    guard = (max_len is not None) or (active is not None)
+
+    def body(carry, _):
+        tok, c = carry
+        logits, new_c = decode_step(params, cfg, c, tok)
+        new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not guard:
+            return (new_tok, new_c), new_tok
+        ok = jnp.ones_like(tok, bool)
+        if max_len is not None:
+            ok &= c["lengths"] < (max_len - 1)
+        if active is not None:
+            ok &= active
+        merged: Cache = {}
+        for k, v in new_c.items():
+            old = c[k]
+            if k == "lengths":
+                merged[k] = jnp.where(ok, v, old)
+            else:  # cache arrays are (L, B, ...): broadcast over L and tails
+                mask = ok.reshape((1, -1) + (1,) * (v.ndim - 2))
+                merged[k] = jnp.where(mask, v, old)
+        out_tok = jnp.where(ok, new_tok, tok)
+        return (out_tok, merged), out_tok
+
+    (_, cache), toks = jax.lax.scan(body, (token, cache), None, length=num_steps)
+    return toks, cache
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
-    """Zero-initialized cache pytree (for dry-run specs and fresh decode)."""
+    """Zero-initialized cache pytree (for dry-run specs and fresh decode).
+
+    K/V caches are HEAD-MAJOR ``(L, B, K, S, D)`` — the layout the flash-decode
+    kernel consumes directly, so the per-step decode path never copies or
+    transposes the cache.
+    """
     L = cfg.n_layers
     dt = jnp.dtype(cfg.dtype)
     cache: Cache = {}
@@ -379,8 +472,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
             cache["krope"] = jnp.zeros((L, batch, max_len, cfg.qk_rope_head_dim), dt)
         else:
             hd = cfg.resolved_head_dim
-            cache["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt)
-            cache["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd), dt)
+            cache["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_len, hd), dt)
+            cache["v"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_len, hd), dt)
     if cfg.has_ssm:
         conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
         cache["ssm_state"] = jnp.zeros(

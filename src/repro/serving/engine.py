@@ -3,6 +3,12 @@ continuous-batching scheduler for batched request serving.
 
 The engine is endpoint-agnostic: DiSCo's device and server endpoints each
 wrap one ``InferenceEngine`` (different model sizes / latency envelopes).
+
+Decode hot path: tokens are generated in fused chunks (``decode_n`` — one
+``lax.scan`` dispatch per chunk) and the host syncs once per chunk instead of
+once per token. Prompts are right-padded to power-of-two length buckets so a
+new prompt length does not trigger a fresh XLA compile; the model masks the
+pad tail via per-row ``lengths``.
 """
 from __future__ import annotations
 
@@ -16,10 +22,55 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_n, decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
 
 __all__ = ["InferenceEngine", "GenerationResult", "BatchedServer"]
+
+_MIN_BUCKET = 16
+
+
+def _bucket_len(s: int, cap: int) -> int:
+    """Smallest power-of-two >= s (floor _MIN_BUCKET), capped at ``cap``."""
+    b = _MIN_BUCKET
+    while b < s:
+        b *= 2
+    return max(min(b, cap), s)
+
+
+def _bucketed_prefill_ok(cfg: ModelConfig) -> bool:
+    """Bucketed prefill padding is only sound when pad tokens cannot leak
+    into real positions: causal attention-only token models. Recurrent state
+    (SSM/hybrid) would absorb the pads; bidirectional attention would let
+    real positions see them."""
+    return cfg.embed_inputs and not cfg.has_ssm and cfg.causal
+
+
+def _pad_to_bucket(tokens: np.ndarray, cap: int, bucketed: bool):
+    """Right-pad (B, S) int tokens to the bucketed length so each distinct
+    prompt length does not trigger a fresh XLA compile. Returns
+    (padded_tokens, true_lengths)."""
+    b, s = tokens.shape
+    lengths = np.full((b,), s, np.int32)
+    if not bucketed:
+        return tokens, lengths
+    sb = _bucket_len(s, cap)
+    if sb > s:
+        tokens = np.pad(tokens, ((0, 0), (0, sb - s)))
+    return tokens, lengths
+
+
+def _tail_steps(n: int, chunk: int) -> int:
+    """Round a tail chunk up to the next power of two (capped at ``chunk``):
+    bounds the distinct compiled scan lengths to log2(chunk)+1 — so warmup
+    can precompile them all and no compile lands inside a timed region —
+    while wasting at most the final chunk's rounding on discarded steps."""
+    return min(1 << max(n - 1, 0).bit_length(), chunk)
+
+
+def _tail_sizes(chunk: int) -> list[int]:
+    """The set of scan lengths _tail_steps can produce for this chunk."""
+    return sorted({_tail_steps(n, chunk) for n in range(1, chunk + 1)})
 
 
 @dataclasses.dataclass
@@ -31,53 +82,141 @@ class GenerationResult:
     decode_s_per_token: float
 
 
-class InferenceEngine:
-    """Single-model engine with jitted prefill/decode and greedy sampling."""
+def _engine_compute_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Backend-aware compute dtype: bfloat16 matmuls are software-emulated on
+    the CPU backend (every weight re-converted per step), so serving engines
+    compute in float32 there. TPU/GPU keep the configured dtype."""
+    if jax.default_backend() == "cpu" and jnp.dtype(cfg.dtype) == jnp.bfloat16:
+        return dataclasses.replace(cfg, dtype="float32")
+    return cfg
 
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+
+def _cast_params(params, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.bfloat16 and dt != jnp.bfloat16 else a,
+        params,
+    )
+
+
+class InferenceEngine:
+    """Single-model engine with jitted prefill/decode and greedy sampling.
+
+    ``decode_chunk`` tokens are decoded per device dispatch / host sync.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 decode_chunk: int = 8):
+        cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
-        self.params = params
+        self.params = _cast_params(params, cfg.dtype)
         self.max_len = max_len
+        self.decode_chunk = max(decode_chunk, 1)
+        self._bucketed = _bucketed_prefill_ok(cfg)
 
         @jax.jit
-        def _prefill(params, tokens):
-            logits, cache = prefill(params, cfg, tokens, max_len)
+        def _prefill(params, tokens, lengths):
+            logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
-        @jax.jit
+        # the cache flows linearly through decode (old cache never reused), so
+        # its buffers are donated: XLA updates the KV cache in place instead
+        # of copying it every step.
+        @functools.partial(jax.jit, donate_argnums=(1,))
         def _decode(params, cache, token):
             logits, cache = decode_step(params, cfg, cache, token)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+        @functools.partial(
+            jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
+        )
+        def _decode_n(params, cache, token, num_steps):
+            # unguarded: pure scan over decode_step, zero extra cache copies.
+            # The host never consumes tokens past max_len-1 (see generate).
+            return decode_n(params, cfg, cache, token, num_steps)
+
         self._prefill = _prefill
         self._decode = _decode
+        self._decode_n = _decode_n
+
+    # -- prefill -----------------------------------------------------------
 
     def warmup(self, batch: int = 1, prompt_len: int = 8) -> None:
-        tok = jnp.zeros((batch, prompt_len), jnp.int32)
-        t, cache = self._prefill(self.params, tok)
-        self._decode(self.params, cache, t)
+        tok = np.zeros((batch, prompt_len), np.int32)
+        t, cache = self.prefill(tok)
+        # decode donates the cache: thread it, never reuse a donated buffer
+        tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t))
+        # precompile every tail scan length generate can dispatch, so no XLA
+        # compile ever lands inside the wall-clock-timed decode region
+        for n in _tail_sizes(self.decode_chunk):
+            toks, cache = self._decode_n(self.params, cache, tok_dev, n)
+            tok_dev = toks[-1]
+        jax.block_until_ready(tok_dev)
+
+    def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int):
+        """Yield (tokens_np (n_valid, B), n_valid) decode chunks after the
+        prefill token: one fused dispatch + one host sync per chunk, stopping
+        at max_new or cache saturation (lengths == max_len - 1, exactly the
+        seed per-token guard). Shared by generate and replay_then_continue."""
+        emitted = 1
+        cur_len = start_len
+        while emitted < max_new:
+            n_valid = min(
+                self.decode_chunk,
+                max_new - emitted,
+                max(0, (self.max_len - 1) - cur_len),
+            )
+            if n_valid <= 0:
+                return
+            n_steps = _tail_steps(n_valid, self.decode_chunk)
+            toks, cache = self._decode_n(self.params, cache, tok_dev, n_steps)
+            toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
+            yield toks_np[:n_valid], n_valid
+            emitted += n_valid
+            cur_len += n_valid
+            tok_dev = toks[-1]
 
     def prefill(self, tokens: np.ndarray):
         """tokens: (B, S) int32. Returns (first_token (B,), cache)."""
-        t, cache = self._prefill(self.params, jnp.asarray(tokens, jnp.int32))
+        padded, lengths = _pad_to_bucket(
+            np.asarray(tokens, np.int32), self.max_len, self._bucketed
+        )
+        t, cache = self._prefill(
+            self.params, jnp.asarray(padded, jnp.int32), jnp.asarray(lengths)
+        )
         return np.asarray(jax.block_until_ready(t)), cache
 
     def decode(self, cache, token: np.ndarray):
+        """One decode step. NOTE: ``cache`` is donated (updated in place on
+        the device) — callers must use the returned cache, not the argument."""
         t, cache = self._decode(self.params, cache, jnp.asarray(token, jnp.int32))
         return np.asarray(jax.block_until_ready(t)), cache
 
+    # -- generation --------------------------------------------------------
+
     def generate(self, prompt: np.ndarray, max_new: int, replay: bool = False) -> GenerationResult:
-        """Greedy generation for one prompt (1, S). Wall-clock timed."""
+        """Greedy generation for one prompt (1, S). Wall-clock timed.
+
+        Decodes in fused chunks of ``decode_chunk`` tokens: one device
+        dispatch and one host sync per chunk. The host only observes chunk
+        boundaries, but the device produces tokens sequentially inside the
+        chunk, so per-token timestamps are linearly interpolated across the
+        chunk interval — downstream TBT/QoE series (DiSCo endpoints) keep
+        their token-by-token meaning instead of a bursty 0/spike pattern.
+        """
         t0 = time.perf_counter()
         tok, cache = self.prefill(prompt[None, :])
         t_first = time.perf_counter()
         tokens, times = [int(tok[0])], [t_first - t0]
-        for _ in range(max_new - 1):
-            if cache["lengths"][0] >= self.max_len - 1:
-                break
-            tok, cache = self.decode(cache, tok)
-            tokens.append(int(tok[0]))
-            times.append(time.perf_counter() - t0)
+        t_prev = t_first - t0
+        for toks_np, n_valid in self._chunk_stream(
+            cache, jnp.asarray(tok, jnp.int32), int(prompt.shape[0]), max_new
+        ):
+            now = time.perf_counter() - t0
+            for i in range(n_valid):
+                tokens.append(int(toks_np[i, 0]))
+                times.append(t_prev + (i + 1) * (now - t_prev) / n_valid)
+            t_prev = now
         n_dec = max(len(tokens) - 1, 1)
         return GenerationResult(
             tokens=tokens,
@@ -92,21 +231,21 @@ class InferenceEngine:
     ) -> tuple[float, "Iterator[int]"]:
         """Migration target path (§4.3): re-prefill prompt + received token IDs
         (no KV transfer), then continue decoding. Returns (replay_seconds,
-        iterator of continuation tokens)."""
+        iterator of continuation tokens). The continuation decodes in fused
+        chunks and buffers them host-side."""
         t0 = time.perf_counter()
         full = np.concatenate([prompt, np.asarray(generated, np.int32)])
         tok, cache = self.prefill(full[None, :])
         replay_s = time.perf_counter() - t0
+        start_len = int(full.shape[0])
 
         def continuation():
-            nonlocal tok, cache
             yield int(tok[0])
-            for _ in range(max_new - 1):
-                if cache["lengths"][0] >= self.max_len - 1:
-                    return
-                tok, cache2 = self.decode(cache, tok)
-                cache = cache2
-                yield int(tok[0])
+            for toks_np, n_valid in self._chunk_stream(
+                cache, jnp.asarray(tok, jnp.int32), start_len, max_new
+            ):
+                for i in range(n_valid):
+                    yield int(toks_np[i, 0])
 
         return replay_s, continuation()
 
@@ -130,18 +269,28 @@ class BatchedServer:
 
     This models the server-side request batching the paper identifies as the
     source of TTFT tail latency (§2.3): arrivals beyond ``max_slots`` queue.
+
+    Each tick decodes a fused chunk of ``decode_chunk`` tokens for all active
+    rows with one dispatch + one host sync; per-row lengths are tracked
+    host-side so the scheduler never reads the device cache. Rows freeze on
+    the device (cache and lengths untouched) once inactive or at max_len.
     """
 
-    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4, max_len: int = 256):
+    def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
+                 max_len: int = 256, decode_chunk: int = 4):
+        cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
-        self.params = params
+        self.params = _cast_params(params, cfg.dtype)
         self.max_slots = max_slots
         self.max_len = max_len
+        self.decode_chunk = max(decode_chunk, 1)
+        self._bucketed = _bucketed_prefill_ok(cfg)
 
-        @jax.jit
-        def _prefill_row(params, batched_cache, tokens, row):
-            """Prefill (1, S) and write its cache into row ``row``."""
-            logits, cache = prefill(params, cfg, tokens, max_len)
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _prefill_row(params, batched_cache, tokens, lengths, row):
+            """Prefill (1, S) and write its cache into row ``row``. The
+            batched cache is donated: the row write happens in place."""
+            logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
             new = {}
             for k, v in batched_cache.items():
                 if k == "lengths":
@@ -150,31 +299,55 @@ class BatchedServer:
                     new[k] = v.at[:, row].set(cache[k][:, 0])
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new
 
-        @jax.jit
-        def _decode_batch(params, cache, tokens, active):
-            """Batched decode; inactive rows keep their cache untouched."""
-            logits, new_cache = decode_step(params, cfg, cache, tokens)
-            merged = {}
-            for k, v in new_cache.items():
-                old = cache[k]
-                if k == "lengths":
-                    merged[k] = jnp.where(active, v, old)
-                else:  # cache arrays are (L, B, ...): broadcast over L and tails
-                    mask = active.reshape((1, -1) + (1,) * (v.ndim - 2))
-                    merged[k] = jnp.where(mask, v, old)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), merged
+        @functools.partial(
+            jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
+        )
+        def _decode_chunk(params, cache, tokens, active, num_steps):
+            """Fused multi-token batched decode; inactive/saturated rows keep
+            their cache untouched."""
+            return decode_n(
+                params, cfg, cache, tokens, num_steps,
+                max_len=max_len, active=active,
+            )
 
         self._prefill_row = _prefill_row
-        self._decode_batch = _decode_batch
+        self._decode_chunk = _decode_chunk
         self.cache = init_cache(cfg, max_slots, max_len)
+        self._warm = False
         self.queue: deque = deque()
         self.slots: dict[int, _Slot] = {}
         self.rows: dict[int, int] = {}
         self.free_rows = list(range(max_slots))
+        self.row_len = [0] * max_slots      # host-side mirror of cache lengths
         self.next_id = 0
         self.completed: dict[int, list[int]] = {}
         self.submit_time: dict[int, float] = {}
         self.first_token_time: dict[int, float] = {}
+
+    def warmup(self, prompt_len: int = 8) -> None:
+        """Precompile the row prefill (one bucket) and every tail scan length
+        step() can dispatch, so live scheduler ticks — and the TTFTs measured
+        through them — never include an XLA compile. Optional: skipping it
+        only means the first tick at each new shape pays the compile."""
+        if self._warm:
+            return
+        prompt = np.zeros((prompt_len,), np.int32)
+        padded, lengths = _pad_to_bucket(
+            prompt[None, :], self.max_len, self._bucketed
+        )
+        tok, self.cache = self._prefill_row(
+            self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths), 0
+        )
+        tokens = np.zeros((self.max_slots,), np.int32)
+        inactive = jnp.zeros((self.max_slots,), bool)  # rows stay frozen
+        for n in _tail_sizes(self.decode_chunk):
+            toks, self.cache = self._decode_chunk(
+                self.params, self.cache, jnp.asarray(tokens), inactive, n
+            )
+        jax.block_until_ready(toks)
+        # reset to a pristine cache: warmup must not leave row 0 populated
+        self.cache = init_cache(self.cfg, self.max_slots, self.max_len)
+        self._warm = True
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         rid = self.next_id
@@ -187,18 +360,24 @@ class BatchedServer:
         while self.queue and self.free_rows:
             rid, prompt, max_new = self.queue.popleft()
             row = self.free_rows.pop()
+            s = int(prompt.shape[0])
+            padded, lengths = _pad_to_bucket(
+                np.asarray(prompt, np.int32)[None, :], self.max_len, self._bucketed
+            )
             tok, self.cache = self._prefill_row(
-                self.params, self.cache, jnp.asarray(prompt[None, :], jnp.int32),
-                row,
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.asarray(lengths), row,
             )
             jax.block_until_ready(tok)
             self.first_token_time[rid] = time.perf_counter()
             self.slots[rid] = _Slot(rid, max_new - 1, [int(tok)])
             self.rows[rid] = row
+            self.row_len[row] = s
 
     def step(self) -> bool:
-        """One scheduler tick: admit, batched-decode all active rows.
-        Returns False when fully idle."""
+        """One scheduler tick: admit, then one fused decode chunk for all
+        active rows (single dispatch + host sync). Returns False when fully
+        idle."""
         self._admit()
         if not self.slots:
             return False
@@ -206,7 +385,7 @@ class BatchedServer:
             rid
             for rid, slot in self.slots.items()
             if slot.remaining <= 0
-            or int(self.cache["lengths"][self.rows[rid]]) >= self.max_len - 1
+            or self.row_len[self.rows[rid]] >= self.max_len - 1
         ]
         for rid in done:
             self.completed[rid] = self.slots.pop(rid).tokens
@@ -215,16 +394,31 @@ class BatchedServer:
             return bool(self.queue)
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
+        need = {}
         for rid, slot in self.slots.items():
-            tokens[self.rows[rid]] = slot.tokens[-1]
-            active[self.rows[rid]] = True
-        toks, self.cache = self._decode_batch(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active)
+            row = self.rows[rid]
+            tokens[row] = slot.tokens[-1]
+            active[row] = True
+            need[rid] = min(
+                self.decode_chunk,
+                slot.remaining,
+                max(0, (self.max_len - 1) - self.row_len[row]),
+            )
+        # cap the scan at the largest per-row need (rounded to a warm tail
+        # size) so request tails don't pay for discarded decode steps
+        num_steps = _tail_steps(max(need.values()), self.decode_chunk)
+        toks, self.cache = self._decode_chunk(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
+            num_steps,
         )
-        toks = np.asarray(jax.block_until_ready(toks))
+        toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         for rid, slot in self.slots.items():
-            slot.tokens.append(int(toks[self.rows[rid]]))
-            slot.remaining -= 1
+            row = self.rows[rid]
+            n_valid = need[rid]
+            for i in range(n_valid):
+                slot.tokens.append(int(toks[i, row]))
+            slot.remaining -= n_valid
+            self.row_len[row] += n_valid
         return True
 
     def run_to_completion(self) -> dict[int, list[int]]:

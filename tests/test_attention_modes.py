@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import (
@@ -56,7 +58,10 @@ def test_decode_attention_equals_full_last_row():
     v = _rand(rng, (2, s, 2, 16))
     full = attention_dense(q, k, v, causal=True)
     lengths = jnp.full((2,), s, jnp.int32)
-    dec = decode_attention(q[:, -1], k, v, lengths)
+    # decode_attention consumes the head-major (B, K, S, D) cache layout
+    dec = decode_attention(
+        q[:, -1], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), lengths
+    )
     np.testing.assert_allclose(
         np.asarray(dec), np.asarray(full[:, -1]), rtol=3e-5, atol=3e-5
     )

@@ -1,6 +1,8 @@
 """Unit + property tests for the DiSCo dispatch controller (§4.2, Alg. 1-3)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

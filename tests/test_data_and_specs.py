@@ -54,7 +54,7 @@ def test_input_specs_shapes(arch, shape_name):
         assert cache["lengths"].shape == (b,)
         if cfg.has_attention and not cfg.use_mla:
             assert cache["k"].shape == (
-                cfg.n_layers, b, s, cfg.n_kv_heads, cfg.resolved_head_dim
+                cfg.n_layers, b, cfg.n_kv_heads, s, cfg.resolved_head_dim
             )
         if cfg.use_mla:
             assert cache["ckv"].shape == (cfg.n_layers, b, s, cfg.kv_lora_rank)

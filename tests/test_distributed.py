@@ -23,8 +23,10 @@ from repro.models.distributed import (
 )
 from repro.kernels.ref import decode_reference
 
+_axis_type = getattr(jax.sharding, "AxisType", None)
+_mesh_kwargs = {"axis_types": (_axis_type.Auto,) * 2} if _axis_type else {}
 mesh = jax.make_mesh((2, 4), ("data", "model"), devices=jax.devices()[:8],
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                     **_mesh_kwargs)
 
 rng = np.random.default_rng(0)
 B, S, H, K, D = 4, 64, 8, 2, 16
@@ -35,23 +37,28 @@ kc = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
 vc = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
 lengths = jnp.asarray([17, 33, 64, 50], jnp.int32)  # includes the new token
 
-# reference: insert new kv at lengths-1 then plain decode
+# reference: insert new kv at lengths-1 then plain decode (seq-major oracle)
 idx = lengths - 1
 kc_ref = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(kc, k_new, idx)
 vc_ref = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(vc, v_new, idx)
 ref = decode_reference(q, kc_ref, vc_ref, lengths)
 
+# the production cache (and the distributed path) is head-major (B, K, S, D)
+kn_h, vn_h = k_new.transpose(0, 2, 1, 3), v_new.transpose(0, 2, 1, 3)
+kc_h, vc_h = kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3)
+kc_ref_h = kc_ref.transpose(0, 2, 1, 3)
+
 with mesh:
     from repro.models.distributed import _DecodeCtx
     ctx = _DecodeCtx(mesh, "model", ("data",))
-    shard = NamedSharding(mesh, P("data", "model", None, None))
-    kc_s = jax.device_put(kc, shard)
-    vc_s = jax.device_put(vc, shard)
+    shard = NamedSharding(mesh, P("data", None, "model", None))
+    kc_s = jax.device_put(kc_h, shard)
+    vc_s = jax.device_put(vc_h, shard)
     out, kc2, vc2 = jax.jit(
         lambda *a: distributed_attn_decode(*a, window=0, ctx=ctx)
-    )(q, k_new, v_new, kc_s, vc_s, lengths)
+    )(q, kn_h, vn_h, kc_s, vc_s, lengths)
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
-np.testing.assert_allclose(np.asarray(kc2), np.asarray(kc_ref), rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(np.asarray(kc2), np.asarray(kc_ref_h), rtol=1e-6, atol=1e-6)
 print("distributed_attn_decode OK")
 
 # windowed
@@ -59,7 +66,7 @@ ref_w = decode_reference(q, kc_ref, vc_ref, lengths, window=16)
 with mesh:
     out_w, _, _ = jax.jit(
         lambda *a: distributed_attn_decode(*a, window=16, ctx=ctx)
-    )(q, k_new, v_new, kc_s, vc_s, lengths)
+    )(q, kn_h, vn_h, kc_s, vc_s, lengths)
 np.testing.assert_allclose(np.asarray(out_w), np.asarray(ref_w), rtol=2e-5, atol=2e-5)
 print("distributed_attn_decode window OK")
 

@@ -77,11 +77,14 @@ def test_flash_prefill_matches_model_blockwise():
 def test_decode_attention_matches_ref(dtype, b, s, h, kh, d, window):
     rng = np.random.default_rng(2)
     q = _rand(rng, (b, h, d), dtype)
-    kc = _rand(rng, (b, s, kh, d), dtype)
+    kc = _rand(rng, (b, s, kh, d), dtype)          # seq-major for the oracle
     vc = _rand(rng, (b, s, kh, d), dtype)
     lengths = jnp.asarray(rng.integers(window + 2 if window else 1, s + 1, size=b), jnp.int32)
-    out = decode_attention_op(q, kc, vc, lengths, window=window,
-                              block_k=128, interpret=True)
+    # the kernel consumes the head-major (B, K, S, D) storage layout directly
+    out = decode_attention_op(
+        q, kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3), lengths,
+        window=window, block_k=128, interpret=True,
+    )
     ref = decode_reference(q, kc, vc, lengths, window=window)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_TOL[dtype]
@@ -92,15 +95,15 @@ def test_decode_attention_ragged_lengths():
     """Per-row valid lengths mask correctly (padded cache entries ignored)."""
     rng = np.random.default_rng(3)
     q = _rand(rng, (3, 4, 64), jnp.float32)
-    kc = _rand(rng, (3, 256, 2, 64), jnp.float32)
-    vc = _rand(rng, (3, 256, 2, 64), jnp.float32)
+    kc = _rand(rng, (3, 2, 256, 64), jnp.float32)  # head-major (B, K, S, D)
+    vc = _rand(rng, (3, 2, 256, 64), jnp.float32)
     lengths = jnp.asarray([1, 100, 256], jnp.int32)
     out = decode_attention_op(q, kc, vc, lengths, block_k=64, interpret=True)
-    # row 0 attends only position 0 -> output = v[0,0] repeated per group
-    expected0 = np.repeat(np.asarray(vc[0, 0]), 2, axis=0)
+    # row 0 attends only position 0 -> output = v[:, :, 0] repeated per group
+    expected0 = np.repeat(np.asarray(vc[0, :, 0]), 2, axis=0)
     np.testing.assert_allclose(np.asarray(out[0]), expected0, rtol=1e-5, atol=1e-5)
     # corrupting entries beyond the valid length must not change outputs
-    kc2 = kc.at[1, 100:].set(99.0)
+    kc2 = kc.at[1, :, 100:].set(99.0)
     out2 = decode_attention_op(q, kc2, vc, lengths, block_k=64, interpret=True)
     np.testing.assert_allclose(np.asarray(out[1]), np.asarray(out2[1]), rtol=1e-6)
 

@@ -110,8 +110,9 @@ def test_nemotron_kv8_cache_shards_sequence():
     from repro.models import init_cache
     cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32768))
     specs = cache_pspecs(cfg, SINGLE, cache)
-    assert specs["k"][3] is None           # kv heads unsharded
-    assert specs["k"][2] == "model"        # sequence takes model axis
+    # head-major (L, B, K, S, hd) cache layout
+    assert specs["k"][2] is None           # kv heads unsharded
+    assert specs["k"][3] == "model"        # sequence takes model axis
 
 
 def test_long500k_batch1_cache_uses_all_axes():
@@ -121,7 +122,7 @@ def test_long500k_batch1_cache_uses_all_axes():
     specs = cache_pspecs(cfg, MULTI, cache)
     k = specs["k"]
     assert k[1] is None                    # batch=1 unshardable
-    seq_ax = k[2]
+    seq_ax = k[3]                          # head-major: seq is axis 3
     assert seq_ax is not None              # sequence sharded over free axes
 
 

@@ -81,6 +81,102 @@ def test_batched_server_queueing_raises_ttft(engines):
     assert ttfts[-1] > ttfts[0]  # the queued request saw worse TTFT
 
 
+def test_batched_server_evicts_rows_at_max_len(engines):
+    """A request whose decode would overrun the cache stops at max_len-1 and
+    frees its slot for the queue."""
+    _, srv = engines
+    max_len = 32
+    server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=max_len)
+    long_prompt = np.arange(24, dtype=np.int32)
+    short_prompt = np.arange(4, dtype=np.int32)
+    r_long = server.submit(long_prompt, 64)    # wants 64, cache allows 7 more
+    r_short = server.submit(short_prompt, 4)   # queued until the row frees
+    done = server.run_to_completion()
+    assert sorted(done) == [r_long, r_short]
+    # 1 prefill token + decodes until lengths == max_len - 1
+    assert len(done[r_long]) == 1 + (max_len - 1 - 24)
+    assert len(done[r_short]) == 4
+    assert server.ttft(r_short) > server.ttft(r_long)
+
+
+def test_batched_server_ttft_bookkeeping(engines):
+    """TTFT = first-token time - submit time, positive and ordered for every
+    request, including queued ones."""
+    _, srv = engines
+    server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
+    rids = [server.submit(np.arange(5, dtype=np.int32), 6) for _ in range(5)]
+    server.run_to_completion()
+    for rid in rids:
+        assert rid in server.first_token_time
+        assert rid in server.submit_time
+        assert server.ttft(rid) > 0
+        assert server.first_token_time[rid] >= server.submit_time[rid]
+
+
+def test_batched_server_matches_single_engine_stream(engines):
+    """Batched continuous decoding must emit exactly the tokens a lone
+    engine produces for the same prompt (greedy determinism across the
+    batched cache + fused multi-token decode)."""
+    _, srv = engines
+    engine = InferenceEngine(srv.cfg, srv.params, max_len=96)
+    prompts = [
+        np.arange(7, dtype=np.int32),
+        (np.arange(11, dtype=np.int32) * 3) % srv.cfg.vocab,
+        np.asarray([5, 2, 9], np.int32),
+    ]
+    expected = [engine.generate(p, max_new=9).tokens for p in prompts]
+    server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
+    rids = [server.submit(p, 9) for p in prompts]
+    done = server.run_to_completion()
+    for rid, exp in zip(rids, expected):
+        assert done[rid] == exp
+
+
+def test_multi_token_decode_matches_single_step(engines):
+    """decode_n(T) must emit exactly the tokens T sequential decode_steps do
+    (the fused scan is a pure re-batching of the same math)."""
+    import jax.numpy as jnp
+    from repro.models import decode_n, decode_step, prefill
+
+    dev, _ = engines
+    cfg, params = dev.cfg, dev.params
+    toks = np.arange(9, dtype=np.int32)[None, :]
+    logits, cache = prefill(params, cfg, jnp.asarray(toks), 64)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    fused, _ = decode_n(params, cfg, cache, tok, 12)
+    c, t, stepwise = cache, tok, []
+    for _ in range(12):
+        lg, c = decode_step(params, cfg, c, t)
+        t = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        stepwise.append(int(t[0]))
+    assert [int(x) for x in np.asarray(fused)[:, 0]] == stepwise
+
+
+def test_generate_chunked_equals_per_token(engines):
+    """Engine output is invariant to the decode chunk size (1 == seed
+    behavior; 8 == fused hot path)."""
+    dev, _ = engines
+    per_token = InferenceEngine(dev.cfg, dev.params, max_len=96, decode_chunk=1)
+    chunked = InferenceEngine(dev.cfg, dev.params, max_len=96, decode_chunk=8)
+    prompt = np.arange(10, dtype=np.int32)
+    for max_new in (1, 7, 8, 9, 20):
+        assert (
+            per_token.generate(prompt, max_new=max_new).tokens
+            == chunked.generate(prompt, max_new=max_new).tokens
+        )
+
+
+def test_generate_saturates_at_max_len(engines):
+    """Generation stops exactly at cache capacity regardless of chunking."""
+    dev, _ = engines
+    engine = InferenceEngine(dev.cfg, dev.params, max_len=32, decode_chunk=8)
+    prompt = np.arange(20, dtype=np.int32)
+    res = engine.generate(prompt, max_new=50)
+    # 1 prefill token + decodes until lengths == max_len - 1
+    assert len(res.tokens) == 1 + (32 - 1 - 20)
+
+
 def _make_disco(engines, constraint: str) -> DiSCoServer:
     dev_e, srv_e = engines
     if constraint == "device":
