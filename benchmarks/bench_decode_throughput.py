@@ -23,7 +23,6 @@ perf trajectory — plus the usual CSV rows for ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
-import functools
 import json
 import pathlib
 import time

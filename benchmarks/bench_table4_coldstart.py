@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import Endpoint, LengthDistribution, SingleEndpointPolicy, make_policy
-from repro.core.simulator import DeviceModel, simulate_ttft
+from repro.core.simulator import DeviceModel
 from repro.sim import build_cost_model, make_server_model, sample_prompt_lengths
 
 from .common import Row, timed

@@ -12,8 +12,6 @@ BLOOM-1.1B and Qwen reproduce within ~6%.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import BLOOM_1B1, QWEN_05B, flops_per_token
 
 from .common import Row, timed

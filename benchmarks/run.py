@@ -10,6 +10,7 @@ import time
 
 from . import (
     bench_decode_throughput,
+    bench_e2e_serving,
     bench_fig23_stability,
     bench_roofline_endpoints,
     bench_table4_coldstart,
@@ -40,6 +41,7 @@ MODULES = {
     "roofline_endpoints": bench_roofline_endpoints,
     "table4": bench_table4_coldstart,
     "decode": bench_decode_throughput,
+    "e2e_serving": bench_e2e_serving,
 }
 
 

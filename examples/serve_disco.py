@@ -1,70 +1,69 @@
-"""End-to-end driver: DiSCo serving over REAL JAX engines with batched
-requests — the device endpoint is a small transformer, the server endpoint a
-larger one behind a simulated network + continuous-batching queue.
+"""End-to-end driver: the event-driven DiSCo runtime over REAL JAX engines
+with MANY concurrent requests — each user's device is a small transformer;
+the server endpoint is a larger model inside a shared continuous-batching
+scheduler, so server TTFT tails emerge from slot contention.
 
     PYTHONPATH=src python examples/serve_disco.py --requests 12
 
-Demonstrates (1) dispatch racing with real prefill wall-times, (2) token-ID
-migration with re-prefill on the target, (3) the delivery buffer keeping TBT
-smooth, and (4) the server-side BatchedServer that creates the queueing
-tails DiSCo protects against.
+Demonstrates (1) dispatch racing with real prefill wall-times, (2) loser
+cancellation (the race loser stops after at most one in-flight decode chunk
+— watch the wasted-token column), (3) token-ID migration whose re-prefill
+competes with live traffic in the same batched scheduler, and (4) the
+delivery buffer keeping TBT smooth.
 """
 import argparse
 import sys
 
-import jax
 import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.configs import paper_models
 from repro.launch.serve import build_stack
-from repro.models import init_params
-from repro.serving import BatchedServer
+from repro.sim.traces import poisson_arrivals
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=20)
-    ap.add_argument("--decode-chunk", type=int, default=4,
-                    help="tokens per fused decode dispatch (host syncs once "
-                         "per chunk; larger = higher throughput, coarser "
-                         "admission granularity)")
+    ap.add_argument("--mean-interval", type=float, default=0.03,
+                    help="mean Poisson inter-arrival (virtual seconds); "
+                         "smaller = heavier server contention")
+    ap.add_argument("--no-cancel", action="store_true",
+                    help="control mode: race losers run to completion")
     args = ap.parse_args()
 
-    # --- 1. the server-side reality: continuous batching queues requests ---
-    srv_cfg = paper_models.TINY_SERVER
-    bs = BatchedServer(srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)),
-                       max_slots=2, max_len=96, decode_chunk=args.decode_chunk)
-    bs.warmup()  # precompile prefill bucket + tail scans outside the timing
+    disco, dev_engine, server = build_stack(
+        "server", budget=0.5, cancel_losers=not args.no_cancel
+    )
     rng = np.random.default_rng(0)
-    rids = [bs.submit(rng.integers(0, 1024, size=8).astype(np.int32), 8)
-            for _ in range(6)]
-    bs.run_to_completion()
-    ttfts = sorted(bs.ttft(r) for r in rids)
-    print("BatchedServer TTFTs (2 slots, 6 requests) — queueing tail:")
-    print("  " + "  ".join(f"{t*1e3:.0f}ms" for t in ttfts))
 
-    # --- 2. DiSCo over device+server engines -------------------------------
-    disco, dev_engine, srv_engine = build_stack("server", budget=0.5)
-    prompts = [
-        rng.integers(0, 1024, size=int(n)).astype(np.int32)
-        for n in np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64)
+    # --- a Poisson arrival trace through the full stack --------------------
+    arrivals = poisson_arrivals(rng, args.requests, args.mean_interval)
+    requests = [
+        (float(a), rng.integers(0, 1024, size=int(n)).astype(np.int32), args.max_new)
+        for a, n in zip(arrivals, np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64))
     ]
-    print(f"\nDiSCo serving {args.requests} requests "
-          f"(device={dev_engine.cfg.name}, server={srv_engine.cfg.name}):")
-    results = []
-    for i, p in enumerate(prompts):
-        r = disco.serve(p, args.max_new)
-        results.append(r)
+    print(f"DiSCo event-driven runtime: {args.requests} concurrent requests "
+          f"(device={dev_engine.cfg.name}, server={server.cfg.name}, "
+          f"slots={server.max_slots}, cancel={'off' if args.no_cancel else 'on'})")
+    results = disco.serve_many(requests)
+
+    for i, r in enumerate(results):
         tbt_max = max(r.tbt_series) if r.tbt_series else 0.0
-        print(f"  req{i:02d} len={len(p):3d} ttft={r.ttft*1e3:7.1f}ms "
+        print(f"  req{i:02d} t={r.arrival:6.3f}s ttft={r.ttft*1e3:7.1f}ms "
               f"winner={r.winner.value:6s} migrated={str(r.migrated):5s} "
-              f"tokens={len(r.tokens):3d} max_tbt={tbt_max*1e3:6.1f}ms")
+              f"tokens={len(r.tokens):3d} wasted={r.wasted_tokens:3d} "
+              f"max_tbt={tbt_max*1e3:6.1f}ms")
+
     ttfts = np.array([r.ttft for r in results])
-    print(f"\n  mean TTFT {ttfts.mean()*1e3:.1f}ms | p99 {np.percentile(ttfts,99)*1e3:.1f}ms"
-          f" | migrations {sum(r.migrated for r in results)}/{len(results)}")
+    wasted = sum(r.wasted_tokens for r in results)
+    generated = sum(r.generated_tokens for r in results)
+    print(f"\n  TTFT p50 {np.percentile(ttfts,50)*1e3:.1f}ms | "
+          f"p99 {np.percentile(ttfts,99)*1e3:.1f}ms | "
+          f"migrations {sum(r.migrated for r in results)}/{len(results)} | "
+          f"wasted tokens {wasted}/{generated} "
+          f"({100.0*wasted/max(generated,1):.1f}%)")
 
 
 if __name__ == "__main__":

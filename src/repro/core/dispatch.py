@@ -30,7 +30,7 @@ the right limits (available→0 ⇒ w*→w_tail; available→full ⇒ w*→0).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 

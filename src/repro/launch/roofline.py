@@ -10,7 +10,6 @@ import glob
 import json
 import os
 
-from .mesh import HW
 
 KIND_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 

@@ -1,9 +1,9 @@
 """DiSCo serving launcher: ``python -m repro.launch.serve [--requests N]``.
 
-Spins up a real device engine (tiny model) and a real server engine (larger
-model behind a simulated network with queueing spikes), wires them into the
-DiSCo scheduler, serves a request stream, and reports QoE/cost versus the
-all-server and all-device baselines.
+Spins up a real device engine (tiny model) and a real server stack (larger
+model inside a contended continuous-batching scheduler behind a simulated
+network), wires them into the event-driven DiSCo runtime, replays an arrival
+trace of concurrent requests, and reports QoE/cost/wasted compute.
 """
 from __future__ import annotations
 
@@ -16,26 +16,33 @@ from repro.configs import paper_models
 from repro.core import (
     CostModel,
     DiSCoScheduler,
-    Endpoint,
     MigrationConfig,
-    SingleEndpointPolicy,
 )
 from repro.models import init_params
 from repro.serving import (
+    BatchedServer,
     DeviceEndpoint,
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
     ServerEndpoint,
 )
+from repro.sim.traces import poisson_arrivals
 
 
-def build_stack(constraint: str = "server", budget: float = 0.5, seed: int = 0):
+def build_stack(constraint: str = "server", budget: float = 0.5, seed: int = 0,
+                max_slots: int = 2, cancel_losers: bool = True):
+    """Build the full DiSCo stack: per-user device engine + shared contended
+    BatchedServer. Returns ``(disco, device_engine, batched_server)``."""
     dev_cfg, srv_cfg = paper_models.TINY_DEVICE, paper_models.TINY_SERVER
     dev_engine = InferenceEngine(dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), max_len=128)
-    srv_engine = InferenceEngine(srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)), max_len=128)
-    dev_engine.warmup()
-    srv_engine.warmup()
+    # 128 covers migration replays: prompt (<=64) + generated prefix buckets
+    dev_engine.warmup(prompt_lens=(32, 64, 128))
+    server = BatchedServer(
+        srv_cfg, init_params(srv_cfg, jax.random.PRNGKey(1)),
+        max_slots=max_slots, max_len=128,
+    )
+    server.warmup(prompt_lens=(32, 64, 128))
 
     if constraint == "device":
         cm = CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6)
@@ -53,10 +60,11 @@ def build_stack(constraint: str = "server", budget: float = 0.5, seed: int = 0):
     disco = DiSCoServer(
         sched,
         DeviceEndpoint(dev_engine),
-        ServerEndpoint(srv_engine, NetworkModel(rtt_mean=0.05, queue_spike_prob=0.15)),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.05)),
         rng=np.random.default_rng(seed + 1),
+        cancel_losers=cancel_losers,
     )
-    return disco, dev_engine, srv_engine
+    return disco, dev_engine, server
 
 
 def main() -> None:
@@ -65,21 +73,28 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--budget", type=float, default=0.5)
     ap.add_argument("--constraint", choices=["server", "device"], default="server")
+    ap.add_argument("--mean-interval", type=float, default=0.05,
+                    help="mean Poisson inter-arrival in virtual seconds "
+                         "(smaller = more server contention)")
     args = ap.parse_args()
 
-    disco, dev_engine, srv_engine = build_stack(args.constraint, args.budget)
+    disco, dev_engine, server = build_stack(args.constraint, args.budget)
     rng = np.random.default_rng(7)
-    prompts = [
-        rng.integers(0, 1024, size=int(n)).astype(np.int32)
-        for n in np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64)
+    arrivals = poisson_arrivals(rng, args.requests, args.mean_interval)
+    requests = [
+        (float(a), rng.integers(0, 1024, size=int(n)).astype(np.int32), args.max_new)
+        for a, n in zip(arrivals, np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64))
     ]
 
-    results = [disco.serve(p, args.max_new) for p in prompts]
+    results = disco.serve_many(requests)
     ttfts = np.array([r.ttft for r in results])
     costs = np.array([r.cost for r in results])
+    wasted = sum(r.wasted_tokens for r in results)
+    generated = sum(r.generated_tokens for r in results)
     migrated = sum(r.migrated for r in results)
-    print(f"\nDiSCo ({args.constraint}-constrained, b={args.budget}):")
-    print(f"  requests={len(results)}  migrated={migrated}")
+    print(f"\nDiSCo ({args.constraint}-constrained, b={args.budget}, "
+          f"{args.requests} concurrent requests):")
+    print(f"  migrated={migrated}  wasted tokens={wasted}/{generated}")
     print(f"  TTFT   mean={ttfts.mean()*1e3:.1f}ms  p99={np.percentile(ttfts,99)*1e3:.1f}ms")
     print(f"  cost   mean={costs.mean():.3e}")
     winners = [r.winner.value for r in results]

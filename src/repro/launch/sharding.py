@@ -24,12 +24,10 @@ These are BASELINE rules — §Perf hillclimbing changes them per-experiment.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -9,12 +9,9 @@ devices (mesh (1,1)) with smoke-scale configs. The dry-run
 from __future__ import annotations
 
 import argparse
-import functools
-import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import lm_batches, masked_audio_batches
@@ -27,8 +24,7 @@ from repro.training import (
     save_checkpoint,
 )
 
-from .mesh import mesh_batch_axes
-from .sharding import batch_pspecs, named, opt_state_pspecs, param_pspecs
+from .sharding import named, opt_state_pspecs, param_pspecs
 
 
 def make_local_mesh() -> jax.sharding.Mesh:

@@ -16,8 +16,6 @@ All math in float32 accumulators, inputs/outputs in the model dtype.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -9,7 +9,6 @@ functions, the sharding rules and the dry-run input specs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 __all__ = ["ModelConfig"]
 

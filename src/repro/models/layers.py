@@ -5,13 +5,11 @@ step functions.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attention import attention, attention_dense, decode_attention
+from .attention import attention, decode_attention
 from .config import ModelConfig
 from .distributed import (
     active_decode_context,

@@ -14,7 +14,6 @@ code.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

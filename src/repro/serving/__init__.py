@@ -1,9 +1,33 @@
+"""Event-driven DiSCo serving stack over real JAX engines.
+
+Three layers on one shared virtual timeline (compute = measured wall-clock,
+network = sampled RTT, queueing = emergent slot contention):
+
+* ``engine``  — jitted prefill/decode + ``EngineStream`` (lazy pulled token
+  source) + ``BatchedServer`` (virtual-time continuous batching with
+  per-row admission, incremental delivery, and ``cancel(rid)``).
+* ``endpoint`` — ``DeviceTokenStream`` / ``ServerTokenStream`` incremental
+  event sources racing on the timeline; cancellation stops a loser after at
+  most one in-flight decode chunk.
+* ``disco_driver`` — the discrete-event loop holding many concurrent
+  requests: dispatch racing (§4.2), loser cancellation, token-ID migration
+  into the same contended scheduler (§4.3), paced delivery + QoE/cost/waste
+  accounting.
+"""
 from .disco_driver import DiSCoServer, ServedRequest
-from .endpoint import DeviceEndpoint, NetworkModel, ServerEndpoint, TokenEvent
-from .engine import BatchedServer, GenerationResult, InferenceEngine
+from .endpoint import (
+    DeviceEndpoint,
+    DeviceTokenStream,
+    NetworkModel,
+    ServerEndpoint,
+    ServerTokenStream,
+    TokenEvent,
+)
+from .engine import BatchedServer, EngineStream, GenerationResult, InferenceEngine
 
 __all__ = [
     "DiSCoServer", "ServedRequest",
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
-    "BatchedServer", "GenerationResult", "InferenceEngine",
+    "DeviceTokenStream", "ServerTokenStream",
+    "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
 ]

@@ -1,34 +1,57 @@
-"""DiSCo serving driver: the middleware loop over two real engines (Fig. 1).
+"""DiSCo serving runtime: an event-driven middleware loop over two real
+engines (Fig. 1), holding MANY concurrent requests.
 
-For each request:
-  1. dispatch (§4.2): plan_request gives {use_server, use_device, device_wait}
-  2. race: both endpoints stream tokens on a shared virtual timeline; the
-     first first-token wins, the loser is cancelled
-  3. migration (§4.3): if the winner is the expensive decoder, hand off to
-     the other endpoint once the delivery buffer holds B tokens; the target
-     re-prefills prompt + generated token IDs (no state transfer)
+The runtime is a discrete-event loop on a shared virtual timeline. Compute
+times are real JAX wall-clock measurements; network RTT is sampled; server
+queueing *emerges* from slot contention in the shared ``BatchedServer``.
+Everything is deterministic given the rng.
+
+Per request:
+  1. dispatch (§4.2): ``plan_request`` gives {use_server, use_device,
+     device_wait}
+  2. race: both endpoints stream tokens lazily on the shared timeline; the
+     first first-token wins and the loser is **cancelled** — it stops after
+     at most one in-flight decode chunk instead of generating all ``max_new``
+     tokens (the §4.2 cost saving, measurable via ``wasted_tokens``)
+  3. migration (§4.3): if the winner is the expensive decoder, hand off once
+     the delivery buffer holds B tokens; the target re-prefills prompt +
+     generated token IDs (no state transfer). A server-bound re-prefill is
+     submitted to the SAME contended batched scheduler as live traffic. The
+     source keeps generating until the target's first token arrives; the
+     target's regeneration of tokens the source delivered during the
+     hand-off is skipped (consistent-prefix hand-off), so with identical
+     endpoint models the delivered stream is bit-identical to no-migration.
   4. delivery: tokens are paced at the consumption rate r_c via TokenBuffer;
-     QoE (TTFT, TBT series) and unified cost are recorded
+     QoE (TTFT, TBT series), unified cost, and wasted compute are recorded.
 
-Compute times are real JAX wall-clock; network and queueing are sampled
-(see serving.endpoint). Everything is deterministic given the rng.
+Event-loop causality: device-side streams are *pull-driven* — a stream is
+activated (prefill dispatched) only when the virtual frontier reaches its
+start time, and it computes at most one fused chunk beyond the frontier.
+The shared server is *clock-driven* — the loop advances it with
+``run_until(horizon)`` where the horizon is the earliest other possible
+event, so no server compute runs ahead of anything that could cancel it by
+more than the one chunk already in flight.
+
+``cancel_losers=False`` turns the runtime into the no-cancellation control
+(both streams always run to completion): the baseline against which the
+wasted-compute reduction is measured.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from collections import deque
+from typing import Iterable, Optional, Tuple
 
 import numpy as np
 
 from repro.core import (
-    CostModel,
     DiSCoScheduler,
     Endpoint,
-    MigrationConfig,
     TokenBuffer,
 )
 
-from .endpoint import DeviceEndpoint, ServerEndpoint, TokenEvent
+from .endpoint import DeviceEndpoint, ServerEndpoint
 
 __all__ = ["ServedRequest", "DiSCoServer"]
 
@@ -42,133 +65,302 @@ class ServedRequest:
     winner: Endpoint
     migrated: bool
     delayed_tokens: int
+    arrival: float = 0.0
+    generated_tokens: int = 0   # tokens actually computed across all streams
+    wasted_tokens: int = 0      # generated but never delivered (race losers,
+                                # cancellation overrun, hand-off catch-up)
+
+
+@dataclasses.dataclass
+class _Req:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float
+    decision: object
+    streams: dict = dataclasses.field(default_factory=dict)   # race streams
+    all_streams: list = dataclasses.field(default_factory=list)
+    winner: Optional[Endpoint] = None
+    delivery: object = None
+    buf: Optional[TokenBuffer] = None
+    tokens: list = dataclasses.field(default_factory=list)
+    first_t: float = math.nan
+    plan: object = None
+    mig_stream: object = None
+    mig_prefix: int = 0
+    mig_skip: int = 0
+    handoff_done: bool = False
+    migrated: bool = False
+    done: bool = False
 
 
 class DiSCoServer:
+    """Event-driven multi-request DiSCo runtime.
+
+    ``serve_many`` replays a whole arrival trace through the stack;
+    ``serve`` is the single-request convenience wrapper (same event loop,
+    one request).
+    """
+
     def __init__(
         self,
         scheduler: DiSCoScheduler,
         device: DeviceEndpoint,
         server: ServerEndpoint,
         rng: Optional[np.random.Generator] = None,
+        cancel_losers: bool = True,
+        allow_migration: bool = True,
     ):
         self.sched = scheduler
         self.device = device
         self.server = server
         self.rng = rng or np.random.default_rng(0)
+        self.cancel_losers = cancel_losers
+        self.allow_migration = allow_migration   # False for single-endpoint
+                                                 # baselines (vLLM/llama.cpp)
+        self._frontier = 0.0
+        self._next_rid = 0
 
-    def _prefill_cost(self, ep: Endpoint, n: int) -> float:
-        return self.sched.cost_model.prefill_cost(ep) * n
-
-    def _decode_cost(self, ep: Endpoint, n: int) -> float:
-        return self.sched.cost_model.decode_cost(ep) * n
+    # -- public API --------------------------------------------------------
 
     def serve(self, prompt: np.ndarray, max_new: int) -> ServedRequest:
-        decision = self.sched.plan_request(len(prompt), self.rng)
-        cost = 0.0
+        """Serve one request arriving "now" (at the max of the runtime
+        frontier and the shared server's clock, so repeated calls see a
+        monotonic timeline)."""
+        at = max(self._frontier, self.server.server.clock)
+        return self.serve_many([(at, prompt, max_new)])[0]
 
-        streams: dict[Endpoint, list[TokenEvent]] = {}
-        if decision.use_server:
-            streams[Endpoint.SERVER] = self.server.stream(
-                prompt, max_new, self.rng, start_at=0.0
+    def serve_many(
+        self, requests: Iterable[Tuple[float, np.ndarray, int]]
+    ) -> list[ServedRequest]:
+        """Replay ``(arrival, prompt, max_new)`` requests through the full
+        stack; returns results in arrival order."""
+        pending = deque(
+            sorted(
+                ((float(a), np.asarray(p, np.int32), int(m)) for a, p, m in requests),
+                key=lambda x: x[0],
             )
-            cost += self._prefill_cost(Endpoint.SERVER, len(prompt))
-        if decision.use_device:
-            streams[Endpoint.DEVICE] = self.device.stream(
-                prompt, max_new, self.rng, start_at=decision.device_wait
-            )
-
-        # race: earliest first token wins; the loser terminates (§4.2)
-        winner = min(streams, key=lambda e: streams[e][0].t)
-        events = streams[winner]
-        first_t = events[0].t
-        if decision.use_device:
-            # device energy is spent only if it actually started prefilling
-            # before the server produced a first token
-            server_first = (
-                streams[Endpoint.SERVER][0].t if decision.use_server else np.inf
-            )
-            if server_first > decision.device_wait:
-                cost += self._prefill_cost(Endpoint.DEVICE, len(prompt))
-        self.sched.observe_prompt_length(len(prompt))
-        if decision.use_server:
-            self.sched.observe_server_ttft(streams[Endpoint.SERVER][0].t)
-
-        # migration decision (§4.3)
-        mig_cfg = self.sched.migration_controller.config
-        buf = TokenBuffer(mig_cfg.consumption_rate, first_t)
-        tokens = [events[0].token]
-        cost += self._decode_cost(winner, 1)
-        migrated = False
-
-        target_ep = (
-            self.device if self.sched.cost_model.cheaper_decode_endpoint()
-            is Endpoint.DEVICE else self.server
         )
-        plan = self.sched.plan_migration(
-            current=winner,
-            prompt_len=len(prompt),
-            generated=1,
-            expected_total_tokens=float(max_new),
-            target_prefill_rate=max(
-                len(prompt) / max(events[0].t, 1e-3), 1.0
-            ),
-        )
+        live: list[_Req] = []
+        order: list[int] = []
+        results: dict[int, ServedRequest] = {}
 
-        if plan is None:
-            for ev in events[1:]:
-                buf.push(ev.t)
-                tokens.append(ev.token)
-                cost += self._decode_cost(winner, 1)
-            return ServedRequest(
-                tokens=tokens,
-                ttft=first_t,
-                tbt_series=buf.tbt_series(),
-                cost=cost,
-                winner=winner,
-                migrated=False,
-                delayed_tokens=0,
-            )
-
-        # stream from the source until the buffer can mask the hand-off
-        handoff_idx = None
-        for i, ev in enumerate(events[1:], start=1):
-            buf.push(ev.t)
-            tokens.append(ev.token)
-            cost += self._decode_cost(winner, 1)
-            if buf.occupancy(ev.t) >= plan.buffer_needed:
-                handoff_idx = i
+        while pending or live:
+            # finalize requests that can emit nothing further
+            for r in list(live):
+                if self._ready_to_finalize(r):
+                    results[r.rid] = self._finalize(r)
+                    live.remove(r)
+            if not pending and not live:
                 break
-        if handoff_idx is not None and handoff_idx < max_new - 1:
-            start = events[handoff_idx].t
-            cont = target_ep.replay_stream(
-                prompt, tokens, max_new - len(tokens), self.rng, start_at=start
-            )
-            cost += self._prefill_cost(plan.target, len(prompt) + len(tokens))
-            # Fig. 4: source keeps generating until the target is ready
-            target_ready = cont[0].t if cont else start
-            for ev in events[handoff_idx + 1 :]:
-                if ev.t >= target_ready:
-                    break
-                buf.push(ev.t)
-                tokens.append(ev.token)
-                cost += self._decode_cost(winner, 1)
-            for ev in cont:
-                if len(tokens) >= max_new:
-                    break
-                buf.push(max(ev.t, target_ready))
-                tokens.append(ev.token)
-                cost += self._decode_cost(plan.target, 1)
-            migrated = True
-        else:
-            pass  # buffer never filled: finish on the source
 
+            next_arrival = pending[0][0] if pending else math.inf
+
+            # pull-driven (device-side) candidates: an un-activated stream's
+            # candidate is its virtual start time; an activated one computes
+            # at most one fused chunk beyond the frontier to learn its next
+            # event time
+            best = None   # (t, rid, req, stream, is_activation)
+            for r in live:
+                for st in self._streams_of(r):
+                    if not st.pull_driven:
+                        continue
+                    if not st.activated:
+                        cand = (st.start_at, r.rid, r, st, True)
+                    else:
+                        t = st.candidate_time()
+                        if t is None:
+                            continue
+                        cand = (t, r.rid, r, st, False)
+                    if best is None or cand[:2] < best[:2]:
+                        best = cand
+
+            # advance the shared contended server: nothing else can happen
+            # before this horizon, so any server token earlier than it must
+            # be discovered now (the last chunk may overshoot — that is the
+            # in-flight compute a cancellation cannot recall)
+            horizon = min(next_arrival, best[0] if best else math.inf)
+            self.server.server.run_until(horizon)
+            for r in live:
+                for st in self._streams_of(r):
+                    if st.pull_driven:
+                        continue
+                    t = st.candidate_time()
+                    if t is None:
+                        continue
+                    cand = (t, r.rid, r, st, False)
+                    if best is None or cand[:2] < best[:2]:
+                        best = cand
+
+            t_event = best[0] if best else math.inf
+            if next_arrival <= t_event:
+                if not pending:
+                    continue   # nothing runnable; finalize pass handles live
+                arrival, prompt, max_new = pending.popleft()
+                self._frontier = max(self._frontier, arrival)
+                r = self._admit(arrival, prompt, max_new)
+                live.append(r)
+                order.append(r.rid)
+                continue
+
+            t, _, r, st, is_activation = best
+            self._frontier = max(self._frontier, t)
+            if is_activation:
+                st.activate()   # dispatch the device prefill at its start time
+                continue
+            self._on_event(r, st, st.pop())
+
+        return [results[rid] for rid in order]
+
+    # -- request lifecycle -------------------------------------------------
+
+    def _admit(self, arrival: float, prompt: np.ndarray, max_new: int) -> _Req:
+        decision = self.sched.plan_request(len(prompt), self.rng)
+        self.sched.observe_prompt_length(len(prompt))
+        r = _Req(
+            rid=self._next_rid, prompt=prompt, max_new=max_new,
+            arrival=arrival, decision=decision,
+        )
+        self._next_rid += 1
+        if decision.use_server:
+            st = self.server.open_stream(prompt, max_new, self.rng, start_at=arrival)
+            r.streams[Endpoint.SERVER] = st
+            r.all_streams.append(st)
+        if decision.use_device and math.isfinite(decision.device_wait):
+            st = self.device.open_stream(
+                prompt, max_new, self.rng, start_at=arrival + decision.device_wait
+            )
+            r.streams[Endpoint.DEVICE] = st
+            r.all_streams.append(st)
+        return r
+
+    def _streams_of(self, r: _Req) -> list:
+        out = [st for st in r.streams.values() if not st.done]
+        if r.mig_stream is not None and not r.mig_stream.done:
+            out.append(r.mig_stream)
+        return out
+
+    def _ready_to_finalize(self, r: _Req) -> bool:
+        if not r.done and self._streams_of(r):
+            return False
+        if r.done and not self.cancel_losers:
+            # control runtime: losers keep generating to completion — hold
+            # the request open so their contention and waste are realized
+            return not self._streams_of(r)
+        return True
+
+    # -- event handling ----------------------------------------------------
+
+    def _on_event(self, r: _Req, st, ev) -> None:
+        if r.winner is None:
+            # the race (§4.2): earliest first token wins
+            r.winner = st.kind
+            r.first_t = ev.t
+            r.delivery = st
+            r.buf = TokenBuffer(
+                self.sched.migration_controller.config.consumption_rate, ev.t
+            )
+            r.tokens = [ev.token]
+            if self.cancel_losers:
+                for other in r.streams.values():
+                    if other is not st:
+                        other.cancel()
+            if len(r.tokens) >= r.max_new:
+                r.done = True
+                return
+            if not self.allow_migration:
+                return
+            r.plan = self.sched.plan_migration(
+                current=r.winner,
+                prompt_len=len(r.prompt),
+                generated=1,
+                expected_total_tokens=float(r.max_new),
+                target_prefill_rate=max(
+                    len(r.prompt) / max(ev.t - r.arrival, 1e-3), 1.0
+                ),
+            )
+            return
+
+        if st is r.mig_stream:
+            if not r.handoff_done:
+                # Fig. 4: the target is ready; the source stops. Tokens the
+                # source delivered during the hand-off were regenerated by
+                # the target's replay — skip that prefix so delivery stays a
+                # single consistent stream.
+                r.handoff_done = True
+                r.mig_skip = len(r.tokens) - r.mig_prefix
+                if self.cancel_losers:
+                    r.delivery.cancel()
+                r.delivery = st
+            if r.mig_skip > 0:
+                r.mig_skip -= 1
+                return
+            self._deliver(r, ev)
+            return
+
+        if st is not r.delivery:
+            return   # loser residue (no-cancellation control) — discarded
+
+        self._deliver(r, ev)
+        if (
+            r.plan is not None
+            and r.mig_stream is None
+            and not r.done
+            and r.buf.occupancy(ev.t) >= r.plan.buffer_needed
+            and len(r.tokens) < r.max_new - 1
+        ):
+            self._start_handoff(r, ev.t)
+
+    def _deliver(self, r: _Req, ev) -> None:
+        r.buf.push(ev.t)
+        r.tokens.append(ev.token)
+        if len(r.tokens) >= r.max_new:
+            r.done = True
+
+    def _start_handoff(self, r: _Req, t: float) -> None:
+        target_ep = self.device if r.plan.target is Endpoint.DEVICE else self.server
+        r.migrated = True     # hand-off initiated (the source may still finish
+                              # first if the remaining stream is short)
+        r.mig_prefix = len(r.tokens)
+        r.mig_stream = target_ep.open_replay_stream(
+            r.prompt, list(r.tokens), r.max_new - len(r.tokens), self.rng, start_at=t
+        )
+        r.all_streams.append(r.mig_stream)
+
+    # -- completion --------------------------------------------------------
+
+    def _finalize(self, r: _Req) -> ServedRequest:
+        for st in r.all_streams:
+            if not st.done:
+                st.cancel()
+        # online TTFT profiling (§4.2): the server's first-token time is
+        # known whenever its prefill actually ran, even for a cancelled loser
+        srv = r.streams.get(Endpoint.SERVER)
+        if srv is not None:
+            t_first = srv.first_token_at
+            if t_first is not None:
+                self.sched.observe_server_ttft(t_first - r.arrival)
+
+        generated = sum(st.tokens_generated for st in r.all_streams)
+        delivered = len(r.tokens)
+        cost = 0.0
+        for st in r.all_streams:
+            if st.prefilled:
+                cost += self.sched.cost_model.prefill_cost(st.kind) * st.prefill_tokens
+            cost += self.sched.cost_model.decode_cost(st.kind) * st.tokens_generated
+
+        winner = r.winner if r.winner is not None else (
+            Endpoint.SERVER if r.decision.use_server else Endpoint.DEVICE
+        )
         return ServedRequest(
-            tokens=tokens,
-            ttft=first_t,
-            tbt_series=buf.tbt_series(),
+            tokens=list(r.tokens),
+            ttft=(r.first_t - r.arrival) if r.winner is not None else math.inf,
+            tbt_series=r.buf.tbt_series() if r.buf is not None else [],
             cost=cost,
             winner=winner,
-            migrated=migrated,
-            delayed_tokens=buf.delayed_tokens(),
+            migrated=r.migrated,
+            delayed_tokens=r.buf.delayed_tokens() if r.buf is not None else 0,
+            arrival=r.arrival,
+            generated_tokens=generated,
+            wasted_tokens=generated - delivered,
         )

@@ -1,54 +1,257 @@
 """DiSCo endpoints over real JAX engines, composed with a virtual network.
 
 Timing model (honest for a single-process CPU testbed): *compute* times are
-real wall-clock measurements of the JAX engines; *network/queue* latencies
-are sampled from configurable distributions and added to the timeline. The
-scheduler only ever sees timestamps, exactly as it would in deployment.
+real wall-clock measurements of the JAX engines; network RTT is sampled from
+a configurable distribution and added to the timeline. Server queueing is NOT
+sampled — it emerges from slot contention inside the shared
+:class:`~repro.serving.engine.BatchedServer` (the §2.3 "high-load period"
+tail). The scheduler only ever sees timestamps, exactly as in deployment.
 
-DeviceEndpoint: local engine, no network; TTFT grows linearly with prompt
-length (§3) because prefill is compute-bound on dedicated hardware.
-ServerEndpoint: engine + network RTT + a queueing-delay process (the §2.3
-"high-load period" spikes).
+Endpoints no longer materialize whole token lists. They open *incremental
+token-event sources* that the DiSCo event loop pulls chunk-by-chunk on a
+shared virtual timeline:
+
+* ``DeviceTokenStream`` — a per-request dedicated engine (each user's own
+  hardware): compute is dispatched lazily one fused chunk per pull, and the
+  stream is *activated* (prefill dispatched) only once the event loop's
+  virtual frontier reaches its start time, so a request resolved before the
+  device would have started spends nothing on-device.
+* ``ServerTokenStream`` — a handle onto one request id inside the shared
+  contended ``BatchedServer``; token events carry the server's virtual
+  timestamps plus the sampled downlink latency.
+
+Both support ``cancel()``: the race loser stops after at most one in-flight
+decode chunk instead of generating all ``max_new`` tokens — the source of
+the paper's up-to-84% cost saving (§4.2).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Iterator, Optional
+from collections import deque
+from typing import Optional
 
 import numpy as np
 
 from repro.core.cost import Endpoint
 
-from .engine import GenerationResult, InferenceEngine
+from .engine import BatchedServer, EngineStream, InferenceEngine
 
-__all__ = ["NetworkModel", "DeviceEndpoint", "ServerEndpoint", "TokenEvent"]
+__all__ = [
+    "NetworkModel",
+    "TokenEvent",
+    "DeviceTokenStream",
+    "ServerTokenStream",
+    "DeviceEndpoint",
+    "ServerEndpoint",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class TokenEvent:
     token: int
-    t: float          # virtual timeline, seconds since request arrival
+    t: float          # absolute virtual-timeline seconds
     endpoint: Endpoint
 
 
 @dataclasses.dataclass
 class NetworkModel:
+    """Link model: round-trip time only. Queueing delay is no longer sampled
+    here — it emerges from ``BatchedServer`` slot contention."""
+
     rtt_mean: float = 0.04
     rtt_jitter: float = 0.01
-    queue_spike_prob: float = 0.06
-    queue_spike_scale: float = 1.5   # seconds added during a high-load episode
 
     def sample_rtt(self, rng: np.random.Generator) -> float:
         return max(self.rtt_mean + rng.normal(0.0, self.rtt_jitter), 0.001)
 
-    def sample_queue_delay(self, rng: np.random.Generator) -> float:
-        if rng.random() < self.queue_spike_prob:
-            return self.queue_spike_scale * (1.0 + rng.random())
-        return rng.exponential(0.02)
+
+class DeviceTokenStream:
+    """Incremental token-event source over a dedicated (per-user) engine.
+
+    Pull-driven: ``peek``/``pop`` dispatch at most one fused decode chunk
+    beyond the last consumed event, so the stream never runs ahead of the
+    event loop's virtual frontier by more than one chunk. ``candidate_time``
+    returns the stream's next known event time without dispatching anything
+    before activation: an un-activated stream's candidate is its virtual
+    start time (prefill begins only when the frontier reaches it).
+    """
+
+    pull_driven = True
+
+    def __init__(self, source: EngineStream, start_at: float, kind: Endpoint):
+        self._src = source
+        self.start_at = float(start_at)
+        self.kind = kind
+        self._buf: deque[TokenEvent] = deque()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def activated(self) -> bool:
+        return self._src.prefilled or self._src.cancelled
+
+    def activate(self) -> None:
+        """Dispatch the prefill (the first pull). Idempotent."""
+        self._fill()
+
+    @property
+    def done(self) -> bool:
+        return not self._buf and self._src.done
+
+    def cancel(self) -> None:
+        self._src.cancel()
+        self._buf.clear()
+
+    # -- event access ------------------------------------------------------
+
+    def _fill(self) -> None:
+        while not self._buf and not self._src.done:
+            nxt = self._src.next_chunk()
+            if nxt is None:
+                return
+            tokens, times = nxt
+            for tok, t in zip(tokens, times):
+                self._buf.append(TokenEvent(tok, self.start_at + t, self.kind))
+
+    def candidate_time(self) -> Optional[float]:
+        if self._buf:
+            return self._buf[0].t
+        if self._src.done:
+            return None
+        if not self.activated:
+            return self.start_at          # activation event: nothing dispatched
+        self._fill()
+        return self._buf[0].t if self._buf else None
+
+    def peek(self) -> Optional[TokenEvent]:
+        self._fill()
+        return self._buf[0] if self._buf else None
+
+    def pop(self) -> TokenEvent:
+        ev = self.peek()
+        if ev is None:
+            raise RuntimeError("pop() on an exhausted stream")
+        self._buf.popleft()
+        return ev
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def prefilled(self) -> bool:
+        return self._src.prefilled
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self._src._prompt.shape[0])
+
+    @property
+    def tokens_generated(self) -> int:
+        return self._src.tokens_emitted
+
+    @property
+    def decode_dispatches(self) -> int:
+        return self._src.decode_dispatches
+
+
+class ServerTokenStream:
+    """Handle onto one request id inside the shared ``BatchedServer``.
+
+    Clock-driven: the server generates autonomously as the event loop
+    advances it with ``run_until``; this stream only drains the request's
+    incremental events and adds the downlink latency. ``cancel`` frees the
+    server row immediately (the row is reusable within the same tick).
+    """
+
+    pull_driven = False
+    kind = Endpoint.SERVER
+
+    def __init__(self, server: BatchedServer, rid: int, start_at: float,
+                 downlink: float, prefill_tokens: int):
+        self.server = server
+        self.rid = rid
+        self.start_at = float(start_at)
+        self.downlink = float(downlink)
+        self._prefill_tokens = int(prefill_tokens)
+        self._buf: deque[TokenEvent] = deque()
+        self._cancelled = False
+        self._emitted_seen = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def activated(self) -> bool:
+        return True                       # submission already happened
+
+    def activate(self) -> None:
+        pass
+
+    @property
+    def done(self) -> bool:
+        return not self._buf and (
+            self._cancelled or self.server.is_finished(self.rid)
+        )
+
+    def cancel(self) -> None:
+        self._cancelled = True
+        self.server.cancel(self.rid)
+        self._buf.clear()
+
+    # -- event access ------------------------------------------------------
+
+    def _drain(self) -> None:
+        if self._cancelled:
+            return
+        for tok, t in self.server.pop_events(self.rid):
+            self._buf.append(TokenEvent(tok, t + self.downlink, Endpoint.SERVER))
+
+    def candidate_time(self) -> Optional[float]:
+        self._drain()
+        return self._buf[0].t if self._buf else None
+
+    def peek(self) -> Optional[TokenEvent]:
+        self._drain()
+        return self._buf[0] if self._buf else None
+
+    def pop(self) -> TokenEvent:
+        ev = self.peek()
+        if ev is None:
+            raise RuntimeError("pop() on an exhausted stream")
+        self._buf.popleft()
+        return ev
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def prefilled(self) -> bool:
+        return self.rid in self.server.first_token_time
+
+    @property
+    def first_token_at(self) -> Optional[float]:
+        """Virtual arrival time of the first token at the client (TTFT
+        profiling source), known even if the stream was cancelled after its
+        prefill ran."""
+        t = self.server.first_token_time.get(self.rid)
+        return None if t is None else t + self.downlink
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._prefill_tokens
+
+    @property
+    def tokens_generated(self) -> int:
+        return self.server.generated.get(self.rid, 0)
+
+    @property
+    def decode_dispatches(self) -> int:
+        return self.server.decode_dispatches.get(self.rid, 0)
 
 
 class DeviceEndpoint:
+    """Per-user device: a dedicated engine, no network hop. TTFT grows
+    linearly with prompt length (§3) because prefill is compute-bound on
+    dedicated hardware. Concurrent requests get independent streams (each
+    user owns their device), so there is no cross-request contention here."""
+
     kind = Endpoint.DEVICE
 
     def __init__(self, engine: InferenceEngine, energy_per_prefill_token: float = 1.0,
@@ -57,49 +260,59 @@ class DeviceEndpoint:
         self.energy_per_prefill_token = energy_per_prefill_token
         self.energy_per_decode_token = energy_per_decode_token
 
-    def stream(self, prompt: np.ndarray, max_new: int, rng, start_at: float = 0.0
-               ) -> list[TokenEvent]:
-        res = self.engine.generate(prompt, max_new)
-        return [
-            TokenEvent(tok, start_at + t, Endpoint.DEVICE)
-            for tok, t in zip(res.tokens, res.token_times)
-        ]
+    def open_stream(self, prompt: np.ndarray, max_new: int, rng,
+                    start_at: float = 0.0) -> DeviceTokenStream:
+        return DeviceTokenStream(
+            self.engine.open_stream(prompt, max_new), start_at, self.kind
+        )
 
-    def replay_stream(self, prompt, generated, max_new, rng, start_at: float = 0.0):
-        """Migration-target path: re-prefill prompt + token IDs, then continue."""
-        replay_s, cont = self.engine.replay_then_continue(prompt, generated, max_new)
-        events = []
-        t0 = time.perf_counter()
-        for tok in cont:
-            now = time.perf_counter() - t0
-            events.append(TokenEvent(tok, start_at + replay_s + now, Endpoint.DEVICE))
-        return events
+    def open_replay_stream(self, prompt, generated, max_new: int, rng,
+                           start_at: float = 0.0) -> DeviceTokenStream:
+        """Migration-target path: re-prefill prompt + token IDs, then
+        continue. Per-token times are interpolated across each measured
+        decode chunk (same as a fresh stream — no host-buffered bursts)."""
+        return DeviceTokenStream(
+            self.engine.open_replay(prompt, generated, max_new), start_at, self.kind
+        )
 
 
 class ServerEndpoint:
+    """Shared server: requests from ALL live DiSCo sessions land in one
+    contended ``BatchedServer`` — queueing delay and the TTFT tail are
+    emergent, not sampled. The network contributes sampled RTT only (half on
+    the uplink before the request queues, half on each token's downlink)."""
+
     kind = Endpoint.SERVER
 
-    def __init__(self, engine: InferenceEngine, network: NetworkModel = NetworkModel()):
-        self.engine = engine
-        self.network = network
+    def __init__(self, server: BatchedServer, network: Optional[NetworkModel] = None):
+        self.server = server
+        # one NetworkModel per endpoint instance: a shared default instance
+        # would alias link parameters across every endpoint in the process
+        self.network = network if network is not None else NetworkModel()
 
-    def stream(self, prompt: np.ndarray, max_new: int, rng: np.random.Generator,
-               start_at: float = 0.0) -> list[TokenEvent]:
-        delay = self.network.sample_rtt(rng) + self.network.sample_queue_delay(rng)
-        res = self.engine.generate(prompt, max_new)
-        return [
-            TokenEvent(tok, start_at + delay + t, Endpoint.SERVER)
-            for tok, t in zip(res.tokens, res.token_times)
-        ]
+    def _open(self, tokens: np.ndarray, max_new: int, rng: np.random.Generator,
+              start_at: float) -> ServerTokenStream:
+        rtt = self.network.sample_rtt(rng)
+        rid = self.server.submit(
+            np.asarray(tokens, np.int32), max_new, at=start_at + rtt / 2.0
+        )
+        return ServerTokenStream(
+            self.server, rid, start_at, downlink=rtt / 2.0,
+            prefill_tokens=int(np.asarray(tokens).shape[0]),
+        )
 
-    def replay_stream(self, prompt, generated, max_new, rng, start_at: float = 0.0):
-        delay = self.network.sample_rtt(rng) + self.network.sample_queue_delay(rng)
-        replay_s, cont = self.engine.replay_then_continue(prompt, generated, max_new)
-        t0 = time.perf_counter()
-        events = []
-        for tok in cont:
-            now = time.perf_counter() - t0
-            events.append(
-                TokenEvent(tok, start_at + delay + replay_s + now, Endpoint.SERVER)
-            )
-        return events
+    def open_stream(self, prompt: np.ndarray, max_new: int,
+                    rng: np.random.Generator, start_at: float = 0.0
+                    ) -> ServerTokenStream:
+        return self._open(np.asarray(prompt, np.int32), max_new, rng, start_at)
+
+    def open_replay_stream(self, prompt, generated, max_new: int,
+                           rng: np.random.Generator, start_at: float = 0.0
+                           ) -> ServerTokenStream:
+        """Migration-target path: the re-prefill is submitted to the SAME
+        batched scheduler as live traffic — a migration competes for slots
+        like any other request."""
+        full = np.concatenate(
+            [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
+        )
+        return self._open(full, max_new, rng, start_at)

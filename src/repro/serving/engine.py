@@ -1,22 +1,37 @@
-"""Inference engine: jitted prefill / decode step functions + a
-continuous-batching scheduler for batched request serving.
+"""Inference engine: jitted prefill / decode step functions + an
+event-driven continuous-batching scheduler for multi-request serving.
 
-The engine is endpoint-agnostic: DiSCo's device and server endpoints each
-wrap one ``InferenceEngine`` (different model sizes / latency envelopes).
+The engine is endpoint-agnostic: DiSCo's device endpoint wraps one
+``InferenceEngine`` per user device; the server endpoint wraps the shared
+``BatchedServer`` so queueing delay *emerges* from slot contention.
 
 Decode hot path: tokens are generated in fused chunks (``decode_n`` — one
 ``lax.scan`` dispatch per chunk) and the host syncs once per chunk instead of
 once per token. Prompts are right-padded to power-of-two length buckets so a
 new prompt length does not trigger a fresh XLA compile; the model masks the
 pad tail via per-row ``lengths``.
+
+Two incremental interfaces feed the DiSCo event loop:
+
+* ``EngineStream`` (via ``InferenceEngine.open_stream`` / ``open_replay``) —
+  a lazily *pulled* token source: compute is dispatched one fused chunk per
+  pull, per-token times are interpolated across the measured chunk interval,
+  and ``cancel()`` stops all future dispatches, so an abandoned stream wastes
+  at most one in-flight decode chunk.
+* ``BatchedServer`` — a virtual-time scheduler: each tick (one row-prefill
+  admission or one fused decode chunk across active rows) advances a virtual
+  clock by the tick's measured wall-clock compute, requests queue until a row
+  frees, tokens are delivered incrementally per request id, and
+  ``cancel(rid)`` frees the row immediately for the next admission.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from collections import deque
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +40,7 @@ import numpy as np
 from repro.models import decode_n, decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
 
-__all__ = ["InferenceEngine", "GenerationResult", "BatchedServer"]
+__all__ = ["InferenceEngine", "GenerationResult", "EngineStream", "BatchedServer"]
 
 _MIN_BUCKET = 16
 
@@ -141,8 +156,18 @@ class InferenceEngine:
 
     # -- prefill -----------------------------------------------------------
 
-    def warmup(self, batch: int = 1, prompt_len: int = 8) -> None:
-        tok = np.zeros((batch, prompt_len), np.int32)
+    def warmup(self, batch: int = 1, prompt_len: int = 8,
+               prompt_lens: tuple = ()) -> None:
+        """Precompile prefill bucket(s) and decode scan lengths. Pass every
+        prompt length the workload will see via ``prompt_lens`` so no XLA
+        compile lands inside a wall-clock-timed (virtual-timeline) region."""
+        buckets = sorted({
+            _bucket_len(s, self.max_len) if self._bucketed else s
+            for s in (prompt_len, *prompt_lens)
+        })
+        for s in buckets[1:]:
+            t, _ = self.prefill(np.zeros((batch, s), np.int32))
+        tok = np.zeros((batch, buckets[0]), np.int32)
         t, cache = self.prefill(tok)
         # decode donates the cache: thread it, never reuse a donated buffer
         tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t))
@@ -249,6 +274,96 @@ class InferenceEngine:
 
         return replay_s, continuation()
 
+    # -- incremental (event-loop) interface --------------------------------
+
+    def open_stream(self, prompt: np.ndarray, max_new: int) -> "EngineStream":
+        """Lazy token source for ``prompt`` (S,): nothing is dispatched until
+        the first pull. See :class:`EngineStream`."""
+        return EngineStream(self, np.asarray(prompt, np.int32), max_new)
+
+    def open_replay(self, prompt: np.ndarray, generated, max_new: int) -> "EngineStream":
+        """Migration-target source (§4.3): first pull re-prefills
+        prompt + received token IDs (no KV transfer); the stream then emits
+        up to ``max_new`` *continuation* tokens (the replay-prefill's next
+        token is the first of them)."""
+        full = np.concatenate(
+            [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
+        )
+        return EngineStream(self, full, max_new)
+
+
+class EngineStream:
+    """Lazily pulled incremental generation from one :class:`InferenceEngine`.
+
+    Compute happens on pull: the first ``next_chunk()`` dispatches the
+    prefill and returns its token; each later call dispatches one fused
+    decode chunk. Pull wall-clock is measured and per-token times are
+    interpolated across the chunk interval (the device emits sequentially
+    inside a chunk), so downstream TBT series keep token-by-token meaning —
+    this applies to replayed (migration) streams too, which previously
+    stamped a whole host-buffered chunk with one burst timestamp.
+
+    ``cancel()`` stops all future dispatches and drops the cache reference:
+    a cancelled race loser wastes at most the one chunk that was in flight.
+    """
+
+    def __init__(self, engine: InferenceEngine, prompt: np.ndarray, max_new: int):
+        self.engine = engine
+        self._prompt = prompt
+        self._max_new = max_new
+        self._chunks = None           # generator once prefill has run
+        self.cancelled = False
+        self.exhausted = False
+        self.prefill_s: Optional[float] = None
+        self.decode_dispatches = 0    # fused decode-chunk dispatches
+        self.tokens_emitted = 0       # includes the prefill token
+        self._elapsed = 0.0           # compute-seconds consumed so far
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_s is not None
+
+    @property
+    def done(self) -> bool:
+        return self.cancelled or self.exhausted
+
+    def next_chunk(self):
+        """Pull the next chunk: ``(tokens, rel_times)`` or ``None`` when the
+        stream is exhausted or cancelled. Times are seconds of *compute*
+        since the stream started (prefill included)."""
+        if self.done:
+            return None
+        if self._chunks is None:
+            t0 = time.perf_counter()
+            tok, cache = self.engine.prefill(self._prompt[None, :])
+            self.prefill_s = time.perf_counter() - t0
+            self._elapsed = self.prefill_s
+            self._chunks = self.engine._chunk_stream(
+                cache, jnp.asarray(tok, jnp.int32),
+                int(self._prompt.shape[0]), self._max_new,
+            )
+            self.tokens_emitted = 1
+            return [int(tok[0])], [self.prefill_s]
+        t0 = time.perf_counter()
+        nxt = next(self._chunks, None)
+        dur = time.perf_counter() - t0
+        if nxt is None:
+            self.exhausted = True
+            self._chunks = None
+            return None
+        toks_np, n_valid = nxt
+        self.decode_dispatches += 1
+        start = self._elapsed
+        self._elapsed += dur
+        self.tokens_emitted += n_valid
+        tokens = [int(toks_np[i, 0]) for i in range(n_valid)]
+        times = [start + (i + 1) * dur / n_valid for i in range(n_valid)]
+        return tokens, times
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        self._chunks = None           # free the KV cache reference
+
 
 # ---------------------------------------------------------------------------
 # Continuous batching (server-side request batching, §2.3)
@@ -263,17 +378,26 @@ class _Slot:
 
 
 class BatchedServer:
-    """Continuous-batching scheduler: one *batched* KV cache with per-row
-    lengths; requests join free rows after prefill and all active rows share
-    a single batched decode step.
+    """Event-driven continuous-batching scheduler on a *virtual* timeline.
 
+    One batched KV cache with per-row lengths; requests join free rows after
+    a row prefill and all active rows share fused batched decode chunks.
     This models the server-side request batching the paper identifies as the
-    source of TTFT tail latency (§2.3): arrivals beyond ``max_slots`` queue.
+    source of TTFT tail latency (§2.3): arrivals beyond ``max_slots`` queue,
+    so queueing delay is *emergent contention*, not a sampled scalar.
 
-    Each tick decodes a fused chunk of ``decode_chunk`` tokens for all active
-    rows with one dispatch + one host sync; per-row lengths are tracked
-    host-side so the scheduler never reads the device cache. Rows freeze on
-    the device (cache and lengths untouched) once inactive or at max_len.
+    Timeline semantics: each scheduler tick is either (a) the admission of
+    ONE queued request into a free row — a single row-prefill dispatch, no
+    global barrier, interleaved between decode chunks — or (b) one fused
+    decode chunk of ``decode_chunk`` tokens across all active rows (one
+    dispatch + one host sync). The virtual clock advances by each tick's
+    measured wall-clock compute; per-token event times are interpolated
+    inside the chunk. ``submit(..., at=t)`` stamps a virtual arrival;
+    ``run_until(t)`` processes ticks until the clock passes ``t`` (the last
+    tick may overshoot — that is the "in-flight chunk" a cancellation cannot
+    recall). Tokens are delivered incrementally per request id via
+    ``pop_events``; ``cancel(rid)`` frees the row immediately, so a queued
+    request can be admitted within the same tick.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
@@ -314,30 +438,42 @@ class BatchedServer:
         self._decode_chunk = _decode_chunk
         self.cache = init_cache(cfg, max_slots, max_len)
         self._warm = False
-        self.queue: deque = deque()
+        self.clock = 0.0                    # virtual seconds
+        self.queue: deque = deque()         # (rid, prompt, max_new), FIFO
         self.slots: dict[int, _Slot] = {}
         self.rows: dict[int, int] = {}
         self.free_rows = list(range(max_slots))
         self.row_len = [0] * max_slots      # host-side mirror of cache lengths
         self.next_id = 0
         self.completed: dict[int, list[int]] = {}
-        self.submit_time: dict[int, float] = {}
-        self.first_token_time: dict[int, float] = {}
+        self.cancelled: set[int] = set()
+        self.submit_time: dict[int, float] = {}     # virtual arrival
+        self.first_token_time: dict[int, float] = {}  # virtual, admitted rids only
+        self.events: dict[int, deque] = {}  # rid -> deque[(token, virtual_t)]
+        self.decode_dispatches: dict[int, int] = {}  # chunks the rid was active in
+        self.generated: dict[int, int] = {}          # tokens emitted per rid
 
-    def warmup(self, prompt_len: int = 8) -> None:
-        """Precompile the row prefill (one bucket) and every tail scan length
-        step() can dispatch, so live scheduler ticks — and the TTFTs measured
-        through them — never include an XLA compile. Optional: skipping it
-        only means the first tick at each new shape pays the compile."""
+    def warmup(self, prompt_len: int = 8, prompt_lens: tuple = ()) -> None:
+        """Precompile the row prefill bucket(s) and every tail scan length
+        step() can dispatch, so live scheduler ticks — and the virtual-time
+        TTFTs measured through them — never include an XLA compile. Pass the
+        workload's prompt lengths via ``prompt_lens``; skipping one only
+        means the first tick at that shape pays the compile."""
         if self._warm:
             return
-        prompt = np.zeros((prompt_len,), np.int32)
-        padded, lengths = _pad_to_bucket(
-            prompt[None, :], self.max_len, self._bucketed
-        )
-        tok, self.cache = self._prefill_row(
-            self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths), 0
-        )
+        buckets = sorted({
+            _bucket_len(s, self.max_len) if self._bucketed else s
+            for s in (prompt_len, *prompt_lens)
+        })
+        tok = None
+        for s in buckets:
+            prompt = np.zeros((s,), np.int32)
+            padded, lengths = _pad_to_bucket(
+                prompt[None, :], self.max_len, self._bucketed
+            )
+            tok, self.cache = self._prefill_row(
+                self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths), 0
+            )
         tokens = np.zeros((self.max_slots,), np.int32)
         inactive = jnp.zeros((self.max_slots,), bool)  # rows stay frozen
         for n in _tail_sizes(self.decode_chunk):
@@ -349,38 +485,53 @@ class BatchedServer:
         self.cache = init_cache(self.cfg, self.max_slots, self.max_len)
         self._warm = True
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int, at: Optional[float] = None) -> int:
+        """Enqueue a request arriving at virtual time ``at`` (defaults to the
+        current clock). FIFO admission; callers submit in arrival order."""
         rid = self.next_id
         self.next_id += 1
-        self.queue.append((rid, prompt, max_new))
-        self.submit_time[rid] = time.perf_counter()
+        self.queue.append((rid, np.asarray(prompt, np.int32), max_new))
+        self.submit_time[rid] = self.clock if at is None else float(at)
+        self.events[rid] = deque()
+        self.generated[rid] = 0
         return rid
 
-    def _admit(self) -> None:
-        while self.queue and self.free_rows:
-            rid, prompt, max_new = self.queue.popleft()
-            row = self.free_rows.pop()
-            s = int(prompt.shape[0])
-            padded, lengths = _pad_to_bucket(
-                np.asarray(prompt, np.int32)[None, :], self.max_len, self._bucketed
-            )
-            tok, self.cache = self._prefill_row(
-                self.params, self.cache, jnp.asarray(padded),
-                jnp.asarray(lengths), row,
-            )
-            jax.block_until_ready(tok)
-            self.first_token_time[rid] = time.perf_counter()
-            self.slots[rid] = _Slot(rid, max_new - 1, [int(tok)])
-            self.rows[rid] = row
-            self.row_len[row] = s
+    def cancel(self, rid: int) -> None:
+        """Stop a request now. A queued request is dropped before admission;
+        an active one frees its row immediately — the row is reusable by the
+        very next admission tick (no drain, the cache row just freezes)."""
+        if rid in self.completed or rid in self.cancelled:
+            return
+        self.cancelled.add(rid)
+        if rid in self.slots:
+            slot = self.slots.pop(rid)
+            self.free_rows.append(self.rows.pop(rid))
+            self.completed[rid] = slot.tokens
+            return
+        for item in self.queue:
+            if item[0] == rid:
+                self.queue.remove(item)
+                self.completed[rid] = []
+                return
 
-    def step(self) -> bool:
-        """One scheduler tick: admit, then one fused decode chunk for all
-        active rows (single dispatch + host sync). Returns False when fully
-        idle."""
-        self._admit()
-        if not self.slots:
-            return False
+    def is_finished(self, rid: int) -> bool:
+        """True once the rid can emit no further events."""
+        if rid not in self.submit_time:
+            raise ValueError(f"unknown request id {rid}")
+        return rid in self.completed and not self.events[rid]
+
+    def pop_events(self, rid: int) -> list:
+        """Drain this request's undelivered ``(token, virtual_time)`` events."""
+        q = self.events[rid]
+        out = list(q)
+        q.clear()
+        return out
+
+    # -- scheduler ticks ---------------------------------------------------
+
+    def _retire_done(self) -> None:
         done = [
             rid
             for rid, slot in self.slots.items()
@@ -390,8 +541,38 @@ class BatchedServer:
         for rid in done:
             self.completed[rid] = self.slots.pop(rid).tokens
             self.free_rows.append(self.rows.pop(rid))
-        if not self.slots:
-            return bool(self.queue)
+
+    def _head_arrival(self) -> Optional[float]:
+        return self.submit_time[self.queue[0][0]] if self.queue else None
+
+    def _admit_one(self) -> None:
+        """Admission tick: prefill ONE queued request into a free row. The
+        measured prefill wall-clock advances the virtual clock; the prompt's
+        first token lands at the new clock."""
+        rid, prompt, max_new = self.queue.popleft()
+        row = self.free_rows.pop()
+        s = int(prompt.shape[0])
+        padded, lengths = _pad_to_bucket(
+            prompt[None, :], self.max_len, self._bucketed
+        )
+        t0 = time.perf_counter()
+        tok, self.cache = self._prefill_row(
+            self.params, self.cache, jnp.asarray(padded),
+            jnp.asarray(lengths), row,
+        )
+        tok = int(jax.block_until_ready(tok))
+        self.clock += time.perf_counter() - t0
+        self.first_token_time[rid] = self.clock
+        self.events[rid].append((tok, self.clock))
+        self.generated[rid] += 1
+        self.slots[rid] = _Slot(rid, max_new - 1, [tok])
+        self.rows[rid] = row
+        self.row_len[row] = s
+
+    def _decode_tick(self) -> None:
+        """Decode tick: one fused chunk for all active rows (single dispatch
+        + host sync). Per-token virtual times are interpolated across the
+        measured chunk interval."""
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
         need = {}
@@ -407,24 +588,77 @@ class BatchedServer:
         # cap the scan at the largest per-row need (rounded to a warm tail
         # size) so request tails don't pay for discarded decode steps
         num_steps = _tail_steps(max(need.values()), self.decode_chunk)
+        t_start = self.clock
+        t0 = time.perf_counter()
         toks, self.cache = self._decode_chunk(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
             num_steps,
         )
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
+        dur = time.perf_counter() - t0
+        self.clock = t_start + dur
         for rid, slot in self.slots.items():
             row = self.rows[rid]
             n_valid = need[rid]
             for i in range(n_valid):
-                slot.tokens.append(int(toks[i, row]))
+                tok = int(toks[i, row])
+                slot.tokens.append(tok)
+                self.events[rid].append(
+                    (tok, t_start + (i + 1) * dur / num_steps)
+                )
             slot.remaining -= n_valid
             self.row_len[row] += n_valid
-        return True
+            self.generated[rid] += n_valid
+            self.decode_dispatches[rid] = self.decode_dispatches.get(rid, 0) + 1
+
+    def run_until(self, t_limit: float = math.inf) -> None:
+        """Process ticks until the virtual clock passes ``t_limit`` or there
+        is no work. The final tick may overshoot ``t_limit``: its chunk was
+        already in flight when the horizon passed (cancellations land after
+        it, which is exactly the paper's one-chunk cancellation latency)."""
+        while self.clock < t_limit:
+            self._retire_done()
+            head = self._head_arrival()
+            if self.free_rows and head is not None and head <= self.clock:
+                self._admit_one()        # one row per tick, between chunks
+                continue
+            if self.slots:
+                self._decode_tick()
+                continue
+            if head is None or head > t_limit:
+                break                    # idle, or next arrival beyond horizon
+            self.clock = head            # idle gap: jump to the next arrival
+        self._retire_done()
+
+    def step(self) -> bool:
+        """One scheduler tick (admission or decode chunk). Returns False when
+        fully idle. Compatibility wrapper over the event-driven core; the
+        clock only jumps over idle gaps, never past in-flight decode work."""
+        self._retire_done()
+        head = self._head_arrival()
+        if not self.slots and head is not None:
+            self.clock = max(self.clock, head)   # idle gap: jump to arrival
+        if self.free_rows and head is not None and head <= self.clock:
+            self._admit_one()
+        elif self.slots:
+            self._decode_tick()
+        self._retire_done()
+        return bool(self.slots or self.queue)
 
     def run_to_completion(self) -> dict[int, list[int]]:
-        while self.step() or self.queue:
-            pass
+        self.run_until(math.inf)
         return self.completed
 
-    def ttft(self, rid: int) -> float:
+    # -- bookkeeping -------------------------------------------------------
+
+    def ttft(self, rid: int) -> Optional[float]:
+        """Virtual-time TTFT. ``None`` for a request that was never admitted
+        (still queued, or cancelled while queued); raises ``ValueError`` for
+        an unknown rid instead of leaking a bare ``KeyError``."""
+        if rid not in self.submit_time:
+            raise ValueError(
+                f"unknown request id {rid}: never submitted to this server"
+            )
+        if rid not in self.first_token_time:
+            return None
         return self.first_token_time[rid] - self.submit_time[rid]

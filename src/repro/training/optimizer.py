@@ -8,7 +8,6 @@ EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -5,7 +5,6 @@ and per-layer remat (via the model's scan body).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Iterator, Optional
 
 import jax

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_supported
-from repro.models import decode_step, forward, init_cache, init_params, prefill
+from repro.models import decode_step, forward, init_params, prefill
 
 BATCH, SEQ = 2, 32
 

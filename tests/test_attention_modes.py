@@ -14,7 +14,7 @@ from repro.models.attention import (
     decode_attention,
 )
 from repro.models.ssm import ssd_chunked
-from repro.kernels.ref import decode_reference, ssd_reference
+from repro.kernels.ref import ssd_reference
 
 
 def _rand(rng, shape):

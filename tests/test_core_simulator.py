@@ -9,11 +9,9 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    CostModel,
     DiSCoScheduler,
     Endpoint,
     MigrationConfig,
-    Request,
     ServerPolicy,
     SingleEndpointPolicy,
     StochasticPolicy,

@@ -1,5 +1,4 @@
 """Data pipeline determinism/learnability-structure + input_specs shapes."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -6,8 +6,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -114,7 +112,6 @@ def test_mla_absorbed_equals_expanded():
     """Weight absorption is a pure linear-algebra identity."""
     import dataclasses
     import jax
-    import jax.numpy as jnp
     import numpy as np
     from repro.configs import get_config
     from repro.models import decode_step, init_params, prefill

@@ -2,7 +2,6 @@
 (interpret=True executes the kernel bodies on CPU), plus cross-checks against
 the model-side jnp implementations.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.launch.analytic import step_flops, analytic_costs
 from repro.launch.dryrun import (
     _line_output_bytes,
@@ -21,7 +21,6 @@ from repro.launch.dryrun import (
     depth_multipliers,
 )
 from repro.launch.sharding import (
-    batch_pspecs,
     cache_pspecs,
     opt_state_pspecs,
     param_pspecs,

@@ -1,10 +1,13 @@
-"""Serving engine + DiSCo driver integration tests (real tiny JAX models)."""
+"""Serving engine + event-driven DiSCo runtime integration tests (real tiny
+JAX models): lazy token streams, virtual-time BatchedServer, loser
+cancellation, and migration under concurrent load."""
 import numpy as np
 import pytest
 import jax
 
 from repro.configs import paper_models
 from repro.core import CostModel, DiSCoScheduler, Endpoint, MigrationConfig
+from repro.core.dispatch import DispatchDecision, DispatchPolicy
 from repro.models import init_params
 from repro.serving import (
     BatchedServer,
@@ -56,6 +59,64 @@ def test_replay_then_continue_matches_direct(engines):
     assert direct[cut:] == continued
 
 
+# ---------------------------------------------------------------------------
+# EngineStream: the lazy pulled source feeding the event loop
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stream_matches_generate(engines):
+    dev, _ = engines
+    prompt = np.arange(10, dtype=np.int32)
+    direct = dev.generate(prompt, max_new=20)
+    st = dev.open_stream(prompt, 20)
+    tokens, times = [], []
+    while (chunk := st.next_chunk()) is not None:
+        tokens += chunk[0]
+        times += chunk[1]
+    assert tokens == direct.tokens
+    assert st.tokens_emitted == 20
+    assert all(t2 > t1 for t1, t2 in zip(times, times[1:]))
+
+
+def test_engine_stream_cancel_stops_dispatches(engines):
+    dev, _ = engines
+    st = dev.open_stream(np.arange(8, dtype=np.int32), 64)
+    st.next_chunk()   # prefill
+    st.next_chunk()   # one decode chunk
+    n = st.decode_dispatches
+    st.cancel()
+    assert st.next_chunk() is None
+    assert st.decode_dispatches == n == 1
+
+
+def test_replay_stream_times_interpolated(engines):
+    """Satellite fix: replayed (migration-target) streams must carry
+    per-token interpolated times, not one host-buffered burst timestamp per
+    chunk. Interpolated per-token gaps stay within the chunk-duration noise
+    band; the old burst pattern put ~µs gaps inside a chunk and ~ms gaps at
+    chunk boundaries (orders of magnitude apart)."""
+    dev, _ = engines
+    prompt = np.arange(6, dtype=np.int32)
+    head = dev.generate(prompt, max_new=4).tokens
+    ep = DeviceEndpoint(dev)
+    st = ep.open_replay_stream(prompt, head, 17, None, start_at=1.0)
+    st.activate()
+    events = []
+    while st.peek() is not None:
+        events.append(st.pop())
+    assert len(events) == 17
+    ts = [e.t for e in events]
+    assert all(t >= 1.0 for t in ts)          # start offset respected
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+    gaps = np.diff(ts[1:])                    # decode gaps (skip replay gap)
+    assert gaps.max() / max(gaps.min(), 1e-12) < 50.0
+
+
+# ---------------------------------------------------------------------------
+# BatchedServer: virtual-time event-driven continuous batching
+# ---------------------------------------------------------------------------
+
+
 def test_batched_server_serves_all(engines):
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=3, max_len=96)
@@ -71,7 +132,8 @@ def test_batched_server_serves_all(engines):
 
 
 def test_batched_server_queueing_raises_ttft(engines):
-    """Requests beyond slot capacity wait — the §2.3 queueing effect."""
+    """Requests beyond slot capacity wait — §2.3 queueing, now emergent in
+    virtual time."""
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96)
     prompts = [np.arange(6, dtype=np.int32) for _ in range(3)]
@@ -83,7 +145,7 @@ def test_batched_server_queueing_raises_ttft(engines):
 
 def test_batched_server_evicts_rows_at_max_len(engines):
     """A request whose decode would overrun the cache stops at max_len-1 and
-    frees its slot for the queue."""
+    frees its slot for the queue (eviction + requeue)."""
     _, srv = engines
     max_len = 32
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=max_len)
@@ -100,8 +162,8 @@ def test_batched_server_evicts_rows_at_max_len(engines):
 
 
 def test_batched_server_ttft_bookkeeping(engines):
-    """TTFT = first-token time - submit time, positive and ordered for every
-    request, including queued ones."""
+    """TTFT = first-token time - arrival on the virtual timeline, positive
+    for every admitted request, including queued ones."""
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
     rids = [server.submit(np.arange(5, dtype=np.int32), 6) for _ in range(5)]
@@ -111,6 +173,63 @@ def test_batched_server_ttft_bookkeeping(engines):
         assert rid in server.submit_time
         assert server.ttft(rid) > 0
         assert server.first_token_time[rid] >= server.submit_time[rid]
+
+
+def test_batched_server_ttft_unknown_and_unadmitted(engines):
+    """Satellite fix: ttft() raises a clear ValueError for unknown rids and
+    returns None for queued-but-never-admitted ones (no bare KeyError)."""
+    _, srv = engines
+    server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96)
+    with pytest.raises(ValueError, match="unknown request id"):
+        server.ttft(12345)
+    a = server.submit(np.arange(6, dtype=np.int32), 8)
+    b = server.submit(np.arange(6, dtype=np.int32), 8)
+    assert server.ttft(a) is None and server.ttft(b) is None  # nothing ran yet
+    server.step()                      # admits a only (1 slot)
+    assert server.ttft(a) is not None
+    assert server.ttft(b) is None      # still queued
+    server.cancel(b)                   # cancelled while queued: never admitted
+    server.run_to_completion()
+    assert server.ttft(b) is None
+    assert server.completed[b] == []
+
+
+def test_batched_server_cancel_frees_row_within_tick(engines):
+    """Acceptance: cancel(rid) frees the row immediately — a queued request
+    is admitted by the very next tick, with no drain of the cancelled row."""
+    _, srv = engines
+    server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96,
+                           decode_chunk=4)
+    a = server.submit(np.arange(8, dtype=np.int32), 64)
+    b = server.submit(np.arange(4, dtype=np.int32), 4)
+    while not server.events[a]:
+        server.step()                  # admit a, start decoding
+    assert not server.free_rows
+    server.cancel(a)
+    assert server.free_rows            # freed synchronously, same tick
+    dispatches_at_cancel = server.decode_dispatches.get(a, 0)
+    server.run_to_completion()
+    assert server.decode_dispatches.get(a, 0) == dispatches_at_cancel  # no overrun
+    assert len(server.completed[b]) == 4
+    assert server.ttft(b) is not None
+    assert len(server.completed[a]) < 64
+
+
+def test_batched_server_incremental_events(engines):
+    """Per-request incremental delivery: pop_events streams (token, t) pairs
+    with monotone virtual times matching the completed transcript."""
+    _, srv = engines
+    server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
+    rids = [server.submit(np.arange(7, dtype=np.int32), 9, at=0.01 * i)
+            for i in range(3)]
+    server.run_to_completion()
+    for rid in rids:
+        events = server.pop_events(rid)
+        assert [tok for tok, _ in events] == server.completed[rid]
+        times = [t for _, t in events]
+        assert all(b >= a for a, b in zip(times, times[1:]))
+        assert times[0] >= server.submit_time[rid]
+    assert server.pop_events(rids[0]) == []   # drained
 
 
 def test_batched_server_matches_single_engine_stream(engines):
@@ -177,8 +296,29 @@ def test_generate_saturates_at_max_len(engines):
     assert len(res.tokens) == 1 + (32 - 1 - 20)
 
 
-def _make_disco(engines, constraint: str) -> DiSCoServer:
+# ---------------------------------------------------------------------------
+# Event-driven DiSCo runtime
+# ---------------------------------------------------------------------------
+
+
+def test_server_endpoint_network_not_aliased(engines):
+    """Satellite fix: the default NetworkModel must be constructed per
+    endpoint instance, not shared across every endpoint in the process."""
+    _, srv = engines
+    server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=32)
+    e1 = ServerEndpoint(server)
+    e2 = ServerEndpoint(server)
+    assert e1.network is not e2.network
+    e1.network.rtt_mean = 99.0
+    assert e2.network.rtt_mean != 99.0
+
+
+def _make_disco(engines, constraint: str, cancel_losers: bool = True,
+                max_slots: int = 2) -> DiSCoServer:
     dev_e, srv_e = engines
+    server = BatchedServer(srv_e.cfg, srv_e.params, max_slots=max_slots,
+                           max_len=96)
+    server.warmup(prompt_lens=(16, 48))
     if constraint == "device":
         cm = CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6)
     else:
@@ -194,8 +334,9 @@ def _make_disco(engines, constraint: str) -> DiSCoServer:
     return DiSCoServer(
         sched,
         DeviceEndpoint(dev_e),
-        ServerEndpoint(srv_e, NetworkModel(rtt_mean=0.05, queue_spike_prob=0.3)),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.05)),
         rng=np.random.default_rng(7),
+        cancel_losers=cancel_losers,
     )
 
 
@@ -212,6 +353,84 @@ def test_disco_server_end_to_end(engines, constraint):
         assert r.ttft > 0
         assert r.cost > 0
         assert all(dt >= 0 for dt in r.tbt_series)
+        assert r.generated_tokens >= len(r.tokens)
+        assert r.wasted_tokens == r.generated_tokens - len(r.tokens)
+
+
+def test_disco_serve_many_concurrent(engines):
+    """The multi-request event loop: overlapping arrivals race a shared
+    contended server; every request completes with consistent accounting and
+    results come back in arrival order."""
+    disco = _make_disco(engines, "server")
+    rng = np.random.default_rng(11)
+    reqs = [
+        (0.02 * i, rng.integers(0, 1024, size=int(n)).astype(np.int32), 10)
+        for i, n in enumerate(rng.integers(4, 40, size=9))
+    ]
+    results = disco.serve_many(reqs)
+    assert len(results) == len(reqs)
+    for (arrival, _, max_new), r in zip(reqs, results):
+        assert r.arrival == arrival
+        assert 1 <= len(r.tokens) <= max_new
+        assert r.ttft > 0
+        assert r.wasted_tokens == r.generated_tokens - len(r.tokens)
+
+
+def test_race_loser_stops_within_one_chunk(engines):
+    """Acceptance: the race loser executes at most ONE decode chunk past the
+    winner's first token (counted in engine dispatches), instead of
+    generating all max_new tokens."""
+    disco = _make_disco(engines, "server")
+    server = disco.server.server
+    rid_before = server.next_id
+    prompt = np.arange(40, dtype=np.int32)    # long: both endpoints race
+    r = disco.serve(prompt, 24)
+    assert r.winner is Endpoint.DEVICE        # local prefill beats RTT + queue
+    loser_rid = rid_before                    # the request's server submission
+    assert server.decode_dispatches.get(loser_rid, 0) <= 1
+    # waste is bounded by one chunk of loser overrun (+ its prefill token)
+    assert r.wasted_tokens <= 1 + server.decode_chunk
+    assert r.generated_tokens < 2 * 24
+
+
+class _RaceBothPolicy(DispatchPolicy):
+    def __init__(self, device_wait: float):
+        self.device_wait = device_wait
+
+    def decide(self, length, rng=None):
+        return DispatchDecision(use_server=True, use_device=True,
+                                device_wait=self.device_wait)
+
+
+def test_device_never_starts_when_server_wins_first(engines):
+    """Lazy activation: if the server's first token lands before the device
+    wait elapses, the device prefill is never dispatched — zero device
+    compute, zero waste (the §4.2 wait-policy saving)."""
+    disco = _make_disco(engines, "server")
+    disco.sched.policy = _RaceBothPolicy(device_wait=30.0)
+    # max_new below min_remaining_tokens: no migration, pure race isolation
+    r = disco.serve(np.arange(12, dtype=np.int32), 4)
+    assert r.winner is Endpoint.SERVER
+    assert r.generated_tokens == len(r.tokens)
+    assert r.wasted_tokens == 0
+
+
+def test_no_cancellation_control_wastes_more(engines):
+    """Acceptance: with cancellation off (control), race losers generate to
+    completion — wasted tokens rise by >= 2x; the delivered streams are
+    bit-identical in both modes."""
+    rng = np.random.default_rng(5)
+    reqs = [
+        (0.01 * i, rng.integers(0, 1024, size=40).astype(np.int32), 10)
+        for i in range(5)
+    ]
+    out_c = _make_disco(engines, "server", cancel_losers=True).serve_many(reqs)
+    out_n = _make_disco(engines, "server", cancel_losers=False).serve_many(reqs)
+    wasted_c = sum(r.wasted_tokens for r in out_c)
+    wasted_n = sum(r.wasted_tokens for r in out_n)
+    assert wasted_n >= 2 * max(wasted_c, 1)
+    for a, b in zip(out_c, out_n):
+        assert a.tokens == b.tokens
 
 
 def test_disco_migration_happens_when_decode_cost_gap_large(engines):
@@ -225,3 +444,38 @@ def test_disco_migration_happens_when_decode_cost_gap_large(engines):
     # delivered stream never stalls badly: P99 TBT within 3x consumption gap
     tbts = np.concatenate([r.tbt_series for r in results if r.tbt_series])
     assert np.percentile(tbts, 99) < 3.0 / 30.0 + 0.5
+
+
+def test_migration_under_load_matches_no_migration_stream(engines):
+    """Acceptance: with IDENTICAL models on both endpoints, migration under
+    concurrent load is lossless — every delivered token stream equals the
+    no-migration greedy baseline (consistent-prefix hand-off, §4.3)."""
+    dev_e, _ = engines
+    server = BatchedServer(dev_e.cfg, dev_e.params, max_slots=2, max_len=96)
+    server.warmup(prompt_lens=(16,))
+    cm = CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6)
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        cm,
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(rng.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+        budget=0.5,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.005),
+    )
+    disco = DiSCoServer(
+        sched,
+        DeviceEndpoint(dev_e),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
+        rng=np.random.default_rng(7),
+    )
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, dev_e.cfg.vocab, size=12).astype(np.int32)
+               for _ in range(4)]
+    baseline = [dev_e.generate(p, 40).tokens for p in prompts]
+    results = disco.serve_many(
+        [(0.002 * i, p, 40) for i, p in enumerate(prompts)]
+    )
+    assert any(r.migrated for r in results)
+    for r, base in zip(results, baseline):
+        assert r.winner is Endpoint.DEVICE
+        assert r.tokens == base

@@ -1,7 +1,5 @@
 """Training substrate tests: loss decreases, microbatching is exact,
 optimizers behave, checkpoints roundtrip."""
-import itertools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data import lm_batches, masked_audio_batches
-from repro.models import forward, init_params
+from repro.models import init_params
 from repro.training import (
     adafactor,
     adamw,
