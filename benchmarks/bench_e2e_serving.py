@@ -14,10 +14,16 @@ TTFT p50/p95/p99, mean TBT, wasted-tokens ratio, and unified cost for:
 * ``device_only``    — the llama.cpp-style baseline: no queueing, but TTFT
                        scales with prompt length (§3)
 
-Compute times are real JAX wall-clock; queueing is emergent slot
-contention. Emits ``BENCH_e2e_serving.json`` at the repo root — the
-TTFT-tail-under-load perf trajectory — plus CSV rows for
-``benchmarks/run.py``.
+Compute times are real JAX wall-clock; queueing is emergent MEMORY
+contention: the shared server runs the paged KV pool, admission is
+block-capacity-driven (``_ROWS`` batch rows over ``_NUM_BLOCKS`` blocks of
+``_BLOCK_SIZE`` tokens, fewer blocks than the rows could consume), so under
+load requests queue because the pool is full — per point the systems report
+``blocks_in_use_peak`` / ``queued_on_memory`` / ``preemptions``. Loser
+cancellation crosses the uplink RTT before it lands (``cancel_lag_tokens``),
+so even disco wastes the propagation window's tokens. Emits
+``BENCH_e2e_serving.json`` at the repo root — the TTFT-tail-under-load perf
+trajectory — plus CSV rows for ``benchmarks/run.py``.
 
     PYTHONPATH=src python -m benchmarks.bench_e2e_serving [--smoke]
 """
@@ -49,10 +55,14 @@ from .common import Row
 _JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_e2e_serving.json"
 
 _LOADS = (0.4, 1.2, 3.0)     # offered load ρ: relaxed / saturated / overloaded
-_SLOTS = 2
+_ROWS = 4                    # batch rows — NOT the binding constraint
+_BLOCK_SIZE = 16
+_NUM_BLOCKS = 11             # 10 usable: ~2-3 concurrent requests of memory
+_CAL_SLOTS = 2               # effective memory concurrency, calibrates ρ
 _MAX_LEN = 96
 _MAX_NEW = 16
 _MAX_PROMPT = 40             # prefill buckets 16/32/64 are pre-warmed
+_LONG_FRACTION = 0.25        # max-length prompts: ragged block demand
 _N_REQUESTS = 18
 _RTT = 0.05
 
@@ -81,7 +91,8 @@ def _build(system: str, dev_engine: InferenceEngine, srv_params,
            seed: int) -> DiSCoServer:
     server = BatchedServer(
         paper_models.TINY_SERVER, srv_params,
-        max_slots=_SLOTS, max_len=_MAX_LEN, decode_chunk=4,
+        max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
+        block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS,
     )
     server.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     sched = _make_scheduler(np.random.default_rng(seed))
@@ -106,6 +117,7 @@ def _estimate_service_time(dev_engine: InferenceEngine, srv_params) -> float:
     server = BatchedServer(
         paper_models.TINY_SERVER, srv_params,
         max_slots=1, max_len=_MAX_LEN, decode_chunk=4,
+        block_size=_BLOCK_SIZE,      # ample pool: pilot measures pure service
     )
     server.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     rng = np.random.default_rng(0)
@@ -155,8 +167,9 @@ def run(smoke: bool = False) -> list[Row]:
     for rho in loads:
         trace_rng = np.random.default_rng(42)
         trace = make_serving_trace(
-            trace_rng, n_req, service_time=service, slots=_SLOTS, rho=rho,
+            trace_rng, n_req, service_time=service, slots=_CAL_SLOTS, rho=rho,
             max_prompt=_MAX_PROMPT, max_new=_MAX_NEW,
+            long_fraction=_LONG_FRACTION,
         )
         prompt_rng = np.random.default_rng(7)
         requests = [
@@ -170,12 +183,15 @@ def run(smoke: bool = False) -> list[Row]:
             results = disco.serve_many([(a, p.copy(), m) for a, p, m in requests])
             wall_us = (time.perf_counter() - t0) * 1e6
             m = _metrics(results)
+            m.update(disco.server.server.pool_stats())  # memory-pressure accounting
             point["systems"][system] = m
             rows.append(Row(
                 f"e2e_serving/rho{rho:g}/{system}", wall_us,
                 f"p99_ttft_ms={m['ttft_p99_s']*1e3:.1f};"
                 f"tbt_ms={m['tbt_mean_s']*1e3:.1f};"
                 f"wasted={m['wasted_ratio']:.3f};"
+                f"blk_peak={m.get('blocks_in_use_peak', 0)};"
+                f"q_mem={m.get('queued_on_memory', 0)};"
                 f"cost={m['cost_mean']:.2e}",
             ))
         points.append(point)
@@ -207,7 +223,12 @@ def run(smoke: bool = False) -> list[Row]:
     if not smoke:
         _JSON_PATH.write_text(json.dumps({
             "bench": "e2e_serving",
-            "slots": _SLOTS,
+            "server_rows": _ROWS,
+            "num_blocks": _NUM_BLOCKS,
+            "block_size": _BLOCK_SIZE,
+            "calibration_slots": _CAL_SLOTS,
+            "admission": "paged_block_capacity",
+            "long_prompt_fraction": _LONG_FRACTION,
             "n_requests": n_req,
             "max_new": _MAX_NEW,
             "service_time_s": service,

@@ -1,0 +1,147 @@
+"""Prefill-throughput trajectory: paged vs dense cache-construction paths.
+
+Measures prefill tokens/s at several (batch, prompt-length) points for the
+two cache write paths the serving stack can take:
+
+* ``dense`` — one batched prefill dispatch writing a dense head-major
+  ``(L, B, K, max_len, D)`` cache (the per-slot reservation the paged pool
+  replaces).
+* ``paged`` — per-row prefills scattering K/V into pool blocks through the
+  block allocator (admit -> scatter -> release), exactly the admission path
+  ``BatchedServer`` runs per request. Rows dispatch one at a time because
+  that is how continuous batching admits them (no global barrier).
+
+The paged path pays a per-row dispatch and the block scatter but only
+allocates the blocks the prompt needs; the dense path amortizes one big
+dispatch but reserves ``max_len`` per row. Emits ``BENCH_prefill.json`` at
+the repo root — the prefill-throughput perf trajectory — plus CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_prefill_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import init_params
+from repro.serving import InferenceEngine
+
+from .common import Row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_prefill.json"
+
+_MAX_LEN = 256
+_BLOCK_SIZE = 16
+_POINTS = ((1, 64), (4, 64), (1, 128), (4, 128), (8, 64))
+_REPS = 5
+
+
+def _median_us(fn, reps: int = _REPS) -> float:
+    fn()                                   # one extra warm call
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def run(smoke: bool = False) -> list[Row]:
+    cfg = paper_models.TINY_SERVER
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    points = _POINTS[:1] if smoke else _POINTS
+    max_batch = max(b for b, _ in points)
+
+    dense = InferenceEngine(cfg, params, max_len=_MAX_LEN)
+    paged = InferenceEngine(
+        cfg, params, max_len=_MAX_LEN, paged=True,
+        block_size=_BLOCK_SIZE, kv_rows=max_batch,
+    )
+    lengths = sorted({length for _, length in points})
+    dense.warmup(batch=1, prompt_lens=tuple(lengths))
+    for b in sorted({b for b, _ in points}):
+        if b > 1:
+            dense.warmup(batch=b, prompt_lens=tuple(lengths))
+    paged.warmup(prompt_lens=tuple(lengths))
+
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+    out_points = []
+    for batch, length in points:
+        prompts = rng.integers(0, cfg.vocab, size=(batch, length)).astype(np.int32)
+
+        def run_dense():
+            tok, _ = dense.prefill(prompts)
+            return tok
+
+        def run_paged():
+            # the continuous-batching admission path: per-row admit+scatter,
+            # blocks released after timing (steady-state pool)
+            for i in range(batch):
+                rid = paged._next_rid
+                paged._next_rid += 1
+                paged._paged_admit_prefill(rid, prompts[i])
+            for rid in list(paged.kv.tables):
+                paged.kv.release(rid)
+
+        dense_us = _median_us(run_dense)
+        paged_us = _median_us(run_paged)
+        tokens = batch * length
+        point = {
+            "batch": batch,
+            "length": length,
+            "dense_us": dense_us,
+            "paged_us": paged_us,
+            "dense_tokens_per_s": tokens / (dense_us * 1e-6),
+            "paged_tokens_per_s": tokens / (paged_us * 1e-6),
+            "paged_vs_dense": dense_us / paged_us,
+            "paged_blocks_per_row": paged.kv.prefill_demand(length, length),
+            "dense_reserved_tokens_per_row": _MAX_LEN,
+        }
+        out_points.append(point)
+        rows.append(Row(
+            f"prefill/b{batch}_s{length}/dense", dense_us,
+            f"tokens_per_s={point['dense_tokens_per_s']:.0f}",
+        ))
+        rows.append(Row(
+            f"prefill/b{batch}_s{length}/paged", paged_us,
+            f"tokens_per_s={point['paged_tokens_per_s']:.0f};"
+            f"vs_dense={point['paged_vs_dense']:.2f}",
+        ))
+
+    ratios = np.array([p["paged_vs_dense"] for p in out_points])
+    headline = {
+        "geomean_paged_vs_dense": float(np.exp(np.log(ratios).mean())),
+        "min_paged_vs_dense": float(ratios.min()),
+    }
+    rows.append(Row(
+        "prefill/headline", 0.0,
+        f"geomean_paged_vs_dense={headline['geomean_paged_vs_dense']:.2f}",
+    ))
+    if not smoke:
+        _JSON_PATH.write_text(json.dumps({
+            "bench": "prefill_throughput",
+            "model": cfg.name,
+            "max_len": _MAX_LEN,
+            "block_size": _BLOCK_SIZE,
+            "points": out_points,
+            "headline": headline,
+        }, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single point, no JSON emission")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)

@@ -11,6 +11,7 @@ import time
 from . import (
     bench_decode_throughput,
     bench_e2e_serving,
+    bench_prefill_throughput,
     bench_fig23_stability,
     bench_roofline_endpoints,
     bench_table4_coldstart,
@@ -42,6 +43,7 @@ MODULES = {
     "table4": bench_table4_coldstart,
     "decode": bench_decode_throughput,
     "e2e_serving": bench_e2e_serving,
+    "prefill": bench_prefill_throughput,
 }
 
 

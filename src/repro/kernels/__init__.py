@@ -1,3 +1,12 @@
-from .ops import decode_attention_op, flash_prefill_op, on_tpu, ssd_scan_op
+from .ops import (
+    decode_attention_op,
+    flash_prefill_op,
+    on_tpu,
+    paged_decode_attention_op,
+    ssd_scan_op,
+)
 
-__all__ = ["decode_attention_op", "flash_prefill_op", "on_tpu", "ssd_scan_op"]
+__all__ = [
+    "decode_attention_op", "flash_prefill_op", "on_tpu",
+    "paged_decode_attention_op", "ssd_scan_op",
+]

@@ -15,9 +15,15 @@ from __future__ import annotations
 from .compat import on_tpu
 from .decode_attention import decode_attention as decode_attention_kernel
 from .flash_prefill import flash_prefill as flash_prefill_kernel
+from .paged_decode_attention import (
+    paged_decode_attention as paged_decode_attention_kernel,
+)
 from .ssd_scan import ssd_scan as ssd_scan_kernel
 
-__all__ = ["flash_prefill_op", "decode_attention_op", "ssd_scan_op", "on_tpu"]
+__all__ = [
+    "flash_prefill_op", "decode_attention_op", "paged_decode_attention_op",
+    "ssd_scan_op", "on_tpu",
+]
 
 
 def flash_prefill_op(q, k, v, *, causal=True, window=0,
@@ -37,6 +43,18 @@ def decode_attention_op(q, k_cache, v_cache, lengths, *, window=0,
     return decode_attention_kernel(
         q, k_cache, v_cache, lengths, window=window,
         block_k=block_k, interpret=interpret,
+    )
+
+
+def paged_decode_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+                              window=0, interpret=None):
+    """Paged flash-decode: (B,H,D) against a shared (N,K,bs,D) block pool
+    addressed through (B,MB) page tables. The pool layout matches
+    ``models.paged.init_paged_pages``; the page table rides in via scalar
+    prefetch and becomes the kernel's DMA index map (gather-free)."""
+    return paged_decode_attention_kernel(
+        q, k_pages, v_pages, block_tables, lengths,
+        window=window, interpret=interpret,
     )
 
 

@@ -9,8 +9,17 @@ from .model import (
     prefill,
     window_vector,
 )
+from .paged import (
+    init_paged_pages,
+    paged_decode_n,
+    paged_decode_step,
+    paged_prefill,
+    supports_paged,
+)
 
 __all__ = [
     "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
     "init_params", "param_shapes", "prefill", "window_vector",
+    "init_paged_pages", "paged_decode_n", "paged_decode_step",
+    "paged_prefill", "supports_paged",
 ]

@@ -1,0 +1,237 @@
+"""Paged-KV decode path: model step functions over a shared block pool.
+
+Physical KV storage is a pool of fixed-size token blocks ``(L, N, K, bs, D)``
+shared by every request; each batch row addresses its sequence through a
+``(B, MB)`` page table (``repro.serving.kv_pool`` owns the host-side
+allocation; block 0 is the reserved NULL/trash block). This decouples memory
+from batch rows: a 32-token reply holds 2–3 blocks while a 2k-token one
+holds 128, instead of both reserving a dense ``max_len`` row.
+
+Three step functions mirror the dense trio in ``model.py``:
+
+  paged_prefill(params, cfg, pages, tokens, lengths, block_ids)
+  paged_decode_step(params, cfg, pages, block_tables, lengths, token, ...)
+  paged_decode_n(...)    # fused scan of paged_decode_step
+
+Unlike the dense cache, ``lengths``/page tables are *caller-owned* (host
+side): they ride in as arguments per dispatch and the advanced lengths ride
+back out, so the pool arrays are the only donated device state and many
+independent requests can share them safely.
+
+Attention reads go through ``paged_gather_kv`` (XLA gather — the production
+CPU path) or the Pallas ``paged_decode_attention`` kernel (TPU: the page
+table becomes the DMA index map, no materialized gather). Only causal
+attention-only token models are supported — SSM state is per-row (nothing to
+page) and MLA's compressed cache needs its own block shape; those fall back
+to the dense cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention,
+    paged_gather_kv,
+)
+
+from .attention import decode_attention
+from .config import ModelConfig
+from .layers import _qkv, ffn_apply, rms_norm
+from .model import Cache, _embed, _logits, prefill, window_vector
+from .rope import apply_rope
+
+__all__ = [
+    "supports_paged",
+    "init_paged_pages",
+    "paged_prefill",
+    "paged_decode_step",
+    "paged_decode_n",
+    "NULL_BLOCK",
+]
+
+NULL_BLOCK = 0     # reserved trash block: page-table padding + frozen-row
+                   # writes land here (serving.kv_pool re-exports this —
+                   # the allocator never hands block 0 to a request)
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged KV is sound for causal attention-only token models: recurrent
+    SSM state is per-row (not paged) and MLA caches compressed latents with
+    a different block shape; encoders have no decode path at all."""
+    return (
+        cfg.has_attention
+        and not cfg.use_mla
+        and not cfg.has_ssm
+        and cfg.causal
+        and cfg.embed_inputs
+        and not cfg.is_encoder
+    )
+
+
+def init_paged_pages(cfg: ModelConfig, num_blocks: int, block_size: int) -> Cache:
+    """Zero-initialized block pool: {"k","v"} of (L, N, K, bs, D)."""
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name}: paged KV unsupported for this architecture")
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, num_blocks, cfg.n_kv_heads, block_size, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def paged_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    tokens: jnp.ndarray,      # (1, S) bucket-padded, S % block_size == 0
+    lengths: jnp.ndarray,     # (1,) true prompt length
+    block_ids: jnp.ndarray,   # (S // block_size,) physical blocks for the prompt
+):
+    """Alloc-on-prefill write path: run the dense prefill math for one row
+    and scatter its K/V into the request's blocks (one (nb,)-indexed scatter
+    per pool array — whole blocks move, not tokens). Pad-tail positions land
+    in the tail block and are masked by ``lengths`` at read time.
+
+    Returns (first_token (1,) int32, pages).
+    """
+    s = tokens.shape[1]
+    bs = pages["k"].shape[3]
+    assert s % bs == 0, (s, bs)
+    nb = s // bs
+    assert block_ids.shape[0] == nb, (block_ids.shape, nb)
+    last, cache = prefill(params, cfg, tokens, s, lengths=lengths)
+    new_pages = dict(pages)
+    for key in ("k", "v"):
+        arr = cache[key][:, 0]                       # (L, K, S, D) head-major
+        l, kh, _, d = arr.shape
+        blocks = arr.reshape(l, kh, nb, bs, d).transpose(0, 2, 1, 3, 4)
+        new_pages[key] = pages[key].at[:, block_ids].set(
+            blocks.astype(pages[key].dtype)
+        )
+    return jnp.argmax(last, axis=-1).astype(jnp.int32), new_pages
+
+
+def _write_targets(block_tables, new_lengths, ok, block_size):
+    """(physical block, in-block offset) of each row's next KV write. Frozen
+    rows (``ok`` False) are routed to the NULL/trash block so the shared
+    scatter never clobbers live data."""
+    pos = new_lengths - 1
+    mb = block_tables.shape[1]
+    slot = jnp.clip(pos // block_size, 0, mb - 1)
+    wb = jnp.take_along_axis(block_tables, slot[:, None], axis=1)[:, 0]
+    wb = jnp.where(ok, wb, NULL_BLOCK)
+    wo = jnp.where(ok, pos % block_size, 0)
+    return wb, wo
+
+
+def _paged_decode_layer_body(cfg, lengths, block_tables, wb, wo, use_kernel):
+    def body(x, xs):
+        lp, window, pg = xs                        # pg: per-layer (N,K,bs,D)
+        h = rms_norm(x, lp["mixer_norm"])
+        q, k, v = _qkv(cfg, lp, h)
+        pos = (lengths - 1)[:, None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        # scatter the single new K/V per row into (block, offset)
+        k_pages = pg["k"].at[wb, :, wo, :].set(k[:, 0].astype(pg["k"].dtype))
+        v_pages = pg["v"].at[wb, :, wo, :].set(v[:, 0].astype(pg["v"].dtype))
+        if use_kernel:
+            # page table as DMA index map (TPU); window statically 0 —
+            # paged_decode_n rejects windowed configs on this path
+            o = paged_decode_attention(
+                q[:, 0], k_pages, v_pages, block_tables, lengths
+            )
+        else:
+            k_seq = paged_gather_kv(k_pages, block_tables)
+            v_seq = paged_gather_kv(v_pages, block_tables)
+            o = decode_attention(q[:, 0], k_seq, v_seq, lengths, window=window)
+        out = jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None, :]
+        x = x + out.astype(x.dtype)
+        if cfg.has_ffn:
+            f, _ = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+        return x, {"k": k_pages, "v": v_pages}
+
+    return body
+
+
+def paged_decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    block_tables: jnp.ndarray,   # (B, MB) int32, NULL-padded
+    lengths: jnp.ndarray,        # (B,) cache entries currently valid
+    token: jnp.ndarray,          # (B,) most recent token per row
+    *,
+    max_len: int,
+    active: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+):
+    """One paged decode step. Row-freeze semantics match dense ``decode_n``:
+    rows stop at ``max_len - 1`` entries and ``active=False`` rows keep
+    lengths frozen and re-emit their input token (their write is routed to
+    the trash block instead of merged out).
+
+    Returns (token_out (B,), logits (B, V) f32, pages, new_lengths).
+    """
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    if use_kernel and any(
+        cfg.window and not cfg.layer_is_global(i) for i in range(cfg.n_layers)
+    ):
+        raise ValueError("paged kernel path supports window=0 layers only")
+    ok = lengths < (max_len - 1)
+    if active is not None:
+        ok &= active
+    new_lengths = jnp.where(ok, lengths + 1, lengths)
+    bs = pages["k"].shape[3]
+    wb, wo = _write_targets(block_tables, new_lengths, ok, bs)
+    h0 = _embed(params, cfg, token[:, None])
+    body = _paged_decode_layer_body(
+        cfg, new_lengths, block_tables, wb, wo, use_kernel
+    )
+    h, new_pages = jax.lax.scan(
+        body, h0, (params["layers"], window_vector(cfg), pages)
+    )
+    logits = _logits(params, cfg, h)[:, 0]
+    new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_tok = jnp.where(ok, new_tok, token)
+    return out_tok, logits, new_pages, new_lengths
+
+
+def paged_decode_n(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    token: jnp.ndarray,
+    num_steps: int,
+    *,
+    max_len: int,
+    active: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+):
+    """Fused greedy multi-token paged decode: ``num_steps`` steps under one
+    ``lax.scan``, one dispatch per chunk. Callers must have extended each
+    row's page table to cover its share of the chunk; steps past a row's
+    extension write the NULL-padded table tail (the trash block) and their
+    tokens are discarded host-side — same contract as the dense tail
+    rounding.
+
+    Returns (tokens (num_steps, B) int32, pages, new_lengths).
+    """
+    def body(carry, _):
+        tok, lens, pg = carry
+        out_tok, _, pg, lens = paged_decode_step(
+            params, cfg, pg, block_tables, lens, tok,
+            max_len=max_len, active=active, use_kernel=use_kernel,
+        )
+        return (out_tok, lens, pg), out_tok
+
+    (token, lengths, pages), toks = jax.lax.scan(
+        body, (token, lengths, pages), None, length=num_steps
+    )
+    return toks, pages, lengths

@@ -3,12 +3,20 @@
 Three layers on one shared virtual timeline (compute = measured wall-clock,
 network = sampled RTT, queueing = emergent slot contention):
 
+* ``kv_pool``  — the paged KV-cache memory manager: a shared pool of fixed-
+  size token blocks with per-request page tables (``BlockPool`` free-list +
+  ``KVPoolManager`` alloc-on-prefill / extend-on-decode / free-on-cancel /
+  clone-on-migration). Physical pool arrays live in ``repro.models.paged``;
+  the Pallas paged-decode kernel in ``repro.kernels.paged_decode_attention``.
 * ``engine``  — jitted prefill/decode + ``EngineStream`` (lazy pulled token
-  source) + ``BatchedServer`` (virtual-time continuous batching with
-  per-row admission, incremental delivery, and ``cancel(rid)``).
+  source, per-request block allocation on paged engines) + ``BatchedServer``
+  (virtual-time continuous batching; admission is block-capacity-driven on
+  paged models, with recompute preemption when the pool runs dry, and
+  ``cancel(rid)`` returns blocks within the same tick).
 * ``endpoint`` — ``DeviceTokenStream`` / ``ServerTokenStream`` incremental
-  event sources racing on the timeline; cancellation stops a loser after at
-  most one in-flight decode chunk.
+  event sources racing on the timeline; cancelling a server-side loser takes
+  one uplink RTT to land (a queued loser can slip into prefill meanwhile),
+  a device-side loser stops after at most one in-flight decode chunk.
 * ``disco_driver`` — the discrete-event loop holding many concurrent
   requests: dispatch racing (§4.2), loser cancellation, token-ID migration
   into the same contended scheduler (§4.3), paced delivery + QoE/cost/waste
@@ -24,10 +32,12 @@ from .endpoint import (
     TokenEvent,
 )
 from .engine import BatchedServer, EngineStream, GenerationResult, InferenceEngine
+from .kv_pool import BlockPool, KVPoolManager, PageTable, blocks_for_tokens
 
 __all__ = [
     "DiSCoServer", "ServedRequest",
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
     "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
+    "BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens",
 ]

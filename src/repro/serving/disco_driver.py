@@ -247,6 +247,11 @@ class DiSCoServer:
             # control runtime: losers keep generating to completion — hold
             # the request open so their contention and waste are realized
             return not self._streams_of(r)
+        # a cancelled server loser keeps wasting tokens until its cancel
+        # crosses the uplink: hold the request open so the loop advances the
+        # server past the landing and the waste accounting is final
+        if any(getattr(st, "cancel_in_flight", False) for st in r.all_streams):
+            return False
         return True
 
     # -- event handling ----------------------------------------------------
@@ -264,7 +269,10 @@ class DiSCoServer:
             if self.cancel_losers:
                 for other in r.streams.values():
                     if other is not st:
-                        other.cancel()
+                        # issued at the winner's first-token time: a server-
+                        # side loser is reached one uplink RTT later, so a
+                        # queued loser can still slip into prefill meanwhile
+                        other.cancel(at=ev.t)
             if len(r.tokens) >= r.max_new:
                 r.done = True
                 return
@@ -290,7 +298,7 @@ class DiSCoServer:
                 r.handoff_done = True
                 r.mig_skip = len(r.tokens) - r.mig_prefix
                 if self.cancel_losers:
-                    r.delivery.cancel()
+                    r.delivery.cancel(at=ev.t)
                 r.delivery = st
             if r.mig_skip > 0:
                 r.mig_skip -= 1

@@ -98,7 +98,9 @@ class DeviceTokenStream:
     def done(self) -> bool:
         return not self._buf and self._src.done
 
-    def cancel(self) -> None:
+    def cancel(self, at: Optional[float] = None) -> None:
+        """Local cancellation is instantaneous (no network hop): ``at`` is
+        accepted for interface symmetry with the server stream and ignored."""
         self._src.cancel()
         self._buf.clear()
 
@@ -158,19 +160,26 @@ class ServerTokenStream:
 
     Clock-driven: the server generates autonomously as the event loop
     advances it with ``run_until``; this stream only drains the request's
-    incremental events and adds the downlink latency. ``cancel`` frees the
-    server row immediately (the row is reusable within the same tick).
+    incremental events and adds the downlink latency.
+
+    ``cancel(at=t)`` models cancel-propagation latency (§4.2 wasted-compute
+    accounting): the driver's cancel crosses the uplink, reaching the server
+    at ``t + uplink`` — until then the request keeps its place, so a queued
+    race loser can slip into prefill and burn pool blocks before the cancel
+    lands. Delivery to this client still stops instantly (tokens arriving
+    after a local cancel are discarded, and counted as waste).
     """
 
     pull_driven = False
     kind = Endpoint.SERVER
 
     def __init__(self, server: BatchedServer, rid: int, start_at: float,
-                 downlink: float, prefill_tokens: int):
+                 downlink: float, prefill_tokens: int, uplink: float = 0.0):
         self.server = server
         self.rid = rid
         self.start_at = float(start_at)
         self.downlink = float(downlink)
+        self.uplink = float(uplink)
         self._prefill_tokens = int(prefill_tokens)
         self._buf: deque[TokenEvent] = deque()
         self._cancelled = False
@@ -191,9 +200,16 @@ class ServerTokenStream:
             self._cancelled or self.server.is_finished(self.rid)
         )
 
-    def cancel(self) -> None:
+    def cancel(self, at: Optional[float] = None) -> None:
+        """Stop delivery now; stop the server-side request either now
+        (``at=None`` — e.g. end-of-request cleanup) or one uplink RTT after
+        the virtual issue time ``at``."""
+        if self._cancelled:
+            return                       # the earlier cancel is already in flight
         self._cancelled = True
-        self.server.cancel(self.rid)
+        self.server.cancel(
+            self.rid, at=None if at is None else float(at) + self.uplink
+        )
         self._buf.clear()
 
     # -- event access ------------------------------------------------------
@@ -220,6 +236,13 @@ class ServerTokenStream:
         return ev
 
     # -- accounting --------------------------------------------------------
+
+    @property
+    def cancel_in_flight(self) -> bool:
+        """True while our cancel is still crossing the uplink: the server
+        keeps generating (wasting) tokens until it lands, so final waste
+        accounting must wait for it."""
+        return self._cancelled and self.server.cancel_pending(self.rid)
 
     @property
     def prefilled(self) -> bool:
@@ -298,7 +321,7 @@ class ServerEndpoint:
         )
         return ServerTokenStream(
             self.server, rid, start_at, downlink=rtt / 2.0,
-            prefill_tokens=int(np.asarray(tokens).shape[0]),
+            prefill_tokens=int(np.asarray(tokens).shape[0]), uplink=rtt / 2.0,
         )
 
     def open_stream(self, prompt: np.ndarray, max_new: int,

@@ -20,9 +20,13 @@ Two incremental interfaces feed the DiSCo event loop:
   at most one in-flight decode chunk.
 * ``BatchedServer`` — a virtual-time scheduler: each tick (one row-prefill
   admission or one fused decode chunk across active rows) advances a virtual
-  clock by the tick's measured wall-clock compute, requests queue until a row
-  frees, tokens are delivered incrementally per request id, and
-  ``cancel(rid)`` frees the row immediately for the next admission.
+  clock by the tick's measured wall-clock compute, tokens are delivered
+  incrementally per request id, and ``cancel(rid)`` frees the row — and its
+  KV blocks — immediately for the next admission. On paged-capable models
+  (causal attention-only) KV memory is a shared block pool managed by
+  ``kv_pool.KVPoolManager``: admission is block-capacity-driven, decode
+  extends page tables block-by-block, and pool exhaustion preempts the
+  newest request (recompute) instead of overcommitting.
 """
 from __future__ import annotations
 
@@ -37,8 +41,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_n, decode_step, init_cache, prefill
+from repro.models import (
+    decode_n,
+    decode_step,
+    init_cache,
+    init_paged_pages,
+    paged_decode_n,
+    paged_prefill,
+    prefill,
+    supports_paged,
+)
+from repro.kernels.compat import on_tpu
 from repro.models.config import ModelConfig
+
+from .kv_pool import KVPoolManager
 
 __all__ = ["InferenceEngine", "GenerationResult", "EngineStream", "BatchedServer"]
 
@@ -97,6 +113,71 @@ class GenerationResult:
     decode_s_per_token: float
 
 
+def _check_block_size(block_size: int) -> int:
+    """Paged prefill scatters whole blocks of the bucket-padded prompt, so
+    ``block_size`` must divide every bucket length (powers of two from
+    ``_MIN_BUCKET``): it must itself be a power of two <= _MIN_BUCKET."""
+    bs = int(block_size)
+    if bs < 1 or bs > _MIN_BUCKET or bs & (bs - 1):
+        raise ValueError(
+            f"block_size must be a power of two in [1, {_MIN_BUCKET}] "
+            f"(got {block_size}): it has to divide the prefill buckets"
+        )
+    return bs
+
+
+def _paged_windowed(cfg: ModelConfig) -> bool:
+    return any(
+        cfg.window and not cfg.layer_is_global(i) for i in range(cfg.n_layers)
+    )
+
+
+def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
+    """The two jitted paged dispatches shared by InferenceEngine (1-row) and
+    BatchedServer (R-row): a row prefill scattering into the donated pool,
+    and a fused multi-token decode over page tables."""
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def prefill_fn(params, pages, tokens, lengths, block_ids):
+        """Prefill (1, S) and scatter its K/V into the request's blocks.
+        The pool is donated: blocks are written in place."""
+        return paged_prefill(params, cfg, pages, tokens, lengths, block_ids)
+
+    @functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("num_steps",))
+    def decode_fn(params, pages, bt, lengths, tokens, active, num_steps):
+        """Fused multi-token paged decode; inactive/saturated rows write the
+        trash block and keep their lengths frozen."""
+        return paged_decode_n(
+            params, cfg, pages, bt, lengths, tokens, num_steps,
+            max_len=max_len, active=active, use_kernel=use_kernel,
+        )
+
+    return prefill_fn, decode_fn
+
+
+def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
+                       buckets, block_size, rows, max_blocks_per_row,
+                       decode_chunk, num_blocks):
+    """Precompile the paged prefill bucket(s) and decode tail lengths, then
+    return a pristine pool (warmup scribbles on low block ids, never through
+    the allocator)."""
+    for s in buckets:
+        nb = s // block_size
+        _, pages = prefill_fn(
+            params, pages, jnp.zeros((1, s), jnp.int32),
+            jnp.asarray([s], jnp.int32),
+            jnp.arange(1, nb + 1, dtype=jnp.int32),
+        )
+    bt = jnp.zeros((rows, max_blocks_per_row), jnp.int32)
+    lengths = jnp.zeros((rows,), jnp.int32)
+    tokens = jnp.zeros((rows,), jnp.int32)
+    inactive = jnp.zeros((rows,), bool)       # rows stay frozen
+    for n in _tail_sizes(decode_chunk):
+        toks, pages, _ = decode_fn(params, pages, bt, lengths, tokens, inactive, n)
+    jax.block_until_ready(toks)
+    return init_paged_pages(cfg, num_blocks, block_size)
+
+
 def _engine_compute_cfg(cfg: ModelConfig) -> ModelConfig:
     """Backend-aware compute dtype: bfloat16 matmuls are software-emulated on
     the CPU backend (every weight re-converted per step), so serving engines
@@ -118,16 +199,61 @@ class InferenceEngine:
     """Single-model engine with jitted prefill/decode and greedy sampling.
 
     ``decode_chunk`` tokens are decoded per device dispatch / host sync.
+
+    ``paged=True`` switches the generation paths (``generate``,
+    ``open_stream``/``open_replay``, ``replay_then_continue``) onto the
+    block-pooled KV cache: each request allocates fixed-size token blocks
+    from a shared pool on prefill, extends block-by-block as it decodes, and
+    returns them the moment it finishes or is cancelled — so ``kv_rows``
+    concurrent streams share ``num_blocks`` blocks of physical cache instead
+    of each reserving a dense ``max_len`` buffer. ``fork_stream`` clones a
+    live stream's page table + blocks (copy-on-migration) to continue it
+    without a re-prefill. The dense ``prefill``/``decode`` methods remain
+    for callers that manage their own cache.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 decode_chunk: int = 8):
+                 decode_chunk: int = 8, paged: bool = False,
+                 block_size: int = 16, kv_rows: int = 4,
+                 num_blocks: Optional[int] = None,
+                 use_kernel: Optional[bool] = None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
+        self.paged = bool(paged)
+        if self.paged:
+            if not supports_paged(cfg):
+                raise ValueError(
+                    f"{cfg.name}: paged KV needs a causal attention-only "
+                    "token model (SSM/MLA/encoder caches are not paged)"
+                )
+            self.block_size = _check_block_size(block_size)
+            self.max_blocks_per_row = -(-max_len // self.block_size)
+            if num_blocks is None:
+                num_blocks = kv_rows * self.max_blocks_per_row + 1
+            self.kv = KVPoolManager(
+                num_blocks, self.block_size, kv_rows, self.max_blocks_per_row
+            )
+            self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
+            self._next_rid = 0
+            if use_kernel is None:
+                use_kernel = on_tpu() and not _paged_windowed(cfg)
+            self.use_kernel = bool(use_kernel)
+            self._paged_prefill_fn, self._paged_decode_fn = _make_paged_step_fns(
+                cfg, max_len, self.use_kernel
+            )
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def _copy_blocks(pages, src_ids, dst_ids):
+                return {
+                    k: v.at[:, dst_ids].set(v[:, src_ids])
+                    for k, v in pages.items()
+                }
+
+            self._copy_blocks = _copy_blocks
 
         @jax.jit
         def _prefill(params, tokens, lengths):
@@ -161,6 +287,9 @@ class InferenceEngine:
         """Precompile prefill bucket(s) and decode scan lengths. Pass every
         prompt length the workload will see via ``prompt_lens`` so no XLA
         compile lands inside a wall-clock-timed (virtual-timeline) region."""
+        if self.paged:
+            self._warmup_paged(prompt_len, prompt_lens)
+            return
         buckets = sorted({
             _bucket_len(s, self.max_len) if self._bucketed else s
             for s in (prompt_len, *prompt_lens)
@@ -177,6 +306,17 @@ class InferenceEngine:
             toks, cache = self._decode_n(self.params, cache, tok_dev, n)
             tok_dev = toks[-1]
         jax.block_until_ready(tok_dev)
+
+    def _warmup_paged(self, prompt_len: int, prompt_lens: tuple) -> None:
+        buckets = sorted({
+            _bucket_len(s, self.max_len) for s in (prompt_len, *prompt_lens)
+        })
+        self.pages = _warmup_paged_pool(
+            self._paged_prefill_fn, self._paged_decode_fn, self.params,
+            self.cfg, self.pages, buckets=buckets, block_size=self.block_size,
+            rows=1, max_blocks_per_row=self.max_blocks_per_row,
+            decode_chunk=self.decode_chunk, num_blocks=self.kv.pool.num_blocks,
+        )
 
     def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int):
         """Yield (tokens_np (n_valid, B), n_valid) decode chunks after the
@@ -200,6 +340,101 @@ class InferenceEngine:
             emitted += n_valid
             cur_len += n_valid
             tok_dev = toks[-1]
+
+    # -- paged request lifecycle (alloc / extend / free / clone) -----------
+
+    def _paged_admit_prefill(self, rid: int, prompt: np.ndarray) -> int:
+        """Alloc-on-prefill: admit ``rid`` (blocks + row) and run the paged
+        row prefill. Raises ``RuntimeError`` when the pool cannot hold the
+        prompt — the device engine has no queue to fall back on."""
+        s = int(prompt.shape[0])
+        padded, lengths = _pad_to_bucket(
+            prompt[None, :], self.max_len, self._bucketed
+        )
+        sb = int(padded.shape[1])
+        demand = self.kv.prefill_demand(sb, s)
+        table = self.kv.admit(rid, demand, num_tokens=s)
+        if table is None:
+            raise RuntimeError(
+                f"KV pool exhausted: request needs {demand} blocks "
+                f"({self.kv.pool.num_free} free, "
+                f"{'no' if not self.kv.has_free_row else 'a'} free row)"
+            )
+        nb = sb // self.block_size
+        tok, self.pages = self._paged_prefill_fn(
+            self.params, self.pages, jnp.asarray(padded, jnp.int32),
+            jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+        )
+        return int(jax.block_until_ready(tok)[0])
+
+    def _paged_release(self, rid: int) -> None:
+        """Free-on-finish-or-cancel: blocks return to the pool immediately."""
+        self.kv.release(rid)
+
+    def _paged_chunks(self, rid: int, tok_dev, start_len: int, max_new: int,
+                      emitted: int = 1):
+        """Paged twin of ``_chunk_stream``: extend-on-decode grows the page
+        table just ahead of each fused chunk; an extension the pool cannot
+        serve ends the stream early (the rid lands in ``kv.extend_stalls`` —
+        the stream's ``oom`` flag)."""
+        cur = start_len
+        while emitted < max_new:
+            n_valid = min(
+                self.decode_chunk,
+                max_new - emitted,
+                max(0, (self.max_len - 1) - cur),
+            )
+            if n_valid <= 0 or rid not in self.kv.tables:
+                return
+            if not self.kv.extend(rid, cur + n_valid):
+                return                          # pool exhausted mid-decode
+            bt = jnp.asarray(
+                np.asarray(
+                    [self.kv.tables[rid].padded(self.max_blocks_per_row)],
+                    np.int32,
+                )
+            )
+            n_steps = _tail_steps(n_valid, self.decode_chunk)
+            toks, self.pages, _ = self._paged_decode_fn(
+                self.params, self.pages, bt,
+                jnp.asarray([cur], jnp.int32), tok_dev,
+                jnp.ones((1,), bool), n_steps,
+            )
+            toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
+            cur += n_valid
+            self.kv.tables[rid].num_tokens = cur
+            yield toks_np[:n_valid], n_valid
+            emitted += n_valid
+            tok_dev = toks[-1]
+
+    def fork_stream(self, src: "EngineStream", max_new: int) -> "EngineStream":
+        """Copy-on-migration (device-local consistent-prefix hand-off): clone
+        ``src``'s page table into freshly allocated blocks, copy the block
+        contents device-side, and return a new stream that continues decoding
+        from the source's current state with no re-prefill. The source keeps
+        its own blocks and may keep generating (the hand-off race)."""
+        if not self.paged:
+            raise ValueError("fork_stream requires a paged engine")
+        if src._rid is None or src._rid not in self.kv.tables:
+            raise ValueError("source stream has no live KV allocation")
+        rid = self._next_rid
+        self._next_rid += 1
+        res = self.kv.clone(src._rid, rid)
+        if res is None:
+            raise RuntimeError("KV pool exhausted: cannot clone page table")
+        table, pairs = res
+        src_ids = jnp.asarray([a for a, _ in pairs], jnp.int32)
+        dst_ids = jnp.asarray([b for _, b in pairs], jnp.int32)
+        self.pages = self._copy_blocks(self.pages, src_ids, dst_ids)
+        st = EngineStream(self, src._prompt, max_new)
+        st._rid = rid
+        st.prefill_s = 0.0                 # no prefill: state was copied
+        st.tokens_emitted = 0
+        st._chunks = self._paged_chunks(
+            rid, jnp.asarray([src._last_tok], jnp.int32),
+            table.num_tokens, max_new, emitted=0,
+        )
+        return st
 
     def prefill(self, tokens: np.ndarray):
         """tokens: (B, S) int32. Returns (first_token (B,), cache)."""
@@ -229,6 +464,20 @@ class InferenceEngine:
         chunk interval — downstream TBT/QoE series (DiSCo endpoints) keep
         their token-by-token meaning instead of a bursty 0/spike pattern.
         """
+        if self.paged:
+            st = self.open_stream(prompt, max_new)
+            tokens, times = [], []
+            while (chunk := st.next_chunk()) is not None:
+                tokens += chunk[0]
+                times += chunk[1]
+            n_dec = max(len(tokens) - 1, 1)
+            return GenerationResult(
+                tokens=tokens,
+                ttft=st.prefill_s,
+                token_times=times,
+                prefill_s=st.prefill_s,
+                decode_s_per_token=(times[-1] - times[0]) / n_dec,
+            )
         t0 = time.perf_counter()
         tok, cache = self.prefill(prompt[None, :])
         t_first = time.perf_counter()
@@ -258,6 +507,17 @@ class InferenceEngine:
         (no KV transfer), then continue decoding. Returns (replay_seconds,
         iterator of continuation tokens). The continuation decodes in fused
         chunks and buffers them host-side."""
+        if self.paged:
+            st = self.open_replay(prompt, generated, max_new)
+            first = st.next_chunk()          # replay prefill, eager
+
+            def paged_continuation():
+                if first is not None:
+                    yield from first[0]
+                while (c := st.next_chunk()) is not None:
+                    yield from c[0]
+
+            return st.prefill_s, paged_continuation()
         t0 = time.perf_counter()
         full = np.concatenate([prompt, np.asarray(generated, np.int32)])
         tok, cache = self.prefill(full[None, :])
@@ -303,8 +563,10 @@ class EngineStream:
     this applies to replayed (migration) streams too, which previously
     stamped a whole host-buffered chunk with one burst timestamp.
 
-    ``cancel()`` stops all future dispatches and drops the cache reference:
-    a cancelled race loser wastes at most the one chunk that was in flight.
+    ``cancel()`` stops all future dispatches and drops the cache reference
+    (on a paged engine the request's blocks return to the shared pool the
+    same instant): a cancelled race loser wastes at most the one chunk that
+    was in flight.
     """
 
     def __init__(self, engine: InferenceEngine, prompt: np.ndarray, max_new: int):
@@ -318,6 +580,8 @@ class EngineStream:
         self.decode_dispatches = 0    # fused decode-chunk dispatches
         self.tokens_emitted = 0       # includes the prefill token
         self._elapsed = 0.0           # compute-seconds consumed so far
+        self._rid: Optional[int] = None   # paged engines: pool allocation id
+        self._last_tok: Optional[int] = None
 
     @property
     def prefilled(self) -> bool:
@@ -327,6 +591,16 @@ class EngineStream:
     def done(self) -> bool:
         return self.cancelled or self.exhausted
 
+    @property
+    def oom(self) -> bool:
+        """True when a paged stream was truncated because the pool could not
+        extend its page table mid-decode."""
+        return (
+            self.engine.paged
+            and self._rid is not None
+            and self._rid in self.engine.kv.extend_stalls
+        )
+
     def next_chunk(self):
         """Pull the next chunk: ``(tokens, rel_times)`` or ``None`` when the
         stream is exhausted or cancelled. Times are seconds of *compute*
@@ -335,6 +609,19 @@ class EngineStream:
             return None
         if self._chunks is None:
             t0 = time.perf_counter()
+            if self.engine.paged:
+                self._rid = self.engine._next_rid
+                self.engine._next_rid += 1
+                tok0 = self.engine._paged_admit_prefill(self._rid, self._prompt)
+                self.prefill_s = time.perf_counter() - t0
+                self._elapsed = self.prefill_s
+                self._chunks = self.engine._paged_chunks(
+                    self._rid, jnp.asarray([tok0], jnp.int32),
+                    int(self._prompt.shape[0]), self._max_new,
+                )
+                self.tokens_emitted = 1
+                self._last_tok = tok0
+                return [tok0], [self.prefill_s]
             tok, cache = self.engine.prefill(self._prompt[None, :])
             self.prefill_s = time.perf_counter() - t0
             self._elapsed = self.prefill_s
@@ -350,6 +637,7 @@ class EngineStream:
         if nxt is None:
             self.exhausted = True
             self._chunks = None
+            self._release()
             return None
         toks_np, n_valid = nxt
         self.decode_dispatches += 1
@@ -358,11 +646,17 @@ class EngineStream:
         self.tokens_emitted += n_valid
         tokens = [int(toks_np[i, 0]) for i in range(n_valid)]
         times = [start + (i + 1) * dur / n_valid for i in range(n_valid)]
+        self._last_tok = tokens[-1]
         return tokens, times
+
+    def _release(self) -> None:
+        if self.engine.paged and self._rid is not None:
+            self.engine._paged_release(self._rid)
 
     def cancel(self) -> None:
         self.cancelled = True
         self._chunks = None           # free the KV cache reference
+        self._release()               # paged: blocks back to the pool now
 
 
 # ---------------------------------------------------------------------------
@@ -375,16 +669,40 @@ class _Slot:
     request_id: int
     remaining: int
     tokens: list
+    prompt: Optional[np.ndarray] = None   # original prompt (preemption resume)
+
+
+@dataclasses.dataclass
+class _Queued:
+    """One queue entry. ``prompt`` is always the ORIGINAL prompt; a
+    preemption-resume entry additionally carries the tokens already emitted
+    (the admission prefill replays prompt + tokens — vLLM-style recompute)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int                           # tokens still to emit
+    tokens: list = dataclasses.field(default_factory=list)
 
 
 class BatchedServer:
     """Event-driven continuous-batching scheduler on a *virtual* timeline.
 
-    One batched KV cache with per-row lengths; requests join free rows after
-    a row prefill and all active rows share fused batched decode chunks.
-    This models the server-side request batching the paper identifies as the
-    source of TTFT tail latency (§2.3): arrivals beyond ``max_slots`` queue,
-    so queueing delay is *emergent contention*, not a sampled scalar.
+    Requests join free rows after a row prefill and all active rows share
+    fused batched decode chunks. This models the server-side request
+    batching the paper identifies as the source of TTFT tail latency (§2.3):
+    queueing delay is *emergent contention*, not a sampled scalar.
+
+    KV memory is PAGED by default (causal attention-only token models): all
+    rows share one block pool (``kv_pool.KVPoolManager``) and admission is
+    capacity-driven — a request is admitted when a row is free AND its
+    prefill's block demand fits the free pool, so under load the *memory*,
+    not an arbitrary slot count, is what queues requests. Decode extends
+    each row's page table block-by-block; when the pool runs dry mid-decode
+    the newest-admitted request is preempted (blocks freed, requeued at the
+    head; on re-admission it re-prefills prompt + emitted tokens and
+    continues — greedy decoding makes the resume lossless). ``cancel(rid)``
+    returns the blocks within the same tick. Architectures without a paged
+    layout (SSM/MLA) keep the dense per-row cache.
 
     Timeline semantics: each scheduler tick is either (a) the admission of
     ONE queued request into a free row — a single row-prefill dispatch, no
@@ -396,12 +714,18 @@ class BatchedServer:
     ``run_until(t)`` processes ticks until the clock passes ``t`` (the last
     tick may overshoot — that is the "in-flight chunk" a cancellation cannot
     recall). Tokens are delivered incrementally per request id via
-    ``pop_events``; ``cancel(rid)`` frees the row immediately, so a queued
-    request can be admitted within the same tick.
+    ``pop_events``. ``cancel(rid, at=t)`` models cancel-propagation latency:
+    the cancel takes effect only once the virtual clock reaches ``t`` (one
+    uplink RTT after the driver issued it), so a queued race loser can slip
+    into prefill and waste blocks meanwhile — ``cancel_lag_tokens`` counts
+    the tokens generated in that window.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
-                 max_len: int = 256, decode_chunk: int = 4):
+                 max_len: int = 256, decode_chunk: int = 4,
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 use_kernel: Optional[bool] = None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -409,40 +733,70 @@ class BatchedServer:
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
-
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def _prefill_row(params, batched_cache, tokens, lengths, row):
-            """Prefill (1, S) and write its cache into row ``row``. The
-            batched cache is donated: the row write happens in place."""
-            logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
-            new = {}
-            for k, v in batched_cache.items():
-                if k == "lengths":
-                    new[k] = v.at[row].set(cache[k][0])
-                else:
-                    new[k] = v.at[:, row].set(cache[k][:, 0])
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new
-
-        @functools.partial(
-            jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
-        )
-        def _decode_chunk(params, cache, tokens, active, num_steps):
-            """Fused multi-token batched decode; inactive/saturated rows keep
-            their cache untouched."""
-            return decode_n(
-                params, cfg, cache, tokens, num_steps,
-                max_len=max_len, active=active,
+        if paged is None:
+            self.paged = supports_paged(cfg)
+        elif paged and not supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV needs a causal attention-only token model"
             )
+        else:
+            self.paged = bool(paged)
 
-        self._prefill_row = _prefill_row
-        self._decode_chunk = _decode_chunk
-        self.cache = init_cache(cfg, max_slots, max_len)
+        if self.paged:
+            self.block_size = _check_block_size(block_size)
+            self.max_blocks_per_row = -(-max_len // self.block_size)
+            if num_blocks is None:
+                num_blocks = max_slots * self.max_blocks_per_row + 1
+            # a lone request must always fit, else an empty server could
+            # deadlock on an unadmittable head-of-queue
+            num_blocks = max(int(num_blocks), self.max_blocks_per_row + 1)
+            self.kv = KVPoolManager(
+                num_blocks, self.block_size, max_slots, self.max_blocks_per_row
+            )
+            self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
+            self.block_tables = np.zeros(
+                (max_slots, self.max_blocks_per_row), np.int32
+            )
+            if use_kernel is None:
+                use_kernel = on_tpu() and not _paged_windowed(cfg)
+            self.use_kernel = bool(use_kernel)
+            self._prefill_row_paged, self._decode_chunk_paged = (
+                _make_paged_step_fns(cfg, max_len, self.use_kernel)
+            )
+        else:
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _prefill_row(params, batched_cache, tokens, lengths, row):
+                """Prefill (1, S) and write its cache into row ``row``. The
+                batched cache is donated: the row write happens in place."""
+                logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
+                new = {}
+                for k, v in batched_cache.items():
+                    if k == "lengths":
+                        new[k] = v.at[row].set(cache[k][0])
+                    else:
+                        new[k] = v.at[:, row].set(cache[k][:, 0])
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new
+
+            @functools.partial(
+                jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
+            )
+            def _decode_chunk(params, cache, tokens, active, num_steps):
+                """Fused multi-token batched decode; inactive/saturated rows
+                keep their cache untouched."""
+                return decode_n(
+                    params, cfg, cache, tokens, num_steps,
+                    max_len=max_len, active=active,
+                )
+
+            self._prefill_row = _prefill_row
+            self._decode_chunk = _decode_chunk
+            self.cache = init_cache(cfg, max_slots, max_len)
+            self._free_rows = list(range(max_slots))
         self._warm = False
         self.clock = 0.0                    # virtual seconds
-        self.queue: deque = deque()         # (rid, prompt, max_new), FIFO
+        self.queue: deque = deque()         # _Queued entries, FIFO
         self.slots: dict[int, _Slot] = {}
         self.rows: dict[int, int] = {}
-        self.free_rows = list(range(max_slots))
         self.row_len = [0] * max_slots      # host-side mirror of cache lengths
         self.next_id = 0
         self.completed: dict[int, list[int]] = {}
@@ -452,6 +806,15 @@ class BatchedServer:
         self.events: dict[int, deque] = {}  # rid -> deque[(token, virtual_t)]
         self.decode_dispatches: dict[int, int] = {}  # chunks the rid was active in
         self.generated: dict[int, int] = {}          # tokens emitted per rid
+        self.admit_seq: dict[int, int] = {}          # admission order (preemption)
+        self._admit_counter = 0
+        self._cancel_due: dict[int, float] = {}      # in-flight cancels (uplink RTT)
+        self.cancel_lag_tokens = 0   # tokens generated after their cancel was issued
+
+    @property
+    def free_rows(self) -> list:
+        """Free batch rows (paged mode mirrors the pool manager's rows)."""
+        return list(self.kv._free_rows) if self.paged else self._free_rows
 
     def warmup(self, prompt_len: int = 8, prompt_lens: tuple = ()) -> None:
         """Precompile the row prefill bucket(s) and every tail scan length
@@ -465,6 +828,17 @@ class BatchedServer:
             _bucket_len(s, self.max_len) if self._bucketed else s
             for s in (prompt_len, *prompt_lens)
         })
+        if self.paged:
+            self.pages = _warmup_paged_pool(
+                self._prefill_row_paged, self._decode_chunk_paged, self.params,
+                self.cfg, self.pages, buckets=buckets,
+                block_size=self.block_size, rows=self.max_slots,
+                max_blocks_per_row=self.max_blocks_per_row,
+                decode_chunk=self.decode_chunk,
+                num_blocks=self.kv.pool.num_blocks,
+            )
+            self._warm = True
+            return
         tok = None
         for s in buckets:
             prompt = np.zeros((s,), np.int32)
@@ -492,29 +866,51 @@ class BatchedServer:
         current clock). FIFO admission; callers submit in arrival order."""
         rid = self.next_id
         self.next_id += 1
-        self.queue.append((rid, np.asarray(prompt, np.int32), max_new))
+        self.queue.append(_Queued(rid, np.asarray(prompt, np.int32), max_new))
         self.submit_time[rid] = self.clock if at is None else float(at)
         self.events[rid] = deque()
         self.generated[rid] = 0
         return rid
 
-    def cancel(self, rid: int) -> None:
-        """Stop a request now. A queued request is dropped before admission;
-        an active one frees its row immediately — the row is reusable by the
-        very next admission tick (no drain, the cache row just freezes)."""
+    def cancel(self, rid: int, at: Optional[float] = None) -> None:
+        """Stop a request. With ``at=None`` the cancel is immediate: a queued
+        request is dropped before admission; an active one frees its row —
+        and, paged, its blocks — within the same tick (no drain, the cache
+        just becomes garbage). With ``at=t`` the cancel models propagation
+        latency: it takes effect only once the virtual clock reaches ``t``
+        (one uplink RTT after the driver issued it), so a queued race loser
+        can slip into prefill and waste blocks in the window — every token it
+        generates meanwhile is counted in ``cancel_lag_tokens``."""
         if rid in self.completed or rid in self.cancelled:
+            self._cancel_due.pop(rid, None)
             return
+        if at is not None and at > self.clock:
+            self._cancel_due[rid] = min(float(at), self._cancel_due.get(rid, math.inf))
+            return
+        self._cancel_due.pop(rid, None)
         self.cancelled.add(rid)
         if rid in self.slots:
             slot = self.slots.pop(rid)
-            self.free_rows.append(self.rows.pop(rid))
+            row = self.rows.pop(rid)
+            if self.paged:
+                self.kv.release(rid)
+            else:
+                self._free_rows.append(row)
             self.completed[rid] = slot.tokens
             return
         for item in self.queue:
-            if item[0] == rid:
+            if item.rid == rid:
                 self.queue.remove(item)
-                self.completed[rid] = []
+                self.completed[rid] = list(item.tokens)
                 return
+
+    def _apply_due_cancels(self) -> None:
+        for rid, t in list(self._cancel_due.items()):
+            if rid in self.completed or rid in self.cancelled:
+                del self._cancel_due[rid]    # finished first: nothing to stop
+            elif t <= self.clock:
+                del self._cancel_due[rid]
+                self.cancel(rid)
 
     def is_finished(self, rid: int) -> bool:
         """True once the rid can emit no further events."""
@@ -540,60 +936,169 @@ class BatchedServer:
         ]
         for rid in done:
             self.completed[rid] = self.slots.pop(rid).tokens
-            self.free_rows.append(self.rows.pop(rid))
+            row = self.rows.pop(rid)
+            if self.paged:
+                self.kv.release(rid)      # blocks back to the pool
+            else:
+                self._free_rows.append(row)
+            # an in-flight cancel for a finished request is moot: expunge it
+            # so cancel_pending() cannot wedge the driver's finalize wait
+            self._cancel_due.pop(rid, None)
 
     def _head_arrival(self) -> Optional[float]:
-        return self.submit_time[self.queue[0][0]] if self.queue else None
+        return self.submit_time[self.queue[0].rid] if self.queue else None
+
+    def _admissible(self) -> bool:
+        """Head-of-queue admission test: a free row AND — paged — the
+        prefill's block demand fitting the free pool. A head blocked on
+        memory alone is recorded in ``kv.memory_waits`` (the benchmark's
+        queued-on-memory signal)."""
+        if not self.queue:
+            return False
+        if not self.paged:
+            return bool(self._free_rows)
+        if not self.kv.has_free_row:
+            return False
+        item = self.queue[0]
+        full_len = int(item.prompt.shape[0]) + len(item.tokens)
+        padded_len = _bucket_len(full_len, self.max_len) if self._bucketed else full_len
+        demand = self.kv.prefill_demand(padded_len, full_len)
+        return self.kv.can_admit(demand, item.rid)
 
     def _admit_one(self) -> None:
-        """Admission tick: prefill ONE queued request into a free row. The
-        measured prefill wall-clock advances the virtual clock; the prompt's
-        first token lands at the new clock."""
-        rid, prompt, max_new = self.queue.popleft()
-        row = self.free_rows.pop()
-        s = int(prompt.shape[0])
+        """Admission tick: prefill ONE queued request into a free row (and,
+        paged, into freshly allocated blocks). The measured prefill
+        wall-clock advances the virtual clock; the prompt's first token lands
+        at the new clock. A preemption-resume entry re-prefills
+        prompt + emitted tokens and continues where it left off."""
+        item = self.queue.popleft()
+        rid = item.rid
+        full = (
+            np.concatenate([item.prompt, np.asarray(item.tokens, np.int32)])
+            if item.tokens else item.prompt
+        )
+        s = int(full.shape[0])
         padded, lengths = _pad_to_bucket(
-            prompt[None, :], self.max_len, self._bucketed
+            full[None, :], self.max_len, self._bucketed
         )
         t0 = time.perf_counter()
-        tok, self.cache = self._prefill_row(
-            self.params, self.cache, jnp.asarray(padded),
-            jnp.asarray(lengths), row,
-        )
-        tok = int(jax.block_until_ready(tok))
+        if self.paged:
+            sb = int(padded.shape[1])
+            table = self.kv.admit(rid, self.kv.prefill_demand(sb, s), num_tokens=s)
+            assert table is not None          # guarded by _admissible
+            row = table.row
+            nb = sb // self.block_size
+            tok, self.pages = self._prefill_row_paged(
+                self.params, self.pages, jnp.asarray(padded, jnp.int32),
+                jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+            )
+            tok = int(jax.block_until_ready(tok)[0])
+            self.block_tables[row] = table.padded(self.max_blocks_per_row)
+        else:
+            row = self._free_rows.pop()
+            tok, self.cache = self._prefill_row(
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.asarray(lengths), row,
+            )
+            tok = int(jax.block_until_ready(tok))
         self.clock += time.perf_counter() - t0
-        self.first_token_time[rid] = self.clock
+        self.first_token_time.setdefault(rid, self.clock)  # resume keeps TTFT
         self.events[rid].append((tok, self.clock))
         self.generated[rid] += 1
-        self.slots[rid] = _Slot(rid, max_new - 1, [tok])
+        if rid in self._cancel_due:
+            self.cancel_lag_tokens += 1       # loser slipped into prefill
+        self.admit_seq[rid] = self._admit_counter
+        self._admit_counter += 1
+        self.slots[rid] = _Slot(
+            rid, item.max_new - 1, list(item.tokens) + [tok], prompt=item.prompt
+        )
         self.rows[rid] = row
         self.row_len[row] = s
+
+    # -- paged capacity (extend-on-decode + recompute preemption) ----------
+
+    def _preempt(self, rid: int) -> None:
+        """vLLM-style recompute preemption: free the victim's blocks and row
+        and requeue it at the HEAD with its emitted tokens; re-admission
+        replays prompt + tokens (greedy decoding makes the resume lossless).
+        Its TTFT and delivered events are unaffected."""
+        slot = self.slots.pop(rid)
+        self.rows.pop(rid)
+        self.kv.release(rid)
+        self.kv.preemptions += 1
+        self.queue.appendleft(
+            _Queued(rid, slot.prompt, slot.remaining, list(slot.tokens))
+        )
+
+    def _ensure_block_capacity(self, need: dict) -> None:
+        """Extend every active row's page table to cover its share of the
+        coming chunk, oldest admission first; when the pool runs dry, preempt
+        the newest-admitted request and retry."""
+        for rid in sorted(self.slots, key=lambda r: self.admit_seq[r]):
+            if rid not in self.slots:
+                continue                      # preempted by an older row
+            row = self.rows[rid]
+            while not self.kv.extend(rid, self.row_len[row] + need[rid]):
+                newer = [
+                    r for r in self.slots
+                    if self.admit_seq[r] > self.admit_seq[rid]
+                ]
+                if newer:
+                    self._preempt(max(newer, key=lambda r: self.admit_seq[r]))
+                    continue
+                if len(self.slots) > 1:
+                    self._preempt(rid)        # rid itself is the newest
+                else:
+                    # unreachable with num_blocks >= max_blocks_per_row + 1
+                    # (ctor-enforced); cap defensively instead of looping
+                    cap = self.kv.tables[rid].capacity * self.block_size
+                    need[rid] = max(0, min(need[rid], cap - self.row_len[row]))
+                break
 
     def _decode_tick(self) -> None:
         """Decode tick: one fused chunk for all active rows (single dispatch
         + host sync). Per-token virtual times are interpolated across the
-        measured chunk interval."""
+        measured chunk interval. Paged mode first secures block capacity for
+        the chunk (possibly preempting the newest rows)."""
+        need = {
+            rid: min(
+                self.decode_chunk,
+                slot.remaining,
+                max(0, (self.max_len - 1) - self.row_len[self.rows[rid]]),
+            )
+            for rid, slot in self.slots.items()
+        }
+        if self.paged:
+            self._ensure_block_capacity(need)
+            if not self.slots:
+                return
+            need = {rid: n for rid, n in need.items() if rid in self.slots}
+            for rid in self.slots:        # tables may have grown (or moved)
+                self.block_tables[self.rows[rid]] = self.kv.tables[rid].padded(
+                    self.max_blocks_per_row
+                )
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
-        need = {}
         for rid, slot in self.slots.items():
             row = self.rows[rid]
             tokens[row] = slot.tokens[-1]
             active[row] = True
-            need[rid] = min(
-                self.decode_chunk,
-                slot.remaining,
-                max(0, (self.max_len - 1) - self.row_len[row]),
-            )
         # cap the scan at the largest per-row need (rounded to a warm tail
         # size) so request tails don't pay for discarded decode steps
         num_steps = _tail_steps(max(need.values()), self.decode_chunk)
         t_start = self.clock
         t0 = time.perf_counter()
-        toks, self.cache = self._decode_chunk(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
-            num_steps,
-        )
+        if self.paged:
+            toks, self.pages, _ = self._decode_chunk_paged(
+                self.params, self.pages, jnp.asarray(self.block_tables),
+                jnp.asarray(np.asarray(self.row_len, np.int32)),
+                jnp.asarray(tokens), jnp.asarray(active), num_steps,
+            )
+        else:
+            toks, self.cache = self._decode_chunk(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
+                num_steps,
+            )
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         dur = time.perf_counter() - t0
         self.clock = t_start + dur
@@ -609,6 +1114,8 @@ class BatchedServer:
             slot.remaining -= n_valid
             self.row_len[row] += n_valid
             self.generated[rid] += n_valid
+            if n_valid and rid in self._cancel_due:
+                self.cancel_lag_tokens += n_valid
             self.decode_dispatches[rid] = self.decode_dispatches.get(rid, 0) + 1
 
     def run_until(self, t_limit: float = math.inf) -> None:
@@ -617,9 +1124,10 @@ class BatchedServer:
         already in flight when the horizon passed (cancellations land after
         it, which is exactly the paper's one-chunk cancellation latency)."""
         while self.clock < t_limit:
+            self._apply_due_cancels()
             self._retire_done()
             head = self._head_arrival()
-            if self.free_rows and head is not None and head <= self.clock:
+            if head is not None and head <= self.clock and self._admissible():
                 self._admit_one()        # one row per tick, between chunks
                 continue
             if self.slots:
@@ -628,17 +1136,21 @@ class BatchedServer:
             if head is None or head > t_limit:
                 break                    # idle, or next arrival beyond horizon
             self.clock = head            # idle gap: jump to the next arrival
+        self._apply_due_cancels()
         self._retire_done()
 
     def step(self) -> bool:
         """One scheduler tick (admission or decode chunk). Returns False when
         fully idle. Compatibility wrapper over the event-driven core; the
         clock only jumps over idle gaps, never past in-flight decode work."""
+        self._apply_due_cancels()
         self._retire_done()
         head = self._head_arrival()
         if not self.slots and head is not None:
             self.clock = max(self.clock, head)   # idle gap: jump to arrival
-        if self.free_rows and head is not None and head <= self.clock:
+            self._apply_due_cancels()
+            head = self._head_arrival()          # a due cancel may drop the head
+        if head is not None and head <= self.clock and self._admissible():
             self._admit_one()
         elif self.slots:
             self._decode_tick()
@@ -650,6 +1162,28 @@ class BatchedServer:
         return self.completed
 
     # -- bookkeeping -------------------------------------------------------
+
+    def cancel_pending(self, rid: int) -> bool:
+        """True while an issued cancel for ``rid`` is still crossing the
+        uplink (the request may still generate — and waste — tokens)."""
+        return rid in self._cancel_due
+
+    def pool_stats(self) -> dict:
+        """Memory-pressure accounting for the serving benchmark: peak blocks
+        in use, how many rids ever queued on memory, recompute preemptions,
+        and tokens generated after their cancel was issued (propagation
+        lag). Dense servers report only the cancel lag."""
+        stats = {"cancel_lag_tokens": int(self.cancel_lag_tokens)}
+        if self.paged:
+            stats.update(
+                blocks_in_use_peak=int(self.kv.blocks_in_use_peak),
+                queued_on_memory=len(self.kv.memory_waits),
+                extend_stalls=len(self.kv.extend_stalls),
+                preemptions=int(self.kv.preemptions),
+                num_blocks=int(self.kv.pool.num_blocks),
+                block_size=int(self.block_size),
+            )
+        return stats
 
     def ttft(self, rid: int) -> Optional[float]:
         """Virtual-time TTFT. ``None`` for a request that was never admitted

@@ -1,0 +1,231 @@
+"""Paged KV-cache memory manager: a vLLM-style block pool for the serving
+stack.
+
+Physical KV storage is a fixed pool of ``num_blocks`` token blocks of
+``block_size`` tokens each (the device arrays live in
+``repro.models.paged``); this module is the *host-side* memory manager that
+decides which request owns which blocks:
+
+* ``BlockPool``   — the free-list. Block 0 is reserved as the NULL/trash
+  block: page-table padding points at it (so gathers stay in-range and the
+  masked tail reads garbage instead of faulting) and frozen rows route their
+  scatter writes into it.
+* ``KVPoolManager`` — per-request page tables over the pool plus a fixed set
+  of batch *rows* (the jit-static batch dimension). Lifecycle:
+  alloc-on-prefill (``admit``), extend-on-decode (``extend`` allocates a new
+  block when a row's length crosses a block boundary), free-on-finish-or-
+  cancel (``release``), and copy-on-migration (``clone`` duplicates a page
+  table into freshly allocated blocks for the consistent-prefix hand-off —
+  the caller copies the block *contents* device-side).
+
+Capacity accounting is the admission signal for continuous batching: a
+request is admitted when its prefill's block demand fits the free pool and
+queued otherwise, so server queueing under load emerges from real memory
+pressure instead of an arbitrary slot count. ``blocks_in_use_peak`` and the
+per-rid wait accounting feed the e2e serving benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# single source of truth for the reserved block id: the paged model step
+# functions route frozen-row writes there and the kernel DMA-reads it for
+# padded table slots, so allocator and compute must agree on it
+from repro.models.paged import NULL_BLOCK
+
+__all__ = ["BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens", "NULL_BLOCK"]
+
+
+def blocks_for_tokens(tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``tokens`` cache entries."""
+    return max(0, -(-int(tokens) // block_size))
+
+
+class BlockPool:
+    """LIFO free-list over ``num_blocks`` physical blocks (block 0 reserved).
+
+    LIFO reuse keeps recently-freed (cache-warm) blocks hot, and makes
+    free-on-cancel reuse observable in tests: the next allocation returns
+    exactly the blocks a cancellation just released.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the reserved trash block)")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> block 1 first
+        self.peak_in_use = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Allocate ``n`` blocks, or None (all-or-nothing) when short."""
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return got
+
+    def free(self, blocks: list[int]) -> None:
+        if len(set(blocks)) != len(blocks):
+            raise ValueError("duplicate block in free batch")
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the reserved trash block")
+            if b in self._free or not (0 < b < self.num_blocks):
+                raise ValueError(f"double/invalid free of block {b}")
+        # reversed: re-allocating returns blocks in the order they were held
+        self._free.extend(reversed(blocks))
+
+
+@dataclasses.dataclass
+class PageTable:
+    """One request's view of the pool: its row and its ordered block list."""
+
+    rid: int
+    row: int
+    blocks: list[int]
+    num_tokens: int          # cache entries currently covered by a write
+
+    @property
+    def capacity(self) -> int:
+        return len(self.blocks)   # in blocks; tokens = capacity * block_size
+
+    def padded(self, max_blocks: int) -> list[int]:
+        """Block ids padded with NULL_BLOCK to the fixed table width."""
+        return self.blocks + [NULL_BLOCK] * (max_blocks - len(self.blocks))
+
+
+class KVPoolManager:
+    """Page tables + row assignment over one :class:`BlockPool`.
+
+    ``rows`` is the jit-static batch dimension of the paged decode dispatch;
+    ``max_blocks_per_row`` bounds one request's table (= ceil(max_len /
+    block_size) at the engine layer). Admission needs BOTH a free row and the
+    prefill's block demand — under memory pressure the pool, not the row
+    count, is the binding constraint.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, rows: int,
+                 max_blocks_per_row: int):
+        self.pool = BlockPool(num_blocks)
+        self.block_size = int(block_size)
+        self.rows = int(rows)
+        self.max_blocks_per_row = int(max_blocks_per_row)
+        self.tables: dict[int, PageTable] = {}
+        self._free_rows = list(range(rows - 1, -1, -1))
+        # accounting for the serving benchmark. Two distinct pressure
+        # signals: ``memory_waits`` = rids whose ADMISSION was blocked by
+        # blocks (they sat in the queue); ``extend_stalls`` = already-running
+        # rids whose extend/clone was denied (resolved by preemption or by
+        # truncating the stream — they never re-queued).
+        self.memory_waits: set[int] = set()
+        self.extend_stalls: set[int] = set()
+        self.preemptions = 0
+
+    # -- capacity queries ---------------------------------------------------
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.pool.num_in_use
+
+    @property
+    def blocks_in_use_peak(self) -> int:
+        return self.pool.peak_in_use
+
+    @property
+    def has_free_row(self) -> bool:
+        return bool(self._free_rows)
+
+    def prefill_demand(self, bucket_tokens: int, true_tokens: int | None = None) -> int:
+        """Blocks a prefill needs: cover the (bucket-padded) scatter plus the
+        first decode token's slot when the true length exactly fills its
+        blocks. Bucket padding is *real* allocated memory here — paged
+        serving makes that cost visible instead of hiding it in a dense
+        max_len reservation."""
+        true_tokens = bucket_tokens if true_tokens is None else true_tokens
+        demand = max(
+            blocks_for_tokens(bucket_tokens, self.block_size),
+            blocks_for_tokens(true_tokens + 1, self.block_size),
+        )
+        return min(demand, self.max_blocks_per_row)
+
+    def can_admit(self, demand_blocks: int, rid: int | None = None) -> bool:
+        """True when ``demand_blocks`` could be allocated NOW along with a
+        row. When blocked by memory (a row is free but blocks are not), the
+        rid is recorded in ``memory_waits`` — the benchmark's
+        queued-on-memory signal."""
+        if not self._free_rows:
+            return False
+        if demand_blocks > self.pool.num_free:
+            if rid is not None:
+                self.memory_waits.add(rid)
+            return False
+        return True
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, rid: int, demand_blocks: int, num_tokens: int = 0) -> PageTable | None:
+        """Alloc-on-prefill: allocate ``demand_blocks`` and a row. Returns
+        None (nothing allocated) when either is unavailable."""
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already admitted")
+        if not self.can_admit(demand_blocks, rid):
+            return None
+        blocks = self.pool.alloc(demand_blocks)
+        assert blocks is not None
+        table = PageTable(rid, self._free_rows.pop(), blocks, num_tokens)
+        self.tables[rid] = table
+        return table
+
+    def extend(self, rid: int, target_tokens: int) -> bool:
+        """Extend-on-decode: grow ``rid``'s table to cover ``target_tokens``
+        cache entries. Allocates only when the target crosses a block
+        boundary; False (table unchanged) when the pool is exhausted."""
+        table = self.tables[rid]
+        need = blocks_for_tokens(target_tokens, self.block_size)
+        need = min(need, self.max_blocks_per_row)
+        extra = need - table.capacity
+        if extra <= 0:
+            return True
+        got = self.pool.alloc(extra)
+        if got is None:
+            self.extend_stalls.add(rid)
+            return False
+        table.blocks.extend(got)
+        return True
+
+    def release(self, rid: int) -> None:
+        """Free-on-finish-or-cancel: blocks and row return to the pool
+        immediately (no drain — the cache contents just become garbage)."""
+        table = self.tables.pop(rid, None)
+        if table is None:
+            return
+        self.pool.free(table.blocks)
+        self._free_rows.append(table.row)
+
+    def clone(self, src_rid: int, dst_rid: int) -> tuple[PageTable, list[tuple[int, int]]] | None:
+        """Copy-on-migration: allocate a fresh table for ``dst_rid`` mirroring
+        ``src_rid``'s, and return (dst_table, [(src_block, dst_block), ...])
+        copy pairs — the caller performs the device-side block copies. The
+        source table is untouched (the consistent-prefix hand-off keeps the
+        source generating until the target's first token arrives). Returns
+        None when blocks or a row are unavailable."""
+        src = self.tables[src_rid]
+        if dst_rid in self.tables:
+            raise ValueError(f"rid {dst_rid} already admitted")
+        if not self._free_rows:
+            return None
+        blocks = self.pool.alloc(len(src.blocks))
+        if blocks is None:
+            self.extend_stalls.add(dst_rid)
+            return None
+        dst = PageTable(dst_rid, self._free_rows.pop(), blocks, src.num_tokens)
+        self.tables[dst_rid] = dst
+        return dst, list(zip(src.blocks, blocks))

@@ -154,13 +154,20 @@ def load_point_arrivals(rng: np.random.Generator, n: int, *,
 def make_serving_trace(rng: np.random.Generator, n: int, *,
                        service_time: float, slots: int, rho: float,
                        kind: str = "poisson", max_prompt: int = 48,
-                       max_new: int = 16) -> list:
+                       max_new: int = 16, long_fraction: float = 0.0) -> list:
     """(arrival, prompt_len, max_new) tuples for the e2e serving runner —
-    Alpaca-like prompt lengths at a calibrated load point."""
+    Alpaca-like prompt lengths at a calibrated load point.
+
+    ``long_fraction`` mixes in max-length prompts (the right-skewed tail the
+    clipped log-normal under-represents): ragged block demand is what makes
+    paged-KV admission bite, since one long prompt holds several times the
+    blocks of a short one."""
     arrivals = load_point_arrivals(
         rng, n, service_time=service_time, slots=slots, rho=rho, kind=kind
     )
     lengths = np.clip(sample_prompt_lengths(rng, n), 2, max_prompt)
+    if long_fraction > 0.0:
+        lengths = np.where(rng.random(n) < long_fraction, max_prompt, lengths)
     return [(float(a), int(l), int(max_new)) for a, l in zip(arrivals, lengths)]
 
 

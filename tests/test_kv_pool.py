@@ -1,0 +1,358 @@
+"""Paged KV-cache subsystem tests: block-pool allocator lifecycle
+(exhaustion -> queueing, free-on-cancel reuse, copy-on-migration),
+capacity-driven BatchedServer admission with recompute preemption,
+paged-vs-dense decode equivalence (kernel interpret parity included),
+and cancel-propagation latency accounting."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import paper_models
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention,
+    paged_decode_attention_ref,
+    paged_gather_kv,
+)
+from repro.kernels.ref import decode_reference
+from repro.models import init_params, supports_paged
+from repro.serving import BatchedServer, BlockPool, InferenceEngine, KVPoolManager
+
+CFG = paper_models.TINY_DEVICE
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def dense_engine(params):
+    return InferenceEngine(CFG, params, max_len=48)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool / KVPoolManager (host-side allocator)
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_alloc_free_reuse():
+    pool = BlockPool(6)              # block 0 reserved -> 5 usable
+    assert pool.num_free == 5
+    a = pool.alloc(3)
+    assert a is not None and 0 not in a
+    assert pool.alloc(3) is None     # all-or-nothing: only 2 left
+    assert pool.num_free == 2        # the failed alloc took nothing
+    pool.free(a)
+    b = pool.alloc(3)
+    assert b == a                    # LIFO: freed blocks come back first
+    assert pool.peak_in_use == 3
+    with pytest.raises(ValueError):
+        pool.free([0])               # trash block is not freeable
+    with pytest.raises(ValueError):
+        pool.free(b + [b[0]])        # double free
+
+
+def test_manager_admit_extend_release():
+    kv = KVPoolManager(num_blocks=8, block_size=8, rows=2, max_blocks_per_row=6)
+    t1 = kv.admit(1, kv.prefill_demand(16, 10), num_tokens=10)   # 2 blocks
+    assert t1 is not None and t1.capacity == 2
+    assert kv.extend(1, 17)          # crosses a boundary -> 3 blocks
+    assert kv.tables[1].capacity == 3
+    assert kv.extend(1, 20)          # same block, no alloc
+    assert kv.tables[1].capacity == 3
+    t2 = kv.admit(2, 4, num_tokens=20)
+    assert t2 is not None
+    assert kv.blocks_in_use == 7
+    assert not kv.extend(1, 30)      # pool dry: table unchanged, rid recorded
+    assert kv.tables[1].capacity == 3
+    assert 1 in kv.extend_stalls     # decode stall, NOT admission queueing
+    assert 1 not in kv.memory_waits
+    kv.release(2)
+    assert kv.blocks_in_use == 3 and kv.has_free_row
+    assert kv.extend(1, 30)
+
+
+def test_manager_exhaustion_blocks_admission_not_rows():
+    kv = KVPoolManager(num_blocks=6, block_size=8, rows=4, max_blocks_per_row=5)
+    assert kv.admit(1, 4) is not None
+    # rows are free, memory is not: the queued-on-memory signal fires
+    assert not kv.can_admit(2, rid=7)
+    assert kv.has_free_row and 7 in kv.memory_waits
+    assert kv.admit(7, 2) is None
+    kv.release(1)
+    assert kv.admit(7, 2) is not None
+
+
+def test_manager_clone_copy_on_migration():
+    kv = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
+    src = kv.admit(1, 3, num_tokens=20)
+    res = kv.clone(1, 2)
+    assert res is not None
+    dst, pairs = res
+    assert [a for a, _ in pairs] == src.blocks
+    assert [b for _, b in pairs] == dst.blocks
+    assert not set(src.blocks) & set(dst.blocks)     # fresh physical blocks
+    assert dst.num_tokens == src.num_tokens and dst.row != src.row
+    assert kv.blocks_in_use == 6
+    kv.release(1)                                    # source free'd, clone lives
+    assert 2 in kv.tables and kv.blocks_in_use == 3
+    assert kv.clone(2, 3) is not None
+    assert kv.clone(2, 4) is not None
+    assert kv.clone(2, 5) is None                    # rows exhausted
+    kv2 = KVPoolManager(num_blocks=5, block_size=8, rows=3, max_blocks_per_row=4)
+    kv2.admit(1, 3)
+    assert kv2.clone(1, 2) is None                   # blocks exhausted
+    assert 2 in kv2.extend_stalls
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: kernel / gather-ref / dense-ref equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_matches_dense_reference():
+    """Acceptance: paged decode == dense decode logits, bitwise-or-tolerance,
+    in interpret mode. Three-way: Pallas kernel (interpret) vs XLA gather
+    reference vs the seq-major dense oracle."""
+    rng = np.random.default_rng(3)
+    B, H, K, D, bs, N, MB = 3, 8, 4, 16, 8, 10, 4
+    q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+    k_pages = jnp.asarray(rng.normal(size=(N, K, bs, D)).astype(np.float32))
+    v_pages = jnp.asarray(rng.normal(size=(N, K, bs, D)).astype(np.float32))
+    bt = jnp.asarray(rng.integers(1, N, size=(B, MB)).astype(np.int32))
+    lengths = jnp.asarray(np.array([3, 17, 32], np.int32))
+
+    out_kernel = paged_decode_attention(q, k_pages, v_pages, bt, lengths,
+                                        interpret=True)
+    out_ref = paged_decode_attention_ref(q, k_pages, v_pages, bt, lengths)
+    # dense oracle over the materialized sequences (seq-major layout)
+    k_seq = paged_gather_kv(k_pages, bt).transpose(0, 2, 1, 3)   # (B,S,K,D)
+    v_seq = paged_gather_kv(v_pages, bt).transpose(0, 2, 1, 3)
+    out_dense = decode_reference(q, k_seq, v_seq, lengths)
+
+    np.testing.assert_allclose(out_kernel, out_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(out_ref, out_dense, atol=2e-5, rtol=2e-5)
+    for w in (5, 16):
+        ok = paged_decode_attention(q, k_pages, v_pages, bt, lengths,
+                                    window=w, interpret=True)
+        od = decode_reference(q, k_seq, v_seq, lengths, window=w)
+        np.testing.assert_allclose(ok, od, atol=2e-5, rtol=2e-5)
+
+
+def test_supports_paged_gating():
+    assert supports_paged(CFG)
+    encoder = dataclasses.replace(CFG, is_encoder=True)   # bidirectional
+    assert not supports_paged(encoder)
+    with pytest.raises(ValueError, match="paged"):
+        BatchedServer(encoder, {}, paged=True)
+    srv = BatchedServer(encoder, {}, max_slots=1, max_len=32)
+    assert not srv.paged                     # silent dense fallback
+
+
+# ---------------------------------------------------------------------------
+# BatchedServer: capacity-driven admission / preemption / cancel
+# ---------------------------------------------------------------------------
+
+
+def test_server_block_exhaustion_queues_then_completes(params, dense_engine):
+    """Rows free but blocks scarce: admission queues on MEMORY; when the
+    running request releases its blocks the queued one proceeds, and the
+    delivered tokens still match a lone dense engine exactly."""
+    server = BatchedServer(CFG, params, max_slots=3, max_len=48,
+                           block_size=8, num_blocks=8)  # 7 usable blocks
+    prompts = [np.arange(20, dtype=np.int32),           # bucket 32 -> 4 blocks
+               (np.arange(20, dtype=np.int32) * 5) % CFG.vocab]
+    expected = [dense_engine.generate(p, 8).tokens for p in prompts]
+    r1 = server.submit(prompts[0], 8)
+    r2 = server.submit(prompts[1], 8)
+    done = server.run_to_completion()
+    assert done[r1] == expected[0] and done[r2] == expected[1]
+    stats = server.pool_stats()
+    assert stats["queued_on_memory"] >= 1          # r2 waited on blocks
+    assert stats["blocks_in_use_peak"] <= 7
+    assert server.ttft(r2) > server.ttft(r1)
+    assert server.kv.blocks_in_use == 0            # free-on-finish
+
+
+def test_server_cancel_returns_blocks_same_tick(params):
+    """Acceptance: cancel(rid) returns blocks to the pool within the same
+    tick, unblocking a memory-queued request immediately."""
+    server = BatchedServer(CFG, params, max_slots=3, max_len=48,
+                           block_size=8, num_blocks=8)
+    a = server.submit(np.arange(20, dtype=np.int32), 30)
+    b = server.submit(np.arange(20, dtype=np.int32), 4)
+    while not server.events[a]:
+        server.step()
+    in_use = server.kv.blocks_in_use
+    assert in_use >= 4 and not server._admissible()   # b blocked on memory
+    server.cancel(a)
+    assert server.kv.blocks_in_use == 0               # synchronous release
+    assert server._admissible()                       # b admissible same tick
+    server.run_to_completion()
+    assert len(server.completed[b]) == 4
+
+
+def test_server_preemption_recompute_is_lossless(params, dense_engine):
+    """Two requests outgrow the pool mid-decode: the newest is preempted
+    (blocks freed, requeued), later re-prefills prompt+tokens and continues —
+    delivered streams still match the dense engine exactly."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9)  # 8 usable
+    prompts = [np.arange(4, dtype=np.int32),
+               np.asarray([7, 3, 11, 2], np.int32)]
+    expected = [dense_engine.generate(p, 40).tokens for p in prompts]
+    rids = [server.submit(p, 40) for p in prompts]
+    done = server.run_to_completion()
+    assert server.pool_stats()["preemptions"] >= 1
+    for rid, exp in zip(rids, expected):
+        assert done[rid] == exp
+    assert server.kv.blocks_in_use == 0
+
+
+def test_server_cancel_propagation_wastes_tokens(params):
+    """Satellite: a cancel issued by the driver reaches the server one
+    uplink RTT later — meanwhile the request keeps generating (or slips into
+    prefill), and the overrun is surfaced in ``cancel_lag_tokens``."""
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48,
+                           block_size=8, decode_chunk=2)
+    a = server.submit(np.arange(6, dtype=np.int32), 40)
+    while not server.events[a]:
+        server.step()
+    n_at_issue = server.generated[a]
+    # issue now, landing far in the virtual future: the request keeps running
+    server.cancel(a, at=server.clock + 1e9)
+    assert a not in server.cancelled
+    for _ in range(4):
+        server.step()
+    assert server.generated[a] > n_at_issue
+    assert server.cancel_lag_tokens == server.generated[a] - n_at_issue
+    # a due cancel lands on the next tick and frees the request
+    server._cancel_due[a] = server.clock
+    server.step()
+    assert a in server.cancelled
+    assert server.kv.blocks_in_use == 0
+
+
+def test_server_cancel_propagation_lets_queued_loser_prefill(params):
+    """A queued request whose cancel is still in flight slips into prefill
+    and burns blocks (the wasted work the DiSCo driver accounts for)."""
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48,
+                           block_size=8, decode_chunk=2)
+    a = server.submit(np.arange(6, dtype=np.int32), 4)
+    b = server.submit(np.arange(6, dtype=np.int32), 8)   # queued behind a
+    server.cancel(b, at=1e9)                             # in flight, not landed
+    done = server.run_to_completion()
+    assert len(done[a]) == 4
+    assert b in server.first_token_time                  # b DID prefill
+    assert server.generated[b] >= 1
+    assert server.cancel_lag_tokens >= server.generated[b]
+
+
+def test_server_cancel_lands_exactly_one_uplink_late(params):
+    """Regression pin on the landing arithmetic: a driver cancel issued at
+    virtual time t reaches the server at exactly t + uplink — not t, not
+    t + rtt, not t + 2*uplink."""
+    from repro.serving import ServerTokenStream
+
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48, block_size=8)
+    rid = server.submit(np.arange(6, dtype=np.int32), 8)
+    st = ServerTokenStream(server, rid, start_at=0.0, downlink=0.01,
+                          prefill_tokens=6, uplink=0.03)
+    st.cancel(at=2.0)
+    assert server.cancel_pending(rid)
+    assert server._cancel_due[rid] == pytest.approx(2.0 + 0.03)
+    st.cancel(at=1.0)                       # second cancel: already in flight
+    assert server._cancel_due[rid] == pytest.approx(2.03)
+
+
+def test_server_cancel_landing_after_completion_is_moot(params):
+    """Regression: a request that finishes BEFORE its in-flight cancel lands
+    must not leave ``cancel_pending`` wedged True forever (that would hang
+    the driver's finalize wait)."""
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48, block_size=8)
+    a = server.submit(np.arange(6, dtype=np.int32), 4)    # finishes fast
+    server.cancel(a, at=1e9)                              # lands "never"
+    done = server.run_to_completion()
+    assert len(done[a]) == 4                              # ran to completion
+    assert not server.cancel_pending(a)                   # entry expunged
+    assert server.kv.blocks_in_use == 0
+
+
+def test_block_size_validated():
+    with pytest.raises(ValueError, match="block_size"):
+        BatchedServer(CFG, {}, max_len=48, block_size=32)   # > min bucket
+    with pytest.raises(ValueError, match="block_size"):
+        InferenceEngine(CFG, {}, max_len=48, paged=True, block_size=12)
+
+
+# ---------------------------------------------------------------------------
+# Paged InferenceEngine: per-request alloc / free / fork
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def paged_engine(params):
+    return InferenceEngine(CFG, params, max_len=48, paged=True,
+                           block_size=8, kv_rows=3)
+
+
+def test_paged_engine_matches_dense(paged_engine, dense_engine):
+    prompt = np.arange(10, dtype=np.int32)
+    assert (paged_engine.generate(prompt, 20).tokens
+            == dense_engine.generate(prompt, 20).tokens)
+    assert paged_engine.kv.blocks_in_use == 0            # free-on-finish
+
+
+def test_paged_engine_stream_cancel_frees_blocks(paged_engine):
+    st = paged_engine.open_stream(np.arange(10, dtype=np.int32), 30)
+    st.next_chunk()                                      # alloc-on-prefill
+    assert paged_engine.kv.blocks_in_use > 0
+    st.cancel()
+    assert paged_engine.kv.blocks_in_use == 0            # free-on-cancel
+    assert st.next_chunk() is None
+
+
+def test_paged_engine_fork_continues_identically(paged_engine):
+    """Copy-on-migration: a forked stream (page-table clone + device block
+    copy, no re-prefill) continues with exactly the tokens the source would
+    have produced."""
+    prompt = np.arange(8, dtype=np.int32)
+    src = paged_engine.open_stream(prompt, 24)
+    src_tokens = list(src.next_chunk()[0])               # prefill token
+    src_tokens += src.next_chunk()[0]                    # one decode chunk
+    fork = paged_engine.fork_stream(src, 24 - len(src_tokens))
+    fork_tokens = []
+    while (c := fork.next_chunk()) is not None:
+        fork_tokens += c[0]
+    rest = []
+    while (c := src.next_chunk()) is not None:
+        rest += c[0]
+    assert fork_tokens == rest
+    assert paged_engine.kv.blocks_in_use == 0
+
+
+def test_paged_engine_pool_exhaustion(params):
+    """Admission raises when the pool cannot hold the prompt; a mid-decode
+    extension failure truncates the stream and flags it oom."""
+    eng = InferenceEngine(CFG, params, max_len=48, paged=True,
+                          block_size=8, kv_rows=2, num_blocks=7)  # 6 usable
+    a = eng.open_stream(np.arange(10, dtype=np.int32), 40)  # grows to 6 blocks
+    b = eng.open_stream(np.arange(10, dtype=np.int32), 40)
+    a.next_chunk()                                       # 2 blocks
+    b.next_chunk()                                       # 2 blocks
+    while not (a.done or b.done):
+        a.next_chunk()
+        b.next_chunk()
+    assert a.oom or b.oom                                # someone hit the wall
+    truncated = a if a.oom else b
+    assert truncated.exhausted and truncated.tokens_emitted < 40
+    # a third admission while both hold blocks fails loudly
+    c = eng.open_stream(np.arange(30, dtype=np.int32), 4)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        c.next_chunk()
+    a.cancel()
+    b.cancel()
+    assert eng.kv.blocks_in_use == 0
