@@ -25,7 +25,18 @@ so even disco wastes the propagation window's tokens. Emits
 ``BENCH_e2e_serving.json`` at the repo root — the TTFT-tail-under-load perf
 trajectory — plus CSV rows for ``benchmarks/run.py``.
 
-    PYTHONPATH=src python -m benchmarks.bench_e2e_serving [--smoke]
+``--temperature T`` runs the whole stack under stochastic sampling (the
+position-keyed replayable sampler; T=0 keeps greedy). Stochastic runs never
+overwrite the greedy trajectory JSON. ``--check-determinism`` instead runs
+a seed-determinism gate: identical models on both endpoints, temperature
+> 0, the same trace replayed through two independently-built stacks — every
+delivered stream must be bit-identical across the runs AND equal to the
+no-race single-engine generation with the same seed (wall-clock noise
+changes race winners and migration points between runs; the streams must
+not care). Exits non-zero on any mismatch.
+
+    PYTHONPATH=src python -m benchmarks.bench_e2e_serving \
+        [--smoke] [--temperature T] [--check-determinism]
 """
 from __future__ import annotations
 
@@ -46,6 +57,7 @@ from repro.serving import (
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
+    SamplerConfig,
     ServerEndpoint,
 )
 from repro.sim.traces import make_serving_trace
@@ -88,11 +100,11 @@ def _make_scheduler(rng: np.random.Generator) -> DiSCoScheduler:
 
 
 def _build(system: str, dev_engine: InferenceEngine, srv_params,
-           seed: int) -> DiSCoServer:
+           seed: int, sampler: SamplerConfig = None) -> DiSCoServer:
     server = BatchedServer(
         paper_models.TINY_SERVER, srv_params,
         max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
-        block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS,
+        block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, sampler=sampler,
     )
     server.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     sched = _make_scheduler(np.random.default_rng(seed))
@@ -149,11 +161,13 @@ def _metrics(results) -> dict:
     }
 
 
-def run(smoke: bool = False) -> list[Row]:
+def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
     dev_cfg = paper_models.TINY_DEVICE
     srv_cfg = paper_models.TINY_SERVER
+    sampler = SamplerConfig(temperature=temperature) if temperature > 0 else None
     dev_engine = InferenceEngine(
-        dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), max_len=_MAX_LEN
+        dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), max_len=_MAX_LEN,
+        sampler=sampler,
     )
     dev_engine.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     srv_params = init_params(srv_cfg, jax.random.PRNGKey(1))
@@ -178,7 +192,8 @@ def run(smoke: bool = False) -> list[Row]:
         ]
         point = {"rho": rho, "systems": {}}
         for system in _SYSTEMS:
-            disco = _build(system, dev_engine, srv_params, seed=3)
+            disco = _build(system, dev_engine, srv_params, seed=3,
+                           sampler=sampler)
             t0 = time.perf_counter()
             results = disco.serve_many([(a, p.copy(), m) for a, p, m in requests])
             wall_us = (time.perf_counter() - t0) * 1e6
@@ -220,7 +235,7 @@ def run(smoke: bool = False) -> list[Row]:
         f"wasted_reduction_x={wasted_reduction:.1f}",
     ))
 
-    if not smoke:
+    if not smoke and temperature == 0.0:   # never clobber the greedy trajectory
         _JSON_PATH.write_text(json.dumps({
             "bench": "e2e_serving",
             "server_rows": _ROWS,
@@ -239,13 +254,92 @@ def run(smoke: bool = False) -> list[Row]:
     return rows
 
 
+def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
+    """Seed-determinism gate (CI): identical endpoint models, temperature
+    > 0, same trace through two independently-built stacks. Wall-clock noise
+    moves race winners, migration points, and preemptions between the runs —
+    the delivered streams must be bit-identical anyway, and equal to the
+    no-race single-engine generation with the same per-request seed (the
+    driver seeds requests by rid = arrival index)."""
+    cfg = paper_models.TINY_DEVICE
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sampler = SamplerConfig(temperature=temperature, top_p=0.95)
+    dev_engine = InferenceEngine(cfg, params, max_len=_MAX_LEN, sampler=sampler)
+    dev_engine.warmup(prompt_lens=(12,))
+
+    def build():
+        server = BatchedServer(
+            cfg, params, max_slots=2, max_len=_MAX_LEN, decode_chunk=4,
+            block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, sampler=sampler,
+        )
+        server.warmup(prompt_lens=(12,))
+        # device-constrained pricing: decode is expensive on the winner, so
+        # the driver migrates mid-stream — the gate must cover the
+        # consistent-prefix hand-off, not just the race
+        rng0 = np.random.default_rng(3)
+        sched = DiSCoScheduler(
+            CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6),
+            server_ttft_samples=rng0.lognormal(np.log(0.3), 0.5, 400),
+            prompt_length_samples=np.clip(
+                rng0.lognormal(2.5, 0.8, 400), 1, 64
+            ).astype(int),
+            budget=0.5,
+            migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.005),
+        )
+        return DiSCoServer(
+            sched, DeviceEndpoint(dev_engine),
+            ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
+            rng=np.random.default_rng(4),
+        )
+
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+               for _ in range(n_requests)]
+    reqs = [(0.002 * i, p, _MAX_NEW) for i, p in enumerate(prompts)]
+    baseline = [dev_engine.generate(p, _MAX_NEW, seed=i).tokens
+                for i, p in enumerate(prompts)]
+    run1 = build().serve_many([(a, p.copy(), m) for a, p, m in reqs])
+    run2 = build().serve_many([(a, p.copy(), m) for a, p, m in reqs])
+    failures = []
+    for i, (r1, r2, base) in enumerate(zip(run1, run2, baseline)):
+        if r1.tokens != r2.tokens:
+            failures.append(f"request {i}: run1 != run2")
+        if r1.tokens != base:
+            failures.append(f"request {i}: delivered != same-seed baseline")
+    if failures:
+        raise SystemExit(
+            "seed-determinism FAILED (temperature="
+            f"{temperature}):\n  " + "\n  ".join(failures)
+        )
+    print(
+        f"seed-determinism OK: {n_requests} requests x 2 runs bit-identical "
+        f"(temperature={temperature}, "
+        f"migrations run1/run2: {sum(r.migrated for r in run1)}/"
+        f"{sum(r.migrated for r in run2)})"
+    )
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="single load point, 5 requests, no JSON emission")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="sampling temperature (default: greedy for the "
+                         "bench, 0.8 for the determinism gate; stochastic "
+                         "runs never overwrite the greedy trajectory JSON)")
+    ap.add_argument("--check-determinism", action="store_true",
+                    help="run the seed-determinism gate instead of the bench")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
-    for row in run(smoke=args.smoke):
-        print(row.csv(), flush=True)
+    if args.check_determinism:
+        t = 0.8 if args.temperature is None else args.temperature
+        if t <= 0:
+            ap.error("--check-determinism requires --temperature > 0")
+        if args.smoke:
+            ap.error("--smoke does not apply to --check-determinism")
+        check_determinism(temperature=t)
+    else:
+        print("name,us_per_call,derived")
+        for row in run(smoke=args.smoke, temperature=args.temperature or 0.0):
+            print(row.csv(), flush=True)

@@ -1,0 +1,189 @@
+"""Paged-decode trajectory: paged vs dense decode µs/token at large batch.
+
+ROADMAP flags the missing decode trajectory for the *paged* hot path: the
+prefill bench covers admission and ``BENCH_decode.json`` covers the dense
+fused scan, but nothing tracked what the block-pool indirection costs per
+decoded token as the batch grows. This bench times the two fused
+multi-token decode dispatches the serving stack actually runs:
+
+* ``dense`` — ``decode_n`` over the head-major ``(L, B, K, max_len, D)``
+  cache with the max_len/active row guard (the ``BatchedServer`` dense
+  tick).
+* ``paged`` — ``paged_decode_n`` over the shared ``(L, N, K, bs, D)``
+  block pool through per-row page tables (the paged tick; XLA gather
+  reference on CPU — on TPU the Pallas kernel turns the table into a DMA
+  index map instead of materializing the gather).
+
+Both decode a full chunk per dispatch; µs/token divides the median chunk
+wall-clock by chunk * batch. Emits ``BENCH_paged_decode.json`` at the repo
+root — the paged-decode perf trajectory — plus CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_paged_decode [--smoke]
+"""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import (
+    decode_n,
+    init_paged_pages,
+    init_params,
+    paged_decode_n,
+    prefill,
+)
+
+from .common import Row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_paged_decode.json"
+
+_MAX_LEN = 256
+_BLOCK_SIZE = 16
+_CHUNK = 8
+_POINTS = ((4, 64), (8, 64), (8, 128), (16, 64))   # (batch, context)
+_REPS = 5
+
+
+def _prefill_states(cfg, params, batch: int, ctx: int):
+    """Build matching dense + paged decode states holding a real ``ctx``-token
+    prefix per row (same prompts, so both paths decode identical content)."""
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(batch, ctx)).astype(np.int32)
+    logits, cache = jax.jit(
+        lambda p, t: prefill(p, cfg, t, _MAX_LEN)
+    )(params, jnp.asarray(prompts))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    mb = _MAX_LEN // _BLOCK_SIZE
+    num_blocks = batch * mb + 1                     # block 0 = trash
+    pages = init_paged_pages(cfg, num_blocks, _BLOCK_SIZE)
+    # every row owns a full contiguous table up front: the bench times the
+    # decode dispatch, not the allocator (kv_pool owns that host-side)
+    tables = np.arange(1, num_blocks, dtype=np.int32).reshape(batch, mb)
+    nb = ctx // _BLOCK_SIZE
+    new_pages = dict(pages)
+    for key in ("k", "v"):
+        arr = cache[key]                            # (L, B, K, max_len, D)
+        l, b, kh, _, d = arr.shape
+        blocks = (
+            arr[:, :, :, :ctx]
+            .reshape(l, b, kh, nb, _BLOCK_SIZE, d)
+            .transpose(0, 1, 3, 2, 4, 5)
+            .reshape(l, b * nb, kh, _BLOCK_SIZE, d)
+        )
+        ids = tables[:, :nb].reshape(-1)
+        new_pages[key] = pages[key].at[:, ids].set(blocks)
+    return cache, new_pages, jnp.asarray(tables), tok
+
+
+def _median_chunk_us(step, state, tok, reps: int = _REPS):
+    """Median wall-clock of one fused chunk; the donated state threads
+    through so every rep decodes a fresh chunk (lengths advance)."""
+    times = []
+    for i in range(reps + 1):
+        t0 = time.perf_counter()
+        toks, state = step(state, tok)
+        jax.block_until_ready(toks)
+        if i:                                       # rep 0 re-warms
+            times.append(time.perf_counter() - t0)
+        tok = toks[-1]
+    return float(np.median(times) * 1e6), state
+
+
+def run(smoke: bool = False) -> list[Row]:
+    cfg = paper_models.TINY_SERVER
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    points = _POINTS[:1] if smoke else _POINTS
+
+    rows: list[Row] = []
+    out_points = []
+    for batch, ctx in points:
+        cache, pages, tables, tok = _prefill_states(cfg, params, batch, ctx)
+        active = jnp.ones((batch,), bool)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def dense_step(cache, tok, active=active):
+            toks, cache = decode_n(
+                params, cfg, cache, tok, _CHUNK, max_len=_MAX_LEN, active=active
+            )
+            return toks, cache
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def paged_step(pages, lengths, tok, tables=tables, active=active):
+            return paged_decode_n(
+                params, cfg, pages, tables, lengths, tok,
+                _CHUNK, max_len=_MAX_LEN, active=active,
+            )
+
+        def paged_rep(state, tok):
+            pages, lengths = state
+            # lengths thread through across reps: honest cache growth
+            toks, pages, lengths = paged_step(pages, lengths, tok)
+            return toks, (pages, lengths)
+
+        dense_us, cache = _median_chunk_us(dense_step, cache, tok)
+        paged_us, _ = _median_chunk_us(
+            paged_rep, (pages, jnp.full((batch,), ctx, jnp.int32)), tok
+        )
+        tokens = _CHUNK * batch
+        point = {
+            "batch": batch,
+            "context": ctx,
+            "chunk": _CHUNK,
+            "dense_us_per_token": dense_us / tokens,
+            "paged_us_per_token": paged_us / tokens,
+            "dense_tokens_per_s": tokens / (dense_us * 1e-6),
+            "paged_tokens_per_s": tokens / (paged_us * 1e-6),
+            "paged_vs_dense": dense_us / paged_us,
+        }
+        out_points.append(point)
+        rows.append(Row(
+            f"paged_decode/b{batch}_ctx{ctx}/dense", dense_us / tokens,
+            f"tokens_per_s={point['dense_tokens_per_s']:.0f}",
+        ))
+        rows.append(Row(
+            f"paged_decode/b{batch}_ctx{ctx}/paged", paged_us / tokens,
+            f"tokens_per_s={point['paged_tokens_per_s']:.0f};"
+            f"vs_dense={point['paged_vs_dense']:.2f}",
+        ))
+
+    ratios = np.array([p["paged_vs_dense"] for p in out_points])
+    headline = {
+        "geomean_paged_vs_dense": float(np.exp(np.log(ratios).mean())),
+        "min_paged_vs_dense": float(ratios.min()),
+    }
+    rows.append(Row(
+        "paged_decode/headline", 0.0,
+        f"geomean_paged_vs_dense={headline['geomean_paged_vs_dense']:.2f}",
+    ))
+    if not smoke:
+        _JSON_PATH.write_text(json.dumps({
+            "bench": "paged_decode",
+            "model": cfg.name,
+            "max_len": _MAX_LEN,
+            "block_size": _BLOCK_SIZE,
+            "decode_chunk": _CHUNK,
+            "kernel": "xla_gather_reference",   # TPU runs flip to Pallas DMA
+            "points": out_points,
+            "headline": headline,
+        }, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single point, no JSON emission")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)

@@ -11,6 +11,7 @@ import time
 from . import (
     bench_decode_throughput,
     bench_e2e_serving,
+    bench_paged_decode,
     bench_prefill_throughput,
     bench_fig23_stability,
     bench_roofline_endpoints,
@@ -44,6 +45,7 @@ MODULES = {
     "decode": bench_decode_throughput,
     "e2e_serving": bench_e2e_serving,
     "prefill": bench_prefill_throughput,
+    "paged_decode": bench_paged_decode,
 }
 
 

@@ -17,9 +17,18 @@ from .paged import (
     supports_paged,
 )
 
+# Replayable stochastic sampling (``models.sampling``): ``SamplerConfig``
+# (greedy/temperature/top-k/top-p) is closed over by the jitted step
+# functions; ``request_key(seed)`` derives the per-request base key and
+# ``sample_tokens`` draws each token via ``fold_in(key, position)`` — pure in
+# (key, position, logits), so migration/preemption/fork replay is
+# bit-identical under temperature > 0. ``GREEDY`` is the argmax default.
+from .sampling import GREEDY, SamplerConfig, request_key, sample_tokens
+
 __all__ = [
     "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
     "init_params", "param_shapes", "prefill", "window_vector",
     "init_paged_pages", "paged_decode_n", "paged_decode_step",
     "paged_prefill", "supports_paged",
+    "GREEDY", "SamplerConfig", "request_key", "sample_tokens",
 ]

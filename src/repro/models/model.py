@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import ModelConfig
+from .sampling import SamplerConfig, sample_tokens
 from .layers import (
     attn_decode,
     attn_full,
@@ -408,13 +409,22 @@ def decode_n(
     *,
     max_len: Optional[int] = None,
     active: Optional[jnp.ndarray] = None,
+    sampler: Optional[SamplerConfig] = None,
+    keys: Optional[jnp.ndarray] = None,
 ):
-    """Fused greedy multi-token decode: ``num_steps`` decode_steps under one
+    """Fused multi-token decode: ``num_steps`` decode_steps under one
     ``lax.scan`` so a whole chunk of tokens costs a single dispatch (and the
     caller a single host sync), instead of one per token.
 
     ``token``: (B,) int32 — the most recent token per row.
     Returns (tokens (num_steps, B) int32, new_cache).
+
+    Sampling: ``sampler=None`` (or temperature 0) is greedy argmax.
+    Otherwise ``keys`` carries each row's (2,) uint32 request key and step
+    ``i`` of the scan draws with ``fold_in(key, lengths_after_step_i)`` — a
+    pure function of (key, absolute position, logits), so the emitted stream
+    is independent of chunk size and batch composition (see
+    ``models.sampling``).
 
     Row-freeze semantics (both optional; when neither is given the scan body
     is the bare decode_step — no cache merge, zero extra copies):
@@ -424,6 +434,8 @@ def decode_n(
       * ``active``: (B,) bool — rows marked inactive keep cache and lengths
         frozen (continuous-batching servers leave free slots untouched).
     Frozen rows re-emit their input token; callers discard those positions.
+    A frozen row's position does not advance, so it derives (and discards)
+    the same per-token key every step — no randomness is consumed.
     """
     if cfg.is_encoder:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
@@ -432,7 +444,7 @@ def decode_n(
     def body(carry, _):
         tok, c = carry
         logits, new_c = decode_step(params, cfg, c, tok)
-        new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_tok = sample_tokens(sampler, logits, keys, new_c["lengths"])
         if not guard:
             return (new_tok, new_c), new_tok
         ok = jnp.ones_like(tok, bool)

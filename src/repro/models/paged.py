@@ -42,6 +42,7 @@ from .config import ModelConfig
 from .layers import _qkv, ffn_apply, rms_norm
 from .model import Cache, _embed, _logits, prefill, window_vector
 from .rope import apply_rope
+from .sampling import SamplerConfig, sample_tokens
 
 __all__ = [
     "supports_paged",
@@ -88,11 +89,18 @@ def paged_prefill(
     tokens: jnp.ndarray,      # (1, S) bucket-padded, S % block_size == 0
     lengths: jnp.ndarray,     # (1,) true prompt length
     block_ids: jnp.ndarray,   # (S // block_size,) physical blocks for the prompt
+    *,
+    sampler: Optional[SamplerConfig] = None,
+    keys: Optional[jnp.ndarray] = None,    # (1, 2) uint32 request key
 ):
     """Alloc-on-prefill write path: run the dense prefill math for one row
     and scatter its K/V into the request's blocks (one (nb,)-indexed scatter
     per pool array — whole blocks move, not tokens). Pad-tail positions land
     in the tail block and are masked by ``lengths`` at read time.
+
+    The first token is sampled at absolute position ``lengths`` (the true
+    prompt length), so a replay prefill of prompt + delivered tokens lands
+    on the same position counter the source's decode would use next.
 
     Returns (first_token (1,) int32, pages).
     """
@@ -110,7 +118,7 @@ def paged_prefill(
         new_pages[key] = pages[key].at[:, block_ids].set(
             blocks.astype(pages[key].dtype)
         )
-    return jnp.argmax(last, axis=-1).astype(jnp.int32), new_pages
+    return sample_tokens(sampler, last, keys, lengths), new_pages
 
 
 def _write_targets(block_tables, new_lengths, ok, block_size):
@@ -168,11 +176,16 @@ def paged_decode_step(
     max_len: int,
     active: Optional[jnp.ndarray] = None,
     use_kernel: bool = False,
+    sampler: Optional[SamplerConfig] = None,
+    keys: Optional[jnp.ndarray] = None,    # (B, 2) uint32 request keys
 ):
     """One paged decode step. Row-freeze semantics match dense ``decode_n``:
     rows stop at ``max_len - 1`` entries and ``active=False`` rows keep
     lengths frozen and re-emit their input token (their write is routed to
-    the trash block instead of merged out).
+    the trash block instead of merged out). The next token is sampled at
+    position ``new_lengths`` per row (``models.sampling``); a frozen row's
+    position does not advance, so it derives — and discards — the same key
+    without consuming randomness from any stream.
 
     Returns (token_out (B,), logits (B, V) f32, pages, new_lengths).
     """
@@ -196,7 +209,7 @@ def paged_decode_step(
         body, h0, (params["layers"], window_vector(cfg), pages)
     )
     logits = _logits(params, cfg, h)[:, 0]
-    new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_tok = sample_tokens(sampler, logits, keys, new_lengths)
     out_tok = jnp.where(ok, new_tok, token)
     return out_tok, logits, new_pages, new_lengths
 
@@ -213,13 +226,16 @@ def paged_decode_n(
     max_len: int,
     active: Optional[jnp.ndarray] = None,
     use_kernel: bool = False,
+    sampler: Optional[SamplerConfig] = None,
+    keys: Optional[jnp.ndarray] = None,
 ):
-    """Fused greedy multi-token paged decode: ``num_steps`` steps under one
+    """Fused multi-token paged decode: ``num_steps`` steps under one
     ``lax.scan``, one dispatch per chunk. Callers must have extended each
     row's page table to cover its share of the chunk; steps past a row's
     extension write the NULL-padded table tail (the trash block) and their
     tokens are discarded host-side — same contract as the dense tail
-    rounding.
+    rounding. ``sampler``/``keys`` select position-keyed sampling exactly as
+    in dense ``decode_n`` (greedy when omitted).
 
     Returns (tokens (num_steps, B) int32, pages, new_lengths).
     """
@@ -228,6 +244,7 @@ def paged_decode_n(
         out_tok, _, pg, lens = paged_decode_step(
             params, cfg, pg, block_tables, lens, tok,
             max_len=max_len, active=active, use_kernel=use_kernel,
+            sampler=sampler, keys=keys,
         )
         return (out_tok, lens, pg), out_tok
 

@@ -1,0 +1,133 @@
+"""Replayable stochastic sampling: counter-based per-request RNG.
+
+The serving stack's migration (§4.3), vLLM-style recompute preemption, and
+``fork_stream`` hand-offs are lossless only if regenerating a token always
+reproduces it. Greedy argmax gives that for free; temperature sampling needs
+the RNG itself to be replayable. The rule here: the token at absolute
+position ``i`` of a request is a **pure function of (request_key, i,
+logits)** — the per-token key is ``fold_in(request_key, i)``, never a
+sequentially split stream. That makes sampling independent of
+
+* **chunking** — a ``decode_n`` scan of 8 steps and 8 single steps fold the
+  same positions;
+* **batch composition** — every row carries its own key, so admissions,
+  cancellations, and frozen rows elsewhere in the batch change nothing (a
+  frozen row derives a key it discards — no randomness is "consumed" from
+  any stream);
+* **replay path** — a migration target or preemption resume re-prefilling
+  prompt + already-emitted tokens lands on the same position counter and
+  continues with bit-identical draws.
+
+Position convention: a token's position is the number of context tokens
+that precede it — the prefill of an S-token prompt samples its first token
+at position S; a decode step whose cache holds ``lengths`` tokens (input
+token included) samples at position ``lengths``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SamplerConfig",
+    "GREEDY",
+    "request_key",
+    "sample_tokens",
+    "mask_top_k",
+    "mask_top_p",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """How next-token logits become a token.
+
+    ``temperature == 0`` is exact greedy argmax (no RNG touched at all).
+    ``top_k`` / ``top_p`` restrict the candidate set before the categorical
+    draw (0 / 1.0 disable them). The config is static per engine — it is
+    closed over by the jitted step functions — while the per-request key
+    rides in as a regular traced argument.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (got {self.top_k})")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1] (got {self.top_p})")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplerConfig()
+
+
+def request_key(seed: int) -> jax.Array:
+    """The per-request base key ((2,) uint32). Every token of the request is
+    drawn with ``fold_in(request_key(seed), position)``, so two streams with
+    the same seed are interchangeable mid-generation — the property the
+    consistent-prefix hand-off and recompute preemption rely on."""
+    return jax.random.PRNGKey(seed)
+
+
+def mask_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Keep the ``k`` largest logits per row, -inf the rest (ties at the
+    k-th value are all kept). ``k <= 0`` or ``k >= vocab`` is a no-op."""
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    thresh = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def mask_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus mask: keep the smallest probability-sorted prefix whose
+    cumulative probability reaches ``p`` (the argmax always survives, so
+    ``p -> 0`` degrades to greedy, never to an empty support)."""
+    if p >= 1.0:
+        return logits
+    sort = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sort, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < p            # exclusive cumsum: top-1 always kept
+    thresh = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def sample_tokens(
+    sampler: Optional[SamplerConfig],
+    logits: jnp.ndarray,      # (B, V) f32 next-token logits
+    keys: Optional[jnp.ndarray],    # (B, 2) uint32 per-request base keys
+    positions: Optional[jnp.ndarray],  # (B,) int32 absolute token positions
+) -> jnp.ndarray:
+    """Sample one token per row: ``fold_in(key, position)`` -> masked
+    categorical. Pure in (key, position, logits); jit/vmap/scan-safe.
+
+    ``sampler=None`` or temperature 0 is exact greedy argmax and ignores
+    ``keys``/``positions`` entirely (they may be None). Returns (B,) int32.
+    """
+    if sampler is None or sampler.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if keys is None or positions is None:
+        raise ValueError(
+            "stochastic sampling (temperature > 0) requires per-row keys "
+            "and absolute positions"
+        )
+    scaled = logits.astype(jnp.float32) / sampler.temperature
+    scaled = mask_top_k(scaled, sampler.top_k)
+    scaled = mask_top_p(scaled, sampler.top_p)
+
+    def draw(key, pos, row_logits):
+        return jax.random.categorical(jax.random.fold_in(key, pos), row_logits)
+
+    positions = jnp.asarray(positions, jnp.int32)
+    return jax.vmap(draw)(keys, positions, scaled).astype(jnp.int32)

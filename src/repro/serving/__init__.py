@@ -21,7 +21,19 @@ network = sampled RTT, queueing = emergent slot contention):
   requests: dispatch racing (§4.2), loser cancellation, token-ID migration
   into the same contended scheduler (§4.3), paced delivery + QoE/cost/waste
   accounting.
+
+Sampling: every layer accepts a ``SamplerConfig`` (re-exported from
+``repro.models.sampling`` — greedy argmax by default, or
+temperature/top-k/top-p) plus a per-request integer seed
+(``InferenceEngine.generate/open_stream``, ``BatchedServer.submit``,
+endpoint ``open_stream``/``open_replay_stream``). Tokens are drawn with a
+counter-based key — ``fold_in(request_key(seed), absolute_position)`` — so
+migration, recompute preemption, and ``fork_stream`` stay bit-identical
+under temperature > 0; the DiSCo driver derives one seed per request and
+shares it across the device/server race and any migration replay.
 """
+from repro.models.sampling import GREEDY, SamplerConfig, request_key
+
 from .disco_driver import DiSCoServer, ServedRequest
 from .endpoint import (
     DeviceEndpoint,
@@ -40,4 +52,5 @@ __all__ = [
     "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
     "BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens",
+    "GREEDY", "SamplerConfig", "request_key",
 ]

@@ -78,6 +78,8 @@ class _Req:
     max_new: int
     arrival: float
     decision: object
+    seed: int = 0               # sampling seed shared by every stream of
+                                # this request (race, migration replay)
     streams: dict = dataclasses.field(default_factory=dict)   # race streams
     all_streams: list = dataclasses.field(default_factory=list)
     winner: Optional[Endpoint] = None
@@ -217,18 +219,26 @@ class DiSCoServer:
     def _admit(self, arrival: float, prompt: np.ndarray, max_new: int) -> _Req:
         decision = self.sched.plan_request(len(prompt), self.rng)
         self.sched.observe_prompt_length(len(prompt))
+        # the request's sampling seed: derived from the driver rid and handed
+        # to BOTH racing streams and any later migration replay, so with
+        # identical endpoint models every stream of this request draws the
+        # same token at the same absolute position (models.sampling) — the
+        # consistent-prefix hand-off stays bit-identical under temperature
         r = _Req(
             rid=self._next_rid, prompt=prompt, max_new=max_new,
-            arrival=arrival, decision=decision,
+            arrival=arrival, decision=decision, seed=self._next_rid,
         )
         self._next_rid += 1
         if decision.use_server:
-            st = self.server.open_stream(prompt, max_new, self.rng, start_at=arrival)
+            st = self.server.open_stream(
+                prompt, max_new, self.rng, start_at=arrival, seed=r.seed
+            )
             r.streams[Endpoint.SERVER] = st
             r.all_streams.append(st)
         if decision.use_device and math.isfinite(decision.device_wait):
             st = self.device.open_stream(
-                prompt, max_new, self.rng, start_at=arrival + decision.device_wait
+                prompt, max_new, self.rng,
+                start_at=arrival + decision.device_wait, seed=r.seed,
             )
             r.streams[Endpoint.DEVICE] = st
             r.all_streams.append(st)
@@ -331,7 +341,8 @@ class DiSCoServer:
                               # first if the remaining stream is short)
         r.mig_prefix = len(r.tokens)
         r.mig_stream = target_ep.open_replay_stream(
-            r.prompt, list(r.tokens), r.max_new - len(r.tokens), self.rng, start_at=t
+            r.prompt, list(r.tokens), r.max_new - len(r.tokens), self.rng,
+            start_at=t, seed=r.seed,
         )
         r.all_streams.append(r.mig_stream)
 

@@ -282,20 +282,39 @@ class DeviceEndpoint:
         self.engine = engine
         self.energy_per_prefill_token = energy_per_prefill_token
         self.energy_per_decode_token = energy_per_decode_token
+        self._auto_seed = 0    # distinct default stream per request, matching
+                               # the server endpoint's rid-derived default
+
+    def _seed(self, seed: Optional[int]) -> int:
+        """Default sampling seed: distinct per opened stream. Callers racing
+        this endpoint against another for ONE request (the DiSCo driver)
+        must pass an explicit shared seed — endpoint-local defaults cannot
+        agree across endpoints."""
+        if seed is not None:
+            return int(seed)
+        self._auto_seed += 1
+        return self._auto_seed - 1
 
     def open_stream(self, prompt: np.ndarray, max_new: int, rng,
-                    start_at: float = 0.0) -> DeviceTokenStream:
+                    start_at: float = 0.0,
+                    seed: Optional[int] = None) -> DeviceTokenStream:
         return DeviceTokenStream(
-            self.engine.open_stream(prompt, max_new), start_at, self.kind
+            self.engine.open_stream(prompt, max_new, seed=self._seed(seed)),
+            start_at, self.kind,
         )
 
     def open_replay_stream(self, prompt, generated, max_new: int, rng,
-                           start_at: float = 0.0) -> DeviceTokenStream:
+                           start_at: float = 0.0, seed: Optional[int] = None
+                           ) -> DeviceTokenStream:
         """Migration-target path: re-prefill prompt + token IDs, then
         continue. Per-token times are interpolated across each measured
-        decode chunk (same as a fresh stream — no host-buffered bursts)."""
+        decode chunk (same as a fresh stream — no host-buffered bursts).
+        ``seed`` must be the request's seed so a temperature > 0 replay
+        resumes the source's per-position sampling stream bit-identically."""
         return DeviceTokenStream(
-            self.engine.open_replay(prompt, generated, max_new), start_at, self.kind
+            self.engine.open_replay(prompt, generated, max_new,
+                                    seed=self._seed(seed)),
+            start_at, self.kind,
         )
 
 
@@ -314,10 +333,11 @@ class ServerEndpoint:
         self.network = network if network is not None else NetworkModel()
 
     def _open(self, tokens: np.ndarray, max_new: int, rng: np.random.Generator,
-              start_at: float) -> ServerTokenStream:
+              start_at: float, seed: Optional[int]) -> ServerTokenStream:
         rtt = self.network.sample_rtt(rng)
         rid = self.server.submit(
-            np.asarray(tokens, np.int32), max_new, at=start_at + rtt / 2.0
+            np.asarray(tokens, np.int32), max_new, at=start_at + rtt / 2.0,
+            seed=seed,
         )
         return ServerTokenStream(
             self.server, rid, start_at, downlink=rtt / 2.0,
@@ -325,17 +345,21 @@ class ServerEndpoint:
         )
 
     def open_stream(self, prompt: np.ndarray, max_new: int,
-                    rng: np.random.Generator, start_at: float = 0.0
-                    ) -> ServerTokenStream:
-        return self._open(np.asarray(prompt, np.int32), max_new, rng, start_at)
+                    rng: np.random.Generator, start_at: float = 0.0,
+                    seed: Optional[int] = None) -> ServerTokenStream:
+        return self._open(
+            np.asarray(prompt, np.int32), max_new, rng, start_at, seed
+        )
 
     def open_replay_stream(self, prompt, generated, max_new: int,
-                           rng: np.random.Generator, start_at: float = 0.0
-                           ) -> ServerTokenStream:
+                           rng: np.random.Generator, start_at: float = 0.0,
+                           seed: Optional[int] = None) -> ServerTokenStream:
         """Migration-target path: the re-prefill is submitted to the SAME
         batched scheduler as live traffic — a migration competes for slots
-        like any other request."""
+        like any other request. ``seed`` must be the migrating request's
+        seed so a temperature > 0 continuation is bit-identical to what the
+        source would have produced."""
         full = np.concatenate(
             [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
         )
-        return self._open(full, max_new, rng, start_at)
+        return self._open(full, max_new, rng, start_at, seed)

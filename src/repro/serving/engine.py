@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (
+    GREEDY,
+    SamplerConfig,
     decode_n,
     decode_step,
     init_cache,
@@ -49,6 +51,8 @@ from repro.models import (
     paged_decode_n,
     paged_prefill,
     prefill,
+    request_key,
+    sample_tokens,
     supports_paged,
 )
 from repro.kernels.compat import on_tpu
@@ -57,6 +61,20 @@ from repro.models.config import ModelConfig
 from .kv_pool import KVPoolManager
 
 __all__ = ["InferenceEngine", "GenerationResult", "EngineStream", "BatchedServer"]
+
+
+def _request_keys(seeds) -> np.ndarray:
+    """(B, 2) uint32 per-request sampling keys for a batch of integer seeds
+    (host-side; one row per request). Greedy paths pass these through
+    untouched-and-unused so the jitted signatures stay uniform."""
+    return np.stack([np.asarray(request_key(int(s))) for s in seeds])
+
+
+def _zero_keys(batch: int) -> jnp.ndarray:
+    """(B, 2) uint32 placeholder keys for paths with no request seed
+    (warmup, greedy-only callers)."""
+    return jnp.zeros((batch, 2), jnp.uint32)
+
 
 _MIN_BUCKET = 16
 
@@ -132,24 +150,30 @@ def _paged_windowed(cfg: ModelConfig) -> bool:
     )
 
 
-def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
+def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool,
+                         sampler: SamplerConfig):
     """The two jitted paged dispatches shared by InferenceEngine (1-row) and
     BatchedServer (R-row): a row prefill scattering into the donated pool,
-    and a fused multi-token decode over page tables."""
+    and a fused multi-token decode over page tables. The sampler is closed
+    over (static); per-request keys ride in as traced arguments."""
 
     @functools.partial(jax.jit, donate_argnums=(1,))
-    def prefill_fn(params, pages, tokens, lengths, block_ids):
+    def prefill_fn(params, pages, tokens, lengths, block_ids, keys):
         """Prefill (1, S) and scatter its K/V into the request's blocks.
         The pool is donated: blocks are written in place."""
-        return paged_prefill(params, cfg, pages, tokens, lengths, block_ids)
+        return paged_prefill(
+            params, cfg, pages, tokens, lengths, block_ids,
+            sampler=sampler, keys=keys,
+        )
 
     @functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("num_steps",))
-    def decode_fn(params, pages, bt, lengths, tokens, active, num_steps):
+    def decode_fn(params, pages, bt, lengths, tokens, active, keys, num_steps):
         """Fused multi-token paged decode; inactive/saturated rows write the
         trash block and keep their lengths frozen."""
         return paged_decode_n(
             params, cfg, pages, bt, lengths, tokens, num_steps,
             max_len=max_len, active=active, use_kernel=use_kernel,
+            sampler=sampler, keys=keys,
         )
 
     return prefill_fn, decode_fn
@@ -167,13 +191,17 @@ def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
             params, pages, jnp.zeros((1, s), jnp.int32),
             jnp.asarray([s], jnp.int32),
             jnp.arange(1, nb + 1, dtype=jnp.int32),
+            _zero_keys(1),
         )
     bt = jnp.zeros((rows, max_blocks_per_row), jnp.int32)
     lengths = jnp.zeros((rows,), jnp.int32)
     tokens = jnp.zeros((rows,), jnp.int32)
+    keys = _zero_keys(rows)
     inactive = jnp.zeros((rows,), bool)       # rows stay frozen
     for n in _tail_sizes(decode_chunk):
-        toks, pages, _ = decode_fn(params, pages, bt, lengths, tokens, inactive, n)
+        toks, pages, _ = decode_fn(
+            params, pages, bt, lengths, tokens, inactive, keys, n
+        )
     jax.block_until_ready(toks)
     return init_paged_pages(cfg, num_blocks, block_size)
 
@@ -196,9 +224,17 @@ def _cast_params(params, dtype):
 
 
 class InferenceEngine:
-    """Single-model engine with jitted prefill/decode and greedy sampling.
+    """Single-model engine with jitted prefill/decode.
 
     ``decode_chunk`` tokens are decoded per device dispatch / host sync.
+
+    ``sampler`` selects the decoding rule (default: greedy argmax). With
+    temperature > 0 every generation draws each token with the
+    position-keyed counter RNG of ``models.sampling``: callers pass a
+    per-request ``seed`` (``generate``/``open_stream``/``open_replay``) and
+    the token at position *i* depends only on (seed, i, logits) — so replay
+    (``open_replay``, ``replay_then_continue``) and ``fork_stream`` continue
+    a stream bit-identically when given the same seed.
 
     ``paged=True`` switches the generation paths (``generate``,
     ``open_stream``/``open_replay``, ``replay_then_continue``) onto the
@@ -216,13 +252,17 @@ class InferenceEngine:
                  decode_chunk: int = 8, paged: bool = False,
                  block_size: int = 16, kv_rows: int = 4,
                  num_blocks: Optional[int] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 sampler: Optional[SamplerConfig] = None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
+        self.sampler = GREEDY if sampler is None else sampler
+        sampler = self.sampler
+        self._next_rid = 0
         self.paged = bool(paged)
         if self.paged:
             if not supports_paged(cfg):
@@ -238,12 +278,11 @@ class InferenceEngine:
                 num_blocks, self.block_size, kv_rows, self.max_blocks_per_row
             )
             self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
-            self._next_rid = 0
             if use_kernel is None:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             self._paged_prefill_fn, self._paged_decode_fn = _make_paged_step_fns(
-                cfg, max_len, self.use_kernel
+                cfg, max_len, self.use_kernel, sampler
             )
 
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -256,25 +295,28 @@ class InferenceEngine:
             self._copy_blocks = _copy_blocks
 
         @jax.jit
-        def _prefill(params, tokens, lengths):
+        def _prefill(params, tokens, lengths, keys):
             logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            # first token sampled at its absolute position = true prompt
+            # length, so replay prefills resume the same position counter
+            return sample_tokens(sampler, logits, keys, lengths), cache
 
         # the cache flows linearly through decode (old cache never reused), so
         # its buffers are donated: XLA updates the KV cache in place instead
         # of copying it every step.
         @functools.partial(jax.jit, donate_argnums=(1,))
-        def _decode(params, cache, token):
+        def _decode(params, cache, token, keys):
             logits, cache = decode_step(params, cfg, cache, token)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            return sample_tokens(sampler, logits, keys, cache["lengths"]), cache
 
         @functools.partial(
             jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
         )
-        def _decode_n(params, cache, token, num_steps):
+        def _decode_n(params, cache, token, keys, num_steps):
             # unguarded: pure scan over decode_step, zero extra cache copies.
             # The host never consumes tokens past max_len-1 (see generate).
-            return decode_n(params, cfg, cache, token, num_steps)
+            return decode_n(params, cfg, cache, token, num_steps,
+                            sampler=sampler, keys=keys)
 
         self._prefill = _prefill
         self._decode = _decode
@@ -297,13 +339,14 @@ class InferenceEngine:
         for s in buckets[1:]:
             t, _ = self.prefill(np.zeros((batch, s), np.int32))
         tok = np.zeros((batch, buckets[0]), np.int32)
+        keys = _zero_keys(batch)
         t, cache = self.prefill(tok)
         # decode donates the cache: thread it, never reuse a donated buffer
-        tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t))
+        tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t), keys)
         # precompile every tail scan length generate can dispatch, so no XLA
         # compile ever lands inside the wall-clock-timed decode region
         for n in _tail_sizes(self.decode_chunk):
-            toks, cache = self._decode_n(self.params, cache, tok_dev, n)
+            toks, cache = self._decode_n(self.params, cache, tok_dev, keys, n)
             tok_dev = toks[-1]
         jax.block_until_ready(tok_dev)
 
@@ -318,11 +361,14 @@ class InferenceEngine:
             decode_chunk=self.decode_chunk, num_blocks=self.kv.pool.num_blocks,
         )
 
-    def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int):
+    def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int,
+                      keys=None):
         """Yield (tokens_np (n_valid, B), n_valid) decode chunks after the
         prefill token: one fused dispatch + one host sync per chunk, stopping
         at max_new or cache saturation (lengths == max_len - 1, exactly the
         seed per-token guard). Shared by generate and replay_then_continue."""
+        if keys is None:
+            keys = _zero_keys(1)
         emitted = 1
         cur_len = start_len
         while emitted < max_new:
@@ -334,7 +380,7 @@ class InferenceEngine:
             if n_valid <= 0:
                 return
             n_steps = _tail_steps(n_valid, self.decode_chunk)
-            toks, cache = self._decode_n(self.params, cache, tok_dev, n_steps)
+            toks, cache = self._decode_n(self.params, cache, tok_dev, keys, n_steps)
             toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
             yield toks_np[:n_valid], n_valid
             emitted += n_valid
@@ -343,10 +389,13 @@ class InferenceEngine:
 
     # -- paged request lifecycle (alloc / extend / free / clone) -----------
 
-    def _paged_admit_prefill(self, rid: int, prompt: np.ndarray) -> int:
+    def _paged_admit_prefill(self, rid: int, prompt: np.ndarray,
+                             keys=None) -> int:
         """Alloc-on-prefill: admit ``rid`` (blocks + row) and run the paged
         row prefill. Raises ``RuntimeError`` when the pool cannot hold the
         prompt — the device engine has no queue to fall back on."""
+        if keys is None:
+            keys = _zero_keys(1)
         s = int(prompt.shape[0])
         padded, lengths = _pad_to_bucket(
             prompt[None, :], self.max_len, self._bucketed
@@ -364,6 +413,7 @@ class InferenceEngine:
         tok, self.pages = self._paged_prefill_fn(
             self.params, self.pages, jnp.asarray(padded, jnp.int32),
             jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+            jnp.asarray(keys),
         )
         return int(jax.block_until_ready(tok)[0])
 
@@ -372,11 +422,14 @@ class InferenceEngine:
         self.kv.release(rid)
 
     def _paged_chunks(self, rid: int, tok_dev, start_len: int, max_new: int,
-                      emitted: int = 1):
+                      emitted: int = 1, keys=None):
         """Paged twin of ``_chunk_stream``: extend-on-decode grows the page
         table just ahead of each fused chunk; an extension the pool cannot
         serve ends the stream early (the rid lands in ``kv.extend_stalls`` —
         the stream's ``oom`` flag)."""
+        if keys is None:
+            keys = _zero_keys(1)
+        keys = jnp.asarray(keys)
         cur = start_len
         while emitted < max_new:
             n_valid = min(
@@ -398,7 +451,7 @@ class InferenceEngine:
             toks, self.pages, _ = self._paged_decode_fn(
                 self.params, self.pages, bt,
                 jnp.asarray([cur], jnp.int32), tok_dev,
-                jnp.ones((1,), bool), n_steps,
+                jnp.ones((1,), bool), keys, n_steps,
             )
             toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
             cur += n_valid
@@ -412,7 +465,9 @@ class InferenceEngine:
         ``src``'s page table into freshly allocated blocks, copy the block
         contents device-side, and return a new stream that continues decoding
         from the source's current state with no re-prefill. The source keeps
-        its own blocks and may keep generating (the hand-off race)."""
+        its own blocks and may keep generating (the hand-off race). The fork
+        inherits the source's request seed, so under temperature > 0 it
+        continues the exact per-position RNG stream the source would."""
         if not self.paged:
             raise ValueError("fork_stream requires a paged engine")
         if src._rid is None or src._rid not in self.kv.tables:
@@ -426,36 +481,51 @@ class InferenceEngine:
         src_ids = jnp.asarray([a for a, _ in pairs], jnp.int32)
         dst_ids = jnp.asarray([b for _, b in pairs], jnp.int32)
         self.pages = self._copy_blocks(self.pages, src_ids, dst_ids)
-        st = EngineStream(self, src._prompt, max_new)
+        st = EngineStream(self, src._prompt, max_new, seed=src.seed)
         st._rid = rid
         st.prefill_s = 0.0                 # no prefill: state was copied
         st.tokens_emitted = 0
         st._chunks = self._paged_chunks(
             rid, jnp.asarray([src._last_tok], jnp.int32),
-            table.num_tokens, max_new, emitted=0,
+            table.num_tokens, max_new, emitted=0, keys=st.keys,
         )
         return st
 
-    def prefill(self, tokens: np.ndarray):
-        """tokens: (B, S) int32. Returns (first_token (B,), cache)."""
+    def prefill(self, tokens: np.ndarray, keys=None):
+        """tokens: (B, S) int32. Returns (first_token (B,), cache).
+        ``keys``: optional (B, 2) uint32 per-row request keys (sampling
+        engines; greedy ignores them)."""
         padded, lengths = _pad_to_bucket(
             np.asarray(tokens, np.int32), self.max_len, self._bucketed
         )
+        if keys is None:
+            keys = _zero_keys(padded.shape[0])
         t, cache = self._prefill(
-            self.params, jnp.asarray(padded, jnp.int32), jnp.asarray(lengths)
+            self.params, jnp.asarray(padded, jnp.int32), jnp.asarray(lengths),
+            jnp.asarray(keys),
         )
         return np.asarray(jax.block_until_ready(t)), cache
 
-    def decode(self, cache, token: np.ndarray):
+    def decode(self, cache, token: np.ndarray, keys=None):
         """One decode step. NOTE: ``cache`` is donated (updated in place on
         the device) — callers must use the returned cache, not the argument."""
-        t, cache = self._decode(self.params, cache, jnp.asarray(token, jnp.int32))
+        token = np.asarray(token, np.int32)
+        if keys is None:
+            keys = _zero_keys(token.shape[0])
+        t, cache = self._decode(
+            self.params, cache, jnp.asarray(token), jnp.asarray(keys)
+        )
         return np.asarray(jax.block_until_ready(t)), cache
 
     # -- generation --------------------------------------------------------
 
-    def generate(self, prompt: np.ndarray, max_new: int, replay: bool = False) -> GenerationResult:
-        """Greedy generation for one prompt (1, S). Wall-clock timed.
+    def generate(self, prompt: np.ndarray, max_new: int, replay: bool = False,
+                 seed: int = 0) -> GenerationResult:
+        """Generation for one prompt (1, S). Wall-clock timed.
+
+        ``seed`` is the request's sampling seed (ignored by greedy engines):
+        two generations with the same seed are bit-identical, as is any
+        replay/fork that carries the seed forward.
 
         Decodes in fused chunks of ``decode_chunk`` tokens: one device
         dispatch and one host sync per chunk. The host only observes chunk
@@ -465,7 +535,7 @@ class InferenceEngine:
         their token-by-token meaning instead of a bursty 0/spike pattern.
         """
         if self.paged:
-            st = self.open_stream(prompt, max_new)
+            st = self.open_stream(prompt, max_new, seed=seed)
             tokens, times = [], []
             while (chunk := st.next_chunk()) is not None:
                 tokens += chunk[0]
@@ -478,13 +548,15 @@ class InferenceEngine:
                 prefill_s=st.prefill_s,
                 decode_s_per_token=(times[-1] - times[0]) / n_dec,
             )
+        keys = _request_keys([seed])
         t0 = time.perf_counter()
-        tok, cache = self.prefill(prompt[None, :])
+        tok, cache = self.prefill(prompt[None, :], keys=keys)
         t_first = time.perf_counter()
         tokens, times = [int(tok[0])], [t_first - t0]
         t_prev = t_first - t0
         for toks_np, n_valid in self._chunk_stream(
-            cache, jnp.asarray(tok, jnp.int32), int(prompt.shape[0]), max_new
+            cache, jnp.asarray(tok, jnp.int32), int(prompt.shape[0]), max_new,
+            keys=keys,
         ):
             now = time.perf_counter() - t0
             for i in range(n_valid):
@@ -501,14 +573,18 @@ class InferenceEngine:
         )
 
     def replay_then_continue(
-        self, prompt: np.ndarray, generated: list[int], max_new: int
+        self, prompt: np.ndarray, generated: list[int], max_new: int,
+        seed: int = 0
     ) -> tuple[float, "Iterator[int]"]:
         """Migration target path (§4.3): re-prefill prompt + received token IDs
         (no KV transfer), then continue decoding. Returns (replay_seconds,
         iterator of continuation tokens). The continuation decodes in fused
-        chunks and buffers them host-side."""
+        chunks and buffers them host-side. With the source's ``seed`` the
+        continuation is bit-identical to what the source would have produced
+        (the replay prefill samples at position len(prompt) + len(generated),
+        exactly the source's next counter value)."""
         if self.paged:
-            st = self.open_replay(prompt, generated, max_new)
+            st = self.open_replay(prompt, generated, max_new, seed=seed)
             first = st.next_chunk()          # replay prefill, eager
 
             def paged_continuation():
@@ -518,16 +594,18 @@ class InferenceEngine:
                     yield from c[0]
 
             return st.prefill_s, paged_continuation()
+        keys = _request_keys([seed])
         t0 = time.perf_counter()
         full = np.concatenate([prompt, np.asarray(generated, np.int32)])
-        tok, cache = self.prefill(full[None, :])
+        tok, cache = self.prefill(full[None, :], keys=keys)
         replay_s = time.perf_counter() - t0
         start_len = int(full.shape[0])
 
         def continuation():
             yield int(tok[0])
             for toks_np, n_valid in self._chunk_stream(
-                cache, jnp.asarray(tok, jnp.int32), start_len, max_new
+                cache, jnp.asarray(tok, jnp.int32), start_len, max_new,
+                keys=keys,
             ):
                 for i in range(n_valid):
                     yield int(toks_np[i, 0])
@@ -536,20 +614,24 @@ class InferenceEngine:
 
     # -- incremental (event-loop) interface --------------------------------
 
-    def open_stream(self, prompt: np.ndarray, max_new: int) -> "EngineStream":
+    def open_stream(self, prompt: np.ndarray, max_new: int,
+                    seed: int = 0) -> "EngineStream":
         """Lazy token source for ``prompt`` (S,): nothing is dispatched until
-        the first pull. See :class:`EngineStream`."""
-        return EngineStream(self, np.asarray(prompt, np.int32), max_new)
+        the first pull. ``seed`` keys the request's sampling stream. See
+        :class:`EngineStream`."""
+        return EngineStream(self, np.asarray(prompt, np.int32), max_new, seed=seed)
 
-    def open_replay(self, prompt: np.ndarray, generated, max_new: int) -> "EngineStream":
+    def open_replay(self, prompt: np.ndarray, generated, max_new: int,
+                    seed: int = 0) -> "EngineStream":
         """Migration-target source (§4.3): first pull re-prefills
         prompt + received token IDs (no KV transfer); the stream then emits
         up to ``max_new`` *continuation* tokens (the replay-prefill's next
-        token is the first of them)."""
+        token is the first of them). Pass the SOURCE stream's ``seed`` so the
+        continuation resumes the same per-position sampling stream."""
         full = np.concatenate(
             [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
         )
-        return EngineStream(self, full, max_new)
+        return EngineStream(self, full, max_new, seed=seed)
 
 
 class EngineStream:
@@ -569,10 +651,13 @@ class EngineStream:
     was in flight.
     """
 
-    def __init__(self, engine: InferenceEngine, prompt: np.ndarray, max_new: int):
+    def __init__(self, engine: InferenceEngine, prompt: np.ndarray, max_new: int,
+                 seed: int = 0):
         self.engine = engine
         self._prompt = prompt
         self._max_new = max_new
+        self.seed = int(seed)         # request sampling seed (greedy: unused)
+        self._keys: Optional[np.ndarray] = None
         self._chunks = None           # generator once prefill has run
         self.cancelled = False
         self.exhausted = False
@@ -582,6 +667,13 @@ class EngineStream:
         self._elapsed = 0.0           # compute-seconds consumed so far
         self._rid: Optional[int] = None   # paged engines: pool allocation id
         self._last_tok: Optional[int] = None
+
+    @property
+    def keys(self) -> np.ndarray:
+        """(1, 2) uint32 request key, derived once from the seed."""
+        if self._keys is None:
+            self._keys = _request_keys([self.seed])
+        return self._keys
 
     @property
     def prefilled(self) -> bool:
@@ -608,26 +700,29 @@ class EngineStream:
         if self.done:
             return None
         if self._chunks is None:
+            keys = self.keys              # derived before t0, not timed compute
             t0 = time.perf_counter()
             if self.engine.paged:
                 self._rid = self.engine._next_rid
                 self.engine._next_rid += 1
-                tok0 = self.engine._paged_admit_prefill(self._rid, self._prompt)
+                tok0 = self.engine._paged_admit_prefill(
+                    self._rid, self._prompt, keys=keys
+                )
                 self.prefill_s = time.perf_counter() - t0
                 self._elapsed = self.prefill_s
                 self._chunks = self.engine._paged_chunks(
                     self._rid, jnp.asarray([tok0], jnp.int32),
-                    int(self._prompt.shape[0]), self._max_new,
+                    int(self._prompt.shape[0]), self._max_new, keys=keys,
                 )
                 self.tokens_emitted = 1
                 self._last_tok = tok0
                 return [tok0], [self.prefill_s]
-            tok, cache = self.engine.prefill(self._prompt[None, :])
+            tok, cache = self.engine.prefill(self._prompt[None, :], keys=keys)
             self.prefill_s = time.perf_counter() - t0
             self._elapsed = self.prefill_s
             self._chunks = self.engine._chunk_stream(
                 cache, jnp.asarray(tok, jnp.int32),
-                int(self._prompt.shape[0]), self._max_new,
+                int(self._prompt.shape[0]), self._max_new, keys=keys,
             )
             self.tokens_emitted = 1
             return [int(tok[0])], [self.prefill_s]
@@ -670,18 +765,23 @@ class _Slot:
     remaining: int
     tokens: list
     prompt: Optional[np.ndarray] = None   # original prompt (preemption resume)
+    seed: int = 0                         # request sampling seed
+    key: Optional[np.ndarray] = None      # (2,) uint32 request key
 
 
 @dataclasses.dataclass
 class _Queued:
     """One queue entry. ``prompt`` is always the ORIGINAL prompt; a
     preemption-resume entry additionally carries the tokens already emitted
-    (the admission prefill replays prompt + tokens — vLLM-style recompute)."""
+    (the admission prefill replays prompt + tokens — vLLM-style recompute)
+    and the request's sampling ``seed``, so the resumed continuation draws
+    the exact same per-position samples."""
 
     rid: int
     prompt: np.ndarray
     max_new: int                           # tokens still to emit
     tokens: list = dataclasses.field(default_factory=list)
+    seed: int = 0
 
 
 class BatchedServer:
@@ -700,7 +800,9 @@ class BatchedServer:
     each row's page table block-by-block; when the pool runs dry mid-decode
     the newest-admitted request is preempted (blocks freed, requeued at the
     head; on re-admission it re-prefills prompt + emitted tokens and
-    continues — greedy decoding makes the resume lossless). ``cancel(rid)``
+    continues — deterministic decoding makes the resume lossless: greedy
+    argmax, or under temperature > 0 the position-keyed replayable sampler
+    of ``models.sampling`` with the request's ``seed``). ``cancel(rid)``
     returns the blocks within the same tick. Architectures without a paged
     layout (SSM/MLA) keep the dense per-row cache.
 
@@ -725,7 +827,8 @@ class BatchedServer:
                  max_len: int = 256, decode_chunk: int = 4,
                  paged: Optional[bool] = None, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 sampler: Optional[SamplerConfig] = None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -733,6 +836,8 @@ class BatchedServer:
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
+        self.sampler = GREEDY if sampler is None else sampler
+        sampler = self.sampler
         if paged is None:
             self.paged = supports_paged(cfg)
         elif paged and not supports_paged(cfg):
@@ -761,11 +866,11 @@ class BatchedServer:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             self._prefill_row_paged, self._decode_chunk_paged = (
-                _make_paged_step_fns(cfg, max_len, self.use_kernel)
+                _make_paged_step_fns(cfg, max_len, self.use_kernel, sampler)
             )
         else:
             @functools.partial(jax.jit, donate_argnums=(1,))
-            def _prefill_row(params, batched_cache, tokens, lengths, row):
+            def _prefill_row(params, batched_cache, tokens, lengths, row, keys):
                 """Prefill (1, S) and write its cache into row ``row``. The
                 batched cache is donated: the row write happens in place."""
                 logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
@@ -775,17 +880,17 @@ class BatchedServer:
                         new[k] = v.at[row].set(cache[k][0])
                     else:
                         new[k] = v.at[:, row].set(cache[k][:, 0])
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new
+                return sample_tokens(sampler, logits, keys, lengths)[0], new
 
             @functools.partial(
                 jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
             )
-            def _decode_chunk(params, cache, tokens, active, num_steps):
+            def _decode_chunk(params, cache, tokens, active, keys, num_steps):
                 """Fused multi-token batched decode; inactive/saturated rows
                 keep their cache untouched."""
                 return decode_n(
                     params, cfg, cache, tokens, num_steps,
-                    max_len=max_len, active=active,
+                    max_len=max_len, active=active, sampler=sampler, keys=keys,
                 )
 
             self._prefill_row = _prefill_row
@@ -846,13 +951,15 @@ class BatchedServer:
                 prompt[None, :], self.max_len, self._bucketed
             )
             tok, self.cache = self._prefill_row(
-                self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths), 0
+                self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths),
+                0, _zero_keys(1),
             )
         tokens = np.zeros((self.max_slots,), np.int32)
+        keys = _zero_keys(self.max_slots)
         inactive = jnp.zeros((self.max_slots,), bool)  # rows stay frozen
         for n in _tail_sizes(self.decode_chunk):
             toks, self.cache = self._decode_chunk(
-                self.params, self.cache, jnp.asarray(tokens), inactive, n
+                self.params, self.cache, jnp.asarray(tokens), inactive, keys, n
             )
         jax.block_until_ready(toks)
         # reset to a pristine cache: warmup must not leave row 0 populated
@@ -861,12 +968,19 @@ class BatchedServer:
 
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new: int, at: Optional[float] = None) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int, at: Optional[float] = None,
+               seed: Optional[int] = None) -> int:
         """Enqueue a request arriving at virtual time ``at`` (defaults to the
-        current clock). FIFO admission; callers submit in arrival order."""
+        current clock). FIFO admission; callers submit in arrival order.
+        ``seed`` keys the request's sampling stream (defaults to the rid);
+        it survives recompute preemption, so a preempted-then-replayed row
+        regenerates exactly its pre-preemption continuation."""
         rid = self.next_id
         self.next_id += 1
-        self.queue.append(_Queued(rid, np.asarray(prompt, np.int32), max_new))
+        self.queue.append(_Queued(
+            rid, np.asarray(prompt, np.int32), max_new,
+            seed=rid if seed is None else int(seed),
+        ))
         self.submit_time[rid] = self.clock if at is None else float(at)
         self.events[rid] = deque()
         self.generated[rid] = 0
@@ -981,6 +1095,7 @@ class BatchedServer:
         padded, lengths = _pad_to_bucket(
             full[None, :], self.max_len, self._bucketed
         )
+        key = _request_keys([item.seed])      # derived, not timed compute
         t0 = time.perf_counter()
         if self.paged:
             sb = int(padded.shape[1])
@@ -991,6 +1106,7 @@ class BatchedServer:
             tok, self.pages = self._prefill_row_paged(
                 self.params, self.pages, jnp.asarray(padded, jnp.int32),
                 jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+                jnp.asarray(key),
             )
             tok = int(jax.block_until_ready(tok)[0])
             self.block_tables[row] = table.padded(self.max_blocks_per_row)
@@ -998,7 +1114,7 @@ class BatchedServer:
             row = self._free_rows.pop()
             tok, self.cache = self._prefill_row(
                 self.params, self.cache, jnp.asarray(padded),
-                jnp.asarray(lengths), row,
+                jnp.asarray(lengths), row, jnp.asarray(key),
             )
             tok = int(jax.block_until_ready(tok))
         self.clock += time.perf_counter() - t0
@@ -1010,7 +1126,8 @@ class BatchedServer:
         self.admit_seq[rid] = self._admit_counter
         self._admit_counter += 1
         self.slots[rid] = _Slot(
-            rid, item.max_new - 1, list(item.tokens) + [tok], prompt=item.prompt
+            rid, item.max_new - 1, list(item.tokens) + [tok], prompt=item.prompt,
+            seed=item.seed, key=key[0],
         )
         self.rows[rid] = row
         self.row_len[row] = s
@@ -1020,14 +1137,16 @@ class BatchedServer:
     def _preempt(self, rid: int) -> None:
         """vLLM-style recompute preemption: free the victim's blocks and row
         and requeue it at the HEAD with its emitted tokens; re-admission
-        replays prompt + tokens (greedy decoding makes the resume lossless).
+        replays prompt + tokens (lossless for greedy argmax AND for the
+        position-keyed sampler, which reuses the request seed on resume).
         Its TTFT and delivered events are unaffected."""
         slot = self.slots.pop(rid)
         self.rows.pop(rid)
         self.kv.release(rid)
         self.kv.preemptions += 1
         self.queue.appendleft(
-            _Queued(rid, slot.prompt, slot.remaining, list(slot.tokens))
+            _Queued(rid, slot.prompt, slot.remaining, list(slot.tokens),
+                    seed=slot.seed)
         )
 
     def _ensure_block_capacity(self, need: dict) -> None:
@@ -1079,10 +1198,13 @@ class BatchedServer:
                 )
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
+        keys = np.zeros((self.max_slots, 2), np.uint32)
         for rid, slot in self.slots.items():
             row = self.rows[rid]
             tokens[row] = slot.tokens[-1]
             active[row] = True
+            if slot.key is not None:
+                keys[row] = slot.key
         # cap the scan at the largest per-row need (rounded to a warm tail
         # size) so request tails don't pay for discarded decode steps
         num_steps = _tail_steps(max(need.values()), self.decode_chunk)
@@ -1092,12 +1214,13 @@ class BatchedServer:
             toks, self.pages, _ = self._decode_chunk_paged(
                 self.params, self.pages, jnp.asarray(self.block_tables),
                 jnp.asarray(np.asarray(self.row_len, np.int32)),
-                jnp.asarray(tokens), jnp.asarray(active), num_steps,
+                jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(keys),
+                num_steps,
             )
         else:
             toks, self.cache = self._decode_chunk(
                 self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
-                num_steps,
+                jnp.asarray(keys), num_steps,
             )
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         dur = time.perf_counter() - t0

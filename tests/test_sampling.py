@@ -1,0 +1,269 @@
+"""Replayable-sampling invariants: temperature -> 0 recovers greedy argmax,
+top-k/top-p masks on hand-built logits, and — the property the serving stack
+stands on — same-seed replay is bit-identical across chunk sizes, recompute
+preemption, migration hand-off, and ``fork_stream``."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import paper_models
+from repro.core import CostModel, DiSCoScheduler, Endpoint, MigrationConfig
+from repro.models import init_params, request_key, sample_tokens
+from repro.models.sampling import GREEDY, SamplerConfig, mask_top_k, mask_top_p
+from repro.serving import (
+    BatchedServer,
+    DeviceEndpoint,
+    DiSCoServer,
+    InferenceEngine,
+    NetworkModel,
+    ServerEndpoint,
+)
+
+CFG = paper_models.TINY_DEVICE
+SAMPLER = SamplerConfig(temperature=0.8, top_p=0.95)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sampled_engine(params):
+    return InferenceEngine(CFG, params, max_len=96, sampler=SAMPLER)
+
+
+# ---------------------------------------------------------------------------
+# SamplerConfig + mask primitives (pure, hand-built logits)
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_config_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplerConfig(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplerConfig(top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplerConfig(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplerConfig(top_p=1.5)
+    assert GREEDY.greedy and not SamplerConfig(temperature=0.5).greedy
+    # stochastic sampling without keys/positions fails loudly, not deep in jit
+    with pytest.raises(ValueError, match="requires per-row keys"):
+        sample_tokens(SamplerConfig(temperature=1.0),
+                      jnp.zeros((1, 8), jnp.float32), None, None)
+
+
+def test_temperature_zero_recovers_greedy():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(5, 64)).astype(np.float32))
+    keys = jnp.stack([request_key(i) for i in range(5)])
+    pos = jnp.arange(5, dtype=jnp.int32)
+    argmax = np.argmax(np.asarray(logits), axis=-1)
+    # exact greedy: temperature == 0 and sampler=None take the argmax branch
+    np.testing.assert_array_equal(sample_tokens(GREEDY, logits, keys, pos), argmax)
+    np.testing.assert_array_equal(sample_tokens(None, logits, None, None), argmax)
+    # the limit: a vanishing temperature scales the argmax gap far beyond any
+    # Gumbel perturbation, so the draw is argmax for every key/position
+    tiny = SamplerConfig(temperature=1e-4)
+    for p in range(20):
+        got = sample_tokens(tiny, logits, keys, jnp.full((5,), p, jnp.int32))
+        np.testing.assert_array_equal(got, argmax)
+
+
+def test_top_k_mask_hand_built():
+    logits = jnp.asarray(np.log(np.array(
+        [[0.4, 0.3, 0.2, 0.1], [0.1, 0.2, 0.3, 0.4]], np.float32)))
+    m = np.asarray(mask_top_k(logits, 2))
+    assert np.isfinite(m[0, :2]).all() and np.isinf(m[0, 2:]).all()
+    assert np.isfinite(m[1, 2:]).all() and np.isinf(m[1, :2]).all()
+    # no-ops: k disabled or covering the whole vocab
+    np.testing.assert_array_equal(np.asarray(mask_top_k(logits, 0)), logits)
+    np.testing.assert_array_equal(np.asarray(mask_top_k(logits, 4)), logits)
+    # draws restricted to the kept set at every position
+    s = SamplerConfig(temperature=1.5, top_k=2)
+    keys = jnp.stack([request_key(7)] * 2)
+    for p in range(50):
+        toks = np.asarray(
+            sample_tokens(s, logits, keys, jnp.full((2,), p, jnp.int32))
+        )
+        assert toks[0] in (0, 1) and toks[1] in (2, 3)
+
+
+def test_top_p_mask_hand_built():
+    probs = np.array([0.5, 0.3, 0.15, 0.05], np.float32)
+    logits = jnp.asarray(np.log(probs))[None, :]
+    # exclusive-cumsum rule: token joins while the mass BEFORE it is < p
+    m70 = np.asarray(mask_top_p(logits, 0.7))[0]     # 0.5 + 0.3 crosses 0.7
+    assert np.isfinite(m70[:2]).all() and np.isinf(m70[2:]).all()
+    m50 = np.asarray(mask_top_p(logits, 0.5))[0]     # 0.5 alone reaches it
+    assert np.isfinite(m50[0]) and np.isinf(m50[1:]).all()
+    m_tiny = np.asarray(mask_top_p(logits, 1e-6))[0]  # argmax always survives
+    assert np.isfinite(m_tiny[0]) and np.isinf(m_tiny[1:]).all()
+    np.testing.assert_array_equal(np.asarray(mask_top_p(logits, 1.0)), logits)
+
+
+def test_sampling_pure_in_key_position_logits():
+    """The token is a pure function of (key, position, logits): batch order,
+    batch size, and neighbours are irrelevant — the property that makes a
+    frozen row's discarded draw consume nothing from anyone's stream."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    keys = jnp.stack([request_key(i) for i in (3, 1, 4, 1)])
+    pos = jnp.asarray([5, 9, 2, 6], jnp.int32)
+    s = SamplerConfig(temperature=1.0)
+    full = np.asarray(sample_tokens(s, logits, keys, pos))
+    flipped = np.asarray(sample_tokens(s, logits[::-1], keys[::-1], pos[::-1]))
+    np.testing.assert_array_equal(full, flipped[::-1])
+    for i in range(4):
+        solo = np.asarray(
+            sample_tokens(s, logits[i:i + 1], keys[i:i + 1], pos[i:i + 1])
+        )
+        assert solo[0] == full[i]
+    # rows with the same key draw identically iff positions also match
+    same = np.asarray(sample_tokens(
+        s, jnp.tile(logits[:1], (2, 1)), keys[1::2], jnp.asarray([7, 7])
+    ))
+    assert same[0] == same[1]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level replay invariants (real tiny model)
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_bit_identical_and_chunk_invariant(params, sampled_engine):
+    prompt = np.arange(10, dtype=np.int32)
+    a = sampled_engine.generate(prompt, 16, seed=5).tokens
+    assert a == sampled_engine.generate(prompt, 16, seed=5).tokens
+    assert a != sampled_engine.generate(prompt, 16, seed=6).tokens
+    greedy = InferenceEngine(CFG, params, max_len=96)
+    assert a != greedy.generate(prompt, 16).tokens
+    # chunking must not move the position counter: 1-token scans == fused 8s
+    by_one = InferenceEngine(CFG, params, max_len=96, decode_chunk=1,
+                             sampler=SAMPLER)
+    for max_new in (1, 7, 9, 16):
+        assert (by_one.generate(prompt, max_new, seed=5).tokens
+                == sampled_engine.generate(prompt, max_new, seed=5).tokens)
+
+
+def test_replay_then_continue_sampled(sampled_engine):
+    """Migration-target invariant under temperature > 0: re-prefilling
+    prompt + delivered tokens with the request seed resumes the exact
+    per-position stream (the replay prefill samples at position
+    len(prompt) + len(delivered))."""
+    prompt = np.arange(6, dtype=np.int32)
+    direct = sampled_engine.generate(prompt, 16, seed=11).tokens
+    for cut in (1, 5, 15):
+        _, cont = sampled_engine.replay_then_continue(
+            prompt, direct[:cut], max_new=16 - cut, seed=11
+        )
+        assert direct[cut:] == list(cont)
+
+
+def test_fork_stream_sampled(params):
+    """Device-local hand-off under temperature > 0: the fork inherits the
+    source's seed and continues its exact stream."""
+    eng = InferenceEngine(CFG, params, max_len=96, paged=True,
+                          block_size=8, kv_rows=3, sampler=SAMPLER)
+    prompt = np.arange(8, dtype=np.int32)
+    expected = eng.generate(prompt, 24, seed=9).tokens
+    src = eng.open_stream(prompt, 24, seed=9)
+    head = list(src.next_chunk()[0])
+    head += src.next_chunk()[0]
+    fork = eng.fork_stream(src, 24 - len(head))
+    fork_tokens = []
+    while (c := fork.next_chunk()) is not None:
+        fork_tokens += c[0]
+    src.cancel()
+    assert head + fork_tokens == expected
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_paged_engine_matches_dense_sampled(params, sampled_engine):
+    """The paged scatter/gather path and the dense cache draw identical
+    streams (frozen-row trash-block routing consumes no randomness)."""
+    eng = InferenceEngine(CFG, params, max_len=96, paged=True,
+                          block_size=8, kv_rows=3, sampler=SAMPLER)
+    prompt = np.arange(10, dtype=np.int32)
+    assert (eng.generate(prompt, 20, seed=3).tokens
+            == sampled_engine.generate(prompt, 20, seed=3).tokens)
+
+
+# ---------------------------------------------------------------------------
+# BatchedServer: batching, preemption, and the DiSCo hand-off under sampling
+# ---------------------------------------------------------------------------
+
+
+def test_batched_server_matches_single_engine_sampled(params, sampled_engine):
+    """Batch composition must not perturb any request's draws: per-row keys,
+    not a shared stream. Seeds default to the rid."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96,
+                           sampler=SAMPLER)
+    prompts = [np.arange(7, dtype=np.int32),
+               (np.arange(11, dtype=np.int32) * 3) % CFG.vocab,
+               np.asarray([5, 2, 9], np.int32)]
+    rids = [server.submit(p, 9) for p in prompts]
+    expected = [sampled_engine.generate(p, 9, seed=r).tokens
+                for p, r in zip(prompts, rids)]
+    done = server.run_to_completion()
+    for rid, exp in zip(rids, expected):
+        assert done[rid] == exp
+
+
+def test_preemption_replay_bit_identical_sampled(params):
+    """Acceptance: a preempted-then-replayed row regenerates exactly its
+    pre-preemption tokens under temperature > 0 — the requeued entry carries
+    the seed and the replay prefill resumes the position counter."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9, sampler=SAMPLER)
+    engine = InferenceEngine(CFG, params, max_len=48, sampler=SAMPLER)
+    prompts = [np.arange(4, dtype=np.int32),
+               np.asarray([7, 3, 11, 2], np.int32)]
+    rids = [server.submit(p, 40) for p in prompts]
+    expected = [engine.generate(p, 40, seed=r).tokens
+                for p, r in zip(prompts, rids)]
+    done = server.run_to_completion()
+    assert server.pool_stats()["preemptions"] >= 1
+    for rid, exp in zip(rids, expected):
+        assert done[rid] == exp
+    assert server.kv.blocks_in_use == 0
+
+
+def test_migration_under_load_sampled_bit_identical(params):
+    """Acceptance: with identical endpoint models and temperature > 0, the
+    delivered stream of a migrated request equals the no-migration stream —
+    the driver shares one seed across the race and the hand-off replay."""
+    dev = InferenceEngine(CFG, params, max_len=96, sampler=SAMPLER)
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96,
+                           sampler=SAMPLER)
+    server.warmup(prompt_lens=(16,))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64
+        ).astype(int),
+        budget=0.5,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.005),
+    )
+    disco = DiSCoServer(
+        sched, DeviceEndpoint(dev),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
+        rng=np.random.default_rng(7),
+    )
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, CFG.vocab, size=12).astype(np.int32)
+               for _ in range(4)]
+    # driver seeds requests by rid = arrival index
+    baseline = [dev.generate(p, 40, seed=i).tokens
+                for i, p in enumerate(prompts)]
+    results = disco.serve_many(
+        [(0.002 * i, p, 40) for i, p in enumerate(prompts)]
+    )
+    assert any(r.migrated for r in results)
+    for r, base in zip(results, baseline):
+        assert r.winner is Endpoint.DEVICE
+        assert r.tokens == base
