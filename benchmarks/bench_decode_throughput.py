@@ -143,13 +143,18 @@ def _seed_loop(step, params, cache, tok, steps):
 
 def _fused_loop(engine, cache, tok, steps):
     """Current hot path: decode_n chunks, one host sync per chunk."""
+    from repro.models import sampler_operands
+
     out = []
     tok_dev = jnp.asarray(tok, jnp.int32)
     keys = jnp.zeros((tok_dev.shape[0], 2), jnp.uint32)   # greedy: unused
+    ops = sampler_operands([], batch=int(tok_dev.shape[0]))  # all-greedy rows
     t0 = time.perf_counter()
     done = 0
     while done < steps:
-        toks, cache = engine._decode_n(engine.params, cache, tok_dev, keys, _CHUNK)
+        toks, cache = engine._decode_n(
+            engine.params, cache, tok_dev, keys, ops, _CHUNK
+        )
         toks_np = np.asarray(jax.block_until_ready(toks))
         out.extend(toks_np[: min(_CHUNK, steps - done)])
         tok_dev = toks[-1]

@@ -25,21 +25,35 @@ so even disco wastes the propagation window's tokens. Emits
 ``BENCH_e2e_serving.json`` at the repo root — the TTFT-tail-under-load perf
 trajectory — plus CSV rows for ``benchmarks/run.py``.
 
+Every request carries an SLO contract (``Request.slo``): half the trace is
+"interactive" (tight TTFT deadline, finite TBT target), half "relaxed"
+(loose deadline); both share one priority tier so the admission comparison
+isolates pure deadline ordering. Per system the bench reports Andes-style
+``qoe_score_mean``, ``slo_attainment`` (full contract held) and
+``ttft_slo_attainment``/``slo_misses`` (TTFT deadline alone), and at each
+load point it runs an EDF-vs-FIFO admission comparison on the server-only
+stack: the deadline-aware (EDF with expired-deadline demotion) queue must
+strictly improve tail-TTFT SLO attainment over FIFO under overload.
+
 ``--temperature T`` runs the whole stack under stochastic sampling (the
-position-keyed replayable sampler; T=0 keeps greedy). Stochastic runs never
-overwrite the greedy trajectory JSON. ``--check-determinism`` instead runs
-a seed-determinism gate: identical models on both endpoints, temperature
-> 0, the same trace replayed through two independently-built stacks — every
-delivered stream must be bit-identical across the runs AND equal to the
-no-race single-engine generation with the same seed (wall-clock noise
+position-keyed replayable sampler; T=0 keeps greedy); ``--mixed-samplers``
+gives every request its own SamplerConfig (greedy / temperature+top-p /
+temperature+top-k cycling) so heterogeneous per-row sampling shares the
+fused server batches. Neither overwrites the greedy trajectory JSON.
+``--check-determinism`` instead runs a seed-determinism gate: identical
+models on both endpoints, MIXED per-request sampler configs, the same trace
+replayed through two independently-built stacks — every delivered stream
+must be bit-identical across the runs AND equal to the no-race
+single-engine generation with the same (seed, sampler) (wall-clock noise
 changes race winners and migration points between runs; the streams must
 not care). Exits non-zero on any mismatch.
 
     PYTHONPATH=src python -m benchmarks.bench_e2e_serving \
-        [--smoke] [--temperature T] [--check-determinism]
+        [--smoke] [--temperature T] [--mixed-samplers] [--check-determinism]
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import time
@@ -52,11 +66,13 @@ from repro.core import CostModel, DiSCoScheduler, Endpoint, MigrationConfig
 from repro.core.dispatch import SingleEndpointPolicy
 from repro.models import init_params
 from repro.serving import (
+    SLO,
     BatchedServer,
     DeviceEndpoint,
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
+    Request,
     SamplerConfig,
     ServerEndpoint,
 )
@@ -77,8 +93,28 @@ _MAX_PROMPT = 40             # prefill buckets 16/32/64 are pre-warmed
 _LONG_FRACTION = 0.25        # max-length prompts: ragged block demand
 _N_REQUESTS = 18
 _RTT = 0.05
+_INTERACTIVE_FRACTION = 0.5  # tight-deadline share of the trace
+# interactive TTFT deadline sits between the un-queued server TTFT (~0.3x
+# service incl. uplink) and the overloaded queueing tail (several x
+# service): an immediately- or promptly-admitted tight request attains, a
+# deeply-queued one misses — exactly the window where deadline-aware
+# admission pays (EDF jumps salvageable tight requests over relaxed ones;
+# expired deadlines are demoted, so doomed requests cannot domino)
+_TIGHT_DEADLINE_X = 2.0      # interactive TTFT deadline, in service times
+_LOOSE_DEADLINE_X = 10.0     # relaxed TTFT deadline, in service times
+_TBT_TARGET = 0.1            # interactive smooth-delivery pace (seconds)
+_ADMISSION_TRACE_SEEDS = (42, 43, 44)   # EDF-vs-FIFO aggregates 3 traces:
+                                        # 54 requests beat 1/18 granularity
 
 _SYSTEMS = ("disco", "disco_nocancel", "server_only", "device_only")
+
+# heterogeneous per-request sampler cycle (--mixed-samplers): greedy rows
+# batch-share the fused dispatches with temperature/top-p and top-k rows
+_MIXED_SAMPLERS = (
+    None,
+    SamplerConfig(temperature=0.8, top_p=0.95),
+    SamplerConfig(temperature=0.7, top_k=50),
+)
 
 
 def _make_scheduler(rng: np.random.Generator) -> DiSCoScheduler:
@@ -100,14 +136,15 @@ def _make_scheduler(rng: np.random.Generator) -> DiSCoScheduler:
 
 
 def _build(system: str, dev_engine: InferenceEngine, srv_params,
-           seed: int, sampler: SamplerConfig = None) -> DiSCoServer:
+           seed: int, admission: str = "edf") -> DiSCoServer:
     server = BatchedServer(
         paper_models.TINY_SERVER, srv_params,
         max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
-        block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, sampler=sampler,
+        block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, admission=admission,
     )
     server.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     sched = _make_scheduler(np.random.default_rng(seed))
+    single = system in ("server_only", "device_only")
     disco = DiSCoServer(
         sched,
         DeviceEndpoint(dev_engine),
@@ -115,6 +152,8 @@ def _build(system: str, dev_engine: InferenceEngine, srv_params,
         rng=np.random.default_rng(seed + 1),
         cancel_losers=(system != "disco_nocancel"),
         allow_migration=system in ("disco", "disco_nocancel"),
+        # single-endpoint baselines stay pure: no SLO-driven racing
+        slo_aware_dispatch=not single,
     )
     if system == "server_only":
         disco.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
@@ -135,7 +174,9 @@ def _estimate_service_time(dev_engine: InferenceEngine, srv_params) -> float:
     rng = np.random.default_rng(0)
     n = 3
     for _ in range(n):
-        server.submit(rng.integers(0, 1024, size=24).astype(np.int32), _MAX_NEW)
+        server.submit(
+            Request(rng.integers(0, 1024, size=24).astype(np.int32), _MAX_NEW)
+        )
     server.run_to_completion()
     return server.clock / n
 
@@ -147,6 +188,7 @@ def _metrics(results) -> dict:
     )
     generated = sum(r.generated_tokens for r in results)
     wasted = sum(r.wasted_tokens for r in results)
+    n = max(len(results), 1)
     return {
         "ttft_p50_s": float(np.percentile(ttfts, 50)),
         "ttft_p95_s": float(np.percentile(ttfts, 95)),
@@ -158,16 +200,58 @@ def _metrics(results) -> dict:
         "cost_mean": float(np.mean([r.cost for r in results])),
         "migrations": int(sum(r.migrated for r in results)),
         "delayed_tokens": int(sum(r.delayed_tokens for r in results)),
+        # QoE contract accounting (serving.request.QoEReport, Andes-style)
+        "qoe_score_mean": float(np.mean([r.qoe.qoe_score for r in results])),
+        "slo_attainment": float(sum(r.qoe.slo_attained for r in results) / n),
+        "ttft_slo_attainment": float(
+            sum(r.qoe.ttft_attained for r in results) / n
+        ),
+        "slo_misses": int(sum(not r.qoe.ttft_attained for r in results)),
     }
 
 
-def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
+def _slo_for(i: int, service: float) -> tuple[SLO, int]:
+    """Deterministic interactive/relaxed SLO mix: tight deadline + TBT pace
+    for interactive requests, loose deadline otherwise. Both stay in ONE
+    priority tier so the EDF-vs-FIFO comparison isolates pure deadline
+    ordering (a strict tier would let already-doomed interactive requests
+    crowd out relaxed ones under overload — tiers are for workloads whose
+    classes must never mix, and are covered by unit tests)."""
+    if (i % int(round(1.0 / _INTERACTIVE_FRACTION))) == 0:
+        return SLO(ttft_deadline=_TIGHT_DEADLINE_X * service,
+                   tbt_target=_TBT_TARGET), 0
+    return SLO(ttft_deadline=_LOOSE_DEADLINE_X * service), 0
+
+
+def _make_requests(trace, service: float, samplers) -> list[Request]:
+    prompt_rng = np.random.default_rng(7)
+    reqs = []
+    for i, (a, length, m) in enumerate(trace):
+        slo, tier = _slo_for(i, service)
+        reqs.append(Request(
+            prompt_rng.integers(0, 1024, size=length).astype(np.int32), m,
+            arrival=a, sampler=samplers[i % len(samplers)], slo=slo,
+            priority=tier,
+        ))
+    return reqs
+
+
+def _copies(requests: list[Request]) -> list[Request]:
+    return [dataclasses.replace(q, prompt=q.prompt.copy()) for q in requests]
+
+
+def run(smoke: bool = False, temperature: float = 0.0,
+        mixed_samplers: bool = False) -> list[Row]:
     dev_cfg = paper_models.TINY_DEVICE
     srv_cfg = paper_models.TINY_SERVER
-    sampler = SamplerConfig(temperature=temperature) if temperature > 0 else None
+    if mixed_samplers:
+        samplers: tuple = _MIXED_SAMPLERS
+    elif temperature > 0:
+        samplers = (SamplerConfig(temperature=temperature),)
+    else:
+        samplers = (None,)
     dev_engine = InferenceEngine(
         dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), max_len=_MAX_LEN,
-        sampler=sampler,
     )
     dev_engine.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     srv_params = init_params(srv_cfg, jax.random.PRNGKey(1))
@@ -185,17 +269,12 @@ def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
             max_prompt=_MAX_PROMPT, max_new=_MAX_NEW,
             long_fraction=_LONG_FRACTION,
         )
-        prompt_rng = np.random.default_rng(7)
-        requests = [
-            (a, prompt_rng.integers(0, 1024, size=l).astype(np.int32), m)
-            for a, l, m in trace
-        ]
+        requests = _make_requests(trace, service, samplers)
         point = {"rho": rho, "systems": {}}
         for system in _SYSTEMS:
-            disco = _build(system, dev_engine, srv_params, seed=3,
-                           sampler=sampler)
+            disco = _build(system, dev_engine, srv_params, seed=3)
             t0 = time.perf_counter()
-            results = disco.serve_many([(a, p.copy(), m) for a, p, m in requests])
+            results = disco.serve_many(_copies(requests))
             wall_us = (time.perf_counter() - t0) * 1e6
             m = _metrics(results)
             m.update(disco.server.server.pool_stats())  # memory-pressure accounting
@@ -205,10 +284,57 @@ def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
                 f"p99_ttft_ms={m['ttft_p99_s']*1e3:.1f};"
                 f"tbt_ms={m['tbt_mean_s']*1e3:.1f};"
                 f"wasted={m['wasted_ratio']:.3f};"
+                f"qoe={m['qoe_score_mean']:.3f};"
+                f"slo_att={m['ttft_slo_attainment']:.2f};"
                 f"blk_peak={m.get('blocks_in_use_peak', 0)};"
                 f"q_mem={m.get('queued_on_memory', 0)};"
                 f"cost={m['cost_mean']:.2e}",
             ))
+        # EDF-vs-FIFO admission comparison on the queueing-bound system at
+        # this load: the deadline-aware queue should rescue tight-deadline
+        # requests that FIFO leaves stuck behind relaxed ones. Aggregated
+        # over several arrival traces so the gain is not a 1/n_req coin-flip
+        # (smoke keeps one trace for speed).
+        cmp_seeds = _ADMISSION_TRACE_SEEDS[:1] if smoke else _ADMISSION_TRACE_SEEDS
+        admission_cmp = {a: {"attained": 0, "slo_attained": 0, "n": 0,
+                             "qoe_sum": 0.0, "deadline_reorders": 0,
+                             "server_slo_misses": 0, "ttfts": []}
+                         for a in ("fifo", "edf")}
+        for tseed in cmp_seeds:
+            trace_k = make_serving_trace(
+                np.random.default_rng(tseed), n_req, service_time=service,
+                slots=_CAL_SLOTS, rho=rho, max_prompt=_MAX_PROMPT,
+                max_new=_MAX_NEW, long_fraction=_LONG_FRACTION,
+            )
+            reqs_k = _make_requests(trace_k, service, samplers)
+            for admission in ("fifo", "edf"):
+                disco = _build("server_only", dev_engine, srv_params, seed=3,
+                               admission=admission)
+                res = disco.serve_many(_copies(reqs_k))
+                agg = admission_cmp[admission]
+                agg["n"] += len(res)
+                agg["attained"] += sum(r.qoe.ttft_attained for r in res)
+                agg["slo_attained"] += sum(r.qoe.slo_attained for r in res)
+                agg["qoe_sum"] += sum(r.qoe.qoe_score for r in res)
+                agg["ttfts"] += [r.ttft for r in res]
+                stats = disco.server.server.pool_stats()
+                agg["deadline_reorders"] += stats["deadline_reorders"]
+                agg["server_slo_misses"] += stats["server_slo_misses"]
+        for admission, agg in admission_cmp.items():
+            n = max(agg.pop("n"), 1)
+            agg["ttft_slo_attainment"] = agg.pop("attained") / n
+            agg["slo_attainment"] = agg.pop("slo_attained") / n
+            agg["qoe_score_mean"] = agg.pop("qoe_sum") / n
+            agg["slo_misses"] = n - int(round(agg["ttft_slo_attainment"] * n))
+            agg["ttft_p99_s"] = float(np.percentile(agg.pop("ttfts"), 99))
+            agg["n_requests"] = n
+        point["admission_comparison"] = admission_cmp
+        rows.append(Row(
+            f"e2e_serving/rho{rho:g}/admission_edf_vs_fifo", 0.0,
+            f"edf_slo_att={admission_cmp['edf']['ttft_slo_attainment']:.2f};"
+            f"fifo_slo_att={admission_cmp['fifo']['ttft_slo_attainment']:.2f};"
+            f"reorders={admission_cmp['edf']['deadline_reorders']}",
+        ))
         points.append(point)
 
     # headline: contention point (highest load). The reduction denominator is
@@ -220,6 +346,7 @@ def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
         1.0 / max(top["disco"]["generated_tokens"], 1),
     )
     wasted_reduction = top["disco_nocancel"]["wasted_ratio"] / disco_floor
+    adm = points[-1]["admission_comparison"]
     headline = {
         "p99_ttft_disco_s": top["disco"]["ttft_p99_s"],
         "p99_ttft_server_only_s": top["server_only"]["ttft_p99_s"],
@@ -228,26 +355,42 @@ def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
         "wasted_ratio_reduction_vs_nocancel": wasted_reduction,
         "cost_vs_nocancel": top["disco"]["cost_mean"]
         / max(top["disco_nocancel"]["cost_mean"], 1e-30),
+        "qoe_score_disco": top["disco"]["qoe_score_mean"],
+        "slo_attainment_disco": top["disco"]["ttft_slo_attainment"],
+        # deadline-aware admission under overload: EDF vs FIFO tail-TTFT
+        # SLO attainment on the queueing-bound server-only stack
+        "edf_ttft_slo_attainment": adm["edf"]["ttft_slo_attainment"],
+        "fifo_ttft_slo_attainment": adm["fifo"]["ttft_slo_attainment"],
+        "edf_slo_attainment_gain": adm["edf"]["ttft_slo_attainment"]
+        - adm["fifo"]["ttft_slo_attainment"],
     }
     rows.append(Row(
         "e2e_serving/headline", 0.0,
         f"p99_vs_server_only={headline['p99_ttft_reduction_vs_server_only']:.2f};"
-        f"wasted_reduction_x={wasted_reduction:.1f}",
+        f"wasted_reduction_x={wasted_reduction:.1f};"
+        f"edf_gain={headline['edf_slo_attainment_gain']:.2f}",
     ))
 
-    if not smoke and temperature == 0.0:   # never clobber the greedy trajectory
+    if not smoke and temperature == 0.0 and not mixed_samplers:
+        # never clobber the greedy trajectory
         _JSON_PATH.write_text(json.dumps({
             "bench": "e2e_serving",
             "server_rows": _ROWS,
             "num_blocks": _NUM_BLOCKS,
             "block_size": _BLOCK_SIZE,
             "calibration_slots": _CAL_SLOTS,
-            "admission": "paged_block_capacity",
+            "admission": "paged_block_capacity+edf",
             "long_prompt_fraction": _LONG_FRACTION,
             "n_requests": n_req,
             "max_new": _MAX_NEW,
             "service_time_s": service,
             "arrival_process": "poisson",
+            "slo": {
+                "interactive_fraction": _INTERACTIVE_FRACTION,
+                "tight_ttft_deadline_s": _TIGHT_DEADLINE_X * service,
+                "loose_ttft_deadline_s": _LOOSE_DEADLINE_X * service,
+                "tbt_target_s": _TBT_TARGET,
+            },
             "points": points,
             "headline": headline,
         }, indent=2) + "\n")
@@ -255,22 +398,29 @@ def run(smoke: bool = False, temperature: float = 0.0) -> list[Row]:
 
 
 def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
-    """Seed-determinism gate (CI): identical endpoint models, temperature
-    > 0, same trace through two independently-built stacks. Wall-clock noise
-    moves race winners, migration points, and preemptions between the runs —
-    the delivered streams must be bit-identical anyway, and equal to the
-    no-race single-engine generation with the same per-request seed (the
-    driver seeds requests by rid = arrival index)."""
+    """Seed-determinism gate (CI): identical endpoint models, MIXED
+    per-request sampler configs (greedy + temperature/top-p + top-k rows
+    sharing the fused server batches), same trace through two
+    independently-built stacks. Wall-clock noise moves race winners,
+    migration points, and preemptions between the runs — the delivered
+    streams must be bit-identical anyway, and equal to the no-race
+    single-engine generation with the same per-request (seed, sampler)
+    (the driver seeds requests by rid = arrival index)."""
     cfg = paper_models.TINY_DEVICE
     params = init_params(cfg, jax.random.PRNGKey(0))
-    sampler = SamplerConfig(temperature=temperature, top_p=0.95)
-    dev_engine = InferenceEngine(cfg, params, max_len=_MAX_LEN, sampler=sampler)
+    samplers = [
+        SamplerConfig(temperature=temperature, top_p=0.95),
+        None,                                   # a greedy row in the batch
+        SamplerConfig(temperature=temperature, top_k=40),
+        SamplerConfig(temperature=0.8 * temperature, top_p=0.9),
+    ]
+    dev_engine = InferenceEngine(cfg, params, max_len=_MAX_LEN)
     dev_engine.warmup(prompt_lens=(12,))
 
     def build():
         server = BatchedServer(
             cfg, params, max_slots=2, max_len=_MAX_LEN, decode_chunk=4,
-            block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, sampler=sampler,
+            block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS,
         )
         server.warmup(prompt_lens=(12,))
         # device-constrained pricing: decode is expensive on the winner, so
@@ -295,11 +445,18 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     rng = np.random.default_rng(9)
     prompts = [rng.integers(0, cfg.vocab, size=12).astype(np.int32)
                for _ in range(n_requests)]
-    reqs = [(0.002 * i, p, _MAX_NEW) for i, p in enumerate(prompts)]
-    baseline = [dev_engine.generate(p, _MAX_NEW, seed=i).tokens
-                for i, p in enumerate(prompts)]
-    run1 = build().serve_many([(a, p.copy(), m) for a, p, m in reqs])
-    run2 = build().serve_many([(a, p.copy(), m) for a, p, m in reqs])
+    reqs = [
+        Request(p, _MAX_NEW, arrival=0.002 * i,
+                sampler=samplers[i % len(samplers)])
+        for i, p in enumerate(prompts)
+    ]
+    baseline = [
+        dev_engine.generate(p, _MAX_NEW, seed=i,
+                            sampler=samplers[i % len(samplers)]).tokens
+        for i, p in enumerate(prompts)
+    ]
+    run1 = build().serve_many(_copies(reqs))
+    run2 = build().serve_many(_copies(reqs))
     failures = []
     for i, (r1, r2, base) in enumerate(zip(run1, run2, baseline)):
         if r1.tokens != r2.tokens:
@@ -309,11 +466,11 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     if failures:
         raise SystemExit(
             "seed-determinism FAILED (temperature="
-            f"{temperature}):\n  " + "\n  ".join(failures)
+            f"{temperature}, mixed samplers):\n  " + "\n  ".join(failures)
         )
     print(
         f"seed-determinism OK: {n_requests} requests x 2 runs bit-identical "
-        f"(temperature={temperature}, "
+        f"(mixed per-request samplers, base temperature={temperature}, "
         f"migrations run1/run2: {sum(r.migrated for r in run1)}/"
         f"{sum(r.migrated for r in run2)})"
     )
@@ -329,6 +486,11 @@ if __name__ == "__main__":
                     help="sampling temperature (default: greedy for the "
                          "bench, 0.8 for the determinism gate; stochastic "
                          "runs never overwrite the greedy trajectory JSON)")
+    ap.add_argument("--mixed-samplers", action="store_true",
+                    help="give every request its own SamplerConfig (greedy/"
+                         "top-p/top-k cycle): exercises heterogeneous "
+                         "per-row sampling in one fused batch; never "
+                         "overwrites the greedy trajectory JSON")
     ap.add_argument("--check-determinism", action="store_true",
                     help="run the seed-determinism gate instead of the bench")
     args = ap.parse_args()
@@ -341,5 +503,6 @@ if __name__ == "__main__":
         check_determinism(temperature=t)
     else:
         print("name,us_per_call,derived")
-        for row in run(smoke=args.smoke, temperature=args.temperature or 0.0):
+        for row in run(smoke=args.smoke, temperature=args.temperature or 0.0,
+                       mixed_samplers=args.mixed_samplers):
             print(row.csv(), flush=True)

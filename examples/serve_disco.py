@@ -9,7 +9,23 @@ Demonstrates (1) dispatch racing with real prefill wall-times, (2) loser
 cancellation (the race loser stops after at most one in-flight decode chunk
 — watch the wasted-token column), (3) token-ID migration whose re-prefill
 competes with live traffic in the same batched scheduler, and (4) the
-delivery buffer keeping TBT smooth.
+delivery buffer keeping TBT smooth, with per-request QoE scored against
+each request's SLO contract.
+
+Migration note (old tuple API -> Request): requests are now first-class
+``repro.serving.Request`` objects —
+
+    # before:  disco.serve_many([(arrival, prompt, max_new), ...])
+    # now:     disco.serve_many([Request(prompt, max_new, arrival=arrival,
+    #                                    sampler=..., seed=..., slo=SLO(...)),
+    #                            ...])
+
+Every request can carry its own SamplerConfig (heterogeneous greedy/
+temperature/top-k/top-p rows share one fused server batch), a sampling seed
+(replay/migration bit-identity), an SLO (TTFT deadline + TBT target — the
+server's admission queue is deadline-aware), a priority tier, and a cost
+weight. Results come back as ``RequestResult`` with an Andes-style
+``QoEReport`` attached.
 """
 import argparse
 import sys
@@ -19,6 +35,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.launch.serve import build_stack
+from repro.serving import SLO, Request
 from repro.sim.traces import poisson_arrivals
 
 
@@ -39,10 +56,20 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     # --- a Poisson arrival trace through the full stack --------------------
+    # every other request carries a tight TTFT deadline: the server's
+    # admission queue is deadline-aware (priority-tiered EDF), and the QoE
+    # report scores delivery against each request's own contract
     arrivals = poisson_arrivals(rng, args.requests, args.mean_interval)
     requests = [
-        (float(a), rng.integers(0, 1024, size=int(n)).astype(np.int32), args.max_new)
-        for a, n in zip(arrivals, np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64))
+        Request(
+            rng.integers(0, 1024, size=int(n)).astype(np.int32), args.max_new,
+            arrival=float(a),
+            slo=SLO(ttft_deadline=0.3) if i % 2 == 0 else SLO(ttft_deadline=3.0),
+            priority=0 if i % 2 == 0 else 1,
+        )
+        for i, (a, n) in enumerate(
+            zip(arrivals, np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64))
+        )
     ]
     print(f"DiSCo event-driven runtime: {args.requests} concurrent requests "
           f"(device={dev_engine.cfg.name}, server={server.cfg.name}, "
@@ -54,13 +81,16 @@ def main() -> None:
         print(f"  req{i:02d} t={r.arrival:6.3f}s ttft={r.ttft*1e3:7.1f}ms "
               f"winner={r.winner.value:6s} migrated={str(r.migrated):5s} "
               f"tokens={len(r.tokens):3d} wasted={r.wasted_tokens:3d} "
-              f"max_tbt={tbt_max*1e3:6.1f}ms")
+              f"max_tbt={tbt_max*1e3:6.1f}ms qoe={r.qoe.qoe_score:5.3f} "
+              f"slo={'ok' if r.qoe.slo_attained else 'MISS'}")
 
     ttfts = np.array([r.ttft for r in results])
     wasted = sum(r.wasted_tokens for r in results)
     generated = sum(r.generated_tokens for r in results)
+    attained = sum(r.qoe.slo_attained for r in results)
     print(f"\n  TTFT p50 {np.percentile(ttfts,50)*1e3:.1f}ms | "
           f"p99 {np.percentile(ttfts,99)*1e3:.1f}ms | "
+          f"SLO attained {attained}/{len(results)} | "
           f"migrations {sum(r.migrated for r in results)}/{len(results)} | "
           f"wasted tokens {wasted}/{generated} "
           f"({100.0*wasted/max(generated,1):.1f}%)")

@@ -3,7 +3,13 @@
 Spins up a real device engine (tiny model) and a real server stack (larger
 model inside a contended continuous-batching scheduler behind a simulated
 network), wires them into the event-driven DiSCo runtime, replays an arrival
-trace of concurrent requests, and reports QoE/cost/wasted compute.
+trace of concurrent ``Request`` objects (each carrying its own sampler,
+seed, and SLO contract), and reports QoE/cost/wasted compute.
+
+Migration note: the old tuple API — ``serve_many([(arrival, prompt,
+max_new)])`` — was replaced by the first-class request contract:
+``serve_many([Request(prompt, max_new, arrival=..., sampler=..., slo=...)])``
+(see ``repro.serving.request``).
 """
 from __future__ import annotations
 
@@ -20,11 +26,13 @@ from repro.core import (
 )
 from repro.models import init_params
 from repro.serving import (
+    SLO,
     BatchedServer,
     DeviceEndpoint,
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
+    Request,
     ServerEndpoint,
 )
 from repro.sim.traces import poisson_arrivals
@@ -76,13 +84,18 @@ def main() -> None:
     ap.add_argument("--mean-interval", type=float, default=0.05,
                     help="mean Poisson inter-arrival in virtual seconds "
                          "(smaller = more server contention)")
+    ap.add_argument("--ttft-deadline", type=float, default=0.5,
+                    help="per-request TTFT SLO deadline in virtual seconds "
+                         "(feeds deadline-aware admission + QoE scoring)")
     args = ap.parse_args()
 
     disco, dev_engine, server = build_stack(args.constraint, args.budget)
     rng = np.random.default_rng(7)
     arrivals = poisson_arrivals(rng, args.requests, args.mean_interval)
+    slo = SLO(ttft_deadline=args.ttft_deadline)
     requests = [
-        (float(a), rng.integers(0, 1024, size=int(n)).astype(np.int32), args.max_new)
+        Request(rng.integers(0, 1024, size=int(n)).astype(np.int32),
+                args.max_new, arrival=float(a), slo=slo)
         for a, n in zip(arrivals, np.clip(rng.lognormal(2.5, 0.8, args.requests), 2, 64))
     ]
 
@@ -92,10 +105,14 @@ def main() -> None:
     wasted = sum(r.wasted_tokens for r in results)
     generated = sum(r.generated_tokens for r in results)
     migrated = sum(r.migrated for r in results)
+    qoe = np.array([r.qoe.qoe_score for r in results])
+    attained = sum(r.qoe.slo_attained for r in results)
     print(f"\nDiSCo ({args.constraint}-constrained, b={args.budget}, "
           f"{args.requests} concurrent requests):")
     print(f"  migrated={migrated}  wasted tokens={wasted}/{generated}")
     print(f"  TTFT   mean={ttfts.mean()*1e3:.1f}ms  p99={np.percentile(ttfts,99)*1e3:.1f}ms")
+    print(f"  QoE    mean={qoe.mean():.3f}  slo_attained={attained}/{len(results)}"
+          f"  (deadline={args.ttft_deadline*1e3:.0f}ms)")
     print(f"  cost   mean={costs.mean():.3e}")
     winners = [r.winner.value for r in results]
     print(f"  winners: device={winners.count('device')} server={winners.count('server')}")

@@ -18,17 +18,28 @@ from .paged import (
 )
 
 # Replayable stochastic sampling (``models.sampling``): ``SamplerConfig``
-# (greedy/temperature/top-k/top-p) is closed over by the jitted step
-# functions; ``request_key(seed)`` derives the per-request base key and
-# ``sample_tokens`` draws each token via ``fold_in(key, position)`` — pure in
-# (key, position, logits), so migration/preemption/fork replay is
-# bit-identical under temperature > 0. ``GREEDY`` is the argmax default.
-from .sampling import GREEDY, SamplerConfig, request_key, sample_tokens
+# (greedy/temperature/top-k/top-p) is the per-REQUEST spec; engines stack a
+# batch of them into ``SamplerOperands`` — (B,) runtime arrays threaded
+# through the jitted step functions as traced arguments (``sampler_operands``)
+# so heterogeneous configs coexist in one batch. ``request_key(seed)`` derives
+# the per-request base key and ``sample_tokens`` draws each token via
+# ``fold_in(key, position)`` — pure in (config, key, position, logits), so
+# migration/preemption/fork replay is bit-identical under temperature > 0.
+# ``GREEDY`` is the argmax default (the temperature == 0 branch per row).
+from .sampling import (
+    GREEDY,
+    SamplerConfig,
+    SamplerOperands,
+    request_key,
+    sample_tokens,
+    sampler_operands,
+)
 
 __all__ = [
     "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
     "init_params", "param_shapes", "prefill", "window_vector",
     "init_paged_pages", "paged_decode_n", "paged_decode_step",
     "paged_prefill", "supports_paged",
-    "GREEDY", "SamplerConfig", "request_key", "sample_tokens",
+    "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
+    "sample_tokens", "sampler_operands",
 ]

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import ModelConfig
-from .sampling import SamplerConfig, sample_tokens
+from .sampling import sample_tokens
 from .layers import (
     attn_decode,
     attn_full,
@@ -409,7 +409,7 @@ def decode_n(
     *,
     max_len: Optional[int] = None,
     active: Optional[jnp.ndarray] = None,
-    sampler: Optional[SamplerConfig] = None,
+    sampler=None,
     keys: Optional[jnp.ndarray] = None,
 ):
     """Fused multi-token decode: ``num_steps`` decode_steps under one
@@ -420,10 +420,13 @@ def decode_n(
     Returns (tokens (num_steps, B) int32, new_cache).
 
     Sampling: ``sampler=None`` (or temperature 0) is greedy argmax.
-    Otherwise ``keys`` carries each row's (2,) uint32 request key and step
-    ``i`` of the scan draws with ``fold_in(key, lengths_after_step_i)`` — a
-    pure function of (key, absolute position, logits), so the emitted stream
-    is independent of chunk size and batch composition (see
+    Otherwise ``sampler`` is a whole-batch ``SamplerConfig`` or — the
+    serving path — per-row ``SamplerOperands`` ((B,) temperature/top-k/top-p
+    runtime arrays, so heterogeneous per-request configs share one scan);
+    ``keys`` carries each row's (2,) uint32 request key and step ``i`` of
+    the scan draws with ``fold_in(key, lengths_after_step_i)`` — a pure
+    function of (config, key, absolute position, logits), so the emitted
+    stream is independent of chunk size and batch composition (see
     ``models.sampling``).
 
     Row-freeze semantics (both optional; when neither is given the scan body

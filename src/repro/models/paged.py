@@ -42,7 +42,7 @@ from .config import ModelConfig
 from .layers import _qkv, ffn_apply, rms_norm
 from .model import Cache, _embed, _logits, prefill, window_vector
 from .rope import apply_rope
-from .sampling import SamplerConfig, sample_tokens
+from .sampling import sample_tokens
 
 __all__ = [
     "supports_paged",
@@ -90,7 +90,7 @@ def paged_prefill(
     lengths: jnp.ndarray,     # (1,) true prompt length
     block_ids: jnp.ndarray,   # (S // block_size,) physical blocks for the prompt
     *,
-    sampler: Optional[SamplerConfig] = None,
+    sampler=None,    # SamplerConfig | SamplerOperands (per-row runtime arrays)
     keys: Optional[jnp.ndarray] = None,    # (1, 2) uint32 request key
 ):
     """Alloc-on-prefill write path: run the dense prefill math for one row
@@ -176,7 +176,7 @@ def paged_decode_step(
     max_len: int,
     active: Optional[jnp.ndarray] = None,
     use_kernel: bool = False,
-    sampler: Optional[SamplerConfig] = None,
+    sampler=None,    # SamplerConfig | SamplerOperands (per-row runtime arrays)
     keys: Optional[jnp.ndarray] = None,    # (B, 2) uint32 request keys
 ):
     """One paged decode step. Row-freeze semantics match dense ``decode_n``:
@@ -226,7 +226,7 @@ def paged_decode_n(
     max_len: int,
     active: Optional[jnp.ndarray] = None,
     use_kernel: bool = False,
-    sampler: Optional[SamplerConfig] = None,
+    sampler=None,    # SamplerConfig | SamplerOperands (per-row runtime arrays)
     keys: Optional[jnp.ndarray] = None,
 ):
     """Fused multi-token paged decode: ``num_steps`` steps under one

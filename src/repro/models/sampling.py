@@ -22,19 +22,33 @@ Position convention: a token's position is the number of context tokens
 that precede it — the prefill of an S-token prompt samples its first token
 at position S; a decode step whose cache holds ``lengths`` tokens (input
 token included) samples at position ``lengths``.
+
+Per-row runtime operands: :class:`SamplerConfig` is the *per-request* spec;
+the serving engines stack a batch of them into :class:`SamplerOperands` —
+``(B,)`` temperature/top-k/top-p arrays that ride through the jitted step
+functions as regular traced arguments (``sampler_operands``). Nothing about
+the sampler is closed over by a jit anymore, so heterogeneous configs
+(greedy next to temperature/top-p next to top-k) coexist in ONE batch and a
+request's draws are bit-identical whether it runs alone, in any batch
+composition, after recompute preemption, or across a migration replay.
+Greedy is the ``temperature == 0`` branch of the same per-row math (exact
+argmax — a greedy row's discarded draw consumes no randomness).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "SamplerConfig",
+    "SamplerOperands",
     "GREEDY",
     "request_key",
+    "sampler_operands",
     "sample_tokens",
     "mask_top_k",
     "mask_top_p",
@@ -47,9 +61,10 @@ class SamplerConfig:
 
     ``temperature == 0`` is exact greedy argmax (no RNG touched at all).
     ``top_k`` / ``top_p`` restrict the candidate set before the categorical
-    draw (0 / 1.0 disable them). The config is static per engine — it is
-    closed over by the jitted step functions — while the per-request key
-    rides in as a regular traced argument.
+    draw (0 / 1.0 disable them). The config is *per request*: serving
+    engines stack one per batch row into :class:`SamplerOperands` and pass
+    them through the jitted step functions as runtime arrays alongside the
+    per-request keys — nothing here is baked into a jit closure.
     """
 
     temperature: float = 0.0
@@ -72,6 +87,35 @@ class SamplerConfig:
 GREEDY = SamplerConfig()
 
 
+class SamplerOperands(NamedTuple):
+    """Per-row sampler parameters as ``(B,)`` runtime arrays — the traced
+    twin of a batch of :class:`SamplerConfig`. Rows with ``temperature <= 0``
+    take the exact greedy-argmax branch; ``top_k <= 0`` / ``top_p >= 1``
+    disable the respective mask per row."""
+
+    temperature: jnp.ndarray    # (B,) float32
+    top_k: jnp.ndarray          # (B,) int32
+    top_p: jnp.ndarray          # (B,) float32
+
+
+def sampler_operands(samplers: Sequence[Optional[SamplerConfig]],
+                     batch: Optional[int] = None) -> SamplerOperands:
+    """Stack per-request configs into (B,) host arrays (``None`` rows are
+    greedy). ``batch`` right-pads with greedy rows to a fixed batch size
+    (continuous-batching servers keep free rows greedy-frozen)."""
+    n = len(samplers) if batch is None else int(batch)
+    temp = np.zeros((n,), np.float32)
+    top_k = np.zeros((n,), np.int32)
+    top_p = np.ones((n,), np.float32)
+    for i, s in enumerate(samplers):
+        if s is None:
+            continue
+        temp[i] = s.temperature
+        top_k[i] = s.top_k
+        top_p[i] = s.top_p
+    return SamplerOperands(temp, top_k, top_p)
+
+
 def request_key(seed: int) -> jax.Array:
     """The per-request base key ((2,) uint32). Every token of the request is
     drawn with ``fold_in(request_key(seed), position)``, so two streams with
@@ -80,41 +124,125 @@ def request_key(seed: int) -> jax.Array:
     return jax.random.PRNGKey(seed)
 
 
-def mask_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+def mask_top_k(logits: jnp.ndarray, k) -> jnp.ndarray:
     """Keep the ``k`` largest logits per row, -inf the rest (ties at the
-    k-th value are all kept). ``k <= 0`` or ``k >= vocab`` is a no-op."""
-    if k <= 0 or k >= logits.shape[-1]:
-        return logits
-    thresh = jax.lax.top_k(logits, k)[0][..., -1:]
-    return jnp.where(logits < thresh, -jnp.inf, logits)
+    k-th value are all kept). ``k <= 0`` or ``k >= vocab`` is a no-op.
+
+    ``k`` may be a static python int (one config for the whole batch) or a
+    per-row ``(B,)`` int array — heterogeneous batches use the latter.
+    """
+    vocab = logits.shape[-1]
+    if isinstance(k, (int, np.integer)):
+        if k <= 0 or k >= vocab:
+            return logits
+        thresh = jax.lax.top_k(logits, int(k))[0][..., -1:]
+        return jnp.where(logits < thresh, -jnp.inf, logits)
+    k = jnp.asarray(k, jnp.int32)
+    sort = jnp.sort(logits, axis=-1)[..., ::-1]
+    # threshold = the k-th largest value per row (same rule as lax.top_k)
+    idx = jnp.clip(k - 1, 0, vocab - 1)[:, None]
+    thresh = jnp.take_along_axis(sort, idx, axis=-1)
+    masked = jnp.where(logits < thresh, -jnp.inf, logits)
+    disabled = ((k <= 0) | (k >= vocab))[:, None]
+    return jnp.where(disabled, logits, masked)
 
 
-def mask_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+def mask_top_p(logits: jnp.ndarray, p) -> jnp.ndarray:
     """Nucleus mask: keep the smallest probability-sorted prefix whose
     cumulative probability reaches ``p`` (the argmax always survives, so
-    ``p -> 0`` degrades to greedy, never to an empty support)."""
-    if p >= 1.0:
+    ``p -> 0`` degrades to greedy, never to an empty support).
+
+    ``p`` may be a static python float or a per-row ``(B,)`` array; the
+    exclusive-cumsum rule makes ``p >= 1`` a natural per-row no-op (every
+    token's preceding mass is < 1).
+    """
+    if isinstance(p, (int, float)) and p >= 1.0:
         return logits
+    p_col = p if isinstance(p, (int, float)) else jnp.asarray(p)[:, None]
     sort = jnp.sort(logits, axis=-1)[..., ::-1]
     probs = jax.nn.softmax(sort, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
-    keep = (cum - probs) < p            # exclusive cumsum: top-1 always kept
+    keep = (cum - probs) < p_col        # exclusive cumsum: top-1 always kept
     thresh = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1, keepdims=True)
     return jnp.where(logits < thresh, -jnp.inf, logits)
 
 
+def _draw(key, pos, row_logits):
+    return jax.random.categorical(jax.random.fold_in(key, pos), row_logits)
+
+
+def _mask_top_k_p_rows(scaled: jnp.ndarray, top_k: jnp.ndarray,
+                       top_p: jnp.ndarray) -> jnp.ndarray:
+    """Per-row top-k THEN top-p masking sharing ONE descending sort (the
+    serving hot path runs this inside the fused decode scan; two separate
+    sorts of the same array would double the dominant sampling cost).
+    Bit-equivalent to ``mask_top_p(mask_top_k(scaled, top_k), top_p)``:
+    value-thresholding keeps the sorted order of survivors intact, so the
+    top-p pass can reuse the top-k-masked sorted array directly."""
+    vocab = scaled.shape[-1]
+    sort = jnp.sort(scaled, axis=-1)[..., ::-1]
+    # top-k threshold = k-th largest per row (ties at the threshold kept);
+    # disabled rows (k<=0 or k>=V) threshold at -inf
+    idx = jnp.clip(top_k - 1, 0, vocab - 1)[:, None]
+    k_thresh = jnp.take_along_axis(sort, idx, axis=-1)
+    k_disabled = ((top_k <= 0) | (top_k >= vocab))[:, None]
+    k_thresh = jnp.where(k_disabled, -jnp.inf, k_thresh)
+    sort_k = jnp.where(sort < k_thresh, -jnp.inf, sort)
+    # nucleus threshold over the top-k survivors (exclusive cumsum: top-1
+    # always kept; p >= 1 keeps every survivor)
+    probs = jax.nn.softmax(sort_k, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p[:, None]
+    p_thresh = jnp.min(jnp.where(keep, sort_k, jnp.inf), axis=-1, keepdims=True)
+    thresh = jnp.maximum(k_thresh, p_thresh)
+    return jnp.where(scaled < thresh, -jnp.inf, scaled)
+
+
 def sample_tokens(
-    sampler: Optional[SamplerConfig],
+    sampler,                  # None | SamplerConfig | SamplerOperands
     logits: jnp.ndarray,      # (B, V) f32 next-token logits
     keys: Optional[jnp.ndarray],    # (B, 2) uint32 per-request base keys
     positions: Optional[jnp.ndarray],  # (B,) int32 absolute token positions
 ) -> jnp.ndarray:
     """Sample one token per row: ``fold_in(key, position)`` -> masked
     categorical. Pure in (key, position, logits); jit/vmap/scan-safe.
+    Returns (B,) int32.
 
-    ``sampler=None`` or temperature 0 is exact greedy argmax and ignores
-    ``keys``/``positions`` entirely (they may be None). Returns (B,) int32.
+    ``sampler`` is either a single :class:`SamplerConfig` applied to every
+    row (``None`` or temperature 0 is exact greedy argmax and ignores
+    ``keys``/``positions``, which may then be None), or per-row
+    :class:`SamplerOperands` — the serving path, where every row carries its
+    own temperature/top-k/top-p and greedy is the ``temperature <= 0``
+    branch of the same math (exact argmax per row). Each row's result
+    depends only on its own (config, key, position, logits), so a request
+    draws identical tokens alone or inside any batch composition.
     """
+    if isinstance(sampler, SamplerOperands):
+        if keys is None or positions is None:
+            raise ValueError(
+                "stochastic sampling (temperature > 0) requires per-row keys "
+                "and absolute positions"
+            )
+        positions = jnp.asarray(positions, jnp.int32)
+        temp = jnp.asarray(sampler.temperature, jnp.float32)
+        greedy_rows = temp <= 0.0
+        argm = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def stochastic(_):
+            safe_t = jnp.where(greedy_rows, 1.0, temp)
+            scaled = logits.astype(jnp.float32) / safe_t[:, None]
+            scaled = _mask_top_k_p_rows(
+                scaled, jnp.asarray(sampler.top_k, jnp.int32),
+                jnp.asarray(sampler.top_p, jnp.float32),
+            )
+            drawn = jax.vmap(_draw)(keys, positions, scaled).astype(jnp.int32)
+            return jnp.where(greedy_rows, argm, drawn)
+
+        # all-greedy batches skip the sort/mask work at runtime entirely —
+        # the decode hot path pays nothing for the per-row sampler plumbing
+        return jax.lax.cond(
+            jnp.any(temp > 0.0), stochastic, lambda _: argm, None
+        )
     if sampler is None or sampler.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if keys is None or positions is None:
@@ -125,9 +253,5 @@ def sample_tokens(
     scaled = logits.astype(jnp.float32) / sampler.temperature
     scaled = mask_top_k(scaled, sampler.top_k)
     scaled = mask_top_p(scaled, sampler.top_p)
-
-    def draw(key, pos, row_logits):
-        return jax.random.categorical(jax.random.fold_in(key, pos), row_logits)
-
     positions = jnp.asarray(positions, jnp.int32)
-    return jax.vmap(draw)(keys, positions, scaled).astype(jnp.int32)
+    return jax.vmap(_draw)(keys, positions, scaled).astype(jnp.int32)

@@ -1,7 +1,17 @@
 """Event-driven DiSCo serving stack over real JAX engines.
 
-Three layers on one shared virtual timeline (compute = measured wall-clock,
-network = sampled RTT, queueing = emergent slot contention):
+The serving surface is built around one first-class contract
+(``serving.request``): a :class:`Request` — prompt, token budget,
+per-request :class:`SamplerConfig` + seed, :class:`SLO` deadline contract,
+priority tier, cost weight — is the ONE argument threaded end-to-end
+(``DiSCoServer.serve_many(list[Request])``, endpoint
+``open_stream(req, rng, start_at)``, ``BatchedServer.submit(req, at=)``,
+``InferenceEngine.open_stream(req)``), and every served request comes back
+as a :class:`RequestResult` carrying an Andes-style :class:`QoEReport`
+(expected-vs-actual delivery score, SLO attainment, TTFT/TBT stats).
+
+Four layers on one shared virtual timeline (compute = measured wall-clock,
+network = sampled RTT, queueing = emergent contention):
 
 * ``kv_pool``  — the paged KV-cache memory manager: a shared pool of fixed-
   size token blocks with per-request page tables (``BlockPool`` free-list +
@@ -11,28 +21,43 @@ network = sampled RTT, queueing = emergent slot contention):
 * ``engine``  — jitted prefill/decode + ``EngineStream`` (lazy pulled token
   source, per-request block allocation on paged engines) + ``BatchedServer``
   (virtual-time continuous batching; admission is block-capacity-driven on
-  paged models, with recompute preemption when the pool runs dry, and
-  ``cancel(rid)`` returns blocks within the same tick).
+  paged models with recompute preemption when the pool runs dry, and
+  **deadline-aware**: queued requests are ordered by priority tier then
+  earliest TTFT deadline — EDF — with ``admission="fifo"`` as the baseline;
+  ``slo_misses``/``deadline_reorders`` surface the effect).
 * ``endpoint`` — ``DeviceTokenStream`` / ``ServerTokenStream`` incremental
-  event sources racing on the timeline; cancelling a server-side loser takes
+  event sources racing on the timeline behind ONE shared signature
+  ``open_stream(req, rng, start_at)``; cancelling a server-side loser takes
   one uplink RTT to land (a queued loser can slip into prefill meanwhile),
   a device-side loser stops after at most one in-flight decode chunk.
 * ``disco_driver`` — the discrete-event loop holding many concurrent
-  requests: dispatch racing (§4.2), loser cancellation, token-ID migration
-  into the same contended scheduler (§4.3), paced delivery + QoE/cost/waste
-  accounting.
+  requests: dispatch racing (§4.2) that consults ``req.slo`` (a tight TTFT
+  deadline pulls the device into the race and caps the wait policy), loser
+  cancellation, token-ID migration into the same contended scheduler
+  (§4.3), paced delivery + QoE/cost/waste accounting per request.
 
-Sampling: every layer accepts a ``SamplerConfig`` (re-exported from
-``repro.models.sampling`` — greedy argmax by default, or
-temperature/top-k/top-p) plus a per-request integer seed
-(``InferenceEngine.generate/open_stream``, ``BatchedServer.submit``,
-endpoint ``open_stream``/``open_replay_stream``). Tokens are drawn with a
-counter-based key — ``fold_in(request_key(seed), absolute_position)`` — so
-migration, recompute preemption, and ``fork_stream`` stay bit-identical
-under temperature > 0; the DiSCo driver derives one seed per request and
-shares it across the device/server race and any migration replay.
+Sampling is **per request**: ``Request.sampler`` (greedy argmax default, or
+temperature/top-k/top-p) is stacked into per-row ``SamplerOperands`` — (B,)
+runtime arrays threaded through the jitted step functions, never baked into
+a jit closure — so heterogeneous configs coexist in one fused batch.
+Tokens are drawn with a counter-based key —
+``fold_in(request_key(seed), absolute_position)`` — so migration, recompute
+preemption, and ``fork_stream`` stay bit-identical under temperature > 0;
+the DiSCo driver derives one seed per request and shares it across the
+device/server race and any migration replay.
+
+``ServedRequest`` is the deprecated alias of ``RequestResult``;
+``DiSCoServer.serve(prompt, max_new)`` is the one thin shim over the old
+positional API (it builds the ``Request`` with the monotonic-frontier
+arrival the tuple API had).
 """
-from repro.models.sampling import GREEDY, SamplerConfig, request_key
+from repro.models.sampling import (
+    GREEDY,
+    SamplerConfig,
+    SamplerOperands,
+    request_key,
+    sampler_operands,
+)
 
 from .disco_driver import DiSCoServer, ServedRequest
 from .endpoint import (
@@ -45,12 +70,15 @@ from .endpoint import (
 )
 from .engine import BatchedServer, EngineStream, GenerationResult, InferenceEngine
 from .kv_pool import BlockPool, KVPoolManager, PageTable, blocks_for_tokens
+from .request import NO_SLO, SLO, QoEReport, Request, RequestResult
 
 __all__ = [
+    "Request", "SLO", "NO_SLO", "QoEReport", "RequestResult",
     "DiSCoServer", "ServedRequest",
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
     "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
     "BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens",
-    "GREEDY", "SamplerConfig", "request_key",
+    "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
+    "sampler_operands",
 ]

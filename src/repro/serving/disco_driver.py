@@ -41,7 +41,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Iterable, Optional, Tuple
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -50,36 +50,22 @@ from repro.core import (
     Endpoint,
     TokenBuffer,
 )
+from repro.core.dispatch import DispatchDecision
 
 from .endpoint import DeviceEndpoint, ServerEndpoint
+from .request import QoEReport, Request, RequestResult
 
 __all__ = ["ServedRequest", "DiSCoServer"]
 
-
-@dataclasses.dataclass
-class ServedRequest:
-    tokens: list[int]
-    ttft: float
-    tbt_series: list[float]
-    cost: float
-    winner: Endpoint
-    migrated: bool
-    delayed_tokens: int
-    arrival: float = 0.0
-    generated_tokens: int = 0   # tokens actually computed across all streams
-    wasted_tokens: int = 0      # generated but never delivered (race losers,
-                                # cancellation overrun, hand-off catch-up)
+# deprecated alias: the result type moved to serving.request.RequestResult
+ServedRequest = RequestResult
 
 
 @dataclasses.dataclass
 class _Req:
     rid: int
-    prompt: np.ndarray
-    max_new: int
-    arrival: float
+    req: Request                # the resolved request (rid + seed assigned)
     decision: object
-    seed: int = 0               # sampling seed shared by every stream of
-                                # this request (race, migration replay)
     streams: dict = dataclasses.field(default_factory=dict)   # race streams
     all_streams: list = dataclasses.field(default_factory=list)
     winner: Optional[Endpoint] = None
@@ -94,6 +80,18 @@ class _Req:
     handoff_done: bool = False
     migrated: bool = False
     done: bool = False
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.req.prompt
+
+    @property
+    def max_new(self) -> int:
+        return self.req.max_new
+
+    @property
+    def arrival(self) -> float:
+        return self.req.arrival
 
 
 class DiSCoServer:
@@ -112,6 +110,7 @@ class DiSCoServer:
         rng: Optional[np.random.Generator] = None,
         cancel_losers: bool = True,
         allow_migration: bool = True,
+        slo_aware_dispatch: bool = True,
     ):
         self.sched = scheduler
         self.device = device
@@ -120,32 +119,55 @@ class DiSCoServer:
         self.cancel_losers = cancel_losers
         self.allow_migration = allow_migration   # False for single-endpoint
                                                  # baselines (vLLM/llama.cpp)
+        # consult req.slo when racing endpoints (False pins the pure
+        # cost-policy dispatch — the single-endpoint benchmark baselines)
+        self.slo_aware_dispatch = slo_aware_dispatch
+        self.slo_dispatch_overrides = 0
         self._frontier = 0.0
         self._next_rid = 0
 
     # -- public API --------------------------------------------------------
 
-    def serve(self, prompt: np.ndarray, max_new: int) -> ServedRequest:
-        """Serve one request arriving "now" (at the max of the runtime
-        frontier and the shared server's clock, so repeated calls see a
-        monotonic timeline)."""
-        at = max(self._frontier, self.server.server.clock)
-        return self.serve_many([(at, prompt, max_new)])[0]
+    def serve(self, prompt, max_new: Optional[int] = None, **req_kwargs
+              ) -> RequestResult:
+        """Serve one request arriving "now". Thin deprecated shim over
+        ``serve_many``: the arrival is the max of the runtime frontier and
+        the shared server's clock (and, for a ``Request`` argument, the
+        request's own ``arrival``), so repeated calls see a monotonic
+        timeline exactly as the old tuple API did.
 
-    def serve_many(
-        self, requests: Iterable[Tuple[float, np.ndarray, int]]
-    ) -> list[ServedRequest]:
-        """Replay ``(arrival, prompt, max_new)`` requests through the full
-        stack; returns results in arrival order."""
-        pending = deque(
-            sorted(
-                ((float(a), np.asarray(p, np.int32), int(m)) for a, p, m in requests),
-                key=lambda x: x[0],
-            )
-        )
+        Accepts either ``serve(prompt, max_new, **request_fields)`` or a
+        ready-built ``Request`` (alone — extra arguments would be silently
+        shadowed by the request's own fields, so they are rejected)."""
+        at = max(self._frontier, self.server.server.clock)
+        if isinstance(prompt, Request):
+            if max_new is not None or req_kwargs:
+                raise TypeError(
+                    "serve(Request, ...) takes no extra arguments: set "
+                    "max_new/sampler/slo/... on the Request itself"
+                )
+            req = dataclasses.replace(prompt, arrival=max(at, prompt.arrival))
+        else:
+            req = Request(prompt, int(max_new), arrival=at, **req_kwargs)
+        return self.serve_many([req])[0]
+
+    def serve_many(self, requests: Iterable[Request]) -> list[RequestResult]:
+        """Replay :class:`~repro.serving.request.Request`s through the full
+        stack; returns ``RequestResult``s in arrival order."""
+        reqs = []
+        for r in requests:
+            if not isinstance(r, Request):
+                raise TypeError(
+                    "serve_many now takes repro.serving.Request objects; the "
+                    "(arrival, prompt, max_new) tuple API was removed — build "
+                    "Request(prompt, max_new, arrival=..., sampler=..., "
+                    "slo=...) instead (see serving.request)."
+                )
+            reqs.append(r)
+        pending = deque(sorted(reqs, key=lambda r: r.arrival))
         live: list[_Req] = []
         order: list[int] = []
-        results: dict[int, ServedRequest] = {}
+        results: dict[int, RequestResult] = {}
 
         while pending or live:
             # finalize requests that can emit nothing further
@@ -156,7 +178,7 @@ class DiSCoServer:
             if not pending and not live:
                 break
 
-            next_arrival = pending[0][0] if pending else math.inf
+            next_arrival = pending[0].arrival if pending else math.inf
 
             # pull-driven (device-side) candidates: an un-activated stream's
             # candidate is its virtual start time; an activated one computes
@@ -198,9 +220,9 @@ class DiSCoServer:
             if next_arrival <= t_event:
                 if not pending:
                     continue   # nothing runnable; finalize pass handles live
-                arrival, prompt, max_new = pending.popleft()
-                self._frontier = max(self._frontier, arrival)
-                r = self._admit(arrival, prompt, max_new)
+                nxt = pending.popleft()
+                self._frontier = max(self._frontier, nxt.arrival)
+                r = self._admit(nxt)
                 live.append(r)
                 order.append(r.rid)
                 continue
@@ -216,29 +238,65 @@ class DiSCoServer:
 
     # -- request lifecycle -------------------------------------------------
 
-    def _admit(self, arrival: float, prompt: np.ndarray, max_new: int) -> _Req:
-        decision = self.sched.plan_request(len(prompt), self.rng)
-        self.sched.observe_prompt_length(len(prompt))
-        # the request's sampling seed: derived from the driver rid and handed
-        # to BOTH racing streams and any later migration replay, so with
-        # identical endpoint models every stream of this request draws the
-        # same token at the same absolute position (models.sampling) — the
-        # consistent-prefix hand-off stays bit-identical under temperature
-        r = _Req(
-            rid=self._next_rid, prompt=prompt, max_new=max_new,
-            arrival=arrival, decision=decision, seed=self._next_rid,
+    def _consult_slo(self, req: Request,
+                     decision: DispatchDecision) -> DispatchDecision:
+        """Deadline-aware dispatch (§4.2 + Andes/Synera: per-request SLO
+        metadata at the scheduling boundary): when the request carries a
+        finite TTFT deadline, override the pure cost policy where the
+        deadline is at risk —
+
+        * if the profiled server-TTFT tail says the server alone is likely
+          to miss the deadline, bring the device into the race;
+        * never idle-wait the device past half the deadline budget (the
+          wait policy trades cost for TTFT — a deadline caps that trade).
+        """
+        d = req.slo.ttft_deadline
+        if not self.slo_aware_dispatch or not math.isfinite(d):
+            return decision
+        use_server = decision.use_server
+        use_device = decision.use_device
+        wait = decision.device_wait
+        p_server_meets = float(self.sched.server_ttft.cdf(d)) if use_server else 0.0
+        if not use_device and p_server_meets < 1.0 - self.sched.tail_ratio:
+            use_device = True
+            wait = 0.0
+        if use_device:
+            wait = min(wait, 0.5 * d)
+        changed = (use_device != decision.use_device
+                   or wait != decision.device_wait)
+        if not changed:
+            return decision
+        self.slo_dispatch_overrides += 1
+        return DispatchDecision(
+            use_server=use_server, use_device=use_device, device_wait=wait
         )
+
+    def _admit(self, req: Request) -> _Req:
+        rid = self._next_rid
         self._next_rid += 1
+        # the request's sampling seed: defaulted from the driver rid and
+        # handed (inside the resolved Request) to BOTH racing streams and
+        # any later migration replay, so with identical endpoint models
+        # every stream of this request draws the same token at the same
+        # absolute position (models.sampling) — the consistent-prefix
+        # hand-off stays bit-identical under temperature
+        req = dataclasses.replace(
+            req,
+            rid=rid if req.rid is None else req.rid,
+            seed=rid if req.seed is None else req.seed,
+        )
+        decision = self._consult_slo(
+            req, self.sched.plan_request(req.prompt_len, self.rng)
+        )
+        self.sched.observe_prompt_length(req.prompt_len)
+        r = _Req(rid=rid, req=req, decision=decision)
         if decision.use_server:
-            st = self.server.open_stream(
-                prompt, max_new, self.rng, start_at=arrival, seed=r.seed
-            )
+            st = self.server.open_stream(req, self.rng, start_at=req.arrival)
             r.streams[Endpoint.SERVER] = st
             r.all_streams.append(st)
         if decision.use_device and math.isfinite(decision.device_wait):
             st = self.device.open_stream(
-                prompt, max_new, self.rng,
-                start_at=arrival + decision.device_wait, seed=r.seed,
+                req, self.rng, start_at=req.arrival + decision.device_wait,
             )
             r.streams[Endpoint.DEVICE] = st
             r.all_streams.append(st)
@@ -341,14 +399,13 @@ class DiSCoServer:
                               # first if the remaining stream is short)
         r.mig_prefix = len(r.tokens)
         r.mig_stream = target_ep.open_replay_stream(
-            r.prompt, list(r.tokens), r.max_new - len(r.tokens), self.rng,
-            start_at=t, seed=r.seed,
+            r.req, list(r.tokens), self.rng, start_at=t,
         )
         r.all_streams.append(r.mig_stream)
 
     # -- completion --------------------------------------------------------
 
-    def _finalize(self, r: _Req) -> ServedRequest:
+    def _finalize(self, r: _Req) -> RequestResult:
         for st in r.all_streams:
             if not st.done:
                 st.cancel()
@@ -371,15 +428,22 @@ class DiSCoServer:
         winner = r.winner if r.winner is not None else (
             Endpoint.SERVER if r.decision.use_server else Endpoint.DEVICE
         )
-        return ServedRequest(
+        # Andes-style QoE: score the PACED delivery timeline (what the user
+        # saw through the consumption-rate buffer) against the request's SLO
+        delivery_times = list(r.buf.delivered_at) if r.buf is not None else []
+        qoe = QoEReport.from_timeline(
+            r.arrival, delivery_times, r.req.slo, rid=r.rid
+        )
+        return RequestResult(
+            request=r.req,
             tokens=list(r.tokens),
             ttft=(r.first_t - r.arrival) if r.winner is not None else math.inf,
             tbt_series=r.buf.tbt_series() if r.buf is not None else [],
-            cost=cost,
+            cost=cost * r.req.cost_weight,
             winner=winner,
             migrated=r.migrated,
             delayed_tokens=r.buf.delayed_tokens() if r.buf is not None else 0,
-            arrival=r.arrival,
             generated_tokens=generated,
             wasted_tokens=generated - delivered,
+            qoe=qoe,
         )

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.cost import Endpoint
 
 from .engine import BatchedServer, EngineStream, InferenceEngine
+from .request import Request
 
 __all__ = [
     "NetworkModel",
@@ -273,7 +274,15 @@ class DeviceEndpoint:
     """Per-user device: a dedicated engine, no network hop. TTFT grows
     linearly with prompt length (§3) because prefill is compute-bound on
     dedicated hardware. Concurrent requests get independent streams (each
-    user owns their device), so there is no cross-request contention here."""
+    user owns their device), so there is no cross-request contention here.
+
+    Both endpoints expose the SAME stream-opening signature —
+    ``open_stream(req, rng, start_at)`` / ``open_replay_stream(req,
+    generated, rng, start_at)`` — so the DiSCo driver never special-cases
+    argument lists per endpoint. ``rng`` is the shared trace RNG that
+    network-attached endpoints draw their link samples from; the device has
+    no stochastic link, so it accepts and ignores it (the parameter is part
+    of the endpoint protocol, not this endpoint's behavior)."""
 
     kind = Endpoint.DEVICE
 
@@ -285,35 +294,35 @@ class DeviceEndpoint:
         self._auto_seed = 0    # distinct default stream per request, matching
                                # the server endpoint's rid-derived default
 
-    def _seed(self, seed: Optional[int]) -> int:
+    def _resolve(self, req: Request) -> Request:
         """Default sampling seed: distinct per opened stream. Callers racing
         this endpoint against another for ONE request (the DiSCo driver)
-        must pass an explicit shared seed — endpoint-local defaults cannot
-        agree across endpoints."""
-        if seed is not None:
-            return int(seed)
+        must resolve the request's seed themselves — endpoint-local defaults
+        cannot agree across endpoints."""
+        if req.seed is not None:
+            return req
         self._auto_seed += 1
-        return self._auto_seed - 1
+        return dataclasses.replace(req, seed=self._auto_seed - 1)
 
-    def open_stream(self, prompt: np.ndarray, max_new: int, rng,
-                    start_at: float = 0.0,
-                    seed: Optional[int] = None) -> DeviceTokenStream:
+    def open_stream(self, req: Request,
+                    rng: Optional[np.random.Generator] = None,
+                    start_at: float = 0.0) -> DeviceTokenStream:
         return DeviceTokenStream(
-            self.engine.open_stream(prompt, max_new, seed=self._seed(seed)),
-            start_at, self.kind,
+            self.engine.open_stream(self._resolve(req)), start_at, self.kind,
         )
 
-    def open_replay_stream(self, prompt, generated, max_new: int, rng,
-                           start_at: float = 0.0, seed: Optional[int] = None
-                           ) -> DeviceTokenStream:
+    def open_replay_stream(self, req: Request, generated,
+                           rng: Optional[np.random.Generator] = None,
+                           start_at: float = 0.0) -> DeviceTokenStream:
         """Migration-target path: re-prefill prompt + token IDs, then
-        continue. Per-token times are interpolated across each measured
-        decode chunk (same as a fresh stream — no host-buffered bursts).
-        ``seed`` must be the request's seed so a temperature > 0 replay
-        resumes the source's per-position sampling stream bit-identically."""
+        continue (the stream's budget is the request's remaining
+        ``req.max_new - len(generated)``). Per-token times are interpolated
+        across each measured decode chunk (same as a fresh stream — no
+        host-buffered bursts). ``req`` must carry the source's seed and
+        sampler so a temperature > 0 replay resumes the source's
+        per-position sampling stream bit-identically."""
         return DeviceTokenStream(
-            self.engine.open_replay(prompt, generated, max_new,
-                                    seed=self._seed(seed)),
+            self.engine.open_replay(self._resolve(req), generated),
             start_at, self.kind,
         )
 
@@ -322,7 +331,10 @@ class ServerEndpoint:
     """Shared server: requests from ALL live DiSCo sessions land in one
     contended ``BatchedServer`` — queueing delay and the TTFT tail are
     emergent, not sampled. The network contributes sampled RTT only (half on
-    the uplink before the request queues, half on each token's downlink)."""
+    the uplink before the request queues, half on each token's downlink).
+    Same ``open_stream(req, rng, start_at)`` signature as the device
+    endpoint; the request's SLO/priority ride to the server's
+    deadline-aware admission queue."""
 
     kind = Endpoint.SERVER
 
@@ -332,34 +344,32 @@ class ServerEndpoint:
         # would alias link parameters across every endpoint in the process
         self.network = network if network is not None else NetworkModel()
 
-    def _open(self, tokens: np.ndarray, max_new: int, rng: np.random.Generator,
-              start_at: float, seed: Optional[int]) -> ServerTokenStream:
+    def _open(self, req: Request, rng: np.random.Generator,
+              start_at: float) -> ServerTokenStream:
         rtt = self.network.sample_rtt(rng)
-        rid = self.server.submit(
-            np.asarray(tokens, np.int32), max_new, at=start_at + rtt / 2.0,
-            seed=seed,
-        )
+        rid = self.server.submit(req, at=start_at + rtt / 2.0)
         return ServerTokenStream(
             self.server, rid, start_at, downlink=rtt / 2.0,
-            prefill_tokens=int(np.asarray(tokens).shape[0]), uplink=rtt / 2.0,
+            prefill_tokens=req.prompt_len, uplink=rtt / 2.0,
         )
 
-    def open_stream(self, prompt: np.ndarray, max_new: int,
-                    rng: np.random.Generator, start_at: float = 0.0,
-                    seed: Optional[int] = None) -> ServerTokenStream:
-        return self._open(
-            np.asarray(prompt, np.int32), max_new, rng, start_at, seed
-        )
+    def open_stream(self, req: Request, rng: np.random.Generator,
+                    start_at: float = 0.0) -> ServerTokenStream:
+        return self._open(req, rng, start_at)
 
-    def open_replay_stream(self, prompt, generated, max_new: int,
-                           rng: np.random.Generator, start_at: float = 0.0,
-                           seed: Optional[int] = None) -> ServerTokenStream:
+    def open_replay_stream(self, req: Request, generated,
+                           rng: np.random.Generator,
+                           start_at: float = 0.0) -> ServerTokenStream:
         """Migration-target path: the re-prefill is submitted to the SAME
-        batched scheduler as live traffic — a migration competes for slots
-        like any other request. ``seed`` must be the migrating request's
-        seed so a temperature > 0 continuation is bit-identical to what the
-        source would have produced."""
-        full = np.concatenate(
-            [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
+        deadline-aware batched scheduler as live traffic — a migration
+        competes for admission like any other request (keeping the original
+        SLO and priority). ``req`` must carry the migrating request's seed
+        and sampler so a temperature > 0 continuation is bit-identical to
+        what the source would have produced."""
+        generated = np.asarray(generated, np.int32)
+        full = np.concatenate([req.prompt, generated])
+        replay = dataclasses.replace(
+            req, prompt=full,
+            max_new=max(req.max_new - int(generated.shape[0]), 1),
         )
-        return self._open(full, max_new, rng, start_at, seed)
+        return self._open(replay, rng, start_at)

@@ -42,7 +42,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (
-    GREEDY,
     SamplerConfig,
     decode_n,
     decode_step,
@@ -53,12 +52,14 @@ from repro.models import (
     prefill,
     request_key,
     sample_tokens,
+    sampler_operands,
     supports_paged,
 )
 from repro.kernels.compat import on_tpu
 from repro.models.config import ModelConfig
 
 from .kv_pool import KVPoolManager
+from .request import Request
 
 __all__ = ["InferenceEngine", "GenerationResult", "EngineStream", "BatchedServer"]
 
@@ -74,6 +75,22 @@ def _zero_keys(batch: int) -> jnp.ndarray:
     """(B, 2) uint32 placeholder keys for paths with no request seed
     (warmup, greedy-only callers)."""
     return jnp.zeros((batch, 2), jnp.uint32)
+
+
+def _greedy_ops(batch: int):
+    """(B,) all-greedy sampler operands (warmup, direct greedy callers)."""
+    return sampler_operands([], batch=batch)
+
+
+def _require_request(req, method: str) -> Request:
+    if not isinstance(req, Request):
+        raise TypeError(
+            f"{method} now takes a repro.serving.Request as its single "
+            "request argument — the (prompt, max_new, seed=...) form was "
+            "removed. Build Request(prompt, max_new, sampler=..., seed=..., "
+            "slo=...) instead."
+        )
+    return req
 
 
 _MIN_BUCKET = 16
@@ -150,30 +167,31 @@ def _paged_windowed(cfg: ModelConfig) -> bool:
     )
 
 
-def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool,
-                         sampler: SamplerConfig):
+def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
     """The two jitted paged dispatches shared by InferenceEngine (1-row) and
     BatchedServer (R-row): a row prefill scattering into the donated pool,
-    and a fused multi-token decode over page tables. The sampler is closed
-    over (static); per-request keys ride in as traced arguments."""
+    and a fused multi-token decode over page tables. Nothing per-request is
+    closed over: the sampler rides in as per-row runtime operands (``ops``)
+    next to the per-request keys, so heterogeneous SamplerConfigs share one
+    compiled dispatch."""
 
     @functools.partial(jax.jit, donate_argnums=(1,))
-    def prefill_fn(params, pages, tokens, lengths, block_ids, keys):
+    def prefill_fn(params, pages, tokens, lengths, block_ids, keys, ops):
         """Prefill (1, S) and scatter its K/V into the request's blocks.
         The pool is donated: blocks are written in place."""
         return paged_prefill(
             params, cfg, pages, tokens, lengths, block_ids,
-            sampler=sampler, keys=keys,
+            sampler=ops, keys=keys,
         )
 
     @functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("num_steps",))
-    def decode_fn(params, pages, bt, lengths, tokens, active, keys, num_steps):
+    def decode_fn(params, pages, bt, lengths, tokens, active, keys, ops, num_steps):
         """Fused multi-token paged decode; inactive/saturated rows write the
         trash block and keep their lengths frozen."""
         return paged_decode_n(
             params, cfg, pages, bt, lengths, tokens, num_steps,
             max_len=max_len, active=active, use_kernel=use_kernel,
-            sampler=sampler, keys=keys,
+            sampler=ops, keys=keys,
         )
 
     return prefill_fn, decode_fn
@@ -191,16 +209,17 @@ def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
             params, pages, jnp.zeros((1, s), jnp.int32),
             jnp.asarray([s], jnp.int32),
             jnp.arange(1, nb + 1, dtype=jnp.int32),
-            _zero_keys(1),
+            _zero_keys(1), _greedy_ops(1),
         )
     bt = jnp.zeros((rows, max_blocks_per_row), jnp.int32)
     lengths = jnp.zeros((rows,), jnp.int32)
     tokens = jnp.zeros((rows,), jnp.int32)
     keys = _zero_keys(rows)
+    ops = _greedy_ops(rows)
     inactive = jnp.zeros((rows,), bool)       # rows stay frozen
     for n in _tail_sizes(decode_chunk):
         toks, pages, _ = decode_fn(
-            params, pages, bt, lengths, tokens, inactive, keys, n
+            params, pages, bt, lengths, tokens, inactive, keys, ops, n
         )
     jax.block_until_ready(toks)
     return init_paged_pages(cfg, num_blocks, block_size)
@@ -228,13 +247,16 @@ class InferenceEngine:
 
     ``decode_chunk`` tokens are decoded per device dispatch / host sync.
 
-    ``sampler`` selects the decoding rule (default: greedy argmax). With
-    temperature > 0 every generation draws each token with the
-    position-keyed counter RNG of ``models.sampling``: callers pass a
-    per-request ``seed`` (``generate``/``open_stream``/``open_replay``) and
-    the token at position *i* depends only on (seed, i, logits) — so replay
-    (``open_replay``, ``replay_then_continue``) and ``fork_stream`` continue
-    a stream bit-identically when given the same seed.
+    Sampling is *per request*: each :class:`~repro.serving.request.Request`
+    carries its own ``SamplerConfig`` and ``seed`` (``sampler`` here is only
+    the default for requests that don't specify one; greedy argmax when
+    omitted). The sampler is threaded through the jitted step functions as
+    per-row runtime operands — never baked into a jit closure — and with
+    temperature > 0 every token is drawn with the position-keyed counter RNG
+    of ``models.sampling``: the token at position *i* depends only on
+    (config, seed, i, logits), so replay (``open_replay``,
+    ``replay_then_continue``) and ``fork_stream`` continue a stream
+    bit-identically when given the same seed and config.
 
     ``paged=True`` switches the generation paths (``generate``,
     ``open_stream``/``open_replay``, ``replay_then_continue``) onto the
@@ -260,8 +282,8 @@ class InferenceEngine:
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
-        self.sampler = GREEDY if sampler is None else sampler
-        sampler = self.sampler
+        # per-request default only: requests may carry their own SamplerConfig
+        self.default_sampler: Optional[SamplerConfig] = sampler
         self._next_rid = 0
         self.paged = bool(paged)
         if self.paged:
@@ -282,7 +304,7 @@ class InferenceEngine:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             self._paged_prefill_fn, self._paged_decode_fn = _make_paged_step_fns(
-                cfg, max_len, self.use_kernel, sampler
+                cfg, max_len, self.use_kernel
             )
 
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -295,28 +317,28 @@ class InferenceEngine:
             self._copy_blocks = _copy_blocks
 
         @jax.jit
-        def _prefill(params, tokens, lengths, keys):
+        def _prefill(params, tokens, lengths, keys, ops):
             logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
             # first token sampled at its absolute position = true prompt
             # length, so replay prefills resume the same position counter
-            return sample_tokens(sampler, logits, keys, lengths), cache
+            return sample_tokens(ops, logits, keys, lengths), cache
 
         # the cache flows linearly through decode (old cache never reused), so
         # its buffers are donated: XLA updates the KV cache in place instead
         # of copying it every step.
         @functools.partial(jax.jit, donate_argnums=(1,))
-        def _decode(params, cache, token, keys):
+        def _decode(params, cache, token, keys, ops):
             logits, cache = decode_step(params, cfg, cache, token)
-            return sample_tokens(sampler, logits, keys, cache["lengths"]), cache
+            return sample_tokens(ops, logits, keys, cache["lengths"]), cache
 
         @functools.partial(
             jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
         )
-        def _decode_n(params, cache, token, keys, num_steps):
+        def _decode_n(params, cache, token, keys, ops, num_steps):
             # unguarded: pure scan over decode_step, zero extra cache copies.
             # The host never consumes tokens past max_len-1 (see generate).
             return decode_n(params, cfg, cache, token, num_steps,
-                            sampler=sampler, keys=keys)
+                            sampler=ops, keys=keys)
 
         self._prefill = _prefill
         self._decode = _decode
@@ -340,13 +362,14 @@ class InferenceEngine:
             t, _ = self.prefill(np.zeros((batch, s), np.int32))
         tok = np.zeros((batch, buckets[0]), np.int32)
         keys = _zero_keys(batch)
+        ops = _greedy_ops(batch)
         t, cache = self.prefill(tok)
         # decode donates the cache: thread it, never reuse a donated buffer
-        tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t), keys)
+        tok_dev, cache = self._decode(self.params, cache, jnp.asarray(t), keys, ops)
         # precompile every tail scan length generate can dispatch, so no XLA
         # compile ever lands inside the wall-clock-timed decode region
         for n in _tail_sizes(self.decode_chunk):
-            toks, cache = self._decode_n(self.params, cache, tok_dev, keys, n)
+            toks, cache = self._decode_n(self.params, cache, tok_dev, keys, ops, n)
             tok_dev = toks[-1]
         jax.block_until_ready(tok_dev)
 
@@ -362,13 +385,15 @@ class InferenceEngine:
         )
 
     def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int,
-                      keys=None):
+                      keys=None, ops=None):
         """Yield (tokens_np (n_valid, B), n_valid) decode chunks after the
         prefill token: one fused dispatch + one host sync per chunk, stopping
         at max_new or cache saturation (lengths == max_len - 1, exactly the
         seed per-token guard). Shared by generate and replay_then_continue."""
         if keys is None:
             keys = _zero_keys(1)
+        if ops is None:
+            ops = _greedy_ops(1)
         emitted = 1
         cur_len = start_len
         while emitted < max_new:
@@ -380,7 +405,9 @@ class InferenceEngine:
             if n_valid <= 0:
                 return
             n_steps = _tail_steps(n_valid, self.decode_chunk)
-            toks, cache = self._decode_n(self.params, cache, tok_dev, keys, n_steps)
+            toks, cache = self._decode_n(
+                self.params, cache, tok_dev, keys, ops, n_steps
+            )
             toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
             yield toks_np[:n_valid], n_valid
             emitted += n_valid
@@ -390,12 +417,14 @@ class InferenceEngine:
     # -- paged request lifecycle (alloc / extend / free / clone) -----------
 
     def _paged_admit_prefill(self, rid: int, prompt: np.ndarray,
-                             keys=None) -> int:
+                             keys=None, ops=None) -> int:
         """Alloc-on-prefill: admit ``rid`` (blocks + row) and run the paged
         row prefill. Raises ``RuntimeError`` when the pool cannot hold the
         prompt — the device engine has no queue to fall back on."""
         if keys is None:
             keys = _zero_keys(1)
+        if ops is None:
+            ops = _greedy_ops(1)
         s = int(prompt.shape[0])
         padded, lengths = _pad_to_bucket(
             prompt[None, :], self.max_len, self._bucketed
@@ -413,7 +442,7 @@ class InferenceEngine:
         tok, self.pages = self._paged_prefill_fn(
             self.params, self.pages, jnp.asarray(padded, jnp.int32),
             jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
-            jnp.asarray(keys),
+            jnp.asarray(keys), ops,
         )
         return int(jax.block_until_ready(tok)[0])
 
@@ -422,13 +451,15 @@ class InferenceEngine:
         self.kv.release(rid)
 
     def _paged_chunks(self, rid: int, tok_dev, start_len: int, max_new: int,
-                      emitted: int = 1, keys=None):
+                      emitted: int = 1, keys=None, ops=None):
         """Paged twin of ``_chunk_stream``: extend-on-decode grows the page
         table just ahead of each fused chunk; an extension the pool cannot
         serve ends the stream early (the rid lands in ``kv.extend_stalls`` —
         the stream's ``oom`` flag)."""
         if keys is None:
             keys = _zero_keys(1)
+        if ops is None:
+            ops = _greedy_ops(1)
         keys = jnp.asarray(keys)
         cur = start_len
         while emitted < max_new:
@@ -451,7 +482,7 @@ class InferenceEngine:
             toks, self.pages, _ = self._paged_decode_fn(
                 self.params, self.pages, bt,
                 jnp.asarray([cur], jnp.int32), tok_dev,
-                jnp.ones((1,), bool), keys, n_steps,
+                jnp.ones((1,), bool), keys, ops, n_steps,
             )
             toks_np = np.asarray(jax.block_until_ready(toks))  # ONE sync/chunk
             cur += n_valid
@@ -466,8 +497,9 @@ class InferenceEngine:
         contents device-side, and return a new stream that continues decoding
         from the source's current state with no re-prefill. The source keeps
         its own blocks and may keep generating (the hand-off race). The fork
-        inherits the source's request seed, so under temperature > 0 it
-        continues the exact per-position RNG stream the source would."""
+        inherits the source's request (seed AND sampler config), so under
+        temperature > 0 it continues the exact per-position RNG stream the
+        source would."""
         if not self.paged:
             raise ValueError("fork_stream requires a paged engine")
         if src._rid is None or src._rid not in self.kv.tables:
@@ -481,51 +513,58 @@ class InferenceEngine:
         src_ids = jnp.asarray([a for a, _ in pairs], jnp.int32)
         dst_ids = jnp.asarray([b for _, b in pairs], jnp.int32)
         self.pages = self._copy_blocks(self.pages, src_ids, dst_ids)
-        st = EngineStream(self, src._prompt, max_new, seed=src.seed)
+        st = EngineStream(self, src.req, prompt=src._prompt, max_new=max_new)
         st._rid = rid
         st.prefill_s = 0.0                 # no prefill: state was copied
         st.tokens_emitted = 0
         st._chunks = self._paged_chunks(
             rid, jnp.asarray([src._last_tok], jnp.int32),
-            table.num_tokens, max_new, emitted=0, keys=st.keys,
+            table.num_tokens, max_new, emitted=0, keys=st.keys, ops=st.ops,
         )
         return st
 
-    def prefill(self, tokens: np.ndarray, keys=None):
+    def prefill(self, tokens: np.ndarray, keys=None, ops=None):
         """tokens: (B, S) int32. Returns (first_token (B,), cache).
-        ``keys``: optional (B, 2) uint32 per-row request keys (sampling
-        engines; greedy ignores them)."""
+        ``keys``/``ops``: optional (B,)-shaped per-row request keys and
+        sampler operands (sampling engines; omitted means greedy rows)."""
         padded, lengths = _pad_to_bucket(
             np.asarray(tokens, np.int32), self.max_len, self._bucketed
         )
         if keys is None:
             keys = _zero_keys(padded.shape[0])
+        if ops is None:
+            ops = _greedy_ops(padded.shape[0])
         t, cache = self._prefill(
             self.params, jnp.asarray(padded, jnp.int32), jnp.asarray(lengths),
-            jnp.asarray(keys),
+            jnp.asarray(keys), ops,
         )
         return np.asarray(jax.block_until_ready(t)), cache
 
-    def decode(self, cache, token: np.ndarray, keys=None):
+    def decode(self, cache, token: np.ndarray, keys=None, ops=None):
         """One decode step. NOTE: ``cache`` is donated (updated in place on
         the device) — callers must use the returned cache, not the argument."""
         token = np.asarray(token, np.int32)
         if keys is None:
             keys = _zero_keys(token.shape[0])
+        if ops is None:
+            ops = _greedy_ops(token.shape[0])
         t, cache = self._decode(
-            self.params, cache, jnp.asarray(token), jnp.asarray(keys)
+            self.params, cache, jnp.asarray(token), jnp.asarray(keys), ops
         )
         return np.asarray(jax.block_until_ready(t)), cache
 
     # -- generation --------------------------------------------------------
 
     def generate(self, prompt: np.ndarray, max_new: int, replay: bool = False,
-                 seed: int = 0) -> GenerationResult:
-        """Generation for one prompt (1, S). Wall-clock timed.
+                 seed: int = 0,
+                 sampler: Optional[SamplerConfig] = None) -> GenerationResult:
+        """Generation for one prompt (1, S). Wall-clock timed. Convenience
+        wrapper over the Request API (``open_stream``).
 
-        ``seed`` is the request's sampling seed (ignored by greedy engines):
-        two generations with the same seed are bit-identical, as is any
-        replay/fork that carries the seed forward.
+        ``seed`` keys the request's sampling stream and ``sampler``
+        overrides the engine default for this request (greedy rows ignore
+        both): two generations with the same (seed, sampler) are
+        bit-identical, as is any replay/fork that carries them forward.
 
         Decodes in fused chunks of ``decode_chunk`` tokens: one device
         dispatch and one host sync per chunk. The host only observes chunk
@@ -534,8 +573,9 @@ class InferenceEngine:
         chunk interval — downstream TBT/QoE series (DiSCo endpoints) keep
         their token-by-token meaning instead of a bursty 0/spike pattern.
         """
+        req = Request(prompt, max_new, seed=seed, sampler=sampler)
         if self.paged:
-            st = self.open_stream(prompt, max_new, seed=seed)
+            st = self.open_stream(req)
             tokens, times = [], []
             while (chunk := st.next_chunk()) is not None:
                 tokens += chunk[0]
@@ -549,14 +589,15 @@ class InferenceEngine:
                 decode_s_per_token=(times[-1] - times[0]) / n_dec,
             )
         keys = _request_keys([seed])
+        ops = sampler_operands([sampler or self.default_sampler])
         t0 = time.perf_counter()
-        tok, cache = self.prefill(prompt[None, :], keys=keys)
+        tok, cache = self.prefill(prompt[None, :], keys=keys, ops=ops)
         t_first = time.perf_counter()
         tokens, times = [int(tok[0])], [t_first - t0]
         t_prev = t_first - t0
         for toks_np, n_valid in self._chunk_stream(
             cache, jnp.asarray(tok, jnp.int32), int(prompt.shape[0]), max_new,
-            keys=keys,
+            keys=keys, ops=ops,
         ):
             now = time.perf_counter() - t0
             for i in range(n_valid):
@@ -574,17 +615,20 @@ class InferenceEngine:
 
     def replay_then_continue(
         self, prompt: np.ndarray, generated: list[int], max_new: int,
-        seed: int = 0
+        seed: int = 0, sampler: Optional[SamplerConfig] = None
     ) -> tuple[float, "Iterator[int]"]:
         """Migration target path (§4.3): re-prefill prompt + received token IDs
         (no KV transfer), then continue decoding. Returns (replay_seconds,
         iterator of continuation tokens). The continuation decodes in fused
-        chunks and buffers them host-side. With the source's ``seed`` the
-        continuation is bit-identical to what the source would have produced
-        (the replay prefill samples at position len(prompt) + len(generated),
-        exactly the source's next counter value)."""
+        chunks and buffers them host-side. With the source's ``seed`` (and
+        sampler config) the continuation is bit-identical to what the source
+        would have produced (the replay prefill samples at position
+        len(prompt) + len(generated), exactly the source's next counter
+        value)."""
         if self.paged:
-            st = self.open_replay(prompt, generated, max_new, seed=seed)
+            req = Request(prompt, max_new + len(generated), seed=seed,
+                          sampler=sampler)
+            st = self.open_replay(req, generated, max_new=max_new)
             first = st.next_chunk()          # replay prefill, eager
 
             def paged_continuation():
@@ -595,9 +639,10 @@ class InferenceEngine:
 
             return st.prefill_s, paged_continuation()
         keys = _request_keys([seed])
+        ops = sampler_operands([sampler or self.default_sampler])
         t0 = time.perf_counter()
         full = np.concatenate([prompt, np.asarray(generated, np.int32)])
-        tok, cache = self.prefill(full[None, :], keys=keys)
+        tok, cache = self.prefill(full[None, :], keys=keys, ops=ops)
         replay_s = time.perf_counter() - t0
         start_len = int(full.shape[0])
 
@@ -605,7 +650,7 @@ class InferenceEngine:
             yield int(tok[0])
             for toks_np, n_valid in self._chunk_stream(
                 cache, jnp.asarray(tok, jnp.int32), start_len, max_new,
-                keys=keys,
+                keys=keys, ops=ops,
             ):
                 for i in range(n_valid):
                     yield int(toks_np[i, 0])
@@ -614,24 +659,29 @@ class InferenceEngine:
 
     # -- incremental (event-loop) interface --------------------------------
 
-    def open_stream(self, prompt: np.ndarray, max_new: int,
-                    seed: int = 0) -> "EngineStream":
-        """Lazy token source for ``prompt`` (S,): nothing is dispatched until
-        the first pull. ``seed`` keys the request's sampling stream. See
+    def open_stream(self, req: Request) -> "EngineStream":
+        """Lazy token source for one :class:`~repro.serving.request.Request`:
+        nothing is dispatched until the first pull. The request's ``seed``
+        keys its sampling stream and its ``sampler`` (engine default when
+        None) rides the jitted dispatches as per-row runtime operands. See
         :class:`EngineStream`."""
-        return EngineStream(self, np.asarray(prompt, np.int32), max_new, seed=seed)
+        return EngineStream(self, _require_request(req, "open_stream"))
 
-    def open_replay(self, prompt: np.ndarray, generated, max_new: int,
-                    seed: int = 0) -> "EngineStream":
+    def open_replay(self, req: Request, generated,
+                    max_new: Optional[int] = None) -> "EngineStream":
         """Migration-target source (§4.3): first pull re-prefills
         prompt + received token IDs (no KV transfer); the stream then emits
-        up to ``max_new`` *continuation* tokens (the replay-prefill's next
-        token is the first of them). Pass the SOURCE stream's ``seed`` so the
-        continuation resumes the same per-position sampling stream."""
-        full = np.concatenate(
-            [np.asarray(prompt, np.int32), np.asarray(generated, np.int32)]
-        )
-        return EngineStream(self, full, max_new, seed=seed)
+        up to ``max_new`` continuation tokens (default: the request's
+        remaining budget ``req.max_new - len(generated)``; the
+        replay-prefill's next token is the first of them). ``req`` must be
+        the SOURCE's request so the continuation resumes the same
+        per-position sampling stream with the same config."""
+        req = _require_request(req, "open_replay")
+        generated = np.asarray(generated, np.int32)
+        full = np.concatenate([req.prompt, generated])
+        if max_new is None:
+            max_new = max(req.max_new - int(generated.shape[0]), 1)
+        return EngineStream(self, req, prompt=full, max_new=max_new)
 
 
 class EngineStream:
@@ -651,13 +701,23 @@ class EngineStream:
     was in flight.
     """
 
-    def __init__(self, engine: InferenceEngine, prompt: np.ndarray, max_new: int,
-                 seed: int = 0):
+    def __init__(self, engine: InferenceEngine, req: Request,
+                 prompt: Optional[np.ndarray] = None,
+                 max_new: Optional[int] = None):
+        """``req`` carries the contract (sampler/seed/SLO); ``prompt`` /
+        ``max_new`` override the compute inputs for replay and fork streams
+        (a replay prefills prompt + delivered tokens but keeps the request's
+        sampler and seed)."""
         self.engine = engine
-        self._prompt = prompt
-        self._max_new = max_new
-        self.seed = int(seed)         # request sampling seed (greedy: unused)
+        self.req = req
+        self._prompt = req.prompt if prompt is None else np.asarray(prompt, np.int32)
+        self._max_new = req.max_new if max_new is None else int(max_new)
+        self.seed = 0 if req.seed is None else int(req.seed)
+        self.sampler = (
+            req.sampler if req.sampler is not None else engine.default_sampler
+        )
         self._keys: Optional[np.ndarray] = None
+        self._ops = None
         self._chunks = None           # generator once prefill has run
         self.cancelled = False
         self.exhausted = False
@@ -674,6 +734,13 @@ class EngineStream:
         if self._keys is None:
             self._keys = _request_keys([self.seed])
         return self._keys
+
+    @property
+    def ops(self):
+        """(1,) per-row sampler operands, derived once from the request."""
+        if self._ops is None:
+            self._ops = sampler_operands([self.sampler])
+        return self._ops
 
     @property
     def prefilled(self) -> bool:
@@ -701,28 +768,32 @@ class EngineStream:
             return None
         if self._chunks is None:
             keys = self.keys              # derived before t0, not timed compute
+            ops = self.ops
             t0 = time.perf_counter()
             if self.engine.paged:
                 self._rid = self.engine._next_rid
                 self.engine._next_rid += 1
                 tok0 = self.engine._paged_admit_prefill(
-                    self._rid, self._prompt, keys=keys
+                    self._rid, self._prompt, keys=keys, ops=ops
                 )
                 self.prefill_s = time.perf_counter() - t0
                 self._elapsed = self.prefill_s
                 self._chunks = self.engine._paged_chunks(
                     self._rid, jnp.asarray([tok0], jnp.int32),
                     int(self._prompt.shape[0]), self._max_new, keys=keys,
+                    ops=ops,
                 )
                 self.tokens_emitted = 1
                 self._last_tok = tok0
                 return [tok0], [self.prefill_s]
-            tok, cache = self.engine.prefill(self._prompt[None, :], keys=keys)
+            tok, cache = self.engine.prefill(
+                self._prompt[None, :], keys=keys, ops=ops
+            )
             self.prefill_s = time.perf_counter() - t0
             self._elapsed = self.prefill_s
             self._chunks = self.engine._chunk_stream(
                 cache, jnp.asarray(tok, jnp.int32),
-                int(self._prompt.shape[0]), self._max_new, keys=keys,
+                int(self._prompt.shape[0]), self._max_new, keys=keys, ops=ops,
             )
             self.tokens_emitted = 1
             return [int(tok[0])], [self.prefill_s]
@@ -767,21 +838,29 @@ class _Slot:
     prompt: Optional[np.ndarray] = None   # original prompt (preemption resume)
     seed: int = 0                         # request sampling seed
     key: Optional[np.ndarray] = None      # (2,) uint32 request key
+    sampler: Optional[SamplerConfig] = None   # per-request sampler config
 
 
 @dataclasses.dataclass
 class _Queued:
     """One queue entry. ``prompt`` is always the ORIGINAL prompt; a
     preemption-resume entry additionally carries the tokens already emitted
-    (the admission prefill replays prompt + tokens — vLLM-style recompute)
-    and the request's sampling ``seed``, so the resumed continuation draws
-    the exact same per-position samples."""
+    (the admission prefill replays prompt + tokens — vLLM-style recompute),
+    ``resume=True`` (resumes outrank fresh admissions), and the request's
+    sampling ``seed``/``sampler``, so the resumed continuation draws the
+    exact same per-position samples. ``deadline`` is the ABSOLUTE virtual
+    time of the request's TTFT deadline (inf when un-SLO'd); ``priority`` is
+    the admission tier (lower admits first)."""
 
     rid: int
     prompt: np.ndarray
     max_new: int                           # tokens still to emit
     tokens: list = dataclasses.field(default_factory=list)
     seed: int = 0
+    sampler: Optional[SamplerConfig] = None
+    priority: int = 0
+    deadline: float = math.inf
+    resume: bool = False
 
 
 class BatchedServer:
@@ -812,7 +891,7 @@ class BatchedServer:
     decode chunk of ``decode_chunk`` tokens across all active rows (one
     dispatch + one host sync). The virtual clock advances by each tick's
     measured wall-clock compute; per-token event times are interpolated
-    inside the chunk. ``submit(..., at=t)`` stamps a virtual arrival;
+    inside the chunk. ``submit(req, at=t)`` stamps a virtual arrival;
     ``run_until(t)`` processes ticks until the clock passes ``t`` (the last
     tick may overshoot — that is the "in-flight chunk" a cancellation cannot
     recall). Tokens are delivered incrementally per request id via
@@ -821,6 +900,20 @@ class BatchedServer:
     uplink RTT after the driver issued it), so a queued race loser can slip
     into prefill and waste blocks meanwhile — ``cancel_lag_tokens`` counts
     the tokens generated in that window.
+
+    Admission ordering (``admission=``): ``"edf"`` (default) is
+    deadline-aware — among ARRIVED queue entries, preemption resumes first,
+    then priority tier (lower first), then earliest absolute TTFT deadline
+    (EDF; equivalently max TTFT slack), then FIFO. Requests without an SLO
+    carry an infinite deadline, so an un-SLO'd workload orders exactly like
+    FIFO. ``"fifo"`` ignores deadlines and priorities (the baseline the
+    serving benchmark compares against). ``deadline_reorders`` counts
+    admissions where the deadline-aware pick differed from FIFO's, and
+    ``slo_misses`` counts first tokens that landed after their request's
+    TTFT deadline. Sampling is per request: every entry carries its own
+    ``SamplerConfig``, stacked into per-row runtime operands each tick, so
+    one fused batch mixes greedy and stochastic rows bit-identically to
+    running each alone.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
@@ -828,7 +921,8 @@ class BatchedServer:
                  paged: Optional[bool] = None, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None,
+                 admission: str = "edf"):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -836,8 +930,11 @@ class BatchedServer:
         self.max_len = max_len
         self.decode_chunk = max(decode_chunk, 1)
         self._bucketed = _bucketed_prefill_ok(cfg)
-        self.sampler = GREEDY if sampler is None else sampler
-        sampler = self.sampler
+        # per-request default only: requests may carry their own SamplerConfig
+        self.default_sampler: Optional[SamplerConfig] = sampler
+        if admission not in ("edf", "fifo"):
+            raise ValueError(f"admission must be 'edf' or 'fifo' (got {admission!r})")
+        self.admission = admission
         if paged is None:
             self.paged = supports_paged(cfg)
         elif paged and not supports_paged(cfg):
@@ -866,11 +963,12 @@ class BatchedServer:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             self._prefill_row_paged, self._decode_chunk_paged = (
-                _make_paged_step_fns(cfg, max_len, self.use_kernel, sampler)
+                _make_paged_step_fns(cfg, max_len, self.use_kernel)
             )
         else:
             @functools.partial(jax.jit, donate_argnums=(1,))
-            def _prefill_row(params, batched_cache, tokens, lengths, row, keys):
+            def _prefill_row(params, batched_cache, tokens, lengths, row, keys,
+                             ops):
                 """Prefill (1, S) and write its cache into row ``row``. The
                 batched cache is donated: the row write happens in place."""
                 logits, cache = prefill(params, cfg, tokens, max_len, lengths=lengths)
@@ -880,17 +978,17 @@ class BatchedServer:
                         new[k] = v.at[row].set(cache[k][0])
                     else:
                         new[k] = v.at[:, row].set(cache[k][:, 0])
-                return sample_tokens(sampler, logits, keys, lengths)[0], new
+                return sample_tokens(ops, logits, keys, lengths)[0], new
 
             @functools.partial(
                 jax.jit, donate_argnums=(1,), static_argnames=("num_steps",)
             )
-            def _decode_chunk(params, cache, tokens, active, keys, num_steps):
+            def _decode_chunk(params, cache, tokens, active, keys, ops, num_steps):
                 """Fused multi-token batched decode; inactive/saturated rows
                 keep their cache untouched."""
                 return decode_n(
                     params, cfg, cache, tokens, num_steps,
-                    max_len=max_len, active=active, sampler=sampler, keys=keys,
+                    max_len=max_len, active=active, sampler=ops, keys=keys,
                 )
 
             self._prefill_row = _prefill_row
@@ -899,7 +997,7 @@ class BatchedServer:
             self._free_rows = list(range(max_slots))
         self._warm = False
         self.clock = 0.0                    # virtual seconds
-        self.queue: deque = deque()         # _Queued entries, FIFO
+        self.queue: list[_Queued] = []      # admission-ordered by _pick()
         self.slots: dict[int, _Slot] = {}
         self.rows: dict[int, int] = {}
         self.row_len = [0] * max_slots      # host-side mirror of cache lengths
@@ -915,6 +1013,8 @@ class BatchedServer:
         self._admit_counter = 0
         self._cancel_due: dict[int, float] = {}      # in-flight cancels (uplink RTT)
         self.cancel_lag_tokens = 0   # tokens generated after their cancel was issued
+        self.slo_misses = 0          # first tokens that landed past their deadline
+        self.deadline_reorders = 0   # EDF picks that differed from FIFO order
 
     @property
     def free_rows(self) -> list:
@@ -952,14 +1052,16 @@ class BatchedServer:
             )
             tok, self.cache = self._prefill_row(
                 self.params, self.cache, jnp.asarray(padded), jnp.asarray(lengths),
-                0, _zero_keys(1),
+                0, _zero_keys(1), _greedy_ops(1),
             )
         tokens = np.zeros((self.max_slots,), np.int32)
         keys = _zero_keys(self.max_slots)
+        ops = _greedy_ops(self.max_slots)
         inactive = jnp.zeros((self.max_slots,), bool)  # rows stay frozen
         for n in _tail_sizes(self.decode_chunk):
             toks, self.cache = self._decode_chunk(
-                self.params, self.cache, jnp.asarray(tokens), inactive, keys, n
+                self.params, self.cache, jnp.asarray(tokens), inactive, keys,
+                ops, n
             )
         jax.block_until_ready(toks)
         # reset to a pristine cache: warmup must not leave row 0 populated
@@ -968,20 +1070,35 @@ class BatchedServer:
 
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new: int, at: Optional[float] = None,
-               seed: Optional[int] = None) -> int:
-        """Enqueue a request arriving at virtual time ``at`` (defaults to the
-        current clock). FIFO admission; callers submit in arrival order.
-        ``seed`` keys the request's sampling stream (defaults to the rid);
-        it survives recompute preemption, so a preempted-then-replayed row
-        regenerates exactly its pre-preemption continuation."""
+    def submit(self, req: Request, at: Optional[float] = None) -> int:
+        """Enqueue one :class:`~repro.serving.request.Request`, arriving at
+        virtual time ``at`` (defaults to ``max(clock, req.arrival)``).
+        Admission order is deadline-aware (see class docstring); the
+        request's ``slo.ttft_deadline`` anchors at the arrival time.
+
+        The request's ``seed`` keys its sampling stream (defaults to the
+        server-local rid) and its ``sampler`` (server default when None)
+        becomes this row's runtime operands; both survive recompute
+        preemption, so a preempted-then-replayed row regenerates exactly its
+        pre-preemption continuation. Returns the server-local rid."""
+        req = _require_request(req, "BatchedServer.submit")
         rid = self.next_id
         self.next_id += 1
+        arrive = max(self.clock, req.arrival) if at is None else float(at)
+        # the TTFT deadline anchors at the CLIENT-side arrival: an explicit
+        # network-adjusted ``at`` (the endpoint path: at = arrival + uplink)
+        # means the user's deadline clock started at ``req.arrival``, not
+        # when the submit landed — anchoring at ``arrive`` would inflate
+        # every deadline (and EDF slack) by the uplink
+        anchor = req.arrival if at is not None else arrive
         self.queue.append(_Queued(
-            rid, np.asarray(prompt, np.int32), max_new,
-            seed=rid if seed is None else int(seed),
+            rid, req.prompt, req.max_new,
+            seed=rid if req.seed is None else int(req.seed),
+            sampler=req.sampler if req.sampler is not None else self.default_sampler,
+            priority=req.priority,
+            deadline=anchor + req.slo.ttft_deadline,
         ))
-        self.submit_time[rid] = self.clock if at is None else float(at)
+        self.submit_time[rid] = arrive
         self.events[rid] = deque()
         self.generated[rid] = 0
         return rid
@@ -1060,20 +1177,57 @@ class BatchedServer:
             self._cancel_due.pop(rid, None)
 
     def _head_arrival(self) -> Optional[float]:
-        return self.submit_time[self.queue[0].rid] if self.queue else None
+        """Earliest virtual arrival among queued entries (idle-gap jumps)."""
+        if not self.queue:
+            return None
+        return min(self.submit_time[q.rid] for q in self.queue)
+
+    def _fifo_key(self, q: _Queued):
+        # resumes outrank fresh admissions (they already held a row — the
+        # old requeue-at-head semantics), then strict arrival order
+        return (not q.resume, self.submit_time[q.rid], q.rid)
+
+    def _edf_key(self, q: _Queued):
+        # priority-tiered EDF by TTFT deadline: resume > tier > earliest
+        # absolute deadline (== max slack at any common estimate) > FIFO.
+        # An EXPIRED deadline is demoted to "no deadline" (inf): that first
+        # token can no longer land in time, so urgency-ordering it would
+        # sacrifice salvageable requests to a lost cause — the classic EDF
+        # overload domino. Demotion makes overloaded EDF degrade toward
+        # FIFO instead of below it.
+        deadline = q.deadline if q.deadline >= self.clock else math.inf
+        return (not q.resume, q.priority, deadline,
+                self.submit_time[q.rid], q.rid)
+
+    def _pick(self) -> tuple[Optional[_Queued], bool]:
+        """(entry, reordered): the queue entry the next admission tick would
+        take — the deadline-aware (or FIFO) minimum over entries that have
+        ARRIVED (un-arrived entries never jump the clock) — and whether the
+        deadline-aware pick differs from strict FIFO order. One queue scan;
+        the two min() passes run on the (short) arrived slice only."""
+        arrived = [q for q in self.queue if self.submit_time[q.rid] <= self.clock]
+        if not arrived:
+            return None, False
+        fifo_first = min(arrived, key=self._fifo_key)
+        if self.admission == "fifo":
+            return fifo_first, False
+        item = min(arrived, key=self._edf_key)
+        return item, item is not fifo_first
 
     def _admissible(self) -> bool:
-        """Head-of-queue admission test: a free row AND — paged — the
-        prefill's block demand fitting the free pool. A head blocked on
-        memory alone is recorded in ``kv.memory_waits`` (the benchmark's
-        queued-on-memory signal)."""
-        if not self.queue:
+        """Admission test for the deadline-aware head: a free row AND —
+        paged — the prefill's block demand fitting the free pool. A head
+        blocked on memory alone is recorded in ``kv.memory_waits`` (the
+        benchmark's queued-on-memory signal). Only the selected head is
+        tested: admission keeps head-of-line blocking semantics, so memory
+        pressure still queues requests rather than being skipped around."""
+        item, _ = self._pick()
+        if item is None:
             return False
         if not self.paged:
             return bool(self._free_rows)
         if not self.kv.has_free_row:
             return False
-        item = self.queue[0]
         full_len = int(item.prompt.shape[0]) + len(item.tokens)
         padded_len = _bucket_len(full_len, self.max_len) if self._bucketed else full_len
         demand = self.kv.prefill_demand(padded_len, full_len)
@@ -1085,7 +1239,11 @@ class BatchedServer:
         wall-clock advances the virtual clock; the prompt's first token lands
         at the new clock. A preemption-resume entry re-prefills
         prompt + emitted tokens and continues where it left off."""
-        item = self.queue.popleft()
+        item, reordered = self._pick()
+        assert item is not None               # guarded by _admissible
+        if reordered:
+            self.deadline_reorders += 1
+        self.queue.remove(item)
         rid = item.rid
         full = (
             np.concatenate([item.prompt, np.asarray(item.tokens, np.int32)])
@@ -1096,6 +1254,8 @@ class BatchedServer:
             full[None, :], self.max_len, self._bucketed
         )
         key = _request_keys([item.seed])      # derived, not timed compute
+        ops = sampler_operands([item.sampler])
+        first_admission = rid not in self.first_token_time
         t0 = time.perf_counter()
         if self.paged:
             sb = int(padded.shape[1])
@@ -1106,7 +1266,7 @@ class BatchedServer:
             tok, self.pages = self._prefill_row_paged(
                 self.params, self.pages, jnp.asarray(padded, jnp.int32),
                 jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
-                jnp.asarray(key),
+                jnp.asarray(key), ops,
             )
             tok = int(jax.block_until_ready(tok)[0])
             self.block_tables[row] = table.padded(self.max_blocks_per_row)
@@ -1114,11 +1274,13 @@ class BatchedServer:
             row = self._free_rows.pop()
             tok, self.cache = self._prefill_row(
                 self.params, self.cache, jnp.asarray(padded),
-                jnp.asarray(lengths), row, jnp.asarray(key),
+                jnp.asarray(lengths), row, jnp.asarray(key), ops,
             )
             tok = int(jax.block_until_ready(tok))
         self.clock += time.perf_counter() - t0
         self.first_token_time.setdefault(rid, self.clock)  # resume keeps TTFT
+        if first_admission and self.clock > item.deadline:
+            self.slo_misses += 1              # first token past its deadline
         self.events[rid].append((tok, self.clock))
         self.generated[rid] += 1
         if rid in self._cancel_due:
@@ -1127,7 +1289,7 @@ class BatchedServer:
         self._admit_counter += 1
         self.slots[rid] = _Slot(
             rid, item.max_new - 1, list(item.tokens) + [tok], prompt=item.prompt,
-            seed=item.seed, key=key[0],
+            seed=item.seed, key=key[0], sampler=item.sampler,
         )
         self.rows[rid] = row
         self.row_len[row] = s
@@ -1136,18 +1298,20 @@ class BatchedServer:
 
     def _preempt(self, rid: int) -> None:
         """vLLM-style recompute preemption: free the victim's blocks and row
-        and requeue it at the HEAD with its emitted tokens; re-admission
-        replays prompt + tokens (lossless for greedy argmax AND for the
-        position-keyed sampler, which reuses the request seed on resume).
-        Its TTFT and delivered events are unaffected."""
+        and requeue it as a ``resume`` entry (resumes outrank every fresh
+        admission in both admission modes) with its emitted tokens;
+        re-admission replays prompt + tokens (lossless for greedy argmax AND
+        for the position-keyed sampler, which reuses the request's seed and
+        sampler config on resume). Its TTFT and delivered events are
+        unaffected."""
         slot = self.slots.pop(rid)
         self.rows.pop(rid)
         self.kv.release(rid)
         self.kv.preemptions += 1
-        self.queue.appendleft(
-            _Queued(rid, slot.prompt, slot.remaining, list(slot.tokens),
-                    seed=slot.seed)
-        )
+        self.queue.insert(0, _Queued(
+            rid, slot.prompt, slot.remaining, list(slot.tokens),
+            seed=slot.seed, sampler=slot.sampler, resume=True,
+        ))
 
     def _ensure_block_capacity(self, need: dict) -> None:
         """Extend every active row's page table to cover its share of the
@@ -1199,12 +1363,17 @@ class BatchedServer:
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
         keys = np.zeros((self.max_slots, 2), np.uint32)
+        row_samplers = [None] * self.max_slots
         for rid, slot in self.slots.items():
             row = self.rows[rid]
             tokens[row] = slot.tokens[-1]
             active[row] = True
             if slot.key is not None:
                 keys[row] = slot.key
+            row_samplers[row] = slot.sampler
+        # per-row sampler operands: heterogeneous request configs share the
+        # one fused dispatch (free rows stay greedy-frozen)
+        ops = sampler_operands(row_samplers)
         # cap the scan at the largest per-row need (rounded to a warm tail
         # size) so request tails don't pay for discarded decode steps
         num_steps = _tail_steps(max(need.values()), self.decode_chunk)
@@ -1215,12 +1384,12 @@ class BatchedServer:
                 self.params, self.pages, jnp.asarray(self.block_tables),
                 jnp.asarray(np.asarray(self.row_len, np.int32)),
                 jnp.asarray(tokens), jnp.asarray(active), jnp.asarray(keys),
-                num_steps,
+                ops, num_steps,
             )
         else:
             toks, self.cache = self._decode_chunk(
                 self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
-                jnp.asarray(keys), num_steps,
+                jnp.asarray(keys), ops, num_steps,
             )
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         dur = time.perf_counter() - t0
@@ -1292,11 +1461,19 @@ class BatchedServer:
         return rid in self._cancel_due
 
     def pool_stats(self) -> dict:
-        """Memory-pressure accounting for the serving benchmark: peak blocks
-        in use, how many rids ever queued on memory, recompute preemptions,
-        and tokens generated after their cancel was issued (propagation
-        lag). Dense servers report only the cancel lag."""
-        stats = {"cancel_lag_tokens": int(self.cancel_lag_tokens)}
+        """Memory-pressure + SLO accounting for the serving benchmark: peak
+        blocks in use, how many rids ever queued on memory, recompute
+        preemptions, tokens generated after their cancel was issued
+        (propagation lag), first tokens that missed their TTFT deadline
+        (``server_slo_misses``), and admissions where the deadline-aware
+        order differed from FIFO (``deadline_reorders``). Dense servers
+        report the non-paged subset."""
+        stats = {
+            "cancel_lag_tokens": int(self.cancel_lag_tokens),
+            "server_slo_misses": int(self.slo_misses),
+            "deadline_reorders": int(self.deadline_reorders),
+            "admission": self.admission,
+        }
         if self.paged:
             stats.update(
                 blocks_in_use_peak=int(self.kv.blocks_in_use_peak),

@@ -1,0 +1,239 @@
+"""First-class request / QoE contract for the serving stack.
+
+DiSCo's premise is optimizing *per-request* QoE (TTFT/TBT deadlines) under
+cost constraints, so the request itself — not a bare ``(arrival, prompt,
+max_new)`` tuple with kwargs sprawled across layers — is the unit every
+serving API passes around:
+
+* :class:`Request` — the ONE argument threaded end-to-end:
+  ``DiSCoServer.serve_many(list[Request])``,
+  ``DeviceEndpoint/ServerEndpoint.open_stream(req, rng, start_at)``,
+  ``BatchedServer.submit(req, at=)``, ``InferenceEngine.open_stream(req)``.
+  It carries the prompt, the token budget, the per-request
+  :class:`~repro.models.sampling.SamplerConfig` (heterogeneous configs
+  coexist in one batch — the sampler rides through the jitted step
+  functions as per-row runtime operands, not a closed-over constant), the
+  sampling ``seed`` (replay/migration bit-identity), the :class:`SLO`
+  contract, an admission ``priority`` tier, and a ``cost_weight``.
+* :class:`SLO` — the deadline contract admission and dispatch consult:
+  ``ttft_deadline`` (seconds from arrival to the first token) and
+  ``tbt_target`` (seconds between subsequent tokens — the smooth-delivery
+  pace the user experiences).
+* :class:`QoEReport` — Andes-style scoring of the *delivered token
+  timeline* against the SLO's expected timeline, attached to every
+  :class:`RequestResult`.
+
+Migration note (old tuple API -> Request)::
+
+    # before                                # now
+    disco.serve_many([(t, prompt, n)])      disco.serve_many([Request(prompt, n, arrival=t)])
+    server.submit(prompt, n, at=t, seed=s)  server.submit(Request(prompt, n, seed=s), at=t)
+    engine.open_stream(prompt, n, seed=s)   engine.open_stream(Request(prompt, n, seed=s))
+
+``DiSCoServer.serve(prompt, max_new)`` remains as the one thin deprecated
+shim (it builds the ``Request`` internally, preserving the monotonic-frontier
+arrival semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.models.sampling import SamplerConfig
+
+__all__ = ["SLO", "NO_SLO", "Request", "QoEReport", "RequestResult"]
+
+_EPS = 1e-9    # float-noise guard on deadline comparisons
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request QoE contract (Andes: QoE must be scoreable per request).
+
+    ``ttft_deadline``: seconds from arrival within which the first token
+    must be delivered. ``tbt_target``: the expected delivery pace after the
+    first token — token *i* (0-indexed) is expected no later than
+    ``ttft_deadline + i * tbt_target`` after arrival. ``inf`` (the default)
+    disables the respective constraint.
+    """
+
+    ttft_deadline: float = math.inf
+    tbt_target: float = math.inf
+
+    def __post_init__(self):
+        if not self.ttft_deadline > 0.0:
+            raise ValueError(
+                f"ttft_deadline must be > 0 (got {self.ttft_deadline})"
+            )
+        if not self.tbt_target > 0.0:
+            raise ValueError(f"tbt_target must be > 0 (got {self.tbt_target})")
+
+    @property
+    def constrained(self) -> bool:
+        """True when any deadline is finite (the request has an SLO at all)."""
+        return math.isfinite(self.ttft_deadline) or math.isfinite(self.tbt_target)
+
+    def expected_time(self, i: int, ttft_anchor: Optional[float] = None) -> float:
+        """Expected delivery time of token ``i`` (0-indexed), relative to
+        arrival: the first token by the TTFT deadline, then one token per
+        ``tbt_target``. ``ttft_anchor`` substitutes the pace baseline when
+        the TTFT deadline is infinite (a TBT-only contract paces from the
+        ACTUAL first token, so it is not silently inert)."""
+        if i <= 0:
+            return self.ttft_deadline
+        base = self.ttft_deadline
+        if not math.isfinite(base) and ttft_anchor is not None:
+            base = ttft_anchor
+        return base + i * self.tbt_target
+
+
+NO_SLO = SLO()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request — the single argument threaded through every
+    layer of the stack.
+
+    ``sampler=None`` inherits the engine/server default (greedy unless the
+    engine was built with one); ``seed=None`` lets the runtime assign one
+    (the DiSCo driver uses its rid, so the device/server race and any
+    migration replay share the stream). ``priority`` is an admission tier
+    (LOWER value admits first); within a tier the deadline-aware server
+    orders by earliest TTFT deadline. ``cost_weight`` scales the request's
+    unified cost in accounting (paying more for tighter contracts).
+    ``rid`` is a caller-visible label; runtimes keep their own ids.
+    """
+
+    prompt: np.ndarray
+    max_new: int
+    arrival: float = 0.0
+    sampler: Optional[SamplerConfig] = None
+    seed: Optional[int] = None
+    slo: SLO = NO_SLO
+    priority: int = 0
+    cost_weight: float = 1.0
+    rid: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.shape[0] < 1:
+            raise ValueError(
+                f"prompt must be a 1-D non-empty token array (shape {self.prompt.shape})"
+            )
+        self.max_new = int(self.max_new)
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1 (got {self.max_new})")
+        self.arrival = float(self.arrival)
+        if not math.isfinite(self.arrival) or self.arrival < 0.0:
+            raise ValueError(f"arrival must be finite and >= 0 (got {self.arrival})")
+        if self.cost_weight <= 0.0:
+            raise ValueError(f"cost_weight must be > 0 (got {self.cost_weight})")
+        self.priority = int(self.priority)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class QoEReport:
+    """Andes-style QoE scoring of one request's delivered token timeline.
+
+    The SLO defines an *expected* delivery timeline (first token by the
+    TTFT deadline, then one token per ``tbt_target``); the report compares
+    the actual delivery times against it:
+
+    * ``qoe_score`` — mean per-token delivery credit ``min(1, expected_i /
+      actual_i)`` over delivered tokens: 1.0 when every token met its
+      expected time, degrading smoothly (a token k x late earns 1/k).
+      A request that delivered nothing scores 0.
+    * ``ttft_attained`` — the first token met ``ttft_deadline``.
+    * ``late_tokens`` — tokens delivered after their expected time.
+    * ``slo_attained`` — the whole contract held: TTFT attained and no
+      late token.
+    """
+
+    rid: int
+    tokens_delivered: int
+    ttft: float                  # seconds from arrival (inf if none delivered)
+    ttft_deadline: float
+    ttft_attained: bool
+    tbt_mean: float              # mean delivered inter-token gap
+    late_tokens: int
+    qoe_score: float
+    slo_attained: bool
+
+    @classmethod
+    def from_timeline(cls, arrival: float, delivery_times, slo: SLO,
+                      rid: int = -1) -> "QoEReport":
+        """Score an absolute delivered-token timeline against ``slo``.
+
+        ``delivery_times``: absolute virtual-timeline seconds at which each
+        token reached the user, in order.
+        """
+        rel = [float(t) - float(arrival) for t in delivery_times]
+        n = len(rel)
+        if n == 0:
+            return cls(
+                rid=rid, tokens_delivered=0, ttft=math.inf,
+                ttft_deadline=slo.ttft_deadline, ttft_attained=False,
+                tbt_mean=0.0, late_tokens=0, qoe_score=0.0, slo_attained=False,
+            )
+        late = 0
+        credit = 0.0
+        for i, a in enumerate(rel):
+            # TBT-only contracts pace from the actual first token: an
+            # infinite TTFT deadline must not make every later token's
+            # expectation infinite too
+            e = slo.expected_time(i, ttft_anchor=rel[0])
+            if a > e + _EPS:
+                late += 1
+            if math.isinf(e) or a <= _EPS:
+                credit += 1.0
+            else:
+                credit += min(1.0, e / a)
+        ttft = rel[0]
+        ttft_attained = ttft <= slo.ttft_deadline + _EPS
+        gaps = [b - a for a, b in zip(rel, rel[1:])]
+        return cls(
+            rid=rid, tokens_delivered=n, ttft=ttft,
+            ttft_deadline=slo.ttft_deadline, ttft_attained=ttft_attained,
+            tbt_mean=(sum(gaps) / len(gaps)) if gaps else 0.0,
+            late_tokens=late, qoe_score=credit / n,
+            slo_attained=ttft_attained and late == 0,
+        )
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Everything the runtime knows about one served request: the delivered
+    stream, QoE accounting against the request's SLO, and the cost/waste
+    ledger. ``ServedRequest`` is the deprecated alias kept for imports."""
+
+    request: Request
+    tokens: list[int]
+    ttft: float                  # seconds from arrival (inf: never answered)
+    tbt_series: list[float]
+    cost: float                  # unified cost, scaled by request.cost_weight
+    winner: object               # Endpoint that delivered the first token
+    migrated: bool
+    delayed_tokens: int
+    generated_tokens: int        # computed across all streams of the request
+    wasted_tokens: int           # generated but never delivered
+    qoe: QoEReport
+
+    @property
+    def arrival(self) -> float:
+        return self.request.arrival
+
+    @property
+    def rid(self):
+        return self.request.rid
+
+    @property
+    def slo_attained(self) -> bool:
+        return self.qoe.slo_attained

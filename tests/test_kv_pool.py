@@ -18,7 +18,13 @@ from repro.kernels.paged_decode_attention import (
 )
 from repro.kernels.ref import decode_reference
 from repro.models import init_params, supports_paged
-from repro.serving import BatchedServer, BlockPool, InferenceEngine, KVPoolManager
+from repro.serving import (
+    BatchedServer,
+    BlockPool,
+    InferenceEngine,
+    KVPoolManager,
+    Request,
+)
 
 CFG = paper_models.TINY_DEVICE
 
@@ -166,8 +172,8 @@ def test_server_block_exhaustion_queues_then_completes(params, dense_engine):
     prompts = [np.arange(20, dtype=np.int32),           # bucket 32 -> 4 blocks
                (np.arange(20, dtype=np.int32) * 5) % CFG.vocab]
     expected = [dense_engine.generate(p, 8).tokens for p in prompts]
-    r1 = server.submit(prompts[0], 8)
-    r2 = server.submit(prompts[1], 8)
+    r1 = server.submit(Request(prompts[0], 8))
+    r2 = server.submit(Request(prompts[1], 8))
     done = server.run_to_completion()
     assert done[r1] == expected[0] and done[r2] == expected[1]
     stats = server.pool_stats()
@@ -182,8 +188,8 @@ def test_server_cancel_returns_blocks_same_tick(params):
     tick, unblocking a memory-queued request immediately."""
     server = BatchedServer(CFG, params, max_slots=3, max_len=48,
                            block_size=8, num_blocks=8)
-    a = server.submit(np.arange(20, dtype=np.int32), 30)
-    b = server.submit(np.arange(20, dtype=np.int32), 4)
+    a = server.submit(Request(np.arange(20, dtype=np.int32), 30))
+    b = server.submit(Request(np.arange(20, dtype=np.int32), 4))
     while not server.events[a]:
         server.step()
     in_use = server.kv.blocks_in_use
@@ -204,7 +210,7 @@ def test_server_preemption_recompute_is_lossless(params, dense_engine):
     prompts = [np.arange(4, dtype=np.int32),
                np.asarray([7, 3, 11, 2], np.int32)]
     expected = [dense_engine.generate(p, 40).tokens for p in prompts]
-    rids = [server.submit(p, 40) for p in prompts]
+    rids = [server.submit(Request(p, 40)) for p in prompts]
     done = server.run_to_completion()
     assert server.pool_stats()["preemptions"] >= 1
     for rid, exp in zip(rids, expected):
@@ -218,7 +224,7 @@ def test_server_cancel_propagation_wastes_tokens(params):
     prefill), and the overrun is surfaced in ``cancel_lag_tokens``."""
     server = BatchedServer(CFG, params, max_slots=1, max_len=48,
                            block_size=8, decode_chunk=2)
-    a = server.submit(np.arange(6, dtype=np.int32), 40)
+    a = server.submit(Request(np.arange(6, dtype=np.int32), 40))
     while not server.events[a]:
         server.step()
     n_at_issue = server.generated[a]
@@ -241,8 +247,8 @@ def test_server_cancel_propagation_lets_queued_loser_prefill(params):
     and burns blocks (the wasted work the DiSCo driver accounts for)."""
     server = BatchedServer(CFG, params, max_slots=1, max_len=48,
                            block_size=8, decode_chunk=2)
-    a = server.submit(np.arange(6, dtype=np.int32), 4)
-    b = server.submit(np.arange(6, dtype=np.int32), 8)   # queued behind a
+    a = server.submit(Request(np.arange(6, dtype=np.int32), 4))
+    b = server.submit(Request(np.arange(6, dtype=np.int32), 8))   # queued behind a
     server.cancel(b, at=1e9)                             # in flight, not landed
     done = server.run_to_completion()
     assert len(done[a]) == 4
@@ -258,7 +264,7 @@ def test_server_cancel_lands_exactly_one_uplink_late(params):
     from repro.serving import ServerTokenStream
 
     server = BatchedServer(CFG, params, max_slots=1, max_len=48, block_size=8)
-    rid = server.submit(np.arange(6, dtype=np.int32), 8)
+    rid = server.submit(Request(np.arange(6, dtype=np.int32), 8))
     st = ServerTokenStream(server, rid, start_at=0.0, downlink=0.01,
                           prefill_tokens=6, uplink=0.03)
     st.cancel(at=2.0)
@@ -273,7 +279,7 @@ def test_server_cancel_landing_after_completion_is_moot(params):
     must not leave ``cancel_pending`` wedged True forever (that would hang
     the driver's finalize wait)."""
     server = BatchedServer(CFG, params, max_slots=1, max_len=48, block_size=8)
-    a = server.submit(np.arange(6, dtype=np.int32), 4)    # finishes fast
+    a = server.submit(Request(np.arange(6, dtype=np.int32), 4))    # finishes fast
     server.cancel(a, at=1e9)                              # lands "never"
     done = server.run_to_completion()
     assert len(done[a]) == 4                              # ran to completion
@@ -307,7 +313,7 @@ def test_paged_engine_matches_dense(paged_engine, dense_engine):
 
 
 def test_paged_engine_stream_cancel_frees_blocks(paged_engine):
-    st = paged_engine.open_stream(np.arange(10, dtype=np.int32), 30)
+    st = paged_engine.open_stream(Request(np.arange(10, dtype=np.int32), 30))
     st.next_chunk()                                      # alloc-on-prefill
     assert paged_engine.kv.blocks_in_use > 0
     st.cancel()
@@ -320,7 +326,7 @@ def test_paged_engine_fork_continues_identically(paged_engine):
     copy, no re-prefill) continues with exactly the tokens the source would
     have produced."""
     prompt = np.arange(8, dtype=np.int32)
-    src = paged_engine.open_stream(prompt, 24)
+    src = paged_engine.open_stream(Request(prompt, 24))
     src_tokens = list(src.next_chunk()[0])               # prefill token
     src_tokens += src.next_chunk()[0]                    # one decode chunk
     fork = paged_engine.fork_stream(src, 24 - len(src_tokens))
@@ -339,8 +345,8 @@ def test_paged_engine_pool_exhaustion(params):
     extension failure truncates the stream and flags it oom."""
     eng = InferenceEngine(CFG, params, max_len=48, paged=True,
                           block_size=8, kv_rows=2, num_blocks=7)  # 6 usable
-    a = eng.open_stream(np.arange(10, dtype=np.int32), 40)  # grows to 6 blocks
-    b = eng.open_stream(np.arange(10, dtype=np.int32), 40)
+    a = eng.open_stream(Request(np.arange(10, dtype=np.int32), 40))  # grows to 6 blocks
+    b = eng.open_stream(Request(np.arange(10, dtype=np.int32), 40))
     a.next_chunk()                                       # 2 blocks
     b.next_chunk()                                       # 2 blocks
     while not (a.done or b.done):
@@ -350,7 +356,7 @@ def test_paged_engine_pool_exhaustion(params):
     truncated = a if a.oom else b
     assert truncated.exhausted and truncated.tokens_emitted < 40
     # a third admission while both hold blocks fails loudly
-    c = eng.open_stream(np.arange(30, dtype=np.int32), 4)
+    c = eng.open_stream(Request(np.arange(30, dtype=np.int32), 4))
     with pytest.raises(RuntimeError, match="exhausted"):
         c.next_chunk()
     a.cancel()

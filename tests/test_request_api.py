@@ -1,0 +1,482 @@
+"""First-class Request/QoE API tests: per-request SamplerConfig threaded as
+per-row runtime operands (heterogeneous configs in ONE batch, bit-identical
+to solo runs, across preemption and migration replay), deadline-aware (EDF)
+admission under memory pressure, Andes-style QoE scoring on hand-built
+delivery timelines, and the serve() monotonic-frontier shim."""
+import dataclasses
+import inspect
+import math
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import paper_models
+from repro.core import CostModel, DiSCoScheduler, Endpoint, MigrationConfig
+from repro.models import init_params
+from repro.serving import (
+    NO_SLO,
+    SLO,
+    BatchedServer,
+    DeviceEndpoint,
+    DiSCoServer,
+    InferenceEngine,
+    NetworkModel,
+    QoEReport,
+    Request,
+    RequestResult,
+    SamplerConfig,
+    ServedRequest,
+    ServerEndpoint,
+)
+
+CFG = paper_models.TINY_DEVICE
+
+# a heterogeneous trio: greedy + temperature/top-p + temperature/top-k
+HETERO = [
+    None,
+    SamplerConfig(temperature=0.8, top_p=0.9),
+    SamplerConfig(temperature=1.0, top_k=20),
+]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engine(params):
+    return InferenceEngine(CFG, params, max_len=48)
+
+
+# ---------------------------------------------------------------------------
+# Request / SLO contract validation
+# ---------------------------------------------------------------------------
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="max_new"):
+        Request(np.arange(4, dtype=np.int32), 0)
+    with pytest.raises(ValueError, match="prompt"):
+        Request(np.zeros((2, 2), np.int32), 4)
+    with pytest.raises(ValueError, match="arrival"):
+        Request(np.arange(4, dtype=np.int32), 4, arrival=-1.0)
+    with pytest.raises(ValueError, match="cost_weight"):
+        Request(np.arange(4, dtype=np.int32), 4, cost_weight=0.0)
+    with pytest.raises(ValueError, match="ttft_deadline"):
+        SLO(ttft_deadline=0.0)
+    with pytest.raises(ValueError, match="tbt_target"):
+        SLO(tbt_target=-1.0)
+    r = Request([1, 2, 3], 4)          # list prompt is coerced
+    assert r.prompt.dtype == np.int32 and r.prompt_len == 3
+    assert not NO_SLO.constrained
+    assert SLO(ttft_deadline=0.5).constrained
+
+
+def test_old_tuple_apis_rejected(engine, params):
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48)
+    with pytest.raises(TypeError, match="Request"):
+        server.submit(np.arange(4, dtype=np.int32), 8)
+    with pytest.raises(TypeError):
+        engine.open_stream(np.arange(4, dtype=np.int32), 8)
+    with pytest.raises(TypeError, match="Request"):
+        engine.open_stream(np.arange(4, dtype=np.int32))
+
+
+def test_endpoint_signatures_unified(engine, params):
+    """Satellite: both endpoints share ONE open_stream/open_replay_stream
+    signature — (req, rng, start_at) — so the driver never special-cases
+    argument lists per endpoint."""
+    for method in ("open_stream", "open_replay_stream"):
+        dev = inspect.signature(getattr(DeviceEndpoint, method))
+        srv = inspect.signature(getattr(ServerEndpoint, method))
+        assert list(dev.parameters) == list(srv.parameters), method
+
+
+# ---------------------------------------------------------------------------
+# QoE scoring on hand-built timelines (deadline hit/miss edge cases)
+# ---------------------------------------------------------------------------
+
+
+def test_qoe_all_on_time_scores_one():
+    slo = SLO(ttft_deadline=0.5, tbt_target=0.1)
+    # arrival 1.0; tokens exactly at/before their expected times
+    times = [1.4, 1.55, 1.65, 1.75]
+    q = QoEReport.from_timeline(1.0, times, slo)
+    assert q.qoe_score == pytest.approx(1.0)
+    assert q.ttft_attained and q.slo_attained and q.late_tokens == 0
+    assert q.ttft == pytest.approx(0.4)
+    assert q.tbt_mean == pytest.approx((0.75 - 0.4) / 3)
+
+
+def test_qoe_ttft_miss_degrades_smoothly():
+    slo = SLO(ttft_deadline=0.2, tbt_target=math.inf)
+    # first token 2x late -> its credit is 0.5; later tokens unconstrained
+    q = QoEReport.from_timeline(0.0, [0.4, 0.5], slo)
+    assert not q.ttft_attained and not q.slo_attained
+    assert q.late_tokens == 1
+    assert q.qoe_score == pytest.approx((0.5 + 1.0) / 2)
+
+
+def test_qoe_boundary_hit_is_attained():
+    slo = SLO(ttft_deadline=0.25)
+    q = QoEReport.from_timeline(0.0, [0.25], slo)
+    assert q.ttft_attained and q.slo_attained and q.qoe_score == pytest.approx(1.0)
+
+
+def test_qoe_tbt_target_misses_count_late_tokens():
+    slo = SLO(ttft_deadline=1.0, tbt_target=0.1)
+    # token 2 expected by 1.2 but lands at 1.8: TTFT held, contract not
+    q = QoEReport.from_timeline(0.0, [0.5, 1.05, 1.8], slo)
+    assert q.ttft_attained and not q.slo_attained
+    assert q.late_tokens == 1
+    assert q.qoe_score < 1.0
+
+
+def test_qoe_tbt_only_contract_not_inert():
+    """A TBT-only SLO (infinite TTFT deadline) paces from the ACTUAL first
+    token — huge inter-token gaps must be scored, not silently excused."""
+    slo = SLO(tbt_target=0.1)
+    ok = QoEReport.from_timeline(0.0, [0.5, 0.58, 0.66], slo)
+    assert ok.slo_attained and ok.qoe_score == pytest.approx(1.0)
+    bad = QoEReport.from_timeline(0.0, [0.5, 5.0, 50.0], slo)
+    assert bad.ttft_attained                  # no TTFT constraint
+    assert bad.late_tokens == 2 and not bad.slo_attained
+    assert bad.qoe_score < 1.0
+
+
+def test_qoe_no_slo_and_no_tokens():
+    assert QoEReport.from_timeline(0.0, [5.0, 9.0], NO_SLO).qoe_score == 1.0
+    empty = QoEReport.from_timeline(0.0, [], SLO(ttft_deadline=1.0))
+    assert empty.qoe_score == 0.0 and not empty.slo_attained
+    assert math.isinf(empty.ttft)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-request samplers in ONE batch (dense + paged)
+# ---------------------------------------------------------------------------
+
+
+def _hetero_requests():
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, CFG.vocab, size=n).astype(np.int32)
+               for n in (7, 3, 11)]
+    return [Request(p, 9, sampler=s, seed=40 + i)
+            for i, (p, s) in enumerate(zip(prompts, HETERO))]
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_heterogeneous_batch_matches_solo_runs(params, engine, paged):
+    """Acceptance: one BatchedServer batch holding greedy + top-p + top-k
+    requests emits per-row streams bit-identical to running each request
+    alone — on both the paged and the dense cache path."""
+    server = BatchedServer(CFG, params, max_slots=3, max_len=48, paged=paged)
+    reqs = _hetero_requests()
+    rids = [server.submit(q) for q in reqs]
+    done = server.run_to_completion()
+    for rid, q in zip(rids, reqs):
+        solo = engine.generate(q.prompt, q.max_new, seed=q.seed,
+                               sampler=q.sampler).tokens
+        assert done[rid] == solo, f"row with sampler {q.sampler} diverged"
+
+
+def test_heterogeneous_batch_survives_preemption(params, engine):
+    """Acceptance: recompute preemption replays a row bit-identically even
+    when the batch mixes sampler configs (the resume entry carries seed AND
+    sampler)."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9)   # 8 usable: preempts
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab, size=4).astype(np.int32)
+               for _ in range(2)]
+    reqs = [Request(p, 40, sampler=s, seed=7 + i)
+            for i, (p, s) in enumerate(zip(prompts, HETERO[1:]))]
+    rids = [server.submit(q) for q in reqs]
+    done = server.run_to_completion()
+    assert server.pool_stats()["preemptions"] >= 1
+    for rid, q in zip(rids, reqs):
+        solo = engine.generate(q.prompt, q.max_new, seed=q.seed,
+                               sampler=q.sampler).tokens
+        assert done[rid] == solo
+    assert server.kv.blocks_in_use == 0
+
+
+def test_migration_replay_bit_identical_with_custom_sampler(params):
+    """Acceptance: with identical endpoint models, a migrated request with a
+    NON-default per-request SamplerConfig delivers the no-migration stream
+    (the replay request carries the sampler across the hand-off)."""
+    dev = InferenceEngine(CFG, params, max_len=96)
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96)
+    server.warmup(prompt_lens=(16,))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64
+        ).astype(int),
+        budget=0.5,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.005),
+    )
+    disco = DiSCoServer(
+        sched, DeviceEndpoint(dev),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
+        rng=np.random.default_rng(7),
+    )
+    rng = np.random.default_rng(9)
+    samplers = [SamplerConfig(temperature=0.9, top_p=0.92), None,
+                SamplerConfig(temperature=0.7, top_k=32), None]
+    prompts = [rng.integers(0, CFG.vocab, size=12).astype(np.int32)
+               for _ in range(4)]
+    baseline = [dev.generate(p, 40, seed=i, sampler=s).tokens
+                for i, (p, s) in enumerate(zip(prompts, samplers))]
+    results = disco.serve_many([
+        Request(p, 40, arrival=0.002 * i, sampler=s)
+        for i, (p, s) in enumerate(zip(prompts, samplers))
+    ])
+    assert any(r.migrated for r in results)
+    for r, base in zip(results, baseline):
+        assert r.winner is Endpoint.DEVICE
+        assert r.tokens == base
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware (EDF) admission
+# ---------------------------------------------------------------------------
+
+
+def _queue_pressure_server(params, admission):
+    """One row: the running request serializes admissions, so queued order
+    is exactly what the admission policy decides."""
+    return BatchedServer(CFG, params, max_slots=1, max_len=48,
+                         block_size=8, admission=admission)
+
+
+def test_edf_admits_tight_deadline_first(params):
+    """A tight-deadline request arriving BEHIND two relaxed ones is admitted
+    first once a row frees (EDF by absolute TTFT deadline), and the reorder
+    is counted; FIFO admits in arrival order."""
+    order = {}
+    for admission in ("edf", "fifo"):
+        server = _queue_pressure_server(params, admission)
+        running = server.submit(Request(np.arange(6, dtype=np.int32), 12))
+        while not server.events[running]:
+            server.step()                     # occupy the single row
+        loose1 = server.submit(Request(
+            np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=100.0)))
+        loose2 = server.submit(Request(
+            np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=100.0)))
+        tight = server.submit(Request(
+            np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=5.0)))
+        server.run_to_completion()
+        order[admission] = sorted(
+            [loose1, loose2, tight], key=lambda r: server.first_token_time[r]
+        )
+        if admission == "edf":
+            assert server.deadline_reorders >= 1
+            assert order[admission][0] == tight
+        else:
+            assert server.deadline_reorders == 0
+            assert order[admission] == [loose1, loose2, tight]
+
+
+def test_expired_deadline_demoted_to_fifo(params):
+    """EDF overload safety: a TTFT deadline that has ALREADY passed cannot
+    be saved, so the entry loses its urgency (sorts as if deadline-free)
+    instead of dominoing salvageable requests behind a lost cause."""
+    server = _queue_pressure_server(params, "edf")
+    running = server.submit(Request(np.arange(6, dtype=np.int32), 12))
+    while not server.events[running]:
+        server.step()
+    # doomed arrives FIRST with an immediately-expired deadline; salvageable
+    # arrives second with a real (unexpired) deadline
+    doomed = server.submit(Request(
+        np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=1e-9)))
+    salvageable = server.submit(Request(
+        np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=50.0)))
+    server.run_to_completion()
+    assert (server.first_token_time[salvageable]
+            < server.first_token_time[doomed])
+
+
+def test_priority_tier_outranks_deadline(params):
+    """Priority-tiered EDF: a tier-0 request beats a tier-1 request with an
+    earlier deadline; within a tier, EDF orders by deadline."""
+    server = _queue_pressure_server(params, "edf")
+    running = server.submit(Request(np.arange(6, dtype=np.int32), 12))
+    while not server.events[running]:
+        server.step()
+    low_pri_early = server.submit(Request(
+        np.arange(6, dtype=np.int32), 4,
+        slo=SLO(ttft_deadline=0.01), priority=1))
+    hi_pri_late = server.submit(Request(
+        np.arange(6, dtype=np.int32), 4,
+        slo=SLO(ttft_deadline=50.0), priority=0))
+    server.run_to_completion()
+    assert (server.first_token_time[hi_pri_late]
+            < server.first_token_time[low_pri_early])
+
+
+def test_edf_under_memory_pressure_improves_attainment(params):
+    """EDF reordering under MEMORY-pressure queueing: with the pool (not the
+    row count) as the binding constraint and tight/loose deadline mixes,
+    deadline-aware admission attains at least as many TTFT deadlines as
+    FIFO, and strictly helps the tight request stuck behind loose arrivals."""
+    def run(admission):
+        server = BatchedServer(CFG, params, max_slots=3, max_len=48,
+                               block_size=8, num_blocks=8,   # 7 usable blocks
+                               admission=admission)
+        running = server.submit(Request(np.arange(20, dtype=np.int32), 10))
+        while not server.events[running]:
+            server.step()                  # 4+ blocks held: memory pressure
+        loose = [server.submit(Request(
+            np.arange(20, dtype=np.int32), 4, slo=SLO(ttft_deadline=1e4)))
+            for _ in range(2)]
+        tight = server.submit(Request(
+            np.arange(6, dtype=np.int32), 4, slo=SLO(ttft_deadline=2.0)))
+        server.run_to_completion()
+        assert server.pool_stats()["queued_on_memory"] >= 1
+        misses = server.pool_stats()["server_slo_misses"]
+        tight_ttft = server.ttft(tight)
+        return misses, tight_ttft, loose
+
+    misses_fifo, tight_fifo, _ = run("fifo")
+    misses_edf, tight_edf, _ = run("edf")
+    assert misses_edf <= misses_fifo
+    assert tight_edf < tight_fifo      # the tight request jumped the queue
+
+
+def test_server_deadline_anchors_at_client_arrival(params):
+    """With an explicit network-adjusted submit time (`at` = arrival +
+    uplink, the endpoint path), the TTFT deadline anchors at the CLIENT
+    arrival — not the uplink-delayed submit — so EDF slack and slo_misses
+    are not inflated by the uplink."""
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48)
+    req = Request(np.arange(6, dtype=np.int32), 4, arrival=1.0,
+                  slo=SLO(ttft_deadline=0.5))
+    rid = server.submit(req, at=1.2)          # 0.2s uplink
+    entry = next(q for q in server.queue if q.rid == rid)
+    assert entry.deadline == pytest.approx(1.5)   # 1.0 + 0.5, NOT 1.7
+    # without `at`, the resolved arrival anchors (standalone server use)
+    server2 = BatchedServer(CFG, params, max_slots=1, max_len=48)
+    rid2 = server2.submit(Request(np.arange(6, dtype=np.int32), 4,
+                                  slo=SLO(ttft_deadline=0.5)))
+    entry2 = next(q for q in server2.queue if q.rid == rid2)
+    assert entry2.deadline == pytest.approx(server2.clock + 0.5)
+
+
+def test_slo_misses_counted(params):
+    """A first token landing past its (tiny) deadline increments the
+    server's slo_misses counter."""
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48)
+    a = server.submit(Request(np.arange(6, dtype=np.int32), 4,
+                              slo=SLO(ttft_deadline=1e-9)))
+    b = server.submit(Request(np.arange(6, dtype=np.int32), 4))  # no SLO
+    server.run_to_completion()
+    assert server.ttft(a) > 1e-9 and server.ttft(b) > 0
+    assert server.pool_stats()["server_slo_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# DiSCo driver: serve() shim, SLO-aware dispatch, QoE-carrying results
+# ---------------------------------------------------------------------------
+
+
+def _make_disco(params, **kw):
+    dev = InferenceEngine(CFG, params, max_len=96)
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96)
+    server.warmup(prompt_lens=(16,))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-4, 6e-4, 900.0, 800.0, exchange_rate=1e-12),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64
+        ).astype(int),
+        budget=0.5,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.01),
+    )
+    return DiSCoServer(
+        sched, DeviceEndpoint(dev),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.05)),
+        rng=np.random.default_rng(7), **kw,
+    )
+
+
+def test_serve_monotonic_frontier_arrivals(params):
+    """Satellite bugfix pin: repeated serve() calls stamp arrivals at
+    max(frontier, server clock) — a monotonic timeline identical to the old
+    tuple API's internal `at` computation — through Request.arrival."""
+    disco = _make_disco(params)
+    rng = np.random.default_rng(5)
+    arrivals, results = [], []
+    for _ in range(4):
+        expected_at = max(disco._frontier, disco.server.server.clock)
+        r = disco.serve(rng.integers(0, CFG.vocab, size=10).astype(np.int32), 6)
+        arrivals.append(expected_at)
+        results.append(r)
+        assert r.arrival == expected_at      # stamped exactly, not re-derived
+    assert all(b >= a for a, b in zip(arrivals, arrivals[1:]))
+    # a ready-built Request keeps the same frontier semantics
+    req = Request(np.arange(8, dtype=np.int32), 6)
+    r = disco.serve(req)
+    assert r.arrival >= arrivals[-1]
+    assert r.request.slo is NO_SLO
+    # extra args next to a Request would be silently shadowed: rejected
+    with pytest.raises(TypeError, match="no extra arguments"):
+        disco.serve(req, 64)
+    with pytest.raises(TypeError, match="no extra arguments"):
+        disco.serve(req, slo=SLO(ttft_deadline=0.2))
+
+
+def test_results_carry_request_and_qoe(params):
+    disco = _make_disco(params)
+    slo = SLO(ttft_deadline=30.0, tbt_target=10.0)   # generous: attained
+    r = disco.serve(np.arange(12, dtype=np.int32), 8, slo=slo, cost_weight=2.0)
+    assert isinstance(r, RequestResult)
+    assert ServedRequest is RequestResult            # deprecated alias
+    assert r.request.slo == slo
+    assert r.qoe.tokens_delivered == len(r.tokens) == 8
+    assert r.qoe.slo_attained and r.slo_attained
+    assert r.qoe.ttft == pytest.approx(r.ttft, abs=1e-6)
+    # cost_weight scales the unified cost: same request at weight 1 is half
+    r1 = disco.serve(np.arange(12, dtype=np.int32), 8, slo=slo)
+    assert r.cost == pytest.approx(2.0 * r1.cost, rel=0.2)
+
+
+def test_slo_aware_dispatch_pulls_device_into_race(params):
+    """Driver dispatch consults req.slo: with a TTFT deadline the profiled
+    server tail cannot meet, the device joins the race (overriding a
+    server-leaning decision); with slo_aware_dispatch=False the pure cost
+    policy stands."""
+    from repro.core.dispatch import SingleEndpointPolicy
+
+    tight = SLO(ttft_deadline=0.05)    # server CDF ~lognormal(log .3): miss
+    aware = _make_disco(params)
+    aware.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
+    r = aware.serve(np.arange(24, dtype=np.int32), 4, slo=tight)
+    assert aware.slo_dispatch_overrides >= 1
+    assert r.winner is Endpoint.DEVICE           # local prefill beats RTT
+    pinned = _make_disco(params, slo_aware_dispatch=False)
+    pinned.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
+    r2 = pinned.serve(np.arange(24, dtype=np.int32), 4, slo=tight)
+    assert pinned.slo_dispatch_overrides == 0
+    assert r2.winner is Endpoint.SERVER          # baseline stayed pure
+
+
+def test_serve_many_rejects_tuples(params):
+    disco = _make_disco(params)
+    with pytest.raises(TypeError, match="tuple API was removed"):
+        disco.serve_many([(0.0, np.arange(4, dtype=np.int32), 4)])
+
+
+def test_request_replace_is_nonmutating(params):
+    """The runtime resolves rid/seed on a COPY: the caller's Request object
+    is never mutated by serving it."""
+    disco = _make_disco(params)
+    req = Request(np.arange(10, dtype=np.int32), 5)
+    disco.serve(req)
+    assert req.seed is None and req.rid is None
+    frozen = dataclasses.replace(req, seed=3)
+    assert frozen.seed == 3 and req.seed is None

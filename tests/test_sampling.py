@@ -17,6 +17,7 @@ from repro.serving import (
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
+    Request,
     ServerEndpoint,
 )
 
@@ -104,6 +105,21 @@ def test_top_p_mask_hand_built():
     np.testing.assert_array_equal(np.asarray(mask_top_p(logits, 1.0)), logits)
 
 
+def test_fused_rowwise_mask_matches_sequential():
+    """The serving path's single-sort fused top-k+top-p mask must be
+    bit-equivalent to composing the public per-row masks (and hence to the
+    static per-config rules they share)."""
+    from repro.models.sampling import _mask_top_k_p_rows
+
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(size=(6, 64)).astype(np.float32))
+    top_k = jnp.asarray([0, 2, 64, 7, 1, 13], jnp.int32)    # incl. no-ops
+    top_p = jnp.asarray([1.0, 0.5, 0.9, 1e-6, 0.7, 1.0], jnp.float32)
+    fused = np.asarray(_mask_top_k_p_rows(logits, top_k, top_p))
+    sequential = np.asarray(mask_top_p(mask_top_k(logits, top_k), top_p))
+    np.testing.assert_array_equal(fused, sequential)
+
+
 def test_sampling_pure_in_key_position_logits():
     """The token is a pure function of (key, position, logits): batch order,
     batch size, and neighbours are irrelevant — the property that makes a
@@ -169,7 +185,7 @@ def test_fork_stream_sampled(params):
                           block_size=8, kv_rows=3, sampler=SAMPLER)
     prompt = np.arange(8, dtype=np.int32)
     expected = eng.generate(prompt, 24, seed=9).tokens
-    src = eng.open_stream(prompt, 24, seed=9)
+    src = eng.open_stream(Request(prompt, 24, seed=9))
     head = list(src.next_chunk()[0])
     head += src.next_chunk()[0]
     fork = eng.fork_stream(src, 24 - len(head))
@@ -204,7 +220,7 @@ def test_batched_server_matches_single_engine_sampled(params, sampled_engine):
     prompts = [np.arange(7, dtype=np.int32),
                (np.arange(11, dtype=np.int32) * 3) % CFG.vocab,
                np.asarray([5, 2, 9], np.int32)]
-    rids = [server.submit(p, 9) for p in prompts]
+    rids = [server.submit(Request(p, 9)) for p in prompts]
     expected = [sampled_engine.generate(p, 9, seed=r).tokens
                 for p, r in zip(prompts, rids)]
     done = server.run_to_completion()
@@ -221,7 +237,7 @@ def test_preemption_replay_bit_identical_sampled(params):
     engine = InferenceEngine(CFG, params, max_len=48, sampler=SAMPLER)
     prompts = [np.arange(4, dtype=np.int32),
                np.asarray([7, 3, 11, 2], np.int32)]
-    rids = [server.submit(p, 40) for p in prompts]
+    rids = [server.submit(Request(p, 40)) for p in prompts]
     expected = [engine.generate(p, 40, seed=r).tokens
                 for p, r in zip(prompts, rids)]
     done = server.run_to_completion()
@@ -261,7 +277,7 @@ def test_migration_under_load_sampled_bit_identical(params):
     baseline = [dev.generate(p, 40, seed=i).tokens
                 for i, p in enumerate(prompts)]
     results = disco.serve_many(
-        [(0.002 * i, p, 40) for i, p in enumerate(prompts)]
+        [Request(p, 40, arrival=0.002 * i) for i, p in enumerate(prompts)]
     )
     assert any(r.migrated for r in results)
     for r, base in zip(results, baseline):

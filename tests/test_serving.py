@@ -15,6 +15,7 @@ from repro.serving import (
     DiSCoServer,
     InferenceEngine,
     NetworkModel,
+    Request,
     ServerEndpoint,
 )
 
@@ -68,7 +69,7 @@ def test_engine_stream_matches_generate(engines):
     dev, _ = engines
     prompt = np.arange(10, dtype=np.int32)
     direct = dev.generate(prompt, max_new=20)
-    st = dev.open_stream(prompt, 20)
+    st = dev.open_stream(Request(prompt, 20))
     tokens, times = [], []
     while (chunk := st.next_chunk()) is not None:
         tokens += chunk[0]
@@ -80,7 +81,7 @@ def test_engine_stream_matches_generate(engines):
 
 def test_engine_stream_cancel_stops_dispatches(engines):
     dev, _ = engines
-    st = dev.open_stream(np.arange(8, dtype=np.int32), 64)
+    st = dev.open_stream(Request(np.arange(8, dtype=np.int32), 64))
     st.next_chunk()   # prefill
     st.next_chunk()   # one decode chunk
     n = st.decode_dispatches
@@ -99,7 +100,7 @@ def test_replay_stream_times_interpolated(engines):
     prompt = np.arange(6, dtype=np.int32)
     head = dev.generate(prompt, max_new=4).tokens
     ep = DeviceEndpoint(dev)
-    st = ep.open_replay_stream(prompt, head, 17, None, start_at=1.0)
+    st = ep.open_replay_stream(Request(prompt, 4 + 17), head, None, start_at=1.0)
     st.activate()
     events = []
     while st.peek() is not None:
@@ -122,7 +123,9 @@ def test_batched_server_serves_all(engines):
     server = BatchedServer(srv.cfg, srv.params, max_slots=3, max_len=96)
     rng = np.random.default_rng(0)
     rids = [
-        server.submit(rng.integers(0, srv.cfg.vocab, size=rng.integers(4, 12)).astype(np.int32), 8)
+        server.submit(Request(
+            rng.integers(0, srv.cfg.vocab, size=rng.integers(4, 12)).astype(np.int32), 8
+        ))
         for _ in range(7)
     ]
     done = server.run_to_completion()
@@ -137,7 +140,7 @@ def test_batched_server_queueing_raises_ttft(engines):
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96)
     prompts = [np.arange(6, dtype=np.int32) for _ in range(3)]
-    rids = [server.submit(p, 6) for p in prompts]
+    rids = [server.submit(Request(p, 6)) for p in prompts]
     server.run_to_completion()
     ttfts = [server.ttft(r) for r in rids]
     assert ttfts[-1] > ttfts[0]  # the queued request saw worse TTFT
@@ -151,8 +154,8 @@ def test_batched_server_evicts_rows_at_max_len(engines):
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=max_len)
     long_prompt = np.arange(24, dtype=np.int32)
     short_prompt = np.arange(4, dtype=np.int32)
-    r_long = server.submit(long_prompt, 64)    # wants 64, cache allows 7 more
-    r_short = server.submit(short_prompt, 4)   # queued until the row frees
+    r_long = server.submit(Request(long_prompt, 64))  # wants 64, cache allows 7 more
+    r_short = server.submit(Request(short_prompt, 4))  # queued until the row frees
     done = server.run_to_completion()
     assert sorted(done) == [r_long, r_short]
     # 1 prefill token + decodes until lengths == max_len - 1
@@ -166,7 +169,7 @@ def test_batched_server_ttft_bookkeeping(engines):
     for every admitted request, including queued ones."""
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
-    rids = [server.submit(np.arange(5, dtype=np.int32), 6) for _ in range(5)]
+    rids = [server.submit(Request(np.arange(5, dtype=np.int32), 6)) for _ in range(5)]
     server.run_to_completion()
     for rid in rids:
         assert rid in server.first_token_time
@@ -182,8 +185,8 @@ def test_batched_server_ttft_unknown_and_unadmitted(engines):
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96)
     with pytest.raises(ValueError, match="unknown request id"):
         server.ttft(12345)
-    a = server.submit(np.arange(6, dtype=np.int32), 8)
-    b = server.submit(np.arange(6, dtype=np.int32), 8)
+    a = server.submit(Request(np.arange(6, dtype=np.int32), 8))
+    b = server.submit(Request(np.arange(6, dtype=np.int32), 8))
     assert server.ttft(a) is None and server.ttft(b) is None  # nothing ran yet
     server.step()                      # admits a only (1 slot)
     assert server.ttft(a) is not None
@@ -200,8 +203,8 @@ def test_batched_server_cancel_frees_row_within_tick(engines):
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=1, max_len=96,
                            decode_chunk=4)
-    a = server.submit(np.arange(8, dtype=np.int32), 64)
-    b = server.submit(np.arange(4, dtype=np.int32), 4)
+    a = server.submit(Request(np.arange(8, dtype=np.int32), 64))
+    b = server.submit(Request(np.arange(4, dtype=np.int32), 4))
     while not server.events[a]:
         server.step()                  # admit a, start decoding
     assert not server.free_rows
@@ -220,7 +223,7 @@ def test_batched_server_incremental_events(engines):
     with monotone virtual times matching the completed transcript."""
     _, srv = engines
     server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
-    rids = [server.submit(np.arange(7, dtype=np.int32), 9, at=0.01 * i)
+    rids = [server.submit(Request(np.arange(7, dtype=np.int32), 9), at=0.01 * i)
             for i in range(3)]
     server.run_to_completion()
     for rid in rids:
@@ -245,7 +248,7 @@ def test_batched_server_matches_single_engine_stream(engines):
     ]
     expected = [engine.generate(p, max_new=9).tokens for p in prompts]
     server = BatchedServer(srv.cfg, srv.params, max_slots=2, max_len=96)
-    rids = [server.submit(p, 9) for p in prompts]
+    rids = [server.submit(Request(p, 9)) for p in prompts]
     done = server.run_to_completion()
     for rid, exp in zip(rids, expected):
         assert done[rid] == exp
@@ -364,14 +367,15 @@ def test_disco_serve_many_concurrent(engines):
     disco = _make_disco(engines, "server")
     rng = np.random.default_rng(11)
     reqs = [
-        (0.02 * i, rng.integers(0, 1024, size=int(n)).astype(np.int32), 10)
+        Request(rng.integers(0, 1024, size=int(n)).astype(np.int32), 10,
+                arrival=0.02 * i)
         for i, n in enumerate(rng.integers(4, 40, size=9))
     ]
     results = disco.serve_many(reqs)
     assert len(results) == len(reqs)
-    for (arrival, _, max_new), r in zip(reqs, results):
-        assert r.arrival == arrival
-        assert 1 <= len(r.tokens) <= max_new
+    for q, r in zip(reqs, results):
+        assert r.arrival == q.arrival
+        assert 1 <= len(r.tokens) <= q.max_new
         assert r.ttft > 0
         assert r.wasted_tokens == r.generated_tokens - len(r.tokens)
 
@@ -430,7 +434,8 @@ def test_no_cancellation_control_wastes_more(engines):
     bit-identical in both modes."""
     rng = np.random.default_rng(5)
     reqs = [
-        (0.01 * i, rng.integers(0, 1024, size=40).astype(np.int32), 10)
+        Request(rng.integers(0, 1024, size=40).astype(np.int32), 10,
+                arrival=0.01 * i)
         for i in range(5)
     ]
     out_c = _make_disco(engines, "server", cancel_losers=True).serve_many(reqs)
@@ -482,7 +487,7 @@ def test_migration_under_load_matches_no_migration_stream(engines):
                for _ in range(4)]
     baseline = [dev_e.generate(p, 40).tokens for p in prompts]
     results = disco.serve_many(
-        [(0.002 * i, p, 40) for i, p in enumerate(prompts)]
+        [Request(p, 40, arrival=0.002 * i) for i, p in enumerate(prompts)]
     )
     assert any(r.migrated for r in results)
     for r, base in zip(results, baseline):
