@@ -40,6 +40,14 @@ position-keyed replayable sampler; T=0 keeps greedy); ``--mixed-samplers``
 gives every request its own SamplerConfig (greedy / temperature+top-p /
 temperature+top-k cycling) so heterogeneous per-row sampling shares the
 fused server batches. Neither overwrites the greedy trajectory JSON.
+A shared-prefix / multi-turn load point replays conversations that all open
+with one system prompt (``make_multiturn_trace``) through the server with
+the radix prefix cache ON and a cold-cache control at the same offered
+load, reporting ``prefix_hit_rate`` / ``blocks_saved`` / mean-TTFT and
+prefill-compute reductions (``multiturn`` in the JSON). ``--check-prefix``
+gates it for CI: the cache must fire and every delivered stream must be
+bit-identical to the cold run.
+
 ``--check-determinism`` instead runs a seed-determinism gate: identical
 models on both endpoints, MIXED per-request sampler configs, the same trace
 replayed through two independently-built stacks — every delivered stream
@@ -76,7 +84,7 @@ from repro.serving import (
     SamplerConfig,
     ServerEndpoint,
 )
-from repro.sim.traces import make_serving_trace
+from repro.sim.traces import make_multiturn_trace, make_serving_trace
 
 from .common import Row
 
@@ -107,6 +115,18 @@ _ADMISSION_TRACE_SEEDS = (42, 43, 44)   # EDF-vs-FIFO aggregates 3 traces:
                                         # 54 requests beat 1/18 granularity
 
 _SYSTEMS = ("disco", "disco_nocancel", "server_only", "device_only")
+
+# shared-prefix / multi-turn load point (prefix-cache ON vs cold control at
+# the SAME offered load): conversations share a system prompt and replay
+# their growing history every turn, so the radix prefix index turns most of
+# each prefill into a refcount bump + suffix-only compute
+_MT_RHO = 2.0                # saturated: admission pressure, no total collapse
+_MT_NUM_BLOCKS = 28          # roomier pool: cached prefixes are the point
+_MT_SYSTEM_LEN = 64          # 4 sealed blocks shared by every conversation
+_MT_MAX_PROMPT = 96          # bucket 96 is pre-warmed (incl. suffix shapes)
+_MT_MAX_NEW = 8              # short turns: prefill-heavy, where caching pays
+_MT_USERS = 4
+_MT_N_REQUESTS = 24          # ~5 turns/user: enough hits to clear run noise
 
 # heterogeneous per-request sampler cycle (--mixed-samplers): greedy rows
 # batch-share the fused dispatches with temperature/top-p and top-k rows
@@ -240,6 +260,77 @@ def _copies(requests: list[Request]) -> list[Request]:
     return [dataclasses.replace(q, prompt=q.prompt.copy()) for q in requests]
 
 
+def _drive_multiturn(srv_params, trace, service: float, samplers,
+                     prefix_cache: bool):
+    """Replay a multi-turn trace straight through the shared BatchedServer
+    (the prefix cache is a server-side mechanism; the device never holds
+    another user's conversation). Returns (streams, metrics)."""
+    server = BatchedServer(
+        paper_models.TINY_SERVER, srv_params,
+        max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
+        block_size=_BLOCK_SIZE, num_blocks=_MT_NUM_BLOCKS,
+        prefix_cache=prefix_cache,
+    )
+    server.warmup(prompt_lens=(16, 32, _MT_MAX_PROMPT))
+    rids = []
+    for i, (a, toks, m) in enumerate(trace):
+        slo, tier = _slo_for(i, service)
+        rids.append(server.submit(Request(
+            toks.copy(), m, arrival=a,
+            sampler=samplers[i % len(samplers)], slo=slo, priority=tier,
+        )))
+    done = server.run_to_completion()
+    ttfts = np.array([server.ttft(r) for r in rids])
+    stats = server.pool_stats()
+    metrics = {
+        "ttft_mean_s": float(ttfts.mean()),
+        "ttft_p95_s": float(np.percentile(ttfts, 95)),
+        "prefix_hit_rate": stats.get("prefix_hit_rate", 0.0),
+        "prefix_tokens_hit": stats.get("prefix_tokens_hit", 0),
+        "blocks_saved": stats.get("blocks_saved", 0),
+        "copy_ops": stats.get("copy_ops", 0),
+        "prefix_evictions": stats.get("prefix_evictions", 0),
+        "prefill_tokens_computed": stats["prefill_tokens_computed"],
+        "prefill_tokens_admitted": stats["prefill_tokens_admitted"],
+        "prefill_compute_per_admitted_token":
+            stats["prefill_compute_per_admitted_token"],
+        "queued_on_memory": stats["queued_on_memory"],
+        "preemptions": stats["preemptions"],
+    }
+    return [done[r] for r in rids], metrics
+
+
+def _multiturn_point(srv_params, service: float, samplers,
+                     n_req: int) -> dict:
+    """The shared-prefix load point: prefix-cache ON vs the cold-cache
+    control on the SAME trace at the SAME offered load."""
+    trace = make_multiturn_trace(
+        np.random.default_rng(41), n_req, service_time=service,
+        slots=_CAL_SLOTS, rho=_MT_RHO, n_users=_MT_USERS,
+        system_len=_MT_SYSTEM_LEN, max_new=_MT_MAX_NEW,
+        max_prompt=_MT_MAX_PROMPT,
+    )
+    warm_streams, warm = _drive_multiturn(
+        srv_params, trace, service, samplers, prefix_cache=True)
+    cold_streams, cold = _drive_multiturn(
+        srv_params, trace, service, samplers, prefix_cache=False)
+    return {
+        "rho": _MT_RHO,
+        "trace": "multiturn_shared_system_prompt",
+        "n_requests": n_req,
+        "n_users": _MT_USERS,
+        "system_prompt_tokens": _MT_SYSTEM_LEN,
+        "num_blocks": _MT_NUM_BLOCKS,
+        "streams_identical": warm_streams == cold_streams,
+        "warm": warm,
+        "cold": cold,
+        "ttft_mean_reduction": 1.0 - warm["ttft_mean_s"]
+        / max(cold["ttft_mean_s"], 1e-9),
+        "prefill_compute_reduction": 1.0 - warm["prefill_tokens_computed"]
+        / max(cold["prefill_tokens_computed"], 1),
+    }
+
+
 def run(smoke: bool = False, temperature: float = 0.0,
         mixed_samplers: bool = False) -> list[Row]:
     dev_cfg = paper_models.TINY_DEVICE
@@ -337,6 +428,18 @@ def run(smoke: bool = False, temperature: float = 0.0,
         ))
         points.append(point)
 
+    # shared-prefix / multi-turn point: prefix cache vs cold-cache control
+    mt = _multiturn_point(srv_params, service, samplers,
+                          n_req=6 if smoke else _MT_N_REQUESTS)
+    rows.append(Row(
+        f"e2e_serving/multiturn_rho{_MT_RHO:g}/prefix_cache", 0.0,
+        f"hit_rate={mt['warm']['prefix_hit_rate']:.2f};"
+        f"blocks_saved={mt['warm']['blocks_saved']};"
+        f"ttft_mean_reduction={mt['ttft_mean_reduction']:.2f};"
+        f"prefill_compute_reduction={mt['prefill_compute_reduction']:.2f};"
+        f"identical={int(mt['streams_identical'])}",
+    ))
+
     # headline: contention point (highest load). The reduction denominator is
     # floored at "one wasted token" so a perfectly clean disco run reports a
     # finite, token-count-scaled reduction instead of dividing by zero.
@@ -363,6 +466,11 @@ def run(smoke: bool = False, temperature: float = 0.0,
         "fifo_ttft_slo_attainment": adm["fifo"]["ttft_slo_attainment"],
         "edf_slo_attainment_gain": adm["edf"]["ttft_slo_attainment"]
         - adm["fifo"]["ttft_slo_attainment"],
+        # shared-prefix serving: the radix prefix cache vs cold control
+        "prefix_hit_rate_multiturn": mt["warm"]["prefix_hit_rate"],
+        "prefix_blocks_saved_multiturn": mt["warm"]["blocks_saved"],
+        "prefix_ttft_mean_reduction": mt["ttft_mean_reduction"],
+        "prefix_prefill_compute_reduction": mt["prefill_compute_reduction"],
     }
     rows.append(Row(
         "e2e_serving/headline", 0.0,
@@ -392,6 +500,7 @@ def run(smoke: bool = False, temperature: float = 0.0,
                 "tbt_target_s": _TBT_TARGET,
             },
             "points": points,
+            "multiturn": mt,
             "headline": headline,
         }, indent=2) + "\n")
     return rows
@@ -476,6 +585,52 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     )
 
 
+def check_prefix(temperature: float = 0.8, n_requests: int = 10) -> None:
+    """Prefix-cache gate (CI): a multi-turn shared-system-prompt trace with
+    MIXED per-request samplers through a prefix-cached server and a
+    cold-cache control. The cache must actually fire (``prefix_hit_rate``
+    > 0) AND every delivered stream must be bit-identical to the cold run —
+    a hit changes what is computed, never what is sampled. Exits non-zero
+    on any mismatch."""
+    srv_params = init_params(paper_models.TINY_SERVER, jax.random.PRNGKey(1))
+    service = 0.05           # identity must not depend on the load point
+    trace = make_multiturn_trace(
+        np.random.default_rng(41), n_requests, service_time=service,
+        slots=_CAL_SLOTS, rho=_MT_RHO, n_users=3,
+        system_len=_MT_SYSTEM_LEN, max_new=_MAX_NEW,
+        max_prompt=_MT_MAX_PROMPT,
+    )
+    samplers = (
+        SamplerConfig(temperature=temperature, top_p=0.95),
+        None,                                   # a greedy row in the batch
+        SamplerConfig(temperature=temperature, top_k=40),
+    )
+    warm_streams, warm = _drive_multiturn(
+        srv_params, trace, service, samplers, prefix_cache=True)
+    cold_streams, cold = _drive_multiturn(
+        srv_params, trace, service, samplers, prefix_cache=False)
+    failures = []
+    if not warm["prefix_hit_rate"] > 0:
+        failures.append(
+            f"prefix cache never fired (hit_rate={warm['prefix_hit_rate']})"
+        )
+    for i, (w, c) in enumerate(zip(warm_streams, cold_streams)):
+        if w != c:
+            failures.append(f"request {i}: warm stream != cold stream")
+    if failures:
+        raise SystemExit(
+            "prefix-cache gate FAILED (temperature="
+            f"{temperature}, mixed samplers):\n  " + "\n  ".join(failures)
+        )
+    print(
+        f"prefix-cache OK: {n_requests} multi-turn requests bit-identical "
+        f"warm vs cold (hit_rate={warm['prefix_hit_rate']:.2f}, "
+        f"blocks_saved={warm['blocks_saved']}, "
+        f"prefill computed {warm['prefill_tokens_computed']} vs "
+        f"{cold['prefill_tokens_computed']} cold, copies={warm['copy_ops']})"
+    )
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -493,8 +648,19 @@ if __name__ == "__main__":
                          "overwrites the greedy trajectory JSON")
     ap.add_argument("--check-determinism", action="store_true",
                     help="run the seed-determinism gate instead of the bench")
+    ap.add_argument("--check-prefix", action="store_true",
+                    help="run the prefix-cache gate instead of the bench: "
+                         "multi-turn trace, prefix_hit_rate > 0, streams "
+                         "bit-identical to a cold-cache run")
     args = ap.parse_args()
-    if args.check_determinism:
+    if args.check_prefix:
+        t = 0.8 if args.temperature is None else args.temperature
+        if t <= 0:
+            ap.error("--check-prefix requires --temperature > 0")
+        if args.smoke:
+            ap.error("--smoke does not apply to --check-prefix")
+        check_prefix(temperature=t)
+    elif args.check_determinism:
         t = 0.8 if args.temperature is None else args.temperature
         if t <= 0:
             ap.error("--check-determinism requires --temperature > 0")

@@ -10,6 +10,12 @@ two cache write paths the serving stack can take:
   block allocator (admit -> scatter -> release), exactly the admission path
   ``BatchedServer`` runs per request. Rows dispatch one at a time because
   that is how continuous batching admits them (no global barrier).
+* ``shared`` — the same per-row admission path with the radix prefix cache
+  ON and all rows sharing a common prompt prefix: after the first (cold)
+  pass each admission maps the matched sealed blocks by refcount bump and
+  ``paged_suffix_prefill`` computes only the unmatched tail. Per point the
+  bench reports ``prefix_hit_rate``, ``blocks_saved``, and the
+  prefill-tokens-computed-per-admitted-token ratio.
 
 The paged path pays a per-row dispatch and the block scatter but only
 allocates the blocks the prompt needs; the dense path amortizes one big
@@ -62,12 +68,17 @@ def run(smoke: bool = False) -> list[Row]:
         cfg, params, max_len=_MAX_LEN, paged=True,
         block_size=_BLOCK_SIZE, kv_rows=max_batch,
     )
+    shared = InferenceEngine(
+        cfg, params, max_len=_MAX_LEN, paged=True,
+        block_size=_BLOCK_SIZE, kv_rows=max_batch, prefix_cache=True,
+    )
     lengths = sorted({length for _, length in points})
     dense.warmup(batch=1, prompt_lens=tuple(lengths))
     for b in sorted({b for b, _ in points}):
         if b > 1:
             dense.warmup(batch=b, prompt_lens=tuple(lengths))
     paged.warmup(prompt_lens=tuple(lengths))
+    shared.warmup(prompt_lens=tuple(lengths))
 
     rng = np.random.default_rng(0)
     rows: list[Row] = []
@@ -79,6 +90,12 @@ def run(smoke: bool = False) -> list[Row]:
             tok, _ = dense.prefill(prompts)
             return tok
 
+        # all rows share the longest sealed-block prefix (the cap leaves one
+        # block of tail so the last real position is always computed)
+        n_shared = (length - 1) // _BLOCK_SIZE * _BLOCK_SIZE
+        shared_prompts = prompts.copy()
+        shared_prompts[:, :n_shared] = shared_prompts[0, :n_shared]
+
         def run_paged():
             # the continuous-batching admission path: per-row admit+scatter,
             # blocks released after timing (steady-state pool)
@@ -89,20 +106,46 @@ def run(smoke: bool = False) -> list[Row]:
             for rid in list(paged.kv.tables):
                 paged.kv.release(rid)
 
+        def run_shared():
+            # same path, prefix cache ON: release-with-registration seals
+            # the row's blocks into the radix index, so after the cold first
+            # pass every admission is a hit and only the tail is computed
+            rids = []
+            for i in range(batch):
+                rid = shared._next_rid
+                shared._next_rid += 1
+                shared._paged_admit_prefill(rid, shared_prompts[i])
+                rids.append((rid, shared_prompts[i]))
+            for rid, toks in rids:
+                shared.kv.release(rid, cache_tokens=toks)
+
         dense_us = _median_us(run_dense)
         paged_us = _median_us(run_paged)
+        q0, h0 = shared.kv.prefix_queries, shared.kv.prefix_hits
+        s0, c0 = shared.kv.blocks_saved, shared.kv.prefix_tokens_hit
+        shared_us = _median_us(run_shared)
+        dq = max(shared.kv.prefix_queries - q0, 1)
         tokens = batch * length
+        admitted = (_REPS + 1) * tokens
+        computed = admitted - (shared.kv.prefix_tokens_hit - c0)
         point = {
             "batch": batch,
             "length": length,
             "dense_us": dense_us,
             "paged_us": paged_us,
+            "shared_us": shared_us,
             "dense_tokens_per_s": tokens / (dense_us * 1e-6),
             "paged_tokens_per_s": tokens / (paged_us * 1e-6),
+            "shared_tokens_per_s": tokens / (shared_us * 1e-6),
             "paged_vs_dense": dense_us / paged_us,
+            "shared_vs_paged": paged_us / shared_us,
+            "prefix_hit_rate": (shared.kv.prefix_hits - h0) / dq,
+            "blocks_saved": int(shared.kv.blocks_saved - s0),
+            "prefill_compute_per_admitted_token": computed / admitted,
             "paged_blocks_per_row": paged.kv.prefill_demand(length, length),
             "dense_reserved_tokens_per_row": _MAX_LEN,
         }
+        shared.kv.flush_prefix_cache()       # points stay independent
         out_points.append(point)
         rows.append(Row(
             f"prefill/b{batch}_s{length}/dense", dense_us,
@@ -113,15 +156,32 @@ def run(smoke: bool = False) -> list[Row]:
             f"tokens_per_s={point['paged_tokens_per_s']:.0f};"
             f"vs_dense={point['paged_vs_dense']:.2f}",
         ))
+        rows.append(Row(
+            f"prefill/b{batch}_s{length}/shared_prefix", shared_us,
+            f"tokens_per_s={point['shared_tokens_per_s']:.0f};"
+            f"vs_paged={point['shared_vs_paged']:.2f};"
+            f"hit_rate={point['prefix_hit_rate']:.2f};"
+            f"blocks_saved={point['blocks_saved']};"
+            f"compute_per_tok={point['prefill_compute_per_admitted_token']:.2f}",
+        ))
 
     ratios = np.array([p["paged_vs_dense"] for p in out_points])
+    shared_ratios = np.array([p["shared_vs_paged"] for p in out_points])
     headline = {
         "geomean_paged_vs_dense": float(np.exp(np.log(ratios).mean())),
         "min_paged_vs_dense": float(ratios.min()),
+        "geomean_shared_vs_paged": float(np.exp(np.log(shared_ratios).mean())),
+        "prefix_hit_rate": float(np.mean(
+            [p["prefix_hit_rate"] for p in out_points]
+        )),
+        "prefill_compute_per_admitted_token": float(np.mean(
+            [p["prefill_compute_per_admitted_token"] for p in out_points]
+        )),
     }
     rows.append(Row(
         "prefill/headline", 0.0,
-        f"geomean_paged_vs_dense={headline['geomean_paged_vs_dense']:.2f}",
+        f"geomean_paged_vs_dense={headline['geomean_paged_vs_dense']:.2f};"
+        f"geomean_shared_vs_paged={headline['geomean_shared_vs_paged']:.2f}",
     ))
     if not smoke:
         _JSON_PATH.write_text(json.dumps({

@@ -14,6 +14,7 @@ from .paged import (
     paged_decode_n,
     paged_decode_step,
     paged_prefill,
+    paged_suffix_prefill,
     supports_paged,
 )
 
@@ -39,7 +40,7 @@ __all__ = [
     "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
     "init_params", "param_shapes", "prefill", "window_vector",
     "init_paged_pages", "paged_decode_n", "paged_decode_step",
-    "paged_prefill", "supports_paged",
+    "paged_prefill", "paged_suffix_prefill", "supports_paged",
     "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
     "sample_tokens", "sampler_operands",
 ]

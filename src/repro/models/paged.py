@@ -37,7 +37,7 @@ from repro.kernels.paged_decode_attention import (
     paged_gather_kv,
 )
 
-from .attention import decode_attention
+from .attention import attention, decode_attention
 from .config import ModelConfig
 from .layers import _qkv, ffn_apply, rms_norm
 from .model import Cache, _embed, _logits, prefill, window_vector
@@ -48,6 +48,7 @@ __all__ = [
     "supports_paged",
     "init_paged_pages",
     "paged_prefill",
+    "paged_suffix_prefill",
     "paged_decode_step",
     "paged_decode_n",
     "NULL_BLOCK",
@@ -115,6 +116,81 @@ def paged_prefill(
         arr = cache[key][:, 0]                       # (L, K, S, D) head-major
         l, kh, _, d = arr.shape
         blocks = arr.reshape(l, kh, nb, bs, d).transpose(0, 2, 1, 3, 4)
+        new_pages[key] = pages[key].at[:, block_ids].set(
+            blocks.astype(pages[key].dtype)
+        )
+    return sample_tokens(sampler, last, keys, lengths), new_pages
+
+
+def paged_suffix_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    tokens: jnp.ndarray,      # (1, S') suffix slice of the padded prompt
+    lengths: jnp.ndarray,     # (1,) true TOTAL prompt length (prefix + suffix)
+    prefix_bt: jnp.ndarray,   # (1, NP) cached prefix blocks (no NULL padding)
+    block_ids: jnp.ndarray,   # (S' // block_size,) physical suffix blocks
+    *,
+    sampler=None,    # SamplerConfig | SamplerOperands (per-row runtime arrays)
+    keys: Optional[jnp.ndarray] = None,    # (1, 2) uint32 request key
+):
+    """Prefix-hit write path: the first ``NP`` blocks of the prompt are
+    already sealed in the pool (a radix prefix-index hit), so only the
+    unmatched suffix is computed. Per layer, the suffix queries — at
+    absolute positions ``NP*bs + arange(S')`` — attend over the gathered
+    prefix K/V concatenated with the freshly computed suffix K/V; the key
+    axis then has exactly the bucket layout (same length, same values at the
+    same indices) the cold full prefill would reduce over, which is what
+    keeps prefix-hit streams bitwise-identical to cold-cache runs. Only the
+    suffix blocks are scattered; the prefix blocks are read-only aliases.
+
+    The first token is sampled at absolute position ``lengths`` exactly as
+    the cold path does (the last real position is never part of the matched
+    prefix — ``KVPoolManager.prefix_match`` caps the match one block short).
+
+    Returns (first_token (1,) int32, pages).
+    """
+    s2 = tokens.shape[1]
+    bs = pages["k"].shape[3]
+    assert s2 % bs == 0 and s2 > 0, (s2, bs)
+    nb = s2 // bs
+    assert block_ids.shape[0] == nb, (block_ids.shape, nb)
+    n_pre = prefix_bt.shape[1] * bs        # static: shapes key the jit cache
+    positions = n_pre + jnp.arange(s2)
+    h0 = _embed(params, cfg, tokens)
+
+    def body(x, xs):
+        lp, window, pg = xs                # pg: per-layer (N, K, bs, D)
+        h = rms_norm(x, lp["mixer_norm"])
+        q, k, v = _qkv(cfg, lp, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        # (1, K, NP*bs, D) head-major -> (1, NP*bs, K, D) seq-major
+        kp = paged_gather_kv(pg["k"], prefix_bt).transpose(0, 2, 1, 3)
+        vp = paged_gather_kv(pg["v"], prefix_bt).transpose(0, 2, 1, 3)
+        k_full = jnp.concatenate([kp.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([vp.astype(v.dtype), v], axis=1)
+        o = attention(
+            q, k_full, v_full, causal=cfg.causal, window=window, q_offset=n_pre
+        )
+        out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        x = x + out.astype(x.dtype)
+        if cfg.has_ffn:
+            f, _ = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+        return x, {"k": k, "v": v}
+
+    h, kv = jax.lax.scan(
+        body, h0, (params["layers"], window_vector(cfg), pages)
+    )
+    idx = jnp.clip(lengths - 1 - n_pre, 0, s2 - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)   # (1,1,d)
+    last = _logits(params, cfg, h_last)[:, 0]
+    new_pages = dict(pages)
+    for key in ("k", "v"):
+        arr = kv[key][:, 0]                          # (L, S', K, D)
+        l, _, kh, d = arr.shape
+        blocks = arr.reshape(l, nb, bs, kh, d).transpose(0, 1, 3, 2, 4)
         new_pages[key] = pages[key].at[:, block_ids].set(
             blocks.astype(pages[key].dtype)
         )

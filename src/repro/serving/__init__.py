@@ -14,10 +14,18 @@ Four layers on one shared virtual timeline (compute = measured wall-clock,
 network = sampled RTT, queueing = emergent contention):
 
 * ``kv_pool``  — the paged KV-cache memory manager: a shared pool of fixed-
-  size token blocks with per-request page tables (``BlockPool`` free-list +
-  ``KVPoolManager`` alloc-on-prefill / extend-on-decode / free-on-cancel /
-  clone-on-migration). Physical pool arrays live in ``repro.models.paged``;
-  the Pallas paged-decode kernel in ``repro.kernels.paged_decode_attention``.
+  size REFCOUNTED token blocks with per-request page tables (``BlockPool``
+  free-list + ``KVPoolManager`` alloc-on-prefill / extend-on-decode /
+  free-on-cancel / clone-on-migration). Sealed (full) blocks can be ALIASED:
+  ``clone`` and ``fork_stream`` are O(1) refcount bumps with copy-on-write
+  only on a partial tail, and a radix :class:`PrefixIndex` keyed on
+  token-ID block hashes caches released prefixes — an admission-time hit
+  maps the matched blocks into the new request's table (zero device work)
+  and ``paged_suffix_prefill`` computes only the unmatched suffix, bitwise-
+  identical to the cold path. Unpinned cached prefixes are LRU-evicted
+  under pool pressure and count as admission headroom. Physical pool arrays
+  live in ``repro.models.paged``; the Pallas paged-decode kernel in
+  ``repro.kernels.paged_decode_attention``.
 * ``engine``  — jitted prefill/decode + ``EngineStream`` (lazy pulled token
   source, per-request block allocation on paged engines) + ``BatchedServer``
   (virtual-time continuous batching; admission is block-capacity-driven on
@@ -69,7 +77,13 @@ from .endpoint import (
     TokenEvent,
 )
 from .engine import BatchedServer, EngineStream, GenerationResult, InferenceEngine
-from .kv_pool import BlockPool, KVPoolManager, PageTable, blocks_for_tokens
+from .kv_pool import (
+    BlockPool,
+    KVPoolManager,
+    PageTable,
+    PrefixIndex,
+    blocks_for_tokens,
+)
 from .request import NO_SLO, SLO, QoEReport, Request, RequestResult
 
 __all__ = [
@@ -78,7 +92,8 @@ __all__ = [
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
     "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
-    "BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens",
+    "BlockPool", "KVPoolManager", "PageTable", "PrefixIndex",
+    "blocks_for_tokens",
     "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
     "sampler_operands",
 ]

@@ -35,6 +35,16 @@ more than the one chunk already in flight.
 ``cancel_losers=False`` turns the runtime into the no-cancellation control
 (both streams always run to completion): the baseline against which the
 wasted-compute reduction is measured.
+
+With the shared server's prefix cache ON (``BatchedServer(...,
+prefix_cache=True)``) the racing/migration pattern stops paying for its own
+redundancy: a cancelled server-side loser RELEASES its sealed prompt blocks
+into the radix prefix index, so the later migration replay of ``prompt +
+generated ids`` — submitted to the same contended scheduler — admits as a
+prefix HIT and recomputes only the unsealed tail instead of the whole
+conversation. ``pool_stats()`` (a passthrough to the shared server) reports
+``prefix_hit_rate`` / ``blocks_saved`` / ``copy_ops`` / ``clone_fallbacks``
+alongside the memory-pressure counters.
 """
 from __future__ import annotations
 
@@ -127,6 +137,15 @@ class DiSCoServer:
         self._next_rid = 0
 
     # -- public API --------------------------------------------------------
+
+    def pool_stats(self) -> dict:
+        """Memory-pressure + prefix-cache accounting of the SHARED batched
+        server (the contended resource in every benchmark): block pool
+        occupancy, queueing/preemption counters and — with the prefix cache
+        on — ``prefix_hit_rate``/``blocks_saved``/``copy_ops``/
+        ``clone_fallbacks``. Device engines hold per-request state only and
+        have nothing to aggregate."""
+        return self.server.server.pool_stats()
 
     def serve(self, prompt, max_new: Optional[int] = None, **req_kwargs
               ) -> RequestResult:

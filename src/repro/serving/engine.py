@@ -49,6 +49,7 @@ from repro.models import (
     init_paged_pages,
     paged_decode_n,
     paged_prefill,
+    paged_suffix_prefill,
     prefill,
     request_key,
     sample_tokens,
@@ -184,6 +185,17 @@ def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
             sampler=ops, keys=keys,
         )
 
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def suffix_fn(params, pages, tokens, lengths, prefix_bt, block_ids, keys, ops):
+        """Prefix-hit prefill: compute only the unmatched suffix, attending
+        over the cached prefix blocks. Shapes (suffix length × matched
+        blocks) key the jit cache; warmup precompiles every combination the
+        buckets can produce."""
+        return paged_suffix_prefill(
+            params, cfg, pages, tokens, lengths, prefix_bt, block_ids,
+            sampler=ops, keys=keys,
+        )
+
     @functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("num_steps",))
     def decode_fn(params, pages, bt, lengths, tokens, active, keys, ops, num_steps):
         """Fused multi-token paged decode; inactive/saturated rows write the
@@ -194,15 +206,18 @@ def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
             sampler=ops, keys=keys,
         )
 
-    return prefill_fn, decode_fn
+    return prefill_fn, suffix_fn, decode_fn
 
 
 def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
                        buckets, block_size, rows, max_blocks_per_row,
-                       decode_chunk, num_blocks):
+                       decode_chunk, num_blocks, suffix_fn=None):
     """Precompile the paged prefill bucket(s) and decode tail lengths, then
     return a pristine pool (warmup scribbles on low block ids, never through
-    the allocator)."""
+    the allocator). When ``suffix_fn`` is given (prefix cache enabled),
+    every (matched blocks × suffix length) combination a bucket can produce
+    is precompiled too, so a first prefix hit never pays an XLA compile
+    inside a virtual-time-measured admission tick."""
     for s in buckets:
         nb = s // block_size
         _, pages = prefill_fn(
@@ -211,6 +226,17 @@ def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
             jnp.arange(1, nb + 1, dtype=jnp.int32),
             _zero_keys(1), _greedy_ops(1),
         )
+        if suffix_fn is None:
+            continue
+        for n_hit in range(1, nb):
+            s2 = s - n_hit * block_size
+            _, pages = suffix_fn(
+                params, pages, jnp.zeros((1, s2), jnp.int32),
+                jnp.asarray([s], jnp.int32),
+                jnp.arange(1, n_hit + 1, dtype=jnp.int32)[None, :],
+                jnp.arange(1, s2 // block_size + 1, dtype=jnp.int32),
+                _zero_keys(1), _greedy_ops(1),
+            )
     bt = jnp.zeros((rows, max_blocks_per_row), jnp.int32)
     lengths = jnp.zeros((rows,), jnp.int32)
     tokens = jnp.zeros((rows,), jnp.int32)
@@ -275,7 +301,8 @@ class InferenceEngine:
                  block_size: int = 16, kv_rows: int = 4,
                  num_blocks: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None,
+                 prefix_cache: bool = False):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -286,6 +313,8 @@ class InferenceEngine:
         self.default_sampler: Optional[SamplerConfig] = sampler
         self._next_rid = 0
         self.paged = bool(paged)
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires a paged engine")
         if self.paged:
             if not supports_paged(cfg):
                 raise ValueError(
@@ -297,13 +326,15 @@ class InferenceEngine:
             if num_blocks is None:
                 num_blocks = kv_rows * self.max_blocks_per_row + 1
             self.kv = KVPoolManager(
-                num_blocks, self.block_size, kv_rows, self.max_blocks_per_row
+                num_blocks, self.block_size, kv_rows, self.max_blocks_per_row,
+                prefix_cache=prefix_cache,
             )
             self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
             if use_kernel is None:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
-            self._paged_prefill_fn, self._paged_decode_fn = _make_paged_step_fns(
+            (self._paged_prefill_fn, self._paged_suffix_fn,
+             self._paged_decode_fn) = _make_paged_step_fns(
                 cfg, max_len, self.use_kernel
             )
 
@@ -382,6 +413,7 @@ class InferenceEngine:
             self.cfg, self.pages, buckets=buckets, block_size=self.block_size,
             rows=1, max_blocks_per_row=self.max_blocks_per_row,
             decode_chunk=self.decode_chunk, num_blocks=self.kv.pool.num_blocks,
+            suffix_fn=self._paged_suffix_fn if self.kv.prefix is not None else None,
         )
 
     def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int,
@@ -430,8 +462,10 @@ class InferenceEngine:
             prompt[None, :], self.max_len, self._bucketed
         )
         sb = int(padded.shape[1])
-        demand = self.kv.prefill_demand(sb, s)
-        table = self.kv.admit(rid, demand, num_tokens=s)
+        matched = self.kv.prefix_match(prompt)       # [] when cache disabled
+        n_hit = len(matched)
+        demand = self.kv.prefill_demand(sb, s) - n_hit
+        table = self.kv.admit(rid, demand, num_tokens=s, prefix_blocks=matched)
         if table is None:
             raise RuntimeError(
                 f"KV pool exhausted: request needs {demand} blocks "
@@ -439,16 +473,30 @@ class InferenceEngine:
                 f"{'no' if not self.kv.has_free_row else 'a'} free row)"
             )
         nb = sb // self.block_size
-        tok, self.pages = self._paged_prefill_fn(
-            self.params, self.pages, jnp.asarray(padded, jnp.int32),
-            jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
-            jnp.asarray(keys), ops,
-        )
-        return int(jax.block_until_ready(tok)[0])
+        if n_hit:
+            # suffix-only prefill: the matched blocks are read-only aliases
+            tok, self.pages = self._paged_suffix_fn(
+                self.params, self.pages,
+                jnp.asarray(padded[:, n_hit * self.block_size:], jnp.int32),
+                jnp.asarray(lengths), jnp.asarray([matched], jnp.int32),
+                jnp.asarray(table.blocks[n_hit:nb], jnp.int32),
+                jnp.asarray(keys), ops,
+            )
+        else:
+            tok, self.pages = self._paged_prefill_fn(
+                self.params, self.pages, jnp.asarray(padded, jnp.int32),
+                jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+                jnp.asarray(keys), ops,
+            )
+        # numpy conversion, not jax indexing: tok[0] on a device array jit-
+        # compiles tiny slice/squeeze executables on first use (~tens of ms)
+        return int(np.asarray(jax.block_until_ready(tok))[0])
 
-    def _paged_release(self, rid: int) -> None:
-        """Free-on-finish-or-cancel: blocks return to the pool immediately."""
-        self.kv.release(rid)
+    def _paged_release(self, rid: int, cache_tokens=None) -> None:
+        """Free-on-finish-or-cancel: blocks return to the pool immediately
+        (sealed blocks stay warm in the prefix index when ``cache_tokens``
+        names their contents and the cache is enabled)."""
+        self.kv.release(rid, cache_tokens=cache_tokens)
 
     def _paged_chunks(self, rid: int, tok_dev, start_len: int, max_new: int,
                       emitted: int = 1, keys=None, ops=None):
@@ -492,14 +540,22 @@ class InferenceEngine:
             tok_dev = toks[-1]
 
     def fork_stream(self, src: "EngineStream", max_new: int) -> "EngineStream":
-        """Copy-on-migration (device-local consistent-prefix hand-off): clone
-        ``src``'s page table into freshly allocated blocks, copy the block
-        contents device-side, and return a new stream that continues decoding
-        from the source's current state with no re-prefill. The source keeps
-        its own blocks and may keep generating (the hand-off race). The fork
-        inherits the source's request (seed AND sampler config), so under
-        temperature > 0 it continues the exact per-position RNG stream the
-        source would."""
+        """Alias-on-migration (device-local consistent-prefix hand-off):
+        clone ``src``'s page table sharing its sealed (full) blocks — an
+        O(1) refcount bump, zero device block copies — with copy-on-write
+        only on a partial tail block, and return a new stream that continues
+        decoding from the source's current state with no re-prefill. The
+        source keeps its own table and may keep generating (the hand-off
+        race). The fork inherits the source's request (seed AND sampler
+        config), so under temperature > 0 it continues the exact
+        per-position RNG stream the source would.
+
+        When the pool cannot serve even the clone's tail blocks, the fork
+        degrades gracefully instead of raising mid-migration: it falls back
+        to a replay re-prefill stream (prompt + emitted token IDs, the same
+        recompute path migration uses across engines) whose admission is
+        deferred to its first pull — by which time the source may have
+        released its blocks. ``kv.clone_fallbacks`` counts these."""
         if not self.paged:
             raise ValueError("fork_stream requires a paged engine")
         if src._rid is None or src._rid not in self.kv.tables:
@@ -508,14 +564,23 @@ class InferenceEngine:
         self._next_rid += 1
         res = self.kv.clone(src._rid, rid)
         if res is None:
-            raise RuntimeError("KV pool exhausted: cannot clone page table")
+            self.kv.clone_fallbacks += 1
+            full = np.concatenate(
+                [src._prompt, np.asarray(src._emitted, np.int32)]
+            )
+            st = EngineStream(self, src.req, prompt=full, max_new=max_new)
+            st._soft_admit = True          # pool-full at pull => oom, not raise
+            return st
         table, pairs = res
-        src_ids = jnp.asarray([a for a, _ in pairs], jnp.int32)
-        dst_ids = jnp.asarray([b for _, b in pairs], jnp.int32)
-        self.pages = self._copy_blocks(self.pages, src_ids, dst_ids)
+        if pairs:                          # partial tail only: CoW copy
+            src_ids = jnp.asarray([a for a, _ in pairs], jnp.int32)
+            dst_ids = jnp.asarray([b for _, b in pairs], jnp.int32)
+            self.pages = self._copy_blocks(self.pages, src_ids, dst_ids)
         st = EngineStream(self, src.req, prompt=src._prompt, max_new=max_new)
         st._rid = rid
-        st.prefill_s = 0.0                 # no prefill: state was copied
+        st._emitted = list(src._emitted)   # cache contents = prompt + these
+        st._last_tok = src._last_tok
+        st.prefill_s = 0.0                 # no prefill: state was aliased
         st.tokens_emitted = 0
         st._chunks = self._paged_chunks(
             rid, jnp.asarray([src._last_tok], jnp.int32),
@@ -727,6 +792,11 @@ class EngineStream:
         self._elapsed = 0.0           # compute-seconds consumed so far
         self._rid: Optional[int] = None   # paged engines: pool allocation id
         self._last_tok: Optional[int] = None
+        # token ids following the prompt in this stream's KV rows (a fork
+        # seeds them with the source's): prefix-cache registration at release
+        # and the fork fallback's replay prompt both need them
+        self._emitted: list[int] = []
+        self._soft_admit = False      # fork fallback: pool-full => oom flag
 
     @property
     def keys(self) -> np.ndarray:
@@ -773,9 +843,19 @@ class EngineStream:
             if self.engine.paged:
                 self._rid = self.engine._next_rid
                 self.engine._next_rid += 1
-                tok0 = self.engine._paged_admit_prefill(
-                    self._rid, self._prompt, keys=keys, ops=ops
-                )
+                try:
+                    tok0 = self.engine._paged_admit_prefill(
+                        self._rid, self._prompt, keys=keys, ops=ops
+                    )
+                except RuntimeError:
+                    if not self._soft_admit:
+                        raise
+                    # fork fallback whose deferred re-prefill still found the
+                    # pool full: end the stream with its oom flag set instead
+                    # of crashing the driver mid-migration
+                    self.engine.kv.extend_stalls.add(self._rid)
+                    self.exhausted = True
+                    return None
                 self.prefill_s = time.perf_counter() - t0
                 self._elapsed = self.prefill_s
                 self._chunks = self.engine._paged_chunks(
@@ -785,6 +865,7 @@ class EngineStream:
                 )
                 self.tokens_emitted = 1
                 self._last_tok = tok0
+                self._emitted.append(tok0)
                 return [tok0], [self.prefill_s]
             tok, cache = self.engine.prefill(
                 self._prompt[None, :], keys=keys, ops=ops
@@ -813,11 +894,20 @@ class EngineStream:
         tokens = [int(toks_np[i, 0]) for i in range(n_valid)]
         times = [start + (i + 1) * dur / n_valid for i in range(n_valid)]
         self._last_tok = tokens[-1]
+        self._emitted.extend(tokens)
         return tokens, times
 
     def _release(self) -> None:
         if self.engine.paged and self._rid is not None:
-            self.engine._paged_release(self._rid)
+            cache_tokens = None
+            table = self.engine.kv.tables.get(self._rid)
+            if table is not None and self.engine.kv.prefix is not None:
+                # the rows actually written: prompt + emitted, truncated to
+                # the covered entry count (the last token is not cached yet)
+                cache_tokens = np.concatenate(
+                    [self._prompt, np.asarray(self._emitted, np.int32)]
+                )[:table.num_tokens]
+            self.engine._paged_release(self._rid, cache_tokens=cache_tokens)
 
     def cancel(self) -> None:
         self.cancelled = True
@@ -839,6 +929,9 @@ class _Slot:
     seed: int = 0                         # request sampling seed
     key: Optional[np.ndarray] = None      # (2,) uint32 request key
     sampler: Optional[SamplerConfig] = None   # per-request sampler config
+    deadline: float = math.inf            # absolute TTFT deadline (SLO proxy:
+                                          # preemption evicts the most relaxed
+                                          # row first; survives resume)
 
 
 @dataclasses.dataclass
@@ -922,7 +1015,8 @@ class BatchedServer:
                  num_blocks: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
                  sampler: Optional[SamplerConfig] = None,
-                 admission: str = "edf"):
+                 admission: str = "edf",
+                 prefix_cache: bool = False):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -953,7 +1047,8 @@ class BatchedServer:
             # deadlock on an unadmittable head-of-queue
             num_blocks = max(int(num_blocks), self.max_blocks_per_row + 1)
             self.kv = KVPoolManager(
-                num_blocks, self.block_size, max_slots, self.max_blocks_per_row
+                num_blocks, self.block_size, max_slots, self.max_blocks_per_row,
+                prefix_cache=prefix_cache,
             )
             self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
             self.block_tables = np.zeros(
@@ -962,9 +1057,12 @@ class BatchedServer:
             if use_kernel is None:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
-            self._prefill_row_paged, self._decode_chunk_paged = (
+            (self._prefill_row_paged, self._suffix_row_paged,
+             self._decode_chunk_paged) = (
                 _make_paged_step_fns(cfg, max_len, self.use_kernel)
             )
+        elif prefix_cache:
+            raise ValueError("prefix_cache requires a paged server")
         else:
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _prefill_row(params, batched_cache, tokens, lengths, row, keys,
@@ -1015,6 +1113,12 @@ class BatchedServer:
         self.cancel_lag_tokens = 0   # tokens generated after their cancel was issued
         self.slo_misses = 0          # first tokens that landed past their deadline
         self.deadline_reorders = 0   # EDF picks that differed from FIFO order
+        # prefill-compute trajectory: device tokens actually computed by
+        # admission prefills (suffix only on a prefix hit, bucket-padded)
+        # vs. true prompt+replay tokens admitted — the per-admitted-token
+        # prefill cost the benchmark tracks
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_admitted = 0
 
     @property
     def free_rows(self) -> list:
@@ -1041,6 +1145,9 @@ class BatchedServer:
                 max_blocks_per_row=self.max_blocks_per_row,
                 decode_chunk=self.decode_chunk,
                 num_blocks=self.kv.pool.num_blocks,
+                suffix_fn=(
+                    self._suffix_row_paged if self.kv.prefix is not None else None
+                ),
             )
             self._warm = True
             return
@@ -1124,7 +1231,9 @@ class BatchedServer:
             slot = self.slots.pop(rid)
             row = self.rows.pop(rid)
             if self.paged:
-                self.kv.release(rid)
+                self.kv.release(
+                    rid, cache_tokens=self._slot_cache_tokens(slot, row)
+                )
             else:
                 self._free_rows.append(row)
             self.completed[rid] = slot.tokens
@@ -1158,6 +1267,16 @@ class BatchedServer:
 
     # -- scheduler ticks ---------------------------------------------------
 
+    def _slot_cache_tokens(self, slot: _Slot, row: int):
+        """Token ids covering ``slot``'s written cache rows — what
+        ``KVPoolManager.release`` registers in the prefix index. None when
+        the cache is off (registration skipped)."""
+        if not self.paged or self.kv.prefix is None:
+            return None
+        return np.concatenate(
+            [slot.prompt, np.asarray(slot.tokens, np.int32)]
+        )[:self.row_len[row]]
+
     def _retire_done(self) -> None:
         done = [
             rid
@@ -1166,15 +1285,27 @@ class BatchedServer:
             or self.row_len[self.rows[rid]] >= self.max_len - 1
         ]
         for rid in done:
-            self.completed[rid] = self.slots.pop(rid).tokens
+            slot = self.slots.pop(rid)
+            self.completed[rid] = slot.tokens
             row = self.rows.pop(rid)
             if self.paged:
-                self.kv.release(rid)      # blocks back to the pool
+                # blocks back to the pool; sealed blocks stay warm for the
+                # next shared-prefix admission
+                self.kv.release(
+                    rid, cache_tokens=self._slot_cache_tokens(slot, row)
+                )
             else:
                 self._free_rows.append(row)
             # an in-flight cancel for a finished request is moot: expunge it
             # so cancel_pending() cannot wedge the driver's finalize wait
             self._cancel_due.pop(rid, None)
+
+    def _queued_tokens(self, item: _Queued) -> np.ndarray:
+        """The token sequence an admission of ``item`` prefills: the original
+        prompt, plus already-emitted tokens for a preemption resume."""
+        if item.tokens:
+            return np.concatenate([item.prompt, np.asarray(item.tokens, np.int32)])
+        return item.prompt
 
     def _head_arrival(self) -> Optional[float]:
         """Earliest virtual arrival among queued entries (idle-gap jumps)."""
@@ -1228,10 +1359,15 @@ class BatchedServer:
             return bool(self._free_rows)
         if not self.kv.has_free_row:
             return False
-        full_len = int(item.prompt.shape[0]) + len(item.tokens)
+        full = self._queued_tokens(item)
+        full_len = int(full.shape[0])
         padded_len = _bucket_len(full_len, self.max_len) if self._bucketed else full_len
-        demand = self.kv.prefill_demand(padded_len, full_len)
-        return self.kv.can_admit(demand, item.rid)
+        # a cached-prefix hit shrinks the demand to the unmatched suffix:
+        # shared blocks are counted once (no phantom queued_on_memory).
+        # Side-effect-free probe here; _admit_one re-queries with recording.
+        matched = self.kv.prefix_match(full, record=False)
+        demand = self.kv.prefill_demand(padded_len, full_len) - len(matched)
+        return self.kv.can_admit(demand, item.rid, prefix_blocks=matched)
 
     def _admit_one(self) -> None:
         """Admission tick: prefill ONE queued request into a free row (and,
@@ -1245,10 +1381,7 @@ class BatchedServer:
             self.deadline_reorders += 1
         self.queue.remove(item)
         rid = item.rid
-        full = (
-            np.concatenate([item.prompt, np.asarray(item.tokens, np.int32)])
-            if item.tokens else item.prompt
-        )
+        full = self._queued_tokens(item)
         s = int(full.shape[0])
         padded, lengths = _pad_to_bucket(
             full[None, :], self.max_len, self._bucketed
@@ -1259,17 +1392,39 @@ class BatchedServer:
         t0 = time.perf_counter()
         if self.paged:
             sb = int(padded.shape[1])
-            table = self.kv.admit(rid, self.kv.prefill_demand(sb, s), num_tokens=s)
+            matched = self.kv.prefix_match(full)   # [] when cache disabled
+            n_hit = len(matched)
+            table = self.kv.admit(
+                rid, self.kv.prefill_demand(sb, s) - n_hit, num_tokens=s,
+                prefix_blocks=matched,
+            )
             assert table is not None          # guarded by _admissible
             row = table.row
             nb = sb // self.block_size
-            tok, self.pages = self._prefill_row_paged(
-                self.params, self.pages, jnp.asarray(padded, jnp.int32),
-                jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
-                jnp.asarray(key), ops,
-            )
-            tok = int(jax.block_until_ready(tok)[0])
+            if n_hit:
+                # suffix-only prefill over the unmatched tail; the matched
+                # blocks ride into the page table as read-only aliases
+                tok, self.pages = self._suffix_row_paged(
+                    self.params, self.pages,
+                    jnp.asarray(padded[:, n_hit * self.block_size:], jnp.int32),
+                    jnp.asarray(lengths), jnp.asarray([matched], jnp.int32),
+                    jnp.asarray(table.blocks[n_hit:nb], jnp.int32),
+                    jnp.asarray(key), ops,
+                )
+            else:
+                tok, self.pages = self._prefill_row_paged(
+                    self.params, self.pages, jnp.asarray(padded, jnp.int32),
+                    jnp.asarray(lengths), jnp.asarray(table.blocks[:nb], jnp.int32),
+                    jnp.asarray(key), ops,
+                )
+            # np conversion: jax-indexing tok[0] would jit-compile tiny
+            # slice/squeeze executables on first use — a one-time ~tens-of-ms
+            # cost that would land INSIDE this measured admission region and
+            # inflate the first-admitted request's TTFT
+            tok = int(np.asarray(jax.block_until_ready(tok))[0])
             self.block_tables[row] = table.padded(self.max_blocks_per_row)
+            self.prefill_tokens_computed += sb - n_hit * self.block_size
+            self.prefill_tokens_admitted += s
         else:
             row = self._free_rows.pop()
             tok, self.cache = self._prefill_row(
@@ -1290,6 +1445,7 @@ class BatchedServer:
         self.slots[rid] = _Slot(
             rid, item.max_new - 1, list(item.tokens) + [tok], prompt=item.prompt,
             seed=item.seed, key=key[0], sampler=item.sampler,
+            deadline=item.deadline,
         )
         self.rows[rid] = row
         self.row_len[row] = s
@@ -1299,38 +1455,50 @@ class BatchedServer:
     def _preempt(self, rid: int) -> None:
         """vLLM-style recompute preemption: free the victim's blocks and row
         and requeue it as a ``resume`` entry (resumes outrank every fresh
-        admission in both admission modes) with its emitted tokens;
-        re-admission replays prompt + tokens (lossless for greedy argmax AND
-        for the position-keyed sampler, which reuses the request's seed and
-        sampler config on resume). Its TTFT and delivered events are
-        unaffected."""
+        admission in both admission modes) with its emitted tokens AND its
+        deadline (the SLO contract survives preemption); re-admission
+        replays prompt + tokens (lossless for greedy argmax AND for the
+        position-keyed sampler, which reuses the request's seed and sampler
+        config on resume — and, with the prefix cache on, usually a prefix
+        HIT on its own just-registered blocks, so the recompute shrinks to
+        the unsealed tail). Its TTFT and delivered events are unaffected."""
         slot = self.slots.pop(rid)
-        self.rows.pop(rid)
-        self.kv.release(rid)
+        row = self.rows.pop(rid)
+        self.kv.release(rid, cache_tokens=self._slot_cache_tokens(slot, row))
         self.kv.preemptions += 1
         self.queue.insert(0, _Queued(
             rid, slot.prompt, slot.remaining, list(slot.tokens),
-            seed=slot.seed, sampler=slot.sampler, resume=True,
+            seed=slot.seed, sampler=slot.sampler, deadline=slot.deadline,
+            resume=True,
         ))
+
+    def _preempt_victim(self) -> int:
+        """SLO-aware victim selection: evict the most RELAXED row — latest
+        absolute TTFT deadline first (inf for un-SLO'd requests), newest
+        admission as the tie-break. With no deadlines in play every row ties
+        at inf and this degrades exactly to the old newest-admitted-first
+        policy; with deadlines, a tight-deadline row survives pool pressure
+        that evicts a relaxed one."""
+        return max(
+            self.slots, key=lambda r: (self.slots[r].deadline, self.admit_seq[r])
+        )
 
     def _ensure_block_capacity(self, need: dict) -> None:
         """Extend every active row's page table to cover its share of the
-        coming chunk, oldest admission first; when the pool runs dry, preempt
-        the newest-admitted request and retry."""
+        coming chunk, oldest admission first; when the pool runs dry (after
+        LRU-evicting cached prefixes), preempt the most relaxed-deadline
+        request and retry."""
         for rid in sorted(self.slots, key=lambda r: self.admit_seq[r]):
             if rid not in self.slots:
                 continue                      # preempted by an older row
             row = self.rows[rid]
             while not self.kv.extend(rid, self.row_len[row] + need[rid]):
-                newer = [
-                    r for r in self.slots
-                    if self.admit_seq[r] > self.admit_seq[rid]
-                ]
-                if newer:
-                    self._preempt(max(newer, key=lambda r: self.admit_seq[r]))
+                victim = self._preempt_victim()
+                if victim != rid:
+                    self._preempt(victim)
                     continue
                 if len(self.slots) > 1:
-                    self._preempt(rid)        # rid itself is the newest
+                    self._preempt(rid)        # rid itself is the most relaxed
                 else:
                     # unreachable with num_blocks >= max_blocks_per_row + 1
                     # (ctor-enforced); cap defensively instead of looping
@@ -1482,6 +1650,25 @@ class BatchedServer:
                 preemptions=int(self.kv.preemptions),
                 num_blocks=int(self.kv.pool.num_blocks),
                 block_size=int(self.block_size),
+                prefix_cache=self.kv.prefix is not None,
+                prefix_queries=int(self.kv.prefix_queries),
+                prefix_hits=int(self.kv.prefix_hits),
+                prefix_hit_rate=(
+                    self.kv.prefix_hits / self.kv.prefix_queries
+                    if self.kv.prefix_queries else 0.0
+                ),
+                prefix_tokens_hit=int(self.kv.prefix_tokens_hit),
+                blocks_saved=int(self.kv.blocks_saved),
+                blocks_cached=int(self.kv.blocks_cached),
+                prefix_evictions=int(self.kv.prefix_evictions),
+                copy_ops=int(self.kv.copy_ops),
+                clone_fallbacks=int(self.kv.clone_fallbacks),
+                prefill_tokens_computed=int(self.prefill_tokens_computed),
+                prefill_tokens_admitted=int(self.prefill_tokens_admitted),
+                prefill_compute_per_admitted_token=(
+                    self.prefill_tokens_computed / self.prefill_tokens_admitted
+                    if self.prefill_tokens_admitted else 0.0
+                ),
             )
         return stats
 

@@ -6,34 +6,53 @@ Physical KV storage is a fixed pool of ``num_blocks`` token blocks of
 ``repro.models.paged``); this module is the *host-side* memory manager that
 decides which request owns which blocks:
 
-* ``BlockPool``   — the free-list. Block 0 is reserved as the NULL/trash
-  block: page-table padding points at it (so gathers stay in-range and the
-  masked tail reads garbage instead of faulting) and frozen rows route their
-  scatter writes into it.
+* ``BlockPool``   — the refcounted free-list. Block 0 is reserved as the
+  NULL/trash block: page-table padding points at it (so gathers stay
+  in-range and the masked tail reads garbage instead of faulting) and frozen
+  rows route their scatter writes into it. Every live block carries a
+  refcount so several page tables (and the prefix cache) can alias one
+  immutable block; a block returns to the free list only when its last
+  reference drops.
+* ``PrefixIndex`` — a radix/trie prefix cache over *sealed* (full) blocks,
+  keyed on the block's token ids. Released requests register their full
+  blocks; admission consults the trie and maps matched blocks straight into
+  the new request's page table (refcount bump, zero device work), so shared
+  system prompts and resent multi-turn histories skip their prefill
+  entirely. Unpinned entries are evicted LRU-first under pool pressure.
 * ``KVPoolManager`` — per-request page tables over the pool plus a fixed set
   of batch *rows* (the jit-static batch dimension). Lifecycle:
-  alloc-on-prefill (``admit``), extend-on-decode (``extend`` allocates a new
-  block when a row's length crosses a block boundary), free-on-finish-or-
-  cancel (``release``), and copy-on-migration (``clone`` duplicates a page
-  table into freshly allocated blocks for the consistent-prefix hand-off —
-  the caller copies the block *contents* device-side).
+  alloc-on-prefill (``admit``, optionally aliasing a matched cached prefix),
+  extend-on-decode (``extend`` allocates a new block when a row's length
+  crosses a block boundary), free-on-finish-or-cancel (``release``
+  decrements refcounts and can register the row's sealed blocks in the
+  prefix index), and alias-on-migration (``clone`` shares the source's
+  sealed blocks copy-on-write: only a partial tail block is device-copied).
 
 Capacity accounting is the admission signal for continuous batching: a
-request is admitted when its prefill's block demand fits the free pool and
-queued otherwise, so server queueing under load emerges from real memory
-pressure instead of an arbitrary slot count. ``blocks_in_use_peak`` and the
-per-rid wait accounting feed the e2e serving benchmark.
+request is admitted when its prefill's block demand fits the free pool plus
+what the prefix cache could evict, and queued otherwise, so server queueing
+under load emerges from real memory pressure instead of an arbitrary slot
+count. ``blocks_in_use_peak``, the per-rid wait accounting, and the prefix
+hit/eviction counters feed the e2e serving benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Optional, Sequence
 
 # single source of truth for the reserved block id: the paged model step
 # functions route frozen-row writes there and the kernel DMA-reads it for
 # padded table slots, so allocator and compute must agree on it
 from repro.models.paged import NULL_BLOCK
 
-__all__ = ["BlockPool", "KVPoolManager", "PageTable", "blocks_for_tokens", "NULL_BLOCK"]
+__all__ = [
+    "BlockPool",
+    "KVPoolManager",
+    "PageTable",
+    "PrefixIndex",
+    "blocks_for_tokens",
+    "NULL_BLOCK",
+]
 
 
 def blocks_for_tokens(tokens: int, block_size: int) -> int:
@@ -42,11 +61,18 @@ def blocks_for_tokens(tokens: int, block_size: int) -> int:
 
 
 class BlockPool:
-    """LIFO free-list over ``num_blocks`` physical blocks (block 0 reserved).
+    """Refcounted LIFO free-list over ``num_blocks`` physical blocks (block 0
+    reserved).
 
     LIFO reuse keeps recently-freed (cache-warm) blocks hot, and makes
     free-on-cancel reuse observable in tests: the next allocation returns
     exactly the blocks a cancellation just released.
+
+    Allocation hands a block out with refcount 1; ``incref`` lets another
+    owner (a cloned page table, a prefix-cache entry) alias it, and the block
+    only rejoins the free list when the count returns to 0. ``free`` is a
+    batch decref — with a single owner it behaves exactly like the
+    pre-refcount free.
     """
 
     def __init__(self, num_blocks: int):
@@ -54,6 +80,7 @@ class BlockPool:
             raise ValueError("need >= 2 blocks (block 0 is the reserved trash block)")
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> block 1 first
+        self._ref = [0] * num_blocks                      # block 0 never counted
         self.peak_in_use = 0
 
     @property
@@ -64,34 +91,73 @@ class BlockPool:
     def num_in_use(self) -> int:
         return (self.num_blocks - 1) - len(self._free)
 
+    def ref(self, block: int) -> int:
+        """Current refcount of ``block`` (0 = on the free list)."""
+        return self._ref[block]
+
     def alloc(self, n: int) -> list[int] | None:
-        """Allocate ``n`` blocks, or None (all-or-nothing) when short."""
+        """Allocate ``n`` blocks at refcount 1, or None (all-or-nothing)."""
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._ref[b] = 1
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
         return got
 
+    def _check_live(self, b: int) -> None:
+        if b == NULL_BLOCK:
+            raise ValueError("cannot ref/free the reserved trash block")
+        if not (0 < b < self.num_blocks):
+            raise ValueError(f"invalid block id {b}")
+        if self._ref[b] <= 0:
+            raise ValueError(f"double/invalid free of block {b}")
+
+    def incref(self, block: int) -> int:
+        """Add an owner to a live block (aliasing). Returns the new count."""
+        self._check_live(block)
+        self._ref[block] += 1
+        return self._ref[block]
+
+    def decref(self, block: int) -> int:
+        """Drop one owner; the block rejoins the free list at count 0.
+        Returns the new count."""
+        self._check_live(block)
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            self._free.append(block)
+        return self._ref[block]
+
     def free(self, blocks: list[int]) -> None:
+        """Batch decref of one owner's blocks. Blocks whose last reference
+        dropped rejoin the free list in reversed batch order, so re-allocating
+        returns them in the order they were held (the LIFO observable)."""
         if len(set(blocks)) != len(blocks):
             raise ValueError("duplicate block in free batch")
         for b in blocks:
-            if b == NULL_BLOCK:
-                raise ValueError("cannot free the reserved trash block")
-            if b in self._free or not (0 < b < self.num_blocks):
-                raise ValueError(f"double/invalid free of block {b}")
-        # reversed: re-allocating returns blocks in the order they were held
-        self._free.extend(reversed(blocks))
+            self._check_live(b)
+        released = []
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                released.append(b)
+        self._free.extend(reversed(released))
 
 
 @dataclasses.dataclass
 class PageTable:
-    """One request's view of the pool: its row and its ordered block list."""
+    """One request's view of the pool: its row and its ordered block list.
+
+    ``num_prefix`` leading blocks were aliased from the prefix cache at
+    admission (refcount-bumped, never written by this request): the prefill
+    scatter starts after them.
+    """
 
     rid: int
     row: int
     blocks: list[int]
     num_tokens: int          # cache entries currently covered by a write
+    num_prefix: int = 0      # leading blocks aliased from the prefix cache
 
     @property
     def capacity(self) -> int:
@@ -102,6 +168,132 @@ class PageTable:
         return self.blocks + [NULL_BLOCK] * (max_blocks - len(self.blocks))
 
 
+class _PrefixNode:
+    """One cached block: a trie edge keyed by its block's token ids."""
+
+    __slots__ = ("key", "block", "parent", "children", "stamp")
+
+    def __init__(self, key, block, parent):
+        self.key = key            # tuple of block_size token ids (None = root)
+        self.block = block        # physical block id (None = root)
+        self.parent = parent
+        self.children: dict[tuple, "_PrefixNode"] = {}
+        self.stamp = 0            # LRU clock value of the last touch
+
+
+class PrefixIndex:
+    """Radix/trie prefix cache over sealed blocks.
+
+    Each non-root node owns exactly one pool reference on one physical block
+    whose ``block_size`` token ids are the node's edge key; a root-to-node
+    path spells a cached token prefix. Because every page table that aliases
+    a node's block also aliases all its ancestors' blocks (prefixes are
+    contiguous), a node with pool refcount 1 — the cache's own reference —
+    is always reclaimable bottom-up: ``evict_one`` drops the least recently
+    touched such leaf, so ``evictable()`` (the count of refcount-1 nodes) is
+    exactly the headroom eviction can create.
+    """
+
+    def __init__(self, pool: BlockPool, block_size: int):
+        self.pool = pool
+        self.block_size = int(block_size)
+        self.root = _PrefixNode(None, None, None)
+        self._by_block: dict[int, _PrefixNode] = {}
+        self._clock = 0
+        self.evictions = 0
+
+    @property
+    def num_cached(self) -> int:
+        """Blocks currently held by the cache."""
+        return len(self._by_block)
+
+    def _touch(self, node: _PrefixNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def _key(self, tokens: Sequence[int], i: int) -> tuple:
+        bs = self.block_size
+        return tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    def match(self, tokens: Sequence[int], max_blocks: int) -> list[int]:
+        """Longest cached full-block prefix of ``tokens`` (≤ ``max_blocks``
+        blocks). Pure query: no refcounts taken, no LRU touch — callers pin
+        via ``touch`` + ``BlockPool.incref`` at admission time."""
+        node = self.root
+        out: list[int] = []
+        for i in range(max_blocks):
+            child = node.children.get(self._key(tokens, i))
+            if child is None:
+                break
+            out.append(child.block)
+            node = child
+        return out
+
+    def touch(self, blocks: Iterable[int]) -> None:
+        """Refresh the LRU stamp of cached ``blocks`` (a matched prefix)."""
+        for b in blocks:
+            node = self._by_block.get(b)
+            if node is not None:
+                self._touch(node)
+
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Register ``blocks`` as the cache entries for the full-block prefix
+        of ``tokens`` (``len(blocks)`` sealed blocks). Existing nodes are
+        kept (their block already holds identical content — the duplicate is
+        simply not cached twice); new nodes take one pool reference each.
+        Returns the number of newly cached blocks."""
+        node = self.root
+        added = 0
+        for i, b in enumerate(blocks):
+            key = self._key(tokens, i)
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(key, b, node)
+                node.children[key] = child
+                self._by_block[b] = child
+                self.pool.incref(b)
+                added += 1
+            self._touch(child)
+            node = child
+        return added
+
+    def evictable(self, exclude: frozenset | set = frozenset()) -> int:
+        """Blocks eviction could free right now: cached nodes whose only
+        reference is the cache's own (minus ``exclude`` — blocks about to be
+        pinned by the admission asking the question)."""
+        return sum(
+            1
+            for b, n in self._by_block.items()
+            if self.pool.ref(b) == 1 and b not in exclude
+        )
+
+    def evict_one(self, exclude: frozenset | set = frozenset()) -> bool:
+        """Drop the least-recently-touched reclaimable leaf, returning its
+        block to the pool. False when nothing is evictable."""
+        best: Optional[_PrefixNode] = None
+        for b, node in self._by_block.items():
+            if node.children or self.pool.ref(b) != 1 or b in exclude:
+                continue
+            if best is None or node.stamp < best.stamp:
+                best = node
+        if best is None:
+            return False
+        del best.parent.children[best.key]
+        del self._by_block[best.block]
+        self.pool.free([best.block])
+        self.evictions += 1
+        return True
+
+    def flush(self) -> None:
+        """Drop every cache reference (pinned blocks stay with their other
+        owners). Used by tests asserting the pool drains to its initial
+        free count."""
+        if self._by_block:
+            self.pool.free(list(self._by_block.keys()))
+        self._by_block.clear()
+        self.root = _PrefixNode(None, None, None)
+
+
 class KVPoolManager:
     """Page tables + row assignment over one :class:`BlockPool`.
 
@@ -110,16 +302,28 @@ class KVPoolManager:
     block_size) at the engine layer). Admission needs BOTH a free row and the
     prefill's block demand — under memory pressure the pool, not the row
     count, is the binding constraint.
+
+    With ``prefix_cache=True`` a :class:`PrefixIndex` rides on the pool:
+    ``prefix_match`` finds the longest cached full-block prefix of a prompt,
+    ``admit(..., prefix_blocks=...)`` aliases those blocks into the new
+    table (shared blocks are counted ONCE — the admission demand is the
+    unmatched suffix only), and ``release(..., cache_tokens=...)`` registers
+    a finished request's sealed blocks for future hits. Cached-but-unpinned
+    blocks are evicted LRU-first whenever an allocation would otherwise
+    fail, so the cache never steals capacity from live requests.
     """
 
     def __init__(self, num_blocks: int, block_size: int, rows: int,
-                 max_blocks_per_row: int):
+                 max_blocks_per_row: int, prefix_cache: bool = False):
         self.pool = BlockPool(num_blocks)
         self.block_size = int(block_size)
         self.rows = int(rows)
         self.max_blocks_per_row = int(max_blocks_per_row)
         self.tables: dict[int, PageTable] = {}
         self._free_rows = list(range(rows - 1, -1, -1))
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(self.pool, self.block_size) if prefix_cache else None
+        )
         # accounting for the serving benchmark. Two distinct pressure
         # signals: ``memory_waits`` = rids whose ADMISSION was blocked by
         # blocks (they sat in the queue); ``extend_stalls`` = already-running
@@ -128,6 +332,16 @@ class KVPoolManager:
         self.memory_waits: set[int] = set()
         self.extend_stalls: set[int] = set()
         self.preemptions = 0
+        # prefix-sharing accounting: queries/hits at admission, tokens and
+        # blocks whose prefill was skipped, device block copies performed by
+        # clone (CoW partial tails only), and fork_stream clones that fell
+        # back to a replay re-prefill because the pool could not serve them
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_hit = 0
+        self.blocks_saved = 0
+        self.copy_ops = 0
+        self.clone_fallbacks = 0
 
     # -- capacity queries ---------------------------------------------------
 
@@ -143,6 +357,15 @@ class KVPoolManager:
     def has_free_row(self) -> bool:
         return bool(self._free_rows)
 
+    @property
+    def blocks_cached(self) -> int:
+        """Blocks currently held by the prefix cache (0 when disabled)."""
+        return 0 if self.prefix is None else self.prefix.num_cached
+
+    @property
+    def prefix_evictions(self) -> int:
+        return 0 if self.prefix is None else self.prefix.evictions
+
     def prefill_demand(self, bucket_tokens: int, true_tokens: int | None = None) -> int:
         """Blocks a prefill needs: cover the (bucket-padded) scatter plus the
         first decode token's slot when the true length exactly fills its
@@ -156,76 +379,163 @@ class KVPoolManager:
         )
         return min(demand, self.max_blocks_per_row)
 
-    def can_admit(self, demand_blocks: int, rid: int | None = None) -> bool:
-        """True when ``demand_blocks`` could be allocated NOW along with a
-        row. When blocked by memory (a row is free but blocks are not), the
-        rid is recorded in ``memory_waits`` — the benchmark's
-        queued-on-memory signal."""
+    def prefix_match(self, tokens, record: bool = True) -> list[int]:
+        """Longest cached full-block prefix of ``tokens`` — the block ids a
+        subsequent ``admit(..., prefix_blocks=...)`` would alias. Capped one
+        block short of the whole prompt so the last real position (and its
+        first-token logits) is always computed. ``record=False`` makes the
+        query side-effect free (admissibility probes re-query at admission).
+        Empty when the cache is disabled."""
+        if self.prefix is None:
+            return []
+        n = len(tokens)
+        max_blocks = min((n - 1) // self.block_size, self.max_blocks_per_row - 1)
+        if max_blocks <= 0:
+            return []
+        blocks = self.prefix.match(tokens, max_blocks)
+        if record:
+            self.prefix_queries += 1
+            if blocks:
+                self.prefix_hits += 1
+                self.prefix_tokens_hit += len(blocks) * self.block_size
+                self.blocks_saved += len(blocks)
+        return blocks
+
+    def can_admit(self, demand_blocks: int, rid: int | None = None,
+                  prefix_blocks: Sequence[int] = ()) -> bool:
+        """True when ``demand_blocks`` NEW blocks could be allocated now
+        along with a row — counting free blocks plus what LRU eviction could
+        reclaim, minus the matched ``prefix_blocks`` the admission is about
+        to pin (shared blocks are never double-counted: they are neither
+        demanded nor evictable). When blocked by memory (a row is free but
+        blocks are not), the rid is recorded in ``memory_waits`` — the
+        benchmark's queued-on-memory signal."""
         if not self._free_rows:
             return False
-        if demand_blocks > self.pool.num_free:
+        headroom = self.pool.num_free
+        if self.prefix is not None:
+            headroom += self.prefix.evictable(exclude=set(prefix_blocks))
+        if demand_blocks > headroom:
             if rid is not None:
                 self.memory_waits.add(rid)
             return False
         return True
 
+    def _alloc_evict(self, n: int,
+                     exclude: frozenset | set = frozenset()) -> list[int] | None:
+        """Pool alloc that evicts LRU cached prefixes to make room."""
+        got = self.pool.alloc(n)
+        while got is None and self.prefix is not None \
+                and self.prefix.evict_one(exclude=exclude):
+            got = self.pool.alloc(n)
+        return got
+
     # -- lifecycle ----------------------------------------------------------
 
-    def admit(self, rid: int, demand_blocks: int, num_tokens: int = 0) -> PageTable | None:
-        """Alloc-on-prefill: allocate ``demand_blocks`` and a row. Returns
-        None (nothing allocated) when either is unavailable."""
+    def admit(self, rid: int, demand_blocks: int, num_tokens: int = 0,
+              prefix_blocks: Sequence[int] = ()) -> PageTable | None:
+        """Alloc-on-prefill: allocate ``demand_blocks`` fresh blocks and a
+        row; ``prefix_blocks`` (a ``prefix_match`` result) are aliased in
+        front of them — refcount bump, zero device work, the caller prefills
+        only the suffix. Returns None (nothing allocated, nothing pinned)
+        when row or blocks are unavailable."""
         if rid in self.tables:
             raise ValueError(f"rid {rid} already admitted")
-        if not self.can_admit(demand_blocks, rid):
+        prefix_blocks = list(prefix_blocks)
+        if not self.can_admit(demand_blocks, rid, prefix_blocks):
             return None
-        blocks = self.pool.alloc(demand_blocks)
-        assert blocks is not None
-        table = PageTable(rid, self._free_rows.pop(), blocks, num_tokens)
+        # pin the matched prefix FIRST so eviction cannot reclaim it while
+        # making room for the suffix allocation
+        for b in prefix_blocks:
+            self.pool.incref(b)
+        if self.prefix is not None and prefix_blocks:
+            self.prefix.touch(prefix_blocks)
+        got = self._alloc_evict(demand_blocks, exclude=set(prefix_blocks))
+        if got is None:                      # can_admit raced nothing; defensive
+            if prefix_blocks:
+                self.pool.free(prefix_blocks)
+            self.memory_waits.add(rid)
+            return None
+        table = PageTable(
+            rid, self._free_rows.pop(), prefix_blocks + got, num_tokens,
+            num_prefix=len(prefix_blocks),
+        )
         self.tables[rid] = table
         return table
 
     def extend(self, rid: int, target_tokens: int) -> bool:
         """Extend-on-decode: grow ``rid``'s table to cover ``target_tokens``
         cache entries. Allocates only when the target crosses a block
-        boundary; False (table unchanged) when the pool is exhausted."""
+        boundary (evicting cached prefixes before giving up); False (table
+        unchanged) when the pool is exhausted."""
         table = self.tables[rid]
         need = blocks_for_tokens(target_tokens, self.block_size)
         need = min(need, self.max_blocks_per_row)
         extra = need - table.capacity
         if extra <= 0:
             return True
-        got = self.pool.alloc(extra)
+        got = self._alloc_evict(extra)
         if got is None:
             self.extend_stalls.add(rid)
             return False
         table.blocks.extend(got)
         return True
 
-    def release(self, rid: int) -> None:
-        """Free-on-finish-or-cancel: blocks and row return to the pool
-        immediately (no drain — the cache contents just become garbage)."""
+    def release(self, rid: int, cache_tokens=None) -> None:
+        """Free-on-finish-or-cancel: one reference per block returns to the
+        pool immediately (no drain — an unshared block's contents just
+        become garbage). ``cache_tokens`` — the token ids actually covering
+        the table's written entries (prompt + emitted, truncated to
+        ``num_tokens``) — registers the sealed (full) blocks in the prefix
+        index before the decref, so a finished, cancelled, or preempted
+        request's prefix stays warm for the next hit."""
         table = self.tables.pop(rid, None)
         if table is None:
             return
+        if self.prefix is not None and cache_tokens is not None:
+            n_full = min(len(cache_tokens) // self.block_size, len(table.blocks))
+            if n_full > 0:
+                self.prefix.insert(cache_tokens, table.blocks[:n_full])
         self.pool.free(table.blocks)
         self._free_rows.append(table.row)
 
     def clone(self, src_rid: int, dst_rid: int) -> tuple[PageTable, list[tuple[int, int]]] | None:
-        """Copy-on-migration: allocate a fresh table for ``dst_rid`` mirroring
-        ``src_rid``'s, and return (dst_table, [(src_block, dst_block), ...])
-        copy pairs — the caller performs the device-side block copies. The
-        source table is untouched (the consistent-prefix hand-off keeps the
-        source generating until the target's first token arrives). Returns
-        None when blocks or a row are unavailable."""
+        """Alias-on-migration (copy-on-write): ``dst_rid``'s table shares the
+        source's sealed (full) blocks — a pure refcount bump, zero device
+        work — and gets fresh blocks for the rest; the returned
+        ``(src_block, dst_block)`` copy pairs cover ONLY a partial tail
+        block, the one block both sides will keep writing. The source table
+        is untouched (the consistent-prefix hand-off keeps the source
+        generating until the target's first token arrives; it only ever
+        writes at or past ``num_tokens``, never into a sealed block).
+        Returns None when blocks or a row are unavailable."""
         src = self.tables[src_rid]
         if dst_rid in self.tables:
             raise ValueError(f"rid {dst_rid} already admitted")
         if not self._free_rows:
             return None
-        blocks = self.pool.alloc(len(src.blocks))
-        if blocks is None:
+        n_full = min(src.num_tokens // self.block_size, len(src.blocks))
+        shared = src.blocks[:n_full]
+        fresh = self._alloc_evict(len(src.blocks) - n_full, exclude=set(shared))
+        if fresh is None:
             self.extend_stalls.add(dst_rid)
             return None
-        dst = PageTable(dst_rid, self._free_rows.pop(), blocks, src.num_tokens)
+        for b in shared:
+            self.pool.incref(b)
+        pairs = []
+        if src.num_tokens % self.block_size and len(src.blocks) > n_full:
+            # the partial tail is live on both sides: copy-on-write it
+            pairs = [(src.blocks[n_full], fresh[0])]
+        self.copy_ops += len(pairs)
+        dst = PageTable(
+            dst_rid, self._free_rows.pop(), shared + fresh, src.num_tokens,
+            num_prefix=n_full,
+        )
         self.tables[dst_rid] = dst
-        return dst, list(zip(src.blocks, blocks))
+        return dst, pairs
+
+    def flush_prefix_cache(self) -> None:
+        """Drop every prefix-cache reference (refcount invariant tests and
+        cold-cache control runs)."""
+        if self.prefix is not None:
+            self.prefix.flush()

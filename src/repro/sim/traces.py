@@ -38,6 +38,7 @@ __all__ = [
     "load_point_arrivals",
     "make_requests",
     "make_serving_trace",
+    "make_multiturn_trace",
 ]
 
 
@@ -169,6 +170,47 @@ def make_serving_trace(rng: np.random.Generator, n: int, *,
     if long_fraction > 0.0:
         lengths = np.where(rng.random(n) < long_fraction, max_prompt, lengths)
     return [(float(a), int(l), int(max_new)) for a, l in zip(arrivals, lengths)]
+
+
+def make_multiturn_trace(rng: np.random.Generator, n: int, *,
+                         service_time: float, slots: int, rho: float,
+                         kind: str = "poisson", n_users: int = 4,
+                         system_len: int = 37, turn_len: tuple = (4, 12),
+                         max_new: int = 16, max_prompt: int = 96,
+                         vocab: int = 1024) -> list:
+    """(arrival, prompt_tokens, max_new) tuples for a multi-turn chat
+    workload with a SHARED system prompt — the trace that makes a prefix
+    cache bite.
+
+    All ``n_users`` conversations open with the same ``system_len``-token
+    system prompt; each turn appends the user's new message to the full
+    running history (system + prior turns + prior replies), so consecutive
+    prompts from one user share an ever-growing prefix and every user shares
+    the system blocks. Replies are fabricated token runs (an offline trace
+    cannot know the model's actual output); a driver replaying the trace
+    against a live server may substitute the delivered tokens to model exact
+    cache reuse. Histories that would exceed ``max_prompt`` reset to a fresh
+    conversation reusing the same system prompt. Prompt token arrays are
+    ``np.int32``; arrivals come from :func:`load_point_arrivals`, users
+    round-robin over them, so per-user turn order follows global time."""
+    arrivals = load_point_arrivals(
+        rng, n, service_time=service_time, slots=slots, rho=rho, kind=kind
+    )
+    system = list(rng.integers(1, vocab, size=system_len))
+    hist = {u: list(system) for u in range(n_users)}
+    out = []
+    for i, a in enumerate(arrivals):
+        u = i % n_users
+        turn = list(rng.integers(
+            1, vocab, size=int(rng.integers(turn_len[0], turn_len[1] + 1))
+        ))
+        if len(hist[u]) + len(turn) > max_prompt:
+            hist[u] = list(system)                  # new chat, same system
+        prompt = hist[u] + turn
+        out.append((float(a), np.asarray(prompt, np.int32), int(max_new)))
+        reply = list(rng.integers(1, vocab, size=max_new))
+        hist[u] = prompt + reply
+    return out
 
 
 def make_requests(rng: np.random.Generator, n: int,

@@ -93,18 +93,22 @@ def test_manager_exhaustion_blocks_admission_not_rows():
 
 
 def test_manager_clone_copy_on_migration():
+    """Clone is alias-on-migration: sealed (full) blocks are shared via a
+    refcount bump — zero device copies — and only a partial tail block is
+    copy-on-write'd."""
     kv = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
-    src = kv.admit(1, 3, num_tokens=20)
+    src = kv.admit(1, 3, num_tokens=20)              # 2 sealed + partial tail
     res = kv.clone(1, 2)
     assert res is not None
     dst, pairs = res
-    assert [a for a, _ in pairs] == src.blocks
-    assert [b for _, b in pairs] == dst.blocks
-    assert not set(src.blocks) & set(dst.blocks)     # fresh physical blocks
+    assert dst.blocks[:2] == src.blocks[:2]          # sealed blocks aliased
+    assert dst.blocks[2] != src.blocks[2]            # tail gets a fresh block
+    assert pairs == [(src.blocks[2], dst.blocks[2])]  # ONE device copy: tail
+    assert kv.copy_ops == 1
     assert dst.num_tokens == src.num_tokens and dst.row != src.row
-    assert kv.blocks_in_use == 6
+    assert kv.blocks_in_use == 4                     # 3 src + 1 CoW tail
     kv.release(1)                                    # source free'd, clone lives
-    assert 2 in kv.tables and kv.blocks_in_use == 3
+    assert 2 in kv.tables and kv.blocks_in_use == 3  # shared blocks survive
     assert kv.clone(2, 3) is not None
     assert kv.clone(2, 4) is not None
     assert kv.clone(2, 5) is None                    # rows exhausted
@@ -112,6 +116,23 @@ def test_manager_clone_copy_on_migration():
     kv2.admit(1, 3)
     assert kv2.clone(1, 2) is None                   # blocks exhausted
     assert 2 in kv2.extend_stalls
+
+
+def test_manager_clone_block_aligned_is_metadata_only():
+    """A block-aligned source (num_tokens % block_size == 0) clones with NO
+    device copies and NO fresh data blocks beyond unwritten capacity."""
+    kv = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
+    src = kv.admit(1, 2, num_tokens=16)              # exactly 2 sealed blocks
+    dst, pairs = kv.clone(1, 2)
+    assert pairs == [] and kv.copy_ops == 0          # pure metadata op
+    assert dst.blocks == src.blocks                  # fully aliased
+    assert kv.blocks_in_use == 2                     # counted once
+    for b in src.blocks:
+        assert kv.pool.ref(b) == 2
+    kv.release(1)
+    assert kv.blocks_in_use == 2                     # clone still owns them
+    kv.release(2)
+    assert kv.blocks_in_use == 0                     # last owner frees
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,325 @@
+"""Prefix-sharing paged KV cache: radix prefix index hits at admission,
+copy-on-write clone/fork, SLO-aware preemption victims, graceful fork
+fallback, and the refcount conservation invariant.
+
+The load-bearing acceptance properties live here:
+  * a prefix HIT changes only WHAT is computed (the unmatched suffix), never
+    the delivered stream — warm and cold runs are bitwise-identical under
+    mixed temperature > 0 samplers;
+  * full (sealed) shared blocks are aliased with ZERO device copies
+    (``kv.copy_ops`` counts the pool's actual copy pairs);
+  * admission counts shared blocks once (no phantom ``queued_on_memory``);
+  * every allocation path — admit, extend, clone, prefix insert, eviction —
+    conserves blocks: after all releases + a cache flush the free list is
+    exactly the initial pool.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import paper_models
+from repro.models import init_params
+from repro.models.sampling import SamplerConfig
+from repro.serving import (
+    BatchedServer,
+    InferenceEngine,
+    Request,
+    SLO,
+)
+from repro.serving.kv_pool import BlockPool, KVPoolManager, blocks_for_tokens
+
+CFG = paper_models.TINY_DEVICE
+SAMPLER = SamplerConfig(temperature=0.8, top_p=0.95)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: prefix hits are compute-only — streams stay bitwise-identical
+# ---------------------------------------------------------------------------
+
+
+def _two_wave_run(params, prefix_cache: bool):
+    """Wave 1 populates (or not) the cache; wave 2 reuses the shared system
+    prompt. Mixed samplers with temperature > 0 so any numeric drift in the
+    suffix-prefill path would surface as a different sampled token."""
+    rng = np.random.default_rng(7)
+    system = rng.integers(1, CFG.vocab, size=37).tolist()
+    samplers = [SamplerConfig(temperature=0.8, top_k=20),
+                SamplerConfig(temperature=0.7, top_p=0.9),
+                SamplerConfig()]                      # greedy in the mix
+    srv = BatchedServer(CFG, params, max_slots=4, max_len=128, paged=True,
+                        block_size=16, num_blocks=24,
+                        prefix_cache=prefix_cache)
+    prompts = [np.asarray(system + rng.integers(1, CFG.vocab, size=n).tolist(),
+                          np.int32) for n in (9, 14, 5)]
+    rids = [srv.submit(Request(p, 8, arrival=float(i), sampler=samplers[i],
+                               seed=100 + i))
+            for i, p in enumerate(prompts)]
+    done = dict(srv.run_to_completion())
+    rng2 = np.random.default_rng(99)
+    wave2 = [np.asarray(system + rng2.integers(1, CFG.vocab, size=n).tolist(),
+                        np.int32) for n in (11, 6)]
+    rids += [srv.submit(Request(p, 8, sampler=samplers[i], seed=200 + i))
+             for i, p in enumerate(wave2)]
+    done.update(srv.run_to_completion())
+    return [done[r] for r in rids], srv.pool_stats()
+
+
+def test_prefix_hit_streams_bitwise_identical(params):
+    cold, cold_stats = _two_wave_run(params, prefix_cache=False)
+    warm, warm_stats = _two_wave_run(params, prefix_cache=True)
+    assert warm == cold                              # bitwise, sampled rows too
+    assert cold_stats["prefix_cache"] is False
+    assert warm_stats["prefix_hits"] >= 2            # both wave-2 requests hit
+    assert warm_stats["prefix_hit_rate"] > 0
+    assert warm_stats["blocks_saved"] >= 4           # 37-token system = 2 blocks
+    assert warm_stats["copy_ops"] == 0               # aliasing, never copying
+    # the saved blocks are real compute savings, not bookkeeping:
+    assert (warm_stats["prefill_tokens_computed"]
+            < cold_stats["prefill_tokens_computed"])
+    assert (warm_stats["prefill_compute_per_admitted_token"]
+            < cold_stats["prefill_compute_per_admitted_token"])
+
+
+def test_admission_counts_shared_blocks_once():
+    """Shared blocks are demanded ONCE: a prefix-hit admission allocates only
+    the unmatched suffix, fits where a fresh full-prompt allocation would
+    not, and never evicts the very prefix it just matched."""
+    kv = KVPoolManager(num_blocks=7, block_size=8, rows=3,
+                       max_blocks_per_row=6, prefix_cache=True)
+    toks = list(range(1, 33))                        # 4 full blocks
+    t = kv.admit(1, 5, num_tokens=32)                # 4 sealed + decode room
+    kv.release(1, cache_tokens=toks)                 # register 4 blocks
+    assert kv.blocks_cached == 4
+    matched = kv.prefix_match(toks + [77, 78])       # 5-block prompt, 4 hit
+    assert len(matched) == 4 and matched == t.blocks[:4]
+    full_demand = kv.prefill_demand(40, 34)
+    assert full_demand > kv.pool.num_free            # fresh alloc can't fit...
+    t2 = kv.admit(2, full_demand - len(matched), num_tokens=34,
+                  prefix_blocks=matched)             # ...but the suffix can
+    assert t2 is not None and t2.blocks[:4] == matched
+    assert t2.num_prefix == 4
+    assert kv.prefix_evictions == 0                  # matched prefix untouched
+    assert kv.blocks_cached == 4
+    assert kv.blocks_in_use == 5                     # 4 shared ONCE + 1 fresh
+    # a third sharer still fits (1 free block for its suffix)...
+    m3 = kv.prefix_match(toks + [9])
+    t3 = kv.admit(3, full_demand - len(m3), num_tokens=33, prefix_blocks=m3)
+    assert t3 is not None and kv.blocks_in_use == 6
+    # ...and the exact-headroom probe refuses a fourth: zero free, and the
+    # matched blocks are excluded from evictable headroom (no self-eviction).
+    m4 = kv.prefix_match(toks + [10], record=False)
+    assert not kv.can_admit(full_demand - len(m4), rid=4, prefix_blocks=m4)
+    assert 4 in kv.memory_waits                      # honest queued_on_memory
+    kv.release(2)
+    kv.release(3)
+    kv.flush_prefix_cache()
+    assert kv.blocks_in_use == 0
+
+
+def test_lru_eviction_under_pressure():
+    """Unpinned cached prefixes are reclaimable headroom: admission evicts
+    least-recently-touched leaves instead of refusing, and never evicts a
+    block the incoming request just matched."""
+    kv = KVPoolManager(num_blocks=7, block_size=4, rows=3,
+                       max_blocks_per_row=6, prefix_cache=True)
+    a = list(range(1, 9))                            # 2 blocks
+    b = list(range(101, 109))                        # 2 blocks, distinct
+    kv.admit(1, 2, num_tokens=8)
+    kv.release(1, cache_tokens=a)
+    kv.admit(2, 2, num_tokens=8)
+    kv.release(2, cache_tokens=b)
+    assert kv.blocks_cached == 4 and kv.pool.num_free == 2
+    m = kv.prefix_match(b + [7])                     # touch b: now MRU
+    t = kv.admit(3, 3, num_tokens=9, prefix_blocks=m)  # needs eviction of a
+    assert t is not None and t.blocks[:2] == m       # b survived (matched+MRU)
+    assert kv.prefix_evictions >= 1
+    # leaf-first LRU: a's DEEPEST block went first, b's chain is intact
+    assert len(kv.prefix_match(a + [7], record=False)) <= 1
+    assert kv.prefix_match(b + [7], record=False) == m
+    kv.release(3)
+    kv.flush_prefix_cache()
+    assert kv.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: SLO-aware preemption victim selection
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_spares_tight_deadline(params):
+    """Pool pressure evicts the RELAXED request (no deadline, admitted
+    first), not the tight-deadline one admitted after it — the old
+    newest-admitted-first policy would have picked the opposite victim.
+    Both streams still finish bit-identical to unpressured runs."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9, sampler=SAMPLER,
+                           admission="fifo")
+    engine = InferenceEngine(CFG, params, max_len=48, sampler=SAMPLER)
+    relaxed = server.submit(Request(np.arange(4, dtype=np.int32), 40))
+    tight = server.submit(Request(np.asarray([7, 3, 11, 2], np.int32), 40,
+                                  slo=SLO(ttft_deadline=0.25)))
+    victims = []
+    orig = server._preempt
+    server._preempt = lambda rid: (victims.append(rid), orig(rid))[1]
+    done = server.run_to_completion()
+    assert server.pool_stats()["preemptions"] >= 1
+    assert relaxed in victims and tight not in victims
+    for rid, prompt in ((relaxed, np.arange(4, dtype=np.int32)),
+                        (tight, np.asarray([7, 3, 11, 2], np.int32))):
+        assert done[rid] == engine.generate(prompt, 40, seed=rid).tokens
+    assert server.kv.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: graceful fork_stream degradation
+# ---------------------------------------------------------------------------
+
+
+def test_fork_falls_back_to_replay_when_clone_impossible(params):
+    """Clone exhaustion no longer raises mid-migration: the fork degrades to
+    a queued re-prefill (replaying prompt + emitted, bit-identical under the
+    position-keyed sampler) and the pool surfaces a ``clone_fallbacks``
+    stat."""
+    eng = InferenceEngine(CFG, params, max_len=48, paged=True,
+                          block_size=8, kv_rows=2)
+    src = eng.open_stream(Request(np.arange(8, dtype=np.int32), 24,
+                                  sampler=SAMPLER, seed=5))
+    src_tokens = list(src.next_chunk()[0])
+    src_tokens += src.next_chunk()[0]
+    blocker = eng.open_stream(Request(np.arange(30, dtype=np.int32), 4))
+    blocker.next_chunk()                             # occupies the last row
+    fork = eng.fork_stream(src, 24 - len(src_tokens))
+    assert eng.kv.clone_fallbacks == 1               # degraded, didn't raise
+    blocker.cancel()                                 # room for the re-prefill
+    fork_tokens = []
+    while (c := fork.next_chunk()) is not None:
+        fork_tokens += c[0]
+    rest = []
+    while (c := src.next_chunk()) is not None:
+        rest += c[0]
+    assert fork_tokens == rest                       # replay is lossless
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_fork_fallback_oom_is_soft(params):
+    """If even the fallback re-prefill cannot be admitted, the fork reports
+    ``oom``/exhausted instead of raising at pull time."""
+    eng = InferenceEngine(CFG, params, max_len=48, paged=True,
+                          block_size=8, kv_rows=2)
+    src = eng.open_stream(Request(np.arange(8, dtype=np.int32), 24))
+    src.next_chunk()
+    blocker = eng.open_stream(Request(np.arange(30, dtype=np.int32), 4))
+    blocker.next_chunk()
+    fork = eng.fork_stream(src, 20)
+    assert eng.kv.clone_fallbacks == 1
+    assert fork.next_chunk() is None                 # soft-fail, no raise
+    assert fork.exhausted and fork.oom
+    src.cancel()
+    blocker.cancel()
+    assert eng.kv.blocks_in_use == 0
+
+
+def test_fork_clone_is_zero_copy_for_sealed_blocks(params):
+    """Acceptance: migration/fork hand-off performs zero device block copies
+    for full shared blocks — at most ONE copy pair (the partial tail)."""
+    eng = InferenceEngine(CFG, params, max_len=48, paged=True,
+                          block_size=8, kv_rows=3)
+    src = eng.open_stream(Request(np.arange(8, dtype=np.int32), 24))
+    src_tokens = list(src.next_chunk()[0])
+    src_tokens += src.next_chunk()[0]
+    fork = eng.fork_stream(src, 24 - len(src_tokens))
+    n_tok = eng.kv.tables[fork._rid].num_tokens
+    expect = 1 if n_tok % 8 else 0
+    assert eng.kv.copy_ops == expect                 # CoW tail only
+    assert eng.kv.tables[fork._rid].num_prefix == n_tok // 8
+    src.cancel()
+    fork.cancel()
+    assert eng.kv.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: refcount conservation invariant (property-style trace replay)
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_invariant_random_trace():
+    """Replay a randomized trace of admits (with prefix hits), extends,
+    clones (migrations), cancels, and releases-with-caching against a small
+    pool; after releasing everything and flushing the cache the free list
+    must return EXACTLY to its initial size — no leak, no double-free."""
+    rng = np.random.default_rng(42)
+    bs = 4
+    kv = KVPoolManager(num_blocks=33, block_size=bs, rows=8,
+                       max_blocks_per_row=12, prefix_cache=True)
+    initial_free = kv.pool.num_free
+    systems = [list(rng.integers(1, 500, size=n)) for n in (9, 13, 5)]
+    live: dict[int, list[int]] = {}
+    next_rid = 0
+    for _ in range(300):
+        op = rng.integers(0, 10)
+        if op < 4 or not live:                       # admit
+            toks = list(systems[int(rng.integers(0, len(systems)))]) + list(
+                rng.integers(1, 500, size=int(rng.integers(1, 10))))
+            matched = kv.prefix_match(toks)
+            demand = blocks_for_tokens(len(toks) + 8, bs) - len(matched)
+            if kv.has_free_row and kv.can_admit(demand, next_rid,
+                                                prefix_blocks=matched):
+                t = kv.admit(next_rid, demand, num_tokens=len(toks),
+                             prefix_blocks=matched)
+                assert t is not None                 # can_admit was exact
+                live[next_rid] = toks
+                next_rid += 1
+        elif op < 6:                                 # extend toward decode
+            rid = int(rng.choice(list(live)))
+            tgt = min(kv.tables[rid].num_tokens + int(rng.integers(1, 9)),
+                      12 * bs)
+            if kv.extend(rid, tgt):
+                grown = tgt - len(live[rid])
+                live[rid] += list(rng.integers(1, 500, size=max(grown, 0)))
+                kv.tables[rid].num_tokens = tgt
+        elif op < 7 and kv.has_free_row:             # clone (migration)
+            src = int(rng.choice(list(live)))
+            res = kv.clone(src, next_rid)
+            if res is not None:
+                live[next_rid] = list(live[src][:res[0].num_tokens])
+                next_rid += 1
+        elif op < 9:                                 # release, register prefix
+            rid = int(rng.choice(list(live)))
+            toks = live.pop(rid)
+            kv.release(rid, cache_tokens=toks[:kv.tables[rid].num_tokens]
+                       if rid in kv.tables else toks)
+        else:                                        # cancel: no caching
+            rid = int(rng.choice(list(live)))
+            live.pop(rid)
+            kv.release(rid)
+    for rid in list(live):
+        kv.release(rid, cache_tokens=live.pop(rid))
+    assert kv.blocks_in_use == kv.blocks_cached      # only the cache holds on
+    kv.flush_prefix_cache()
+    assert kv.blocks_in_use == 0
+    assert kv.pool.num_free == initial_free          # exact conservation
+    assert not kv.tables
+
+
+def test_blockpool_refcount_safety():
+    pool = BlockPool(6)
+    (b,) = pool.alloc(1)
+    assert pool.ref(b) == 1
+    assert pool.incref(b) == 2
+    assert pool.decref(b) == 1
+    assert pool.decref(b) == 0                       # returns to free list
+    with pytest.raises(ValueError, match="free"):
+        pool.decref(b)                               # double-decref caught
+    a, c = pool.alloc(2)
+    pool.incref(c)
+    pool.free([a, c])                                # a freed, c survives
+    assert pool.ref(c) == 1
+    with pytest.raises(ValueError):
+        pool.free([c, c])                            # duplicate batch caught
+    pool.free([c])
+    assert pool.num_free == 5
