@@ -114,7 +114,8 @@ _TBT_TARGET = 0.1            # interactive smooth-delivery pace (seconds)
 _ADMISSION_TRACE_SEEDS = (42, 43, 44)   # EDF-vs-FIFO aggregates 3 traces:
                                         # 54 requests beat 1/18 granularity
 
-_SYSTEMS = ("disco", "disco_nocancel", "server_only", "device_only")
+_SYSTEMS = ("disco", "disco_spec", "disco_nocancel", "server_only",
+            "device_only")
 
 # shared-prefix / multi-turn load point (prefix-cache ON vs cold control at
 # the SAME offered load): conversations share a system prompt and replay
@@ -161,6 +162,7 @@ def _build(system: str, dev_engine: InferenceEngine, srv_params,
         paper_models.TINY_SERVER, srv_params,
         max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
         block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS, admission=admission,
+        speculative=(system == "disco_spec"),
     )
     server.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     sched = _make_scheduler(np.random.default_rng(seed))
@@ -174,6 +176,7 @@ def _build(system: str, dev_engine: InferenceEngine, srv_params,
         allow_migration=system in ("disco", "disco_nocancel"),
         # single-endpoint baselines stay pure: no SLO-driven racing
         slo_aware_dispatch=not single,
+        mode="speculative" if system == "disco_spec" else "race",
     )
     if system == "server_only":
         disco.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
@@ -341,11 +344,20 @@ def run(smoke: bool = False, temperature: float = 0.0,
         samplers = (SamplerConfig(temperature=temperature),)
     else:
         samplers = (None,)
-    dev_engine = InferenceEngine(
-        dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)), max_len=_MAX_LEN,
-    )
+    dev_params = init_params(dev_cfg, jax.random.PRNGKey(0))
+    dev_engine = InferenceEngine(dev_cfg, dev_params, max_len=_MAX_LEN)
     dev_engine.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
     srv_params = init_params(srv_cfg, jax.random.PRNGKey(1))
+    # disco_spec drafts MATCHED-MODEL (the device runs the server's weights,
+    # i.e. self-speculation): rejection sampling is then lossless AND, under
+    # the greedy standard trace, acceptance is exact — the mismatched-drafter
+    # degradation is swept separately in bench_speculative's temperature-gap
+    # axis. speculative=True pre-compiles the draft-window scans so no XLA
+    # compile lands inside a virtual-timed round.
+    spec_dev_engine = InferenceEngine(
+        srv_cfg, srv_params, max_len=_MAX_LEN, speculative=True,
+    )
+    spec_dev_engine.warmup(prompt_lens=(16, 32, _MAX_PROMPT))
 
     service = _estimate_service_time(dev_engine, srv_params)
     loads = (_LOADS[-1],) if smoke else _LOADS
@@ -363,12 +375,16 @@ def run(smoke: bool = False, temperature: float = 0.0,
         requests = _make_requests(trace, service, samplers)
         point = {"rho": rho, "systems": {}}
         for system in _SYSTEMS:
-            disco = _build(system, dev_engine, srv_params, seed=3)
+            engine = spec_dev_engine if system == "disco_spec" else dev_engine
+            disco = _build(system, engine, srv_params, seed=3)
             t0 = time.perf_counter()
             results = disco.serve_many(_copies(requests))
             wall_us = (time.perf_counter() - t0) * 1e6
             m = _metrics(results)
             m.update(disco.server.server.pool_stats())  # memory-pressure accounting
+            if system == "disco_spec":
+                m["spec_requests"] = disco.spec_requests
+                m["spec_fallbacks"] = disco.spec_fallbacks
             point["systems"][system] = m
             rows.append(Row(
                 f"e2e_serving/rho{rho:g}/{system}", wall_us,
@@ -444,6 +460,7 @@ def run(smoke: bool = False, temperature: float = 0.0,
     # floored at "one wasted token" so a perfectly clean disco run reports a
     # finite, token-count-scaled reduction instead of dividing by zero.
     top = points[-1]["systems"]
+    low = points[0]["systems"]
     disco_floor = max(
         top["disco"]["wasted_ratio"],
         1.0 / max(top["disco"]["generated_tokens"], 1),
@@ -471,12 +488,43 @@ def run(smoke: bool = False, temperature: float = 0.0,
         "prefix_blocks_saved_multiturn": mt["warm"]["blocks_saved"],
         "prefix_ttft_mean_reduction": mt["ttft_mean_reduction"],
         "prefix_prefill_compute_reduction": mt["prefill_compute_reduction"],
+        # device-draft / server-verify on the same traces. Two honest
+        # comparisons, reported at the relaxed load point (points[0]):
+        #  * vs race-and-cancel — spec converts the race's wasted loser
+        #    tokens into accepted drafts (lower wasted_ratio), but in this
+        #    free-device testbed the race's residual waste is already tiny
+        #    (~1 token of cancel lag per loser), so the verify premium
+        #    (every token scored at input price) can exceed it;
+        #  * vs server_only — the like-for-like LOSSLESS comparison: both
+        #    deliver the identical server-distributed stream, and spec gets
+        #    it at input-token verify prices instead of output-token decode
+        #    prices. Race cannot make this claim (a device winner's stream
+        #    is device-distributed).
+        "spec_cost_vs_race": low["disco_spec"]["cost_mean"]
+        / max(low["disco"]["cost_mean"], 1e-30),
+        "spec_cost_vs_server_only": low["disco_spec"]["cost_mean"]
+        / max(low["server_only"]["cost_mean"], 1e-30),
+        "spec_tbt_vs_race": low["disco_spec"]["tbt_mean_s"]
+        / max(low["disco"]["tbt_mean_s"], 1e-9),
+        "spec_wasted_ratio": low["disco_spec"]["wasted_ratio"],
+        "race_wasted_ratio": low["disco"]["wasted_ratio"],
+        "spec_acceptance_rate": low["disco_spec"].get("acceptance_rate", 0.0),
+        "spec_fallbacks": low["disco_spec"].get("spec_fallbacks", 0),
+        "spec_p99_ttft_s": low["disco_spec"]["ttft_p99_s"],
     }
     rows.append(Row(
         "e2e_serving/headline", 0.0,
         f"p99_vs_server_only={headline['p99_ttft_reduction_vs_server_only']:.2f};"
         f"wasted_reduction_x={wasted_reduction:.1f};"
         f"edf_gain={headline['edf_slo_attainment_gain']:.2f}",
+    ))
+    rows.append(Row(
+        "e2e_serving/speculative", 0.0,
+        f"cost_vs_server_only={headline['spec_cost_vs_server_only']:.2f};"
+        f"cost_vs_race={headline['spec_cost_vs_race']:.2f};"
+        f"acceptance={headline['spec_acceptance_rate']:.2f};"
+        f"wasted={headline['spec_wasted_ratio']:.3f}"
+        f"(race={headline['race_wasted_ratio']:.3f})",
     ))
 
     if not smoke and temperature == 0.0 and not mixed_samplers:
@@ -585,6 +633,89 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     )
 
 
+def check_speculative(temperature: float = 0.8, n_requests: int = 6) -> None:
+    """Speculative-decoding gate (CI): matched endpoint models (the
+    lossless configuration), stochastic sampling, one arrival trace through
+    ``mode="speculative"`` and ``mode="race"`` stacks. Requires (1) the
+    draft/verify path actually engaged (``spec_requests`` > 0), (2) drafts
+    actually accepted (``acceptance_rate`` > 0), and (3) every delivered
+    stream bit-identical to the race run AND to the no-race single-engine
+    generation with the same (seed, sampler) — rejection sampling plus the
+    salted accept/residual streams must never change WHAT is sampled.
+    Exits non-zero on any mismatch."""
+    cfg = paper_models.TINY_SERVER
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    samp = SamplerConfig(temperature=temperature)
+
+    def build(mode: str) -> DiSCoServer:
+        server = BatchedServer(
+            cfg, params, max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
+            block_size=_BLOCK_SIZE, speculative=(mode == "speculative"),
+        )
+        server.warmup(prompt_lens=(16, 32))
+        dev = InferenceEngine(
+            cfg, params, max_len=_MAX_LEN, paged=True, kv_rows=n_requests,
+            speculative=(mode == "speculative"),
+        )
+        dev.warmup(prompt_lens=(16, 32))
+        rng0 = np.random.default_rng(0)
+        sched = DiSCoScheduler(
+            CostModel(1e-4, 6e-4, 900.0, 800.0, exchange_rate=1e-12),
+            server_ttft_samples=rng0.lognormal(np.log(0.3), 0.5, 400),
+            prompt_length_samples=np.clip(
+                rng0.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+            budget=0.9,       # most requests race -> most take the spec path
+            migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.01),
+        )
+        return DiSCoServer(
+            sched, DeviceEndpoint(dev),
+            ServerEndpoint(server, NetworkModel(rtt_mean=_RTT)),
+            rng=np.random.default_rng(7), mode=mode,
+        )
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(8, 32, size=n_requests)]
+    reqs = [Request(p, _MAX_NEW, arrival=0.1 * i, seed=50 + i, sampler=samp)
+            for i, p in enumerate(prompts)]
+
+    spec = build("speculative")
+    res_spec = spec.serve_many(_copies(reqs))
+    stats = spec.server.server.pool_stats()
+    res_race = build("race").serve_many(_copies(reqs))
+    single = InferenceEngine(cfg, params, max_len=_MAX_LEN)
+    single.warmup(prompt_lens=(16, 32))
+    baseline = [single.generate(p, _MAX_NEW, seed=50 + i, sampler=samp).tokens
+                for i, p in enumerate(prompts)]
+
+    failures = []
+    if not spec.spec_requests > 0:
+        failures.append("no request took the draft/verify path")
+    if not stats.get("acceptance_rate", 0.0) > 0:
+        failures.append(
+            f"no draft accepted (acceptance_rate="
+            f"{stats.get('acceptance_rate')})"
+        )
+    for i, (rs, rr, base) in enumerate(zip(res_spec, res_race, baseline)):
+        if rs.tokens != rr.tokens:
+            failures.append(f"request {i}: speculative != race")
+        if rs.tokens != base:
+            failures.append(f"request {i}: speculative != same-seed baseline")
+    if failures:
+        raise SystemExit(
+            f"speculative gate FAILED (temperature={temperature}):\n  "
+            + "\n  ".join(failures)
+        )
+    print(
+        f"speculative OK: {n_requests} requests bit-identical to race AND "
+        f"single-engine baseline (spec_requests={spec.spec_requests}, "
+        f"fallbacks={spec.spec_fallbacks}, "
+        f"acceptance_rate={stats['acceptance_rate']:.2f}, "
+        f"verify_rounds={stats['verify_rounds']}, "
+        f"temperature={temperature})"
+    )
+
+
 def check_prefix(temperature: float = 0.8, n_requests: int = 10) -> None:
     """Prefix-cache gate (CI): a multi-turn shared-system-prompt trace with
     MIXED per-request samplers through a prefix-cached server and a
@@ -652,8 +783,21 @@ if __name__ == "__main__":
                     help="run the prefix-cache gate instead of the bench: "
                          "multi-turn trace, prefix_hit_rate > 0, streams "
                          "bit-identical to a cold-cache run")
+    ap.add_argument("--check-speculative", action="store_true",
+                    help="run the speculative-decoding gate instead of the "
+                         "bench: matched models, drafts must be accepted "
+                         "(acceptance_rate > 0) and every stream must be "
+                         "bit-identical to the race run and the same-seed "
+                         "single-engine baseline")
     args = ap.parse_args()
-    if args.check_prefix:
+    if args.check_speculative:
+        t = 0.8 if args.temperature is None else args.temperature
+        if t <= 0:
+            ap.error("--check-speculative requires --temperature > 0")
+        if args.smoke:
+            ap.error("--smoke does not apply to --check-speculative")
+        check_speculative(temperature=t)
+    elif args.check_prefix:
         t = 0.8 if args.temperature is None else args.temperature
         if t <= 0:
             ap.error("--check-prefix requires --temperature > 0")

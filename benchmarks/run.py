@@ -24,6 +24,7 @@ from . import (
     bench_table1_correlation,
     bench_table2_tail,
     bench_table3_tbt,
+    bench_speculative,
     bench_table5_predictors,
     bench_table6_flops,
 )
@@ -44,6 +45,7 @@ MODULES = {
     "table4": bench_table4_coldstart,
     "decode": bench_decode_throughput,
     "e2e_serving": bench_e2e_serving,
+    "speculative": bench_speculative,
     "prefill": bench_prefill_throughput,
     "paged_decode": bench_paged_decode,
 }

@@ -2,19 +2,23 @@ from .config import ModelConfig
 from .model import (
     decode_n,
     decode_step,
+    draft_n,
     forward,
     init_cache,
     init_params,
     param_shapes,
     prefill,
+    verify_n,
     window_vector,
 )
 from .paged import (
     init_paged_pages,
     paged_decode_n,
     paged_decode_step,
+    paged_draft_n,
     paged_prefill,
     paged_suffix_prefill,
+    paged_verify_n,
     supports_paged,
 )
 
@@ -27,20 +31,29 @@ from .paged import (
 # ``fold_in(key, position)`` — pure in (config, key, position, logits), so
 # migration/preemption/fork replay is bit-identical under temperature > 0.
 # ``GREEDY`` is the argmax default (the temperature == 0 branch per row).
+# The speculative-decoding surface (``sampling_probs``, ``speculative_accept``,
+# ``first_rejection``; ``draft_n``/``verify_n`` and their paged twins) exposes
+# the same draws as explicit distributions for device-draft / server-verify.
 from .sampling import (
     GREEDY,
     SamplerConfig,
     SamplerOperands,
+    first_rejection,
     request_key,
     sample_tokens,
     sampler_operands,
+    sampling_probs,
+    speculative_accept,
 )
 
 __all__ = [
-    "ModelConfig", "decode_n", "decode_step", "forward", "init_cache",
-    "init_params", "param_shapes", "prefill", "window_vector",
+    "ModelConfig", "decode_n", "decode_step", "draft_n", "forward",
+    "init_cache", "init_params", "param_shapes", "prefill", "verify_n",
+    "window_vector",
     "init_paged_pages", "paged_decode_n", "paged_decode_step",
-    "paged_prefill", "paged_suffix_prefill", "supports_paged",
-    "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
-    "sample_tokens", "sampler_operands",
+    "paged_draft_n", "paged_prefill", "paged_suffix_prefill",
+    "paged_verify_n", "supports_paged",
+    "GREEDY", "SamplerConfig", "SamplerOperands", "first_rejection",
+    "request_key", "sample_tokens", "sampler_operands", "sampling_probs",
+    "speculative_accept",
 ]

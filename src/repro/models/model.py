@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import ModelConfig
-from .sampling import sample_tokens
+from .sampling import first_rejection, sample_tokens, speculative_accept
 from .layers import (
     attn_decode,
     attn_full,
@@ -41,6 +41,8 @@ __all__ = [
     "prefill",
     "decode_step",
     "decode_n",
+    "draft_n",
+    "verify_n",
     "init_cache",
     "window_vector",
     "Cache",
@@ -468,6 +470,154 @@ def decode_n(
 
     (_, cache), toks = jax.lax.scan(body, (token, cache), None, length=num_steps)
     return toks, cache
+
+
+def draft_n(
+    params: dict,
+    cfg: ModelConfig,
+    cache: Cache,
+    forced: jnp.ndarray,       # (T, B) int32 teacher-forced inputs
+    use_forced: jnp.ndarray,   # (T,) bool — True rows of the scan feed forced[i]
+    *,
+    max_len: Optional[int] = None,
+    active: Optional[jnp.ndarray] = None,
+    sampler=None,
+    keys: Optional[jnp.ndarray] = None,
+):
+    """Teacher-forced-prefix fused decode: the speculative primitive.
+
+    One ``lax.scan`` of T decode steps where step ``i`` feeds ``forced[i]``
+    when ``use_forced[i]`` (teacher forcing) and the previous step's sampled
+    token otherwise, emitting at every step both the sampled token AND the
+    full post-mask sampling distribution (``models.sampling.sampling_probs``).
+    Both speculative halves are instances of this one primitive:
+
+      * **verify** (server): every step forced — score the k draft positions
+        plus the bonus position in one dispatch (see :func:`verify_n`);
+      * **draft** (device): a short forced prefix re-synchronizes the cache
+        with externally-decided tokens (the verify round's correction or
+        bonus), then the sampled tail drafts ahead. ``use_forced`` is a
+        runtime operand, so windows with different resync lengths share one
+        compile per T.
+
+    ``use_forced[0]`` is treated as True unconditionally (the first step has
+    no previous sample to feed). Sampled tokens use the stream's normal
+    ``fold_in(key, position)`` draws — a draft window IS the token stream
+    the device would have emitted, which is what makes matched-model
+    speculative decoding bit-identical to server-only generation.
+
+    Returns ``(toks (T, B) int32, probs (T, B, V) float32, new_cache)`` with
+    lengths advanced by T (minus frozen steps). Step i's outputs score the
+    position ``lengths_before + i + 1``. Frozen rows (``max_len`` /
+    ``active`` guards, same semantics as :func:`decode_n`) re-emit their
+    input token and report a stale distribution; callers discard them.
+
+    Rejected for SSM/hybrid configs: callers roll the cache back to the
+    accepted prefix by trimming ``lengths``, which is only sound for
+    attention caches (entries past ``lengths`` are masked out and
+    overwritten in place). Recurrent state cannot rewind.
+    """
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    if cfg.has_ssm:
+        raise ValueError(
+            f"{cfg.name} has recurrent (SSM) state: speculative rollback "
+            "requires a pure-attention cache"
+        )
+    forced = jnp.asarray(forced, jnp.int32)
+    use_forced = jnp.asarray(use_forced, bool)
+    guard = (max_len is not None) or (active is not None)
+
+    def body(carry, xs):
+        tok, c = carry
+        f_tok, f_on = xs
+        tok_in = jnp.where(f_on, f_tok, tok)
+        logits, new_c = decode_step(params, cfg, c, tok_in)
+        new_tok, probs = sample_tokens(
+            sampler, logits, keys, new_c["lengths"], return_probs=True
+        )
+        if not guard:
+            return (new_tok, new_c), (new_tok, probs)
+        ok = jnp.ones_like(tok, bool)
+        if max_len is not None:
+            ok &= c["lengths"] < (max_len - 1)
+        if active is not None:
+            ok &= active
+        merged: Cache = {}
+        for k, v in new_c.items():
+            old = c[k]
+            if k == "lengths":
+                merged[k] = jnp.where(ok, v, old)
+            else:  # cache arrays are (L, B, ...): broadcast over L and tails
+                mask = ok.reshape((1, -1) + (1,) * (v.ndim - 2))
+                merged[k] = jnp.where(mask, v, old)
+        out_tok = jnp.where(ok, new_tok, tok_in)
+        return (out_tok, merged), (out_tok, probs)
+
+    (_, cache), (toks, probs) = jax.lax.scan(
+        body, (forced[0], cache), (forced, use_forced)
+    )
+    return toks, probs, cache
+
+
+def verify_n(
+    params: dict,
+    cfg: ModelConfig,
+    cache: Cache,
+    token: jnp.ndarray,         # (B,) int32 last accepted/pending token
+    draft: jnp.ndarray,         # (k, B) int32 device draft window
+    device_probs: jnp.ndarray,  # (k, B, V) device sampling distributions
+    *,
+    max_len: Optional[int] = None,
+    active: Optional[jnp.ndarray] = None,
+    sampler=None,
+    keys: Optional[jnp.ndarray] = None,
+):
+    """Server half of speculative decoding: score ``k`` draft positions in
+    ONE fused dispatch and run the lossless rejection-sampling verdict.
+
+    Teacher-forces ``[token, draft_1 .. draft_k]`` through k+1 decode steps
+    (step i scores position ``lengths + i + 1``), then applies
+    :func:`models.sampling.speculative_accept` per row with the stream's
+    request keys, so the verdict is pure in (key, position, logits).
+
+    Returns ``(n_acc, accept, corrections, srv_toks, probs, new_cache)``:
+
+      * ``n_acc`` (B,) int32 — the first-rejection index: number of drafts
+        to deliver before the correction.
+      * ``accept`` (B, k) bool / ``corrections`` (B, k) int32 — per-position
+        verdicts and residual resamples (entries past the first rejection
+        are conditioned on a dead prefix; only index ``n_acc`` is usable).
+      * ``srv_toks`` (k+1, B) int32 — the server's OWN ``fold_in(key, pos)``
+        draws at every scored position; ``srv_toks[k]`` is the bonus token
+        a fully-accepted window appends for free.
+      * ``probs`` (k+1, B, V) — server sampling distributions per position.
+
+    The new cache's lengths advance by k+1 (scratch KV for every scored
+    position); the caller rolls back to ``lengths + n_acc + 1`` after the
+    verdict — sound because attention cache entries past ``lengths`` are
+    masked and overwritten in place (:func:`draft_n` rejects SSM configs).
+    Frozen-row semantics (``max_len``/``active``) are those of
+    :func:`decode_n`: frozen rows' verdicts are garbage and must be ignored.
+    """
+    draft = jnp.asarray(draft, jnp.int32)
+    k = draft.shape[0]
+    forced = jnp.concatenate([jnp.asarray(token, jnp.int32)[None], draft], axis=0)
+    toks, probs, cache = draft_n(
+        params, cfg, cache, forced, jnp.ones((k + 1,), bool),
+        max_len=max_len, active=active, sampler=sampler, keys=keys,
+    )
+    # draft_i sits at position lengths_before + 1 + i (i = 0..k-1); the
+    # lengths in `cache` have already advanced k+1, so recover the base
+    base = cache["lengths"] - (k + 1)
+    positions = base[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)[None, :]
+    accept, corrections = jax.vmap(speculative_accept)(
+        keys, positions,
+        jnp.swapaxes(draft, 0, 1),
+        jnp.swapaxes(device_probs, 0, 1),
+        jnp.swapaxes(probs[:k], 0, 1),
+    )
+    return first_rejection(accept), accept, corrections, toks, probs, cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:

@@ -42,7 +42,12 @@ from .config import ModelConfig
 from .layers import _qkv, ffn_apply, rms_norm
 from .model import Cache, _embed, _logits, prefill, window_vector
 from .rope import apply_rope
-from .sampling import sample_tokens
+from .sampling import (
+    first_rejection,
+    sample_tokens,
+    sampling_probs,
+    speculative_accept,
+)
 
 __all__ = [
     "supports_paged",
@@ -51,6 +56,8 @@ __all__ = [
     "paged_suffix_prefill",
     "paged_decode_step",
     "paged_decode_n",
+    "paged_draft_n",
+    "paged_verify_n",
     "NULL_BLOCK",
 ]
 
@@ -328,3 +335,101 @@ def paged_decode_n(
         body, (token, lengths, pages), None, length=num_steps
     )
     return toks, pages, lengths
+
+
+def paged_draft_n(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    forced: jnp.ndarray,       # (T, B) int32 teacher-forced inputs
+    use_forced: jnp.ndarray,   # (T,) bool — True steps feed forced[i]
+    *,
+    max_len: int,
+    active: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+    sampler=None,
+    keys: Optional[jnp.ndarray] = None,
+):
+    """Paged twin of dense ``model.draft_n``: a fused scan whose step ``i``
+    feeds ``forced[i]`` when ``use_forced[i]`` (teacher forcing) and the
+    previous sampled token otherwise, emitting the sampled token AND the
+    post-mask sampling distribution at every step. All-forced = speculative
+    verify; forced-prefix + sampled tail = a device draft window resyncing
+    on the last round's correction/bonus token. ``use_forced`` is a runtime
+    operand (one compile per T). ``use_forced[0]`` is treated as True.
+
+    Frozen rows (``max_len`` cap, ``active`` mask) keep lengths frozen and
+    write the trash block — same contract as ``paged_decode_n``. Rollback to
+    an accepted prefix is a host-side lengths/page-table trim; entries past
+    ``lengths`` are masked at read time and overwritten in place.
+
+    Returns (toks (T, B) int32, probs (T, B, V) f32, pages, new_lengths).
+    """
+    forced = jnp.asarray(forced, jnp.int32)
+    use_forced = jnp.asarray(use_forced, bool)
+
+    def body(carry, xs):
+        tok, lens, pg = carry
+        f_tok, f_on = xs
+        tok_in = jnp.where(f_on, f_tok, tok)
+        out_tok, logits, pg, lens = paged_decode_step(
+            params, cfg, pg, block_tables, lens, tok_in,
+            max_len=max_len, active=active, use_kernel=use_kernel,
+            sampler=sampler, keys=keys,
+        )
+        return (out_tok, lens, pg), (out_tok, sampling_probs(sampler, logits))
+
+    (_, lengths, pages), (toks, probs) = jax.lax.scan(
+        body, (forced[0], lengths, pages), (forced, use_forced)
+    )
+    return toks, probs, pages, lengths
+
+
+def paged_verify_n(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,        # (B,) cache entries BEFORE the window
+    token: jnp.ndarray,          # (B,) last accepted/pending token per row
+    draft: jnp.ndarray,          # (k, B) int32 device draft window
+    device_probs: jnp.ndarray,   # (k, B, V) device sampling distributions
+    *,
+    max_len: int,
+    active: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+    sampler=None,
+    keys: Optional[jnp.ndarray] = None,
+):
+    """Paged server verify: teacher-force ``[token, draft_1..draft_k]``
+    through k+1 fused steps (scratch KV written through the row's page
+    table; frozen rows hit the trash block) and run the lossless
+    rejection-sampling verdict per row. Same returns as dense
+    ``model.verify_n`` — ``(n_acc, accept, corrections, srv_toks, probs,
+    pages, new_lengths)`` with ``new_lengths`` advanced k+1; the caller
+    rolls back to ``lengths + n_acc + 1`` and releases the scratch blocks
+    past the accepted prefix (``KVPoolManager.shrink``).
+    """
+    draft = jnp.asarray(draft, jnp.int32)
+    k = draft.shape[0]
+    forced = jnp.concatenate([jnp.asarray(token, jnp.int32)[None], draft], axis=0)
+    toks, probs, pages, new_lengths = paged_draft_n(
+        params, cfg, pages, block_tables, lengths, forced,
+        jnp.ones((k + 1,), bool),
+        max_len=max_len, active=active, use_kernel=use_kernel,
+        sampler=sampler, keys=keys,
+    )
+    # draft_i scores position lengths + 1 + i (lengths = pre-window base)
+    positions = lengths[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)[None, :]
+    accept, corrections = jax.vmap(speculative_accept)(
+        keys, positions,
+        jnp.swapaxes(draft, 0, 1),
+        jnp.swapaxes(device_probs, 0, 1),
+        jnp.swapaxes(probs[:k], 0, 1),
+    )
+    return (
+        first_rejection(accept), accept, corrections, toks, probs,
+        pages, new_lengths,
+    )

@@ -50,6 +50,9 @@ __all__ = [
     "request_key",
     "sampler_operands",
     "sample_tokens",
+    "sampling_probs",
+    "speculative_accept",
+    "first_rejection",
     "mask_top_k",
     "mask_top_p",
 ]
@@ -203,7 +206,9 @@ def sample_tokens(
     logits: jnp.ndarray,      # (B, V) f32 next-token logits
     keys: Optional[jnp.ndarray],    # (B, 2) uint32 per-request base keys
     positions: Optional[jnp.ndarray],  # (B,) int32 absolute token positions
-) -> jnp.ndarray:
+    *,
+    return_probs: bool = False,
+):
     """Sample one token per row: ``fold_in(key, position)`` -> masked
     categorical. Pure in (key, position, logits); jit/vmap/scan-safe.
     Returns (B,) int32.
@@ -216,7 +221,18 @@ def sample_tokens(
     branch of the same math (exact argmax per row). Each row's result
     depends only on its own (config, key, position, logits), so a request
     draws identical tokens alone or inside any batch composition.
+
+    ``return_probs=True`` additionally returns the per-row post-mask
+    sampling distribution (``(B, V)`` float32, one-hot for greedy rows) as
+    ``(tokens, probs)``. Only the speculative draft/verify paths opt in:
+    the default call keeps the all-greedy ``lax.cond`` fast path below
+    untouched, while the probs variant computes the masked distribution
+    unconditionally (the distribution of a greedy row is its argmax
+    one-hot, which the cond cannot shortcut).
     """
+    if return_probs:
+        tokens = sample_tokens(sampler, logits, keys, positions)
+        return tokens, sampling_probs(sampler, logits)
     if isinstance(sampler, SamplerOperands):
         if keys is None or positions is None:
             raise ValueError(
@@ -255,3 +271,129 @@ def sample_tokens(
     scaled = mask_top_p(scaled, sampler.top_p)
     positions = jnp.asarray(positions, jnp.int32)
     return jax.vmap(_draw)(keys, positions, scaled).astype(jnp.int32)
+
+
+def sampling_probs(
+    sampler,                  # None | SamplerConfig | SamplerOperands
+    logits: jnp.ndarray,      # (B, V) f32 next-token logits
+) -> jnp.ndarray:
+    """The per-row next-token distribution that :func:`sample_tokens` draws
+    from: temperature-scaled, top-k/top-p-masked softmax, and an exact
+    argmax one-hot for greedy rows (``temperature <= 0``). Returns (B, V)
+    float32 rows summing to 1.
+
+    This is the probability surface speculative decoding verifies against —
+    ``categorical(fold_in(key, pos), log(probs))`` reproduces the exact
+    token :func:`sample_tokens` emits for the same row, so acceptance ratios
+    computed from these rows are faithful to the serving sampler, masks
+    included. Deliberately NOT behind the all-greedy ``lax.cond`` fast path:
+    a greedy row still has a (one-hot) distribution to report, so callers
+    that want probs always pay for them — which is why the default decode
+    path never calls this.
+    """
+    vocab = logits.shape[-1]
+    argm = jnp.argmax(logits, axis=-1)
+    one_hot = jax.nn.one_hot(argm, vocab, dtype=jnp.float32)
+    if isinstance(sampler, SamplerOperands):
+        temp = jnp.asarray(sampler.temperature, jnp.float32)
+        greedy_rows = temp <= 0.0
+        safe_t = jnp.where(greedy_rows, 1.0, temp)
+        scaled = logits.astype(jnp.float32) / safe_t[:, None]
+        scaled = _mask_top_k_p_rows(
+            scaled, jnp.asarray(sampler.top_k, jnp.int32),
+            jnp.asarray(sampler.top_p, jnp.float32),
+        )
+        probs = jax.nn.softmax(scaled, axis=-1)
+        return jnp.where(greedy_rows[:, None], one_hot, probs)
+    if sampler is None or sampler.greedy:
+        return one_hot
+    scaled = logits.astype(jnp.float32) / sampler.temperature
+    scaled = mask_top_k(scaled, sampler.top_k)
+    scaled = mask_top_p(scaled, sampler.top_p)
+    return jax.nn.softmax(scaled, axis=-1)
+
+
+# Salts separating the speculative accept-coin and residual-resample RNG
+# streams from the token-draw stream. Token i of a request is ALWAYS
+# ``categorical(fold_in(key, i), ...)`` — the salted draws below fold the
+# salt in first, so running speculative rounds consumes no randomness from
+# the token stream and the accepted prefix stays bit-identical to what the
+# server alone would have drawn at the same positions.
+_ACCEPT_SALT = 0x5BD1E995
+_RESIDUAL_SALT = 0x27D4EB2F
+
+
+def _accept_coin(key, pos):
+    return jax.random.uniform(
+        jax.random.fold_in(jax.random.fold_in(key, _ACCEPT_SALT), pos)
+    )
+
+
+def _residual_draw(key, pos, row_probs):
+    # categorical is shift-invariant in log space, so the unnormalized
+    # residual works directly; zero-probability entries mask to -inf
+    return jax.random.categorical(
+        jax.random.fold_in(jax.random.fold_in(key, _RESIDUAL_SALT), pos),
+        jnp.log(row_probs),
+    )
+
+
+def speculative_accept(
+    key: jnp.ndarray,           # (2,) uint32 request base key
+    positions: jnp.ndarray,     # (k,) int32 absolute positions of the drafts
+    draft: jnp.ndarray,         # (k,) int32 device draft tokens
+    device_probs: jnp.ndarray,  # (k, V) device sampling distributions
+    server_probs: jnp.ndarray,  # (k, V) server sampling distributions
+):
+    """Lossless rejection-sampling verdict for one request's draft window.
+
+    Draft token ``d_i`` is accepted with probability
+    ``min(1, p_server(d_i) / p_device(d_i))`` — the accept coin is
+    ``uniform(fold_in(fold_in(key, salt), position))``, pure in (key,
+    position), so verdicts replay bit-identically. On rejection the
+    correction token is drawn from the normalized residual
+    ``max(p_server - p_device, 0)``; together the two cases emit tokens
+    distributed EXACTLY as the server sampler — speculative decoding
+    changes wall-clock, never the output distribution (Leviathan et al.,
+    and the P/D-Device device-draft setting of PAPERS.md).
+
+    Returns ``(accept, corrections)`` — (k,) bool per-position verdicts and
+    (k,) int32 residual draws. The caller scans ``accept`` for the first
+    ``False``: drafts before it are delivered, the correction at that index
+    replaces the rejected draft, everything after is discarded (the
+    verdicts/corrections past the first rejection are conditioned on a
+    prefix that no longer exists and MUST not be used).
+
+    At matched draft/verify models ``p_device == p_server`` row-wise, every
+    coin passes (``u * p <= p``), and the drafts themselves are the server's
+    own ``fold_in(key, pos)`` categorical draws — so the delivered stream is
+    bit-identical to same-seed server-only generation.
+
+    Degenerate residual (``p_server == p_device`` within float tolerance,
+    e.g. two greedy one-hots): falls back to drawing from ``server_probs``
+    itself, which is the correct limit of the residual as mass -> 0.
+    """
+    positions = jnp.asarray(positions, jnp.int32)
+    draft = jnp.asarray(draft, jnp.int32)
+    p_d = jnp.take_along_axis(device_probs, draft[:, None], axis=-1)[:, 0]
+    p_s = jnp.take_along_axis(server_probs, draft[:, None], axis=-1)[:, 0]
+    u = jax.vmap(_accept_coin, in_axes=(None, 0))(key, positions)
+    # strict guard on p_s == 0: u can be exactly 0.0, and a zero-server-prob
+    # token must never be accepted
+    accept = (u * p_d <= p_s) & (p_s > 0.0)
+    residual = jnp.clip(server_probs - device_probs, 0.0, None)
+    mass = jnp.sum(residual, axis=-1, keepdims=True)
+    residual = jnp.where(mass > 1e-9, residual, server_probs)
+    corrections = jax.vmap(_residual_draw, in_axes=(None, 0, 0))(
+        key, positions, residual
+    ).astype(jnp.int32)
+    return accept, corrections
+
+
+def first_rejection(accept: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first ``False`` along the last axis — the number of
+    accepted drafts — or ``k`` when the whole window is accepted. Works on
+    a single (k,) verdict vector or a batched (B, k) stack."""
+    k = accept.shape[-1]
+    rej = jnp.argmax(~accept, axis=-1)
+    return jnp.where(jnp.all(accept, axis=-1), k, rej).astype(jnp.int32)

@@ -67,8 +67,9 @@ from repro.models.sampling import (
     sampler_operands,
 )
 
-from .disco_driver import DiSCoServer, ServedRequest
+from .disco_driver import DiSCoServer
 from .endpoint import (
+    DeviceDraftSession,
     DeviceEndpoint,
     DeviceTokenStream,
     NetworkModel,
@@ -86,11 +87,21 @@ from .kv_pool import (
 )
 from .request import NO_SLO, SLO, QoEReport, Request, RequestResult
 
+
+def __getattr__(name: str):
+    if name == "ServedRequest":
+        # deprecated alias — the warning fires in disco_driver's __getattr__
+        from . import disco_driver
+
+        return disco_driver.ServedRequest
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "Request", "SLO", "NO_SLO", "QoEReport", "RequestResult",
     "DiSCoServer", "ServedRequest",
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
-    "DeviceTokenStream", "ServerTokenStream",
+    "DeviceDraftSession", "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
     "BlockPool", "KVPoolManager", "PageTable", "PrefixIndex",
     "blocks_for_tokens",

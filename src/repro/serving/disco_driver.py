@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from collections import deque
 from typing import Iterable, Optional
 
@@ -62,13 +63,23 @@ from repro.core import (
 )
 from repro.core.dispatch import DispatchDecision
 
+from .engine import SPEC_K_MAX
 from .endpoint import DeviceEndpoint, ServerEndpoint
 from .request import QoEReport, Request, RequestResult
 
 __all__ = ["ServedRequest", "DiSCoServer"]
 
-# deprecated alias: the result type moved to serving.request.RequestResult
-ServedRequest = RequestResult
+
+def __getattr__(name: str):
+    if name == "ServedRequest":
+        # deprecated alias: the result type moved to serving.request
+        warnings.warn(
+            "ServedRequest is deprecated; use "
+            "repro.serving.request.RequestResult",
+            DeprecationWarning, stacklevel=2,
+        )
+        return RequestResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -90,6 +101,7 @@ class _Req:
     handoff_done: bool = False
     migrated: bool = False
     done: bool = False
+    spec: object = None         # _SpecSession for speculative-mode requests
 
     @property
     def prompt(self) -> np.ndarray:
@@ -102,6 +114,154 @@ class _Req:
     @property
     def arrival(self) -> float:
         return self.req.arrival
+
+
+class _SpecSession:
+    """One request's device-draft / server-verify protocol (Fig. 1 turned
+    collaborative): instead of racing two full decoders and cancelling the
+    loser, the device *drafts* k tokens per round and the contended server
+    scores them all in ONE fused verify dispatch, accepting a lossless
+    prefix by rejection sampling. The race's wasted tokens become accepted
+    ones; the server's per-token decode dispatches become per-round ones.
+
+    Timeline honesty: a round's drafts leave the device at its local
+    virtual frontier, cross the request's sampled uplink, are scored no
+    earlier than their arrival (``verify_step(at=...)``), and the verdict
+    crosses the downlink before the next window may start. Committed tokens
+    are delivered through the request's normal ``ServerTokenStream`` — one
+    delivery path, one QoE series, shared with race mode.
+
+    Adaptive k: an EMA of per-round acceptance doubles the window (up to
+    ``SPEC_K_MAX``) while drafts keep landing and halves it when they
+    don't; if acceptance collapses the session falls back to plain server
+    decode (``end_verify``) and cancels the device — exactly the state a
+    race-mode server winner would be in."""
+
+    pull_driven = True
+
+    # adaptive-k policy knobs (powers of two; see engine._spec_k_floor)
+    EMA_ALPHA = 0.5
+    GROW_AT = 0.75
+    SHRINK_AT = 0.4
+    COLLAPSE_AT = 0.125
+    COLLAPSE_MIN_ROUNDS = 3
+
+    def __init__(self, dev, srv_stream, k_init: int = 4):
+        self.dev = dev                      # DeviceDraftSession
+        self.srv = srv_stream               # ServerTokenStream (verify rid)
+        self.server = srv_stream.server     # shared BatchedServer
+        self.rid = srv_stream.rid
+        self.k = max(1, min(int(k_init), SPEC_K_MAX))
+        self.state = "init"     # init -> wait_first -> ready -> done|fallback
+        self.rounds = 0
+        self.accepted = 0
+        self.scored = 0
+        self.accept_ema = 1.0
+        self.fell_back = False
+        self._first_tok: Optional[int] = None
+        self._first_t: Optional[float] = None
+
+    # -- event-loop interface ----------------------------------------------
+
+    def candidate_time(self) -> Optional[float]:
+        """Virtual time of the session's next self-driven action: the device
+        prefill (init) or the next draft window (ready). ``None`` while
+        blocked on the server's first token or after done/fallback."""
+        if self.state == "init" or self.state == "ready":
+            return self.dev.t
+        return None
+
+    def on_first_token(self, tok: int, t: float) -> None:
+        """The server's committed prefill token reached the device: resync
+        the draft chain onto it (whatever the device drew at position S) and
+        open the round loop."""
+        self._first_tok = int(tok)
+        self._first_t = float(t)
+        if self.state != "wait_first":
+            return                  # device prefill still pending: sync there
+        if self.server.is_finished(self.rid):
+            self.state = "done"
+            return
+        self.dev.force_pending(self._first_tok)
+        self.dev.t = max(self.dev.t, self._first_t)
+        self.state = "ready"
+
+    def run_round(self, rng) -> None:
+        """Execute the session's next action at the loop frontier: the
+        device prefill, or one full draft -> uplink -> verify -> downlink ->
+        rewind round."""
+        if self.state == "init":
+            try:
+                self.dev.prefill()
+            except RuntimeError:
+                # device KV pool exhausted: plain server decode already runs
+                self._fallback()
+                return
+            self.state = "wait_first"
+            if self._first_tok is not None:   # first token already landed
+                self.on_first_token(self._first_tok, self._first_t)
+            return
+        if self.state != "ready":
+            return
+        slot = self.server.slots.get(self.rid)
+        if slot is not None and slot.remaining <= 1:
+            # a verify round always commits >= 2 tokens (accepted prefix +
+            # bonus/correction) — the final token must decode plainly. This
+            # is graceful retirement, not a fallback.
+            self._retire()
+            return
+        w = self.dev.draft_window(self.k)
+        if w is None:
+            self._fallback()        # device saturated / pool exhausted
+            return
+        drafts, dev_probs, t_draft_done = w
+        res = self.server.verify_step(
+            self.rid, drafts, dev_probs, at=t_draft_done + self.srv.uplink,
+        )
+        if res is None:
+            self._fallback()        # preempted / finished / out of budget
+            return
+        self.dev.draft_rewind(res["accepted"], res["tokens"][-1])
+        self.rounds += 1
+        self.accepted += res["accepted"]
+        self.scored += res["k"]
+        rate = res["accepted"] / res["k"]
+        self.accept_ema = (
+            (1 - self.EMA_ALPHA) * self.accept_ema + self.EMA_ALPHA * rate
+        )
+        if self.accept_ema >= self.GROW_AT:
+            self.k = min(self.k * 2, SPEC_K_MAX)
+        elif self.accept_ema < self.SHRINK_AT:
+            self.k = max(self.k // 2, 1)
+        # the verdict crosses the downlink before the next window can start
+        self.dev.t = max(self.dev.t, res["t_end"] + self.srv.downlink)
+        if self.server.is_finished(self.rid):
+            self.state = "done"
+        elif (self.rounds >= self.COLLAPSE_MIN_ROUNDS
+              and self.accept_ema < self.COLLAPSE_AT):
+            self._fallback()        # acceptance collapsed: drafting is waste
+
+    def _fallback(self) -> None:
+        """Revert to plain autonomous server decode (race-winner state):
+        the verify rid resumes fused batched decode losslessly (replayable
+        sampling) and the device stops drafting."""
+        self.fell_back = True
+        self.state = "fallback"
+        self.server.end_verify(self.rid)
+        self.dev.cancel()
+
+    def _retire(self) -> None:
+        """Normal end-of-request wind-down: hand the tail back to plain
+        server decode without marking the session as a fallback."""
+        self.state = "done"
+        self.server.end_verify(self.rid)
+        self.dev.cancel()
+
+    @property
+    def verify_positions(self) -> int:
+        """Server positions scored inside fused verify dispatches — priced
+        like prefill tokens (batch-scored), not decode tokens."""
+        return self.server.verify_positions.get(self.rid, 0)
 
 
 class DiSCoServer:
@@ -121,7 +281,11 @@ class DiSCoServer:
         cancel_losers: bool = True,
         allow_migration: bool = True,
         slo_aware_dispatch: bool = True,
+        mode: str = "race",
+        spec_k_init: int = 4,
     ):
+        if mode not in ("race", "speculative"):
+            raise ValueError(f"mode must be 'race' or 'speculative' (got {mode!r})")
         self.sched = scheduler
         self.device = device
         self.server = server
@@ -133,6 +297,14 @@ class DiSCoServer:
         # cost-policy dispatch — the single-endpoint benchmark baselines)
         self.slo_aware_dispatch = slo_aware_dispatch
         self.slo_dispatch_overrides = 0
+        # "speculative": requests the dispatch policy sends to BOTH
+        # endpoints run device-draft / server-verify rounds instead of the
+        # race (requires a speculative BatchedServer and a draftable device
+        # engine; ineligible requests fall back to race-and-cancel)
+        self.mode = mode
+        self.spec_k_init = int(spec_k_init)
+        self.spec_requests = 0       # requests served speculatively
+        self.spec_fallbacks = 0      # sessions that reverted to plain decode
         self._frontier = 0.0
         self._next_rid = 0
 
@@ -158,6 +330,11 @@ class DiSCoServer:
         Accepts either ``serve(prompt, max_new, **request_fields)`` or a
         ready-built ``Request`` (alone — extra arguments would be silently
         shadowed by the request's own fields, so they are rejected)."""
+        warnings.warn(
+            "DiSCoServer.serve() is a deprecated shim; build a Request and "
+            "use serve_many([req])",
+            DeprecationWarning, stacklevel=2,
+        )
         at = max(self._frontier, self.server.server.clock)
         if isinstance(prompt, Request):
             if max_new is not None or req_kwargs:
@@ -202,19 +379,27 @@ class DiSCoServer:
             # pull-driven (device-side) candidates: an un-activated stream's
             # candidate is its virtual start time; an activated one computes
             # at most one fused chunk beyond the frontier to learn its next
-            # event time
-            best = None   # (t, rid, req, stream, is_activation)
+            # event time. Speculative sessions are pull-driven too: their
+            # candidate is the next self-driven action (device prefill or
+            # draft window), executed only once the frontier reaches it.
+            best = None   # (t, rid, req, stream, kind)
             for r in live:
+                if r.spec is not None:
+                    t = r.spec.candidate_time()
+                    if t is not None:
+                        cand = (t, r.rid, r, r.spec, "spec")
+                        if best is None or cand[:2] < best[:2]:
+                            best = cand
                 for st in self._streams_of(r):
                     if not st.pull_driven:
                         continue
                     if not st.activated:
-                        cand = (st.start_at, r.rid, r, st, True)
+                        cand = (st.start_at, r.rid, r, st, "activate")
                     else:
                         t = st.candidate_time()
                         if t is None:
                             continue
-                        cand = (t, r.rid, r, st, False)
+                        cand = (t, r.rid, r, st, "event")
                     if best is None or cand[:2] < best[:2]:
                         best = cand
 
@@ -231,7 +416,7 @@ class DiSCoServer:
                     t = st.candidate_time()
                     if t is None:
                         continue
-                    cand = (t, r.rid, r, st, False)
+                    cand = (t, r.rid, r, st, "event")
                     if best is None or cand[:2] < best[:2]:
                         best = cand
 
@@ -246,10 +431,13 @@ class DiSCoServer:
                 order.append(r.rid)
                 continue
 
-            t, _, r, st, is_activation = best
+            t, _, r, st, kind = best
             self._frontier = max(self._frontier, t)
-            if is_activation:
+            if kind == "activate":
                 st.activate()   # dispatch the device prefill at its start time
+                continue
+            if kind == "spec":
+                st.run_round(self.rng)   # prefill, or one draft→verify round
                 continue
             self._on_event(r, st, st.pop())
 
@@ -309,6 +497,21 @@ class DiSCoServer:
         )
         self.sched.observe_prompt_length(req.prompt_len)
         r = _Req(rid=rid, req=req, decision=decision)
+        if self._speculative_eligible(decision):
+            # device-draft / server-verify replaces the race: ONE delivery
+            # stream (the server's), the device drafts instead of decoding
+            self.spec_requests += 1
+            st = self.server.open_verify_stream(
+                req, self.rng, start_at=req.arrival
+            )
+            r.streams[Endpoint.SERVER] = st
+            r.all_streams.append(st)
+            dev = self.device.open_draft_session(
+                req, self.rng, start_at=req.arrival
+            )
+            r.all_streams.append(dev)
+            r.spec = _SpecSession(dev, st, k_init=self.spec_k_init)
+            return r
         if decision.use_server:
             st = self.server.open_stream(req, self.rng, start_at=req.arrival)
             r.streams[Endpoint.SERVER] = st
@@ -320,6 +523,20 @@ class DiSCoServer:
             r.streams[Endpoint.DEVICE] = st
             r.all_streams.append(st)
         return r
+
+    def _speculative_eligible(self, decision: DispatchDecision) -> bool:
+        """A request runs draft/verify only when the dispatch policy would
+        have engaged BOTH endpoints anyway (use_server alone → plain server
+        decode is already optimal; use_device alone → there is no verifier)
+        and both engines support it. Ineligible requests keep the race —
+        ``mode="speculative"`` degrades per-request, never hard-fails."""
+        return (
+            self.mode == "speculative"
+            and decision.use_server
+            and decision.use_device
+            and getattr(self.device, "supports_draft", False)
+            and getattr(self.server, "supports_verify", False)
+        )
 
     def _streams_of(self, r: _Req) -> list:
         out = [st for st in r.streams.values() if not st.done]
@@ -353,6 +570,10 @@ class DiSCoServer:
                 self.sched.migration_controller.config.consumption_rate, ev.t
             )
             r.tokens = [ev.token]
+            if r.spec is not None:
+                # resync the device drafter onto the server's committed
+                # token: the next window drafts continuations of ev.token
+                r.spec.on_first_token(ev.token, ev.t)
             if self.cancel_losers:
                 for other in r.streams.values():
                     if other is not st:
@@ -363,7 +584,10 @@ class DiSCoServer:
             if len(r.tokens) >= r.max_new:
                 r.done = True
                 return
-            if not self.allow_migration:
+            if not self.allow_migration or r.spec is not None:
+                # speculative requests already use both endpoints in concert;
+                # migrating the delivery stream mid-flight would orphan the
+                # verify slot
                 return
             r.plan = self.sched.plan_migration(
                 current=r.winner,
@@ -438,11 +662,27 @@ class DiSCoServer:
 
         generated = sum(st.tokens_generated for st in r.all_streams)
         delivered = len(r.tokens)
+        # an ACCEPTED draft was computed on the device AND delivered through
+        # the server's verify round — useful work on both ends, not waste.
+        # Rejected drafts stay in the waste: the device computed them and the
+        # server scored them for nothing (satellite accounting contract).
+        useful = delivered + (r.spec.accepted if r.spec is not None else 0)
         cost = 0.0
         for st in r.all_streams:
             if st.prefilled:
                 cost += self.sched.cost_model.prefill_cost(st.kind) * st.prefill_tokens
             cost += self.sched.cost_model.decode_cost(st.kind) * st.tokens_generated
+        if r.spec is not None:
+            if r.spec.fell_back:
+                self.spec_fallbacks += 1
+            # verify rounds score k+1 positions in ONE teacher-forced
+            # dispatch — prefill-shaped work, not k+1 sequential decode
+            # steps. `generated` above priced them at decode rate; re-price
+            # the delta so unified cost reflects the batched scoring.
+            cm = self.sched.cost_model
+            cost += (
+                cm.prefill_cost(Endpoint.SERVER) - cm.decode_cost(Endpoint.SERVER)
+            ) * r.spec.verify_positions
 
         winner = r.winner if r.winner is not None else (
             Endpoint.SERVER if r.decision.use_server else Endpoint.DEVICE
@@ -463,6 +703,6 @@ class DiSCoServer:
             migrated=r.migrated,
             delayed_tokens=r.buf.delayed_tokens() if r.buf is not None else 0,
             generated_tokens=generated,
-            wasted_tokens=generated - delivered,
+            wasted_tokens=generated - useful,
             qoe=qoe,
         )

@@ -41,6 +41,7 @@ __all__ = [
     "NetworkModel",
     "TokenEvent",
     "DeviceTokenStream",
+    "DeviceDraftSession",
     "ServerTokenStream",
     "DeviceEndpoint",
     "ServerEndpoint",
@@ -150,6 +151,89 @@ class DeviceTokenStream:
     @property
     def tokens_generated(self) -> int:
         return self._src.tokens_emitted
+
+    @property
+    def decode_dispatches(self) -> int:
+        return self._src.decode_dispatches
+
+
+class DeviceDraftSession:
+    """Device half of speculative decoding (draft/verify mode): fused draft
+    windows on the user's dedicated engine, with a device-local virtual
+    clock.
+
+    Unlike :class:`DeviceTokenStream`, this session delivers nothing itself
+    — every committed token reaches the user through the server's verify
+    stream (one delivery path, one QoE series). The session's virtual
+    frontier ``t`` advances by each window's measured compute and by the
+    driver's ``not_before`` round-trip bounds (a window cannot start before
+    the previous verdict crossed the downlink)."""
+
+    kind = Endpoint.DEVICE
+
+    def __init__(self, source: EngineStream, start_at: float):
+        self._src = source
+        self.t = float(start_at)          # device-local virtual frontier
+        self.prefill_s: Optional[float] = None
+
+    def prefill(self) -> tuple[int, float]:
+        """Dispatch the draft-mode prefill. Returns ``(token, t_done)`` —
+        the device's own position-S draw (normally resynced away via
+        :meth:`force_pending`) and the virtual completion time."""
+        tok0, dur = self._src.draft_prefill()
+        self.prefill_s = dur
+        self.t += dur
+        return tok0, self.t
+
+    def force_pending(self, tok: int) -> None:
+        """Resync the pending chain onto the server's committed token."""
+        self._src.force_pending(tok)
+
+    def draft_window(self, k: int, not_before: Optional[float] = None):
+        """Dispatch one draft window. Returns ``(drafts, device_probs,
+        t_done)`` — the draft tokens, their device sampling distributions,
+        and the virtual time the window's compute finishes — or ``None``
+        when the device cannot draft (saturated / pool exhausted)."""
+        if not_before is not None:
+            self.t = max(self.t, float(not_before))
+        w = self._src.draft_window(k)
+        if w is None:
+            return None
+        drafts, probs, dur = w
+        self.t += dur
+        return drafts, probs, self.t
+
+    def draft_rewind(self, accepted: int, token: int) -> list:
+        """Apply the server verdict (instant host bookkeeping)."""
+        return self._src.draft_rewind(accepted, token)
+
+    def cancel(self, at: Optional[float] = None) -> None:
+        """Local cancellation is instantaneous (no network hop)."""
+        self._src.cancel()
+
+    @property
+    def done(self) -> bool:
+        return self._src.done
+
+    @property
+    def prefill_tokens(self) -> int:
+        return int(self._src._prompt.shape[0])
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_s is not None
+
+    @property
+    def tokens_drafted(self) -> int:
+        """Draft tokens the device computed — rejected ones included (they
+        are the device's wasted decode compute)."""
+        return self._src.tokens_emitted
+
+    @property
+    def tokens_generated(self) -> int:
+        """Driver-accounting alias: drafts are the device's generated (and,
+        when rejected, wasted) tokens."""
+        return self.tokens_drafted
 
     @property
     def decode_dispatches(self) -> int:
@@ -326,6 +410,22 @@ class DeviceEndpoint:
             start_at, self.kind,
         )
 
+    @property
+    def supports_draft(self) -> bool:
+        """True when this device can serve speculative draft windows (a
+        rewindable pure-attention cache)."""
+        return self.engine.supports_draft
+
+    def open_draft_session(self, req: Request,
+                           rng: Optional[np.random.Generator] = None,
+                           start_at: float = 0.0) -> DeviceDraftSession:
+        """Open the device half of a draft/verify session. The caller (the
+        DiSCo driver) must resolve the request's seed so device drafts and
+        server verification share one sampling stream."""
+        return DeviceDraftSession(
+            self.engine.open_stream(self._resolve(req)), start_at,
+        )
+
 
 class ServerEndpoint:
     """Shared server: requests from ALL live DiSCo sessions land in one
@@ -345,9 +445,9 @@ class ServerEndpoint:
         self.network = network if network is not None else NetworkModel()
 
     def _open(self, req: Request, rng: np.random.Generator,
-              start_at: float) -> ServerTokenStream:
+              start_at: float, verify: bool = False) -> ServerTokenStream:
         rtt = self.network.sample_rtt(rng)
-        rid = self.server.submit(req, at=start_at + rtt / 2.0)
+        rid = self.server.submit(req, at=start_at + rtt / 2.0, verify=verify)
         return ServerTokenStream(
             self.server, rid, start_at, downlink=rtt / 2.0,
             prefill_tokens=req.prompt_len, uplink=rtt / 2.0,
@@ -356,6 +456,20 @@ class ServerEndpoint:
     def open_stream(self, req: Request, rng: np.random.Generator,
                     start_at: float = 0.0) -> ServerTokenStream:
         return self._open(req, rng, start_at)
+
+    @property
+    def supports_verify(self) -> bool:
+        """True when the backing server scores draft windows
+        (``BatchedServer(speculative=True)``)."""
+        return getattr(self.server, "speculative", False)
+
+    def open_verify_stream(self, req: Request, rng: np.random.Generator,
+                           start_at: float = 0.0) -> ServerTokenStream:
+        """Submit ``req`` in VERIFY mode: after its admission prefill the
+        request decodes only through driver-fed ``verify_step`` rounds, yet
+        delivery, cancellation, and waste accounting ride this same stream
+        — the one delivery path both speculative and race modes share."""
+        return self._open(req, rng, start_at, verify=True)
 
     def open_replay_stream(self, req: Request, generated,
                            rng: np.random.Generator,

@@ -45,16 +45,20 @@ from repro.models import (
     SamplerConfig,
     decode_n,
     decode_step,
+    draft_n,
     init_cache,
     init_paged_pages,
     paged_decode_n,
+    paged_draft_n,
     paged_prefill,
     paged_suffix_prefill,
+    paged_verify_n,
     prefill,
     request_key,
     sample_tokens,
     sampler_operands,
     supports_paged,
+    verify_n,
 )
 from repro.kernels.compat import on_tpu
 from repro.models.config import ModelConfig
@@ -140,6 +144,34 @@ def _tail_sizes(chunk: int) -> list[int]:
     return sorted({_tail_steps(n, chunk) for n in range(1, chunk + 1)})
 
 
+# Speculative draft-window sizes are powers of two: the verify scan length is
+# k+1 and the device draft scan length is k or k+1 (one-token resync after a
+# fully accepted window), so restricting k to powers of two bounds the
+# distinct compiled scan lengths exactly like _tail_steps does for decode —
+# warmup precompiles them all and adaptive-k never compiles mid-trace.
+SPEC_K_MAX = 8
+
+
+def _spec_k_sizes(k_max: int = SPEC_K_MAX) -> list[int]:
+    """The draft-window sizes adaptive k can visit: powers of two <= k_max."""
+    return [1 << i for i in range(max(int(k_max), 1).bit_length())
+            if (1 << i) <= k_max]
+
+
+def _spec_k_floor(n: int, k_max: int = SPEC_K_MAX) -> int:
+    """Largest warm draft-window size <= n (0 when n < 1)."""
+    if n < 1:
+        return 0
+    return min(1 << (int(n).bit_length() - 1), k_max)
+
+
+def _spec_draft_sizes(k_max: int = SPEC_K_MAX) -> list[int]:
+    """Draft-window scan lengths T = chain + k - 1 a device stream can
+    dispatch: the pending chain is one token (post-rejection correction or
+    warmup resync) or two (last draft + bonus after a full accept)."""
+    return sorted({c + k - 1 for c in (1, 2) for k in _spec_k_sizes(k_max)})
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: list[int]
@@ -206,7 +238,32 @@ def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
             sampler=ops, keys=keys,
         )
 
-    return prefill_fn, suffix_fn, decode_fn
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def draft_fn(params, pages, bt, lengths, forced, use_forced, active, keys, ops):
+        """Speculative draft window (device half): a teacher-forced resync
+        prefix then sampled drafting, one fused dispatch, emitting the
+        device's sampling distribution per position. The scan length (shape
+        of ``forced``) keys the jit cache; ``use_forced`` is a runtime
+        operand so different resync lengths share a compile."""
+        return paged_draft_n(
+            params, cfg, pages, bt, lengths, forced, use_forced,
+            max_len=max_len, active=active, use_kernel=use_kernel,
+            sampler=ops, keys=keys,
+        )
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def verify_fn(params, pages, bt, lengths, tokens, drafts, dev_probs,
+                  active, keys, ops):
+        """Speculative verify (server half): score k draft positions plus
+        the bonus position in one fused dispatch and return the
+        rejection-sampling verdict (see ``models.paged.paged_verify_n``)."""
+        return paged_verify_n(
+            params, cfg, pages, bt, lengths, tokens, drafts, dev_probs,
+            max_len=max_len, active=active, use_kernel=use_kernel,
+            sampler=ops, keys=keys,
+        )
+
+    return prefill_fn, suffix_fn, decode_fn, draft_fn, verify_fn
 
 
 def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
@@ -302,7 +359,8 @@ class InferenceEngine:
                  num_blocks: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
                  sampler: Optional[SamplerConfig] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculative: bool = False):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -334,7 +392,8 @@ class InferenceEngine:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             (self._paged_prefill_fn, self._paged_suffix_fn,
-             self._paged_decode_fn) = _make_paged_step_fns(
+             self._paged_decode_fn, self._paged_draft_fn,
+             self._paged_verify_fn) = _make_paged_step_fns(
                 cfg, max_len, self.use_kernel
             )
 
@@ -371,9 +430,26 @@ class InferenceEngine:
             return decode_n(params, cfg, cache, token, num_steps,
                             sampler=ops, keys=keys)
 
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _draft(params, cache, forced, use_forced, keys, ops):
+            # unguarded: EngineStream.draft_window caps T host-side so the
+            # scan never writes past max_len - 1 (same contract as _decode_n)
+            return draft_n(params, cfg, cache, forced, use_forced,
+                           sampler=ops, keys=keys)
+
         self._prefill = _prefill
         self._decode = _decode
         self._decode_n = _decode_n
+        self._draft = _draft
+        # speculative=True widens warmup to precompile the draft-window scan
+        # lengths so no XLA compile lands inside a virtual-timed draft round
+        self.speculative = bool(speculative)
+
+    @property
+    def supports_draft(self) -> bool:
+        """Speculative rollback trims ``lengths`` — sound only for pure
+        attention caches (recurrent/SSM state cannot be rewound)."""
+        return not self.cfg.has_ssm and not self.cfg.is_encoder
 
     # -- prefill -----------------------------------------------------------
 
@@ -402,6 +478,14 @@ class InferenceEngine:
         for n in _tail_sizes(self.decode_chunk):
             toks, cache = self._decode_n(self.params, cache, tok_dev, keys, ops, n)
             tok_dev = toks[-1]
+        if self.speculative and self.supports_draft:
+            for t in _spec_draft_sizes():
+                forced = jnp.zeros((t, batch), jnp.int32)
+                toks, _, cache = self._draft(
+                    self.params, cache, forced, jnp.zeros((t,), bool),
+                    keys, ops,
+                )
+                tok_dev = toks[-1]
         jax.block_until_ready(tok_dev)
 
     def _warmup_paged(self, prompt_len: int, prompt_lens: tuple) -> None:
@@ -415,6 +499,23 @@ class InferenceEngine:
             decode_chunk=self.decode_chunk, num_blocks=self.kv.pool.num_blocks,
             suffix_fn=self._paged_suffix_fn if self.kv.prefix is not None else None,
         )
+        if self.speculative and self.supports_draft:
+            # inactive rows write the trash block (NULL_BLOCK) and keep their
+            # lengths frozen, so precompiling on the live pool leaves it
+            # pristine
+            bt = jnp.zeros((1, self.max_blocks_per_row), jnp.int32)
+            keys = jnp.asarray(_zero_keys(1))
+            ops = _greedy_ops(1)
+            last = None
+            for t in _spec_draft_sizes():
+                toks, _, self.pages, _ = self._paged_draft_fn(
+                    self.params, self.pages, bt, jnp.zeros((1,), jnp.int32),
+                    jnp.zeros((t, 1), jnp.int32), jnp.zeros((t,), bool),
+                    jnp.zeros((1,), bool), keys, ops,
+                )
+                last = toks
+            if last is not None:
+                jax.block_until_ready(last)
 
     def _chunk_stream(self, cache, tok_dev, start_len: int, max_new: int,
                       keys=None, ops=None):
@@ -797,6 +898,16 @@ class EngineStream:
         # and the fork fallback's replay prompt both need them
         self._emitted: list[int] = []
         self._soft_admit = False      # fork fallback: pool-full => oom flag
+        # speculative draft mode (device half of draft/verify): the stream
+        # stops running its autonomous decode generator and instead serves
+        # fused draft windows that the driver verifies on the server
+        self._draft_mode = False
+        self._cache = None            # dense draft mode: the KV cache
+        self._cur_len = 0             # tokens whose KV is written
+        self._chain: list[int] = []   # committed tokens not yet in the KV
+        self._win_base = 0            # KV length covering the forced chain
+        self._win_k = 0
+        self._win_drafts: Optional[list[int]] = None
 
     @property
     def keys(self) -> np.ndarray:
@@ -901,6 +1012,10 @@ class EngineStream:
         if self.engine.paged and self._rid is not None:
             cache_tokens = None
             table = self.engine.kv.tables.get(self._rid)
+            if self._draft_mode:
+                # a mid-window cancel leaves unverified draft tokens in the
+                # KV rows, so sealed blocks must not enter the prefix index
+                table = None
             if table is not None and self.engine.kv.prefix is not None:
                 # the rows actually written: prompt + emitted, truncated to
                 # the covered entry count (the last token is not cached yet)
@@ -912,7 +1027,156 @@ class EngineStream:
     def cancel(self) -> None:
         self.cancelled = True
         self._chunks = None           # free the KV cache reference
+        self._cache = None            # dense draft mode: drop the cache too
         self._release()               # paged: blocks back to the pool now
+
+    # -- speculative draft mode (device half of draft/verify) ---------------
+    #
+    # The stream keeps a host-side (cur_len, chain) state machine instead of
+    # its autonomous decode generator: ``cur_len`` counts tokens whose KV is
+    # written, ``chain`` holds committed tokens not yet written (the next
+    # window teacher-forces them first). A window of k drafts dispatches
+    # T = len(chain) + k - 1 fused steps — the last forced step's sample IS
+    # draft 1 — and the verify verdict rewinds the cache by trimming lengths
+    # (pure-attention caches only; see ``InferenceEngine.supports_draft``).
+
+    def draft_prefill(self) -> tuple[int, float]:
+        """Prefill only, entering draft mode (no decode generator). Returns
+        ``(first_token, prefill_s)`` — the device's own position-S draw; the
+        driver resyncs the chain onto the server's committed prefill token
+        via :meth:`force_pending` before the first window."""
+        if not self.engine.supports_draft:
+            raise ValueError(
+                f"{self.engine.cfg.name}: draft mode needs a rewindable "
+                "(pure-attention) cache"
+            )
+        keys = self.keys
+        ops = self.ops
+        t0 = time.perf_counter()
+        if self.engine.paged:
+            self._rid = self.engine._next_rid
+            self.engine._next_rid += 1
+            tok0 = self.engine._paged_admit_prefill(
+                self._rid, self._prompt, keys=keys, ops=ops
+            )
+        else:
+            tok, cache = self.engine.prefill(
+                self._prompt[None, :], keys=keys, ops=ops
+            )
+            self._cache = cache
+            tok0 = int(tok[0])
+        self.prefill_s = time.perf_counter() - t0
+        self._elapsed = self.prefill_s
+        self._draft_mode = True
+        self._cur_len = int(self._prompt.shape[0])
+        self._chain = [tok0]
+        self.tokens_emitted = 1
+        self._last_tok = tok0
+        self._emitted.append(tok0)
+        return tok0, self.prefill_s
+
+    def force_pending(self, tok: int) -> None:
+        """Replace the pending (not yet KV-written) chain with the server's
+        committed continuation — the warmup resync: whatever the device drew
+        at position S, the stream's next window forces the server's token."""
+        del self._emitted[len(self._emitted) - len(self._chain):]
+        self._chain = [int(tok)]
+        self._emitted.append(int(tok))
+
+    def draft_window(self, k: int):
+        """Dispatch one fused draft window of up to ``k`` tokens (floored to
+        a warm power of two). Returns ``(drafts, device_probs, compute_s)``
+        — ``drafts`` the k sampled tokens, ``device_probs`` their (k, V)
+        sampling distributions for the server's rejection test — or ``None``
+        when the stream cannot draft (cache saturated / pool exhausted):
+        the driver falls back to plain server decode."""
+        if self._win_drafts is not None:
+            raise RuntimeError("draft_window before draft_rewind")
+        if not self._chain:
+            raise RuntimeError("draft mode has no pending chain")
+        m = len(self._chain)
+        cap = self.engine.max_len - self._cur_len - m   # max k this window
+        k_eff = _spec_k_floor(min(int(k), cap))
+        if k_eff < 1:
+            return None
+        n_steps = m + k_eff - 1
+        forced = np.zeros((n_steps, 1), np.int32)
+        forced[:m, 0] = self._chain
+        use_forced = np.zeros((n_steps,), bool)
+        use_forced[:m] = True
+        keys = jnp.asarray(self.keys)
+        ops = self.ops
+        t0 = time.perf_counter()
+        if self.engine.paged:
+            kv = self.engine.kv
+            if self._rid not in kv.tables or not kv.extend(
+                self._rid, self._cur_len + n_steps
+            ):
+                return None            # pool exhausted: fall back
+            bt = jnp.asarray(np.asarray(
+                [kv.tables[self._rid].padded(self.engine.max_blocks_per_row)],
+                np.int32,
+            ))
+            toks, probs, self.engine.pages, _ = self.engine._paged_draft_fn(
+                self.engine.params, self.engine.pages, bt,
+                jnp.asarray([self._cur_len], jnp.int32),
+                jnp.asarray(forced), jnp.asarray(use_forced),
+                jnp.ones((1,), bool), keys, ops,
+            )
+        else:
+            toks, probs, self._cache = self.engine._draft(
+                self.engine.params, self._cache, jnp.asarray(forced),
+                jnp.asarray(use_forced), keys, ops,
+            )
+        toks_np = np.asarray(jax.block_until_ready(toks))[:, 0]
+        probs_np = np.asarray(probs)[:, 0, :]
+        dur = time.perf_counter() - t0
+        self._cur_len += n_steps
+        if self.engine.paged:
+            self.engine.kv.tables[self._rid].num_tokens = self._cur_len
+        self._win_base = self._cur_len - (k_eff - 1)
+        self._win_k = k_eff
+        self._win_drafts = [int(t) for t in toks_np[m - 1:]]
+        self._chain = []
+        self.decode_dispatches += 1
+        self.tokens_emitted += k_eff   # rejected drafts count as device waste
+        self._elapsed += dur
+        return list(self._win_drafts), probs_np[m - 1:], dur
+
+    def draft_rewind(self, n_acc: int, token: int) -> list[int]:
+        """Apply the server's verify verdict: keep the first ``n_acc``
+        drafts, rewind the KV past the rejection point, and chain ``token``
+        (the server's residual correction, or the bonus token on a full
+        accept). Returns the tokens committed this round."""
+        if self._win_drafts is None:
+            raise RuntimeError("draft_rewind without a pending window")
+        k = self._win_k
+        a = min(max(int(n_acc), 0), k)
+        drafts = self._win_drafts
+        if a < k:
+            cur = self._win_base + a
+            self._chain = [int(token)]
+            committed = drafts[:a] + [int(token)]
+        else:
+            # full accept: the last draft's KV was never written (it is the
+            # window's final sample), so it re-enters as forced chain along
+            # with the server's bonus token
+            cur = self._win_base + k - 1
+            self._chain = [drafts[-1], int(token)]
+            committed = drafts + [int(token)]
+        if self.engine.paged:
+            if self._rid in self.engine.kv.tables:
+                self.engine.kv.shrink(self._rid, cur)
+                self.engine.kv.tables[self._rid].num_tokens = cur
+        else:
+            self._cache["lengths"] = jnp.asarray(np.full(
+                np.shape(self._cache["lengths"]), cur, np.int32
+            ))
+        self._cur_len = cur
+        self._win_drafts = None
+        self._last_tok = committed[-1]
+        self._emitted.extend(committed)
+        return committed
 
 
 # ---------------------------------------------------------------------------
@@ -1016,7 +1280,8 @@ class BatchedServer:
                  use_kernel: Optional[bool] = None,
                  sampler: Optional[SamplerConfig] = None,
                  admission: str = "edf",
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculative: bool = False):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -1058,7 +1323,8 @@ class BatchedServer:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             (self._prefill_row_paged, self._suffix_row_paged,
-             self._decode_chunk_paged) = (
+             self._decode_chunk_paged, self._draft_row_paged,
+             self._verify_row_paged) = (
                 _make_paged_step_fns(cfg, max_len, self.use_kernel)
             )
         elif prefix_cache:
@@ -1119,6 +1385,21 @@ class BatchedServer:
         # prefill cost the benchmark tracks
         self.prefill_tokens_computed = 0
         self.prefill_tokens_admitted = 0
+        # speculative verify (server half of draft/verify): verify rids stop
+        # decoding autonomously — their tokens land through verify_step
+        # rounds, which score k draft positions in one fused dispatch and
+        # charge block demand for accepted tokens only (shrink-on-reject)
+        if speculative and not self.paged:
+            raise ValueError(
+                "speculative verify requires a paged server (the rejected "
+                "tail is rewound by trimming the page table)"
+            )
+        self.speculative = bool(speculative)
+        self._verify_requested: set[int] = set()  # rids submitted verify=True
+        self.verify_rids: set[int] = set()        # admitted + still verifying
+        self.verify_positions: dict[int, int] = {}  # scored positions per rid
+        self.verify_rounds: dict[int, int] = {}
+        self.accepted_tokens: dict[int, int] = {}   # accepted drafts per rid
 
     @property
     def free_rows(self) -> list:
@@ -1149,6 +1430,8 @@ class BatchedServer:
                     self._suffix_row_paged if self.kv.prefix is not None else None
                 ),
             )
+            if self.speculative:
+                self._warmup_verify()
             self._warm = True
             return
         tok = None
@@ -1175,13 +1458,47 @@ class BatchedServer:
         self.cache = init_cache(self.cfg, self.max_slots, self.max_len)
         self._warm = True
 
+    def _warmup_verify(self) -> None:
+        """Precompile every verify scan length (k+1 for each warm k) so no
+        XLA compile lands inside a virtual-timed verify round. Inactive rows
+        write the trash block and keep their lengths frozen, so running on
+        the live pool leaves it pristine."""
+        R = self.max_slots
+        V = self.cfg.vocab
+        bt = jnp.zeros((R, self.max_blocks_per_row), jnp.int32)
+        lengths = jnp.zeros((R,), jnp.int32)
+        tokens = jnp.zeros((R,), jnp.int32)
+        inactive = jnp.zeros((R,), bool)
+        keys = jnp.asarray(_zero_keys(R))
+        ops = _greedy_ops(R)
+        last = None
+        for k in _spec_k_sizes():
+            out = self._verify_row_paged(
+                self.params, self.pages, bt, lengths, tokens,
+                jnp.zeros((k, R), jnp.int32),
+                jnp.full((k, R, V), 1.0 / V, jnp.float32),
+                inactive, keys, ops,
+            )
+            self.pages = out[5]
+            last = out[0]
+        if last is not None:
+            jax.block_until_ready(last)
+
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, req: Request, at: Optional[float] = None) -> int:
+    def submit(self, req: Request, at: Optional[float] = None,
+               verify: bool = False) -> int:
         """Enqueue one :class:`~repro.serving.request.Request`, arriving at
         virtual time ``at`` (defaults to ``max(clock, req.arrival)``).
         Admission order is deadline-aware (see class docstring); the
         request's ``slo.ttft_deadline`` anchors at the arrival time.
+
+        ``verify=True`` (speculative servers only) admits the request in
+        VERIFY mode: after its admission prefill it does not decode
+        autonomously — its tokens land through :meth:`verify_step` rounds
+        driven by a device draft stream. A verify rid preempted for memory
+        silently reverts to plain decode on re-admission (``verify_step``
+        returns ``None``; the driver falls back).
 
         The request's ``seed`` keys its sampling stream (defaults to the
         server-local rid) and its ``sampler`` (server default when None)
@@ -1189,8 +1506,12 @@ class BatchedServer:
         preemption, so a preempted-then-replayed row regenerates exactly its
         pre-preemption continuation. Returns the server-local rid."""
         req = _require_request(req, "BatchedServer.submit")
+        if verify and not self.speculative:
+            raise ValueError("verify=True requires a speculative server")
         rid = self.next_id
         self.next_id += 1
+        if verify:
+            self._verify_requested.add(rid)
         arrive = max(self.clock, req.arrival) if at is None else float(at)
         # the TTFT deadline anchors at the CLIENT-side arrival: an explicit
         # network-adjusted ``at`` (the endpoint path: at = arrival + uplink)
@@ -1227,6 +1548,8 @@ class BatchedServer:
             return
         self._cancel_due.pop(rid, None)
         self.cancelled.add(rid)
+        self.verify_rids.discard(rid)
+        self._verify_requested.discard(rid)
         if rid in self.slots:
             slot = self.slots.pop(rid)
             row = self.rows.pop(rid)
@@ -1287,6 +1610,8 @@ class BatchedServer:
         for rid in done:
             slot = self.slots.pop(rid)
             self.completed[rid] = slot.tokens
+            self.verify_rids.discard(rid)
+            self._verify_requested.discard(rid)
             row = self.rows.pop(rid)
             if self.paged:
                 # blocks back to the pool; sealed blocks stay warm for the
@@ -1449,6 +1774,8 @@ class BatchedServer:
         )
         self.rows[rid] = row
         self.row_len[row] = s
+        if rid in self._verify_requested:
+            self.verify_rids.add(rid)
 
     # -- paged capacity (extend-on-decode + recompute preemption) ----------
 
@@ -1464,6 +1791,11 @@ class BatchedServer:
         the unsealed tail). Its TTFT and delivered events are unaffected."""
         slot = self.slots.pop(rid)
         row = self.rows.pop(rid)
+        # a preempted verify rid reverts to plain decode on re-admission:
+        # its driver sees verify_step -> None and falls back losslessly
+        # (replayable sampling makes the resumed continuation identical)
+        self.verify_rids.discard(rid)
+        self._verify_requested.discard(rid)
         self.kv.release(rid, cache_tokens=self._slot_cache_tokens(slot, row))
         self.kv.preemptions += 1
         self.queue.insert(0, _Queued(
@@ -1488,7 +1820,7 @@ class BatchedServer:
         coming chunk, oldest admission first; when the pool runs dry (after
         LRU-evicting cached prefixes), preempt the most relaxed-deadline
         request and retry."""
-        for rid in sorted(self.slots, key=lambda r: self.admit_seq[r]):
+        for rid in sorted(need, key=lambda r: self.admit_seq[r]):
             if rid not in self.slots:
                 continue                      # preempted by an older row
             row = self.rows[rid]
@@ -1506,6 +1838,12 @@ class BatchedServer:
                     need[rid] = max(0, min(need[rid], cap - self.row_len[row]))
                 break
 
+    def _decodable(self) -> list[int]:
+        """Active rids the decode tick drives: verify rids are excluded —
+        their tokens land through ``verify_step`` rounds, and letting them
+        spin zero-work decode ticks would inflate the virtual clock."""
+        return [rid for rid in self.slots if rid not in self.verify_rids]
+
     def _decode_tick(self) -> None:
         """Decode tick: one fused chunk for all active rows (single dispatch
         + host sync). Per-token virtual times are interpolated across the
@@ -1514,16 +1852,20 @@ class BatchedServer:
         need = {
             rid: min(
                 self.decode_chunk,
-                slot.remaining,
+                self.slots[rid].remaining,
                 max(0, (self.max_len - 1) - self.row_len[self.rows[rid]]),
             )
-            for rid, slot in self.slots.items()
+            for rid in self._decodable()
         }
+        if not need:
+            return
         if self.paged:
             self._ensure_block_capacity(need)
             if not self.slots:
                 return
             need = {rid: n for rid, n in need.items() if rid in self.slots}
+            if not need:
+                return
             for rid in self.slots:        # tables may have grown (or moved)
                 self.block_tables[self.rows[rid]] = self.kv.tables[rid].padded(
                     self.max_blocks_per_row
@@ -1532,7 +1874,8 @@ class BatchedServer:
         active = np.zeros((self.max_slots,), bool)
         keys = np.zeros((self.max_slots, 2), np.uint32)
         row_samplers = [None] * self.max_slots
-        for rid, slot in self.slots.items():
+        for rid in need:
+            slot = self.slots[rid]
             row = self.rows[rid]
             tokens[row] = slot.tokens[-1]
             active[row] = True
@@ -1562,7 +1905,8 @@ class BatchedServer:
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         dur = time.perf_counter() - t0
         self.clock = t_start + dur
-        for rid, slot in self.slots.items():
+        for rid in need:
+            slot = self.slots[rid]
             row = self.rows[rid]
             n_valid = need[rid]
             for i in range(n_valid):
@@ -1578,6 +1922,125 @@ class BatchedServer:
                 self.cancel_lag_tokens += n_valid
             self.decode_dispatches[rid] = self.decode_dispatches.get(rid, 0) + 1
 
+    # -- speculative verify rounds (server half of draft/verify) -----------
+
+    def verify_step(self, rid: int, drafts, device_probs,
+                    at: Optional[float] = None):
+        """One draft→verify round for a verify rid: score the drafts (plus
+        one bonus position) in a single fused dispatch, accept a lossless
+        prefix by rejection sampling (``models.sampling.speculative_accept``)
+        and deliver ``accepted + 1`` tokens — the accepted drafts and either
+        the residual correction (on a rejection) or the server's own bonus
+        sample (on a full accept). The rejected KV tail is rewound within the
+        same tick (``kv.shrink``): block demand is charged for accepted
+        tokens only.
+
+        ``drafts``: list of k draft token ids; ``device_probs``: (k, vocab)
+        device sampling distributions for them. k is floored to a warm power
+        of two (extra drafts are ignored, not scored). Returns a dict with
+        ``accepted`` (drafts kept), ``k`` (drafts scored), ``tokens`` (the
+        committed tokens, ``accepted + 1`` of them), and ``t_start``/
+        ``t_end`` virtual bounds — or ``None`` when the round cannot run
+        (rid finished, cancelled, preempted, saturated, or out of blocks):
+        the driver must ``end_verify`` and fall back to plain decode.
+
+        ``at`` is the virtual arrival time of the drafts (the device's
+        draft-completion time plus the uplink): the round starts no
+        earlier, mirroring ``submit(at=...)``."""
+        if at is not None:
+            self.clock = max(self.clock, float(at))
+        self._apply_due_cancels()
+        self._retire_done()
+        if rid not in self.slots or rid not in self.verify_rids:
+            return None
+        slot = self.slots[rid]
+        row = self.rows[rid]
+        L = self.row_len[row]
+        # the scan writes k+1 entries from L (forced last token + k drafts)
+        # and must stay under max_len - 1; committing up to k+1 tokens must
+        # fit the request's remaining budget
+        k = _spec_k_floor(min(len(drafts), (self.max_len - 2) - L,
+                              slot.remaining - 1))
+        if k < 1:
+            return None
+        self._ensure_block_capacity({rid: k + 1})
+        if rid not in self.slots:
+            return None                   # rid itself was the preempt victim
+        self.block_tables[row] = self.kv.tables[rid].padded(
+            self.max_blocks_per_row
+        )
+        V = self.cfg.vocab
+        tokens = np.zeros((self.max_slots,), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        keys = np.zeros((self.max_slots, 2), np.uint32)
+        row_samplers = [None] * self.max_slots
+        tokens[row] = slot.tokens[-1]
+        active[row] = True
+        if slot.key is not None:
+            keys[row] = slot.key
+        row_samplers[row] = slot.sampler
+        ops = sampler_operands(row_samplers)
+        drafts_arr = np.zeros((k, self.max_slots), np.int32)
+        drafts_arr[:, row] = np.asarray(drafts[:k], np.int32)
+        # frozen rows still flow through the acceptance math: a uniform fill
+        # keeps their (discarded) verdicts finite
+        dev_probs = np.full((k, self.max_slots, V), 1.0 / V, np.float32)
+        dev_probs[:, row, :] = np.asarray(device_probs[:k], np.float32)
+        t_start = self.clock
+        t0 = time.perf_counter()
+        n_acc, _, corrections, srv_toks, _, self.pages, _ = (
+            self._verify_row_paged(
+                self.params, self.pages, jnp.asarray(self.block_tables),
+                jnp.asarray(np.asarray(self.row_len, np.int32)),
+                jnp.asarray(tokens), jnp.asarray(drafts_arr),
+                jnp.asarray(dev_probs), jnp.asarray(active),
+                jnp.asarray(keys), ops,
+            )
+        )
+        a = int(np.asarray(jax.block_until_ready(n_acc))[row])
+        dur = time.perf_counter() - t0
+        self.clock = t_start + dur
+        if a < k:
+            out = [int(t) for t in drafts[:a]]
+            out.append(int(np.asarray(corrections)[row, a]))
+        else:
+            out = [int(t) for t in drafts[:k]]
+            out.append(int(np.asarray(srv_toks)[k, row]))  # bonus sample
+        # rewind: keep the forced token + accepted drafts, free the rest
+        new_len = L + a + 1
+        self.kv.shrink(rid, new_len)
+        self.kv.tables[rid].num_tokens = new_len
+        self.block_tables[row] = self.kv.tables[rid].padded(
+            self.max_blocks_per_row
+        )
+        self.row_len[row] = new_len
+        n_out = len(out)                  # a + 1
+        slot.tokens.extend(out)
+        slot.remaining -= n_out
+        # all k+1 scored positions count as generated: the rejected tail is
+        # server compute the race would also have wasted — wasted_ratio =
+        # (generated - delivered) / generated keeps its meaning
+        self.generated[rid] += k + 1
+        self.verify_positions[rid] = self.verify_positions.get(rid, 0) + k + 1
+        self.verify_rounds[rid] = self.verify_rounds.get(rid, 0) + 1
+        self.accepted_tokens[rid] = self.accepted_tokens.get(rid, 0) + a
+        self.decode_dispatches[rid] = self.decode_dispatches.get(rid, 0) + 1
+        for i, tok in enumerate(out):
+            self.events[rid].append((tok, t_start + (i + 1) * dur / n_out))
+        if rid in self._cancel_due:
+            self.cancel_lag_tokens += n_out
+        self._retire_done()
+        return {"accepted": a, "k": k, "tokens": out,
+                "t_start": t_start, "t_end": self.clock}
+
+    def end_verify(self, rid: int) -> None:
+        """Convert a verify rid into a normal autonomous decode slot (driver
+        fallback on acceptance collapse, device loss, or saturation): the
+        next scheduler tick simply resumes fused decode from the committed
+        state. No-op for unknown / finished rids."""
+        self.verify_rids.discard(rid)
+        self._verify_requested.discard(rid)
+
     def run_until(self, t_limit: float = math.inf) -> None:
         """Process ticks until the virtual clock passes ``t_limit`` or there
         is no work. The final tick may overshoot ``t_limit``: its chunk was
@@ -1590,11 +2053,16 @@ class BatchedServer:
             if head is not None and head <= self.clock and self._admissible():
                 self._admit_one()        # one row per tick, between chunks
                 continue
-            if self.slots:
+            if self._decodable():
                 self._decode_tick()
                 continue
             if head is None or head > t_limit:
                 break                    # idle, or next arrival beyond horizon
+            if head <= self.clock:
+                # arrived head blocked on capacity with nothing decodable
+                # (verify rids hold the rows): only driver-driven verify
+                # rounds / end_verify can unblock it — don't spin
+                break
             self.clock = head            # idle gap: jump to the next arrival
         self._apply_due_cancels()
         self._retire_done()
@@ -1612,7 +2080,7 @@ class BatchedServer:
             head = self._head_arrival()          # a due cancel may drop the head
         if head is not None and head <= self.clock and self._admissible():
             self._admit_one()
-        elif self.slots:
+        elif self._decodable():
             self._decode_tick()
         self._retire_done()
         return bool(self.slots or self.queue)
@@ -1669,6 +2137,16 @@ class BatchedServer:
                     self.prefill_tokens_computed / self.prefill_tokens_admitted
                     if self.prefill_tokens_admitted else 0.0
                 ),
+            )
+        if self.speculative:
+            rounds = sum(self.verify_rounds.values())
+            scored = sum(self.verify_positions.values()) - rounds  # drafts
+            accepted = sum(self.accepted_tokens.values())
+            stats.update(
+                verify_rounds=int(rounds),
+                drafts_scored=int(scored),
+                accepted_draft_tokens=int(accepted),
+                acceptance_rate=(accepted / scored if scored else 0.0),
             )
         return stats
 

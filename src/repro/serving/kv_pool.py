@@ -481,6 +481,27 @@ class KVPoolManager:
         table.blocks.extend(got)
         return True
 
+    def shrink(self, rid: int, target_tokens: int) -> int:
+        """Inverse of :meth:`extend`: give back the tail blocks past
+        ``target_tokens`` cache entries. Speculative verify extends a row's
+        table to cover every scored draft position, then shrinks back to the
+        accepted prefix — so the request's steady-state block demand charges
+        accepted tokens only, and rejected-draft scratch returns to the pool
+        within the same tick. Prefix-aliased leading blocks are never
+        released (they are owned by the cache, not this table). Returns the
+        number of blocks freed."""
+        table = self.tables[rid]
+        keep = max(
+            blocks_for_tokens(target_tokens, self.block_size),
+            table.num_prefix,
+        )
+        tail = table.blocks[keep:]
+        if not tail:
+            return 0
+        del table.blocks[keep:]
+        self.pool.free(tail)
+        return len(tail)
+
     def release(self, rid: int, cache_tokens=None) -> None:
         """Free-on-finish-or-cancel: one reference per block returns to the
         pool immediately (no drain — an unshared block's contents just

@@ -26,7 +26,6 @@ from repro.serving import (
     Request,
     RequestResult,
     SamplerConfig,
-    ServedRequest,
     ServerEndpoint,
 )
 
@@ -404,6 +403,27 @@ def _make_disco(params, **kw):
     )
 
 
+def test_serve_shim_and_alias_warn_deprecation(params):
+    """The PR-5 migration note, enforced: the positional ``serve()`` shim
+    and the ``ServedRequest`` alias both emit DeprecationWarning; the
+    first-class path (``serve_many`` + ``RequestResult``) stays silent."""
+    disco = _make_disco(params)
+    with pytest.warns(DeprecationWarning, match="serve_many"):
+        r = disco.serve(np.arange(8, dtype=np.int32), 4)
+    assert len(r.tokens) == 4                # the shim still works
+    with pytest.warns(DeprecationWarning, match="ServedRequest"):
+        import repro.serving
+        assert repro.serving.ServedRequest is RequestResult
+    with pytest.warns(DeprecationWarning, match="ServedRequest"):
+        import repro.serving.disco_driver as dd
+        assert dd.ServedRequest is RequestResult
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = disco.serve_many([Request(np.arange(8, dtype=np.int32), 4)])
+    assert isinstance(res[0], RequestResult)
+
+
 def test_serve_monotonic_frontier_arrivals(params):
     """Satellite bugfix pin: repeated serve() calls stamp arrivals at
     max(frontier, server clock) — a monotonic timeline identical to the old
@@ -435,6 +455,8 @@ def test_results_carry_request_and_qoe(params):
     slo = SLO(ttft_deadline=30.0, tbt_target=10.0)   # generous: attained
     r = disco.serve(np.arange(12, dtype=np.int32), 8, slo=slo, cost_weight=2.0)
     assert isinstance(r, RequestResult)
+    with pytest.warns(DeprecationWarning, match="ServedRequest"):
+        from repro.serving import ServedRequest
     assert ServedRequest is RequestResult            # deprecated alias
     assert r.request.slo == slo
     assert r.qoe.tokens_delivered == len(r.tokens) == 8

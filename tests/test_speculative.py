@@ -1,0 +1,297 @@
+"""Device-draft / server-verify speculative decoding.
+
+Covers the tentpole contracts: the rejection-sampling acceptance RATE
+matches the overlap integral ``sum(min(p_s, p_d))``, the delivered stream
+is bit-identical to same-seed server-only generation at matched models
+(temperature > 0), chunking the draft window (k) never changes the stream,
+and the waste accounting counts rejected drafts on BOTH endpoints while
+crediting accepted ones.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import paper_models
+from repro.core import CostModel, DiSCoScheduler, MigrationConfig
+from repro.models import init_params
+from repro.models.sampling import (
+    SamplerConfig,
+    first_rejection,
+    request_key,
+    sampling_probs,
+    speculative_accept,
+)
+from repro.serving import (
+    BatchedServer,
+    DeviceEndpoint,
+    InferenceEngine,
+    NetworkModel,
+    Request,
+    ServerEndpoint,
+)
+from repro.serving.disco_driver import DiSCoServer
+
+CFG = paper_models.TINY_SERVER
+SAMP = SamplerConfig(temperature=0.8, top_k=0, top_p=1.0)
+MAX_NEW = 14
+PROMPT = np.arange(9, dtype=np.int32) % CFG.vocab
+
+
+@pytest.fixture(scope="module")
+def srv_params():
+    return init_params(CFG, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def spec_server(srv_params):
+    srv = BatchedServer(CFG, srv_params, max_slots=2, max_len=96,
+                        decode_chunk=4, speculative=True)
+    srv.warmup(prompt_len=len(PROMPT))
+    return srv
+
+
+@pytest.fixture(scope="module")
+def draft_engine(srv_params):
+    dev = InferenceEngine(CFG, srv_params, max_len=96, paged=True,
+                          speculative=True)
+    dev.warmup(prompt_len=len(PROMPT))
+    return dev
+
+
+def _spec_stream(srv: BatchedServer, dev: InferenceEngine, seed: int,
+                 k: int, max_new: int = MAX_NEW):
+    """One engine-level draft/verify request; returns (stream, accepted,
+    scored)."""
+    rid = srv.submit(Request(PROMPT.copy(), max_new, seed=seed, sampler=SAMP),
+                     verify=True)
+    srv.run_until(srv.clock + 1e-9)
+    tok0 = srv.pop_events(rid)[0][0]
+    st = dev.open_stream(Request(PROMPT.copy(), max_new, seed=seed,
+                                 sampler=SAMP))
+    st.draft_prefill()
+    st.force_pending(tok0)
+    got = [tok0]
+    accepted = scored = 0
+    while not srv.is_finished(rid):
+        w = st.draft_window(k)
+        if w is None:
+            break
+        drafts, dev_probs, _ = w
+        res = srv.verify_step(rid, drafts, dev_probs)
+        if res is None:
+            srv.end_verify(rid)
+            srv.run_to_completion()
+            got.extend(t for t, _ in srv.pop_events(rid))
+            break
+        st.draft_rewind(res["accepted"], res["tokens"][-1])
+        got.extend(res["tokens"])
+        accepted += res["accepted"]
+        scored += res["k"]
+        srv.pop_events(rid)
+    st.cancel()
+    return got, accepted, scored
+
+
+def _server_only_stream(srv_params, seed: int, max_new: int = MAX_NEW):
+    srv = BatchedServer(CFG, srv_params, max_slots=2, max_len=96,
+                        decode_chunk=4)
+    srv.warmup(prompt_len=len(PROMPT))
+    rid = srv.submit(Request(PROMPT.copy(), max_new, seed=seed, sampler=SAMP))
+    return srv.run_to_completion()[rid]
+
+
+# ---------------------------------------------------------------------------
+# rejection-sampling acceptance math
+# ---------------------------------------------------------------------------
+
+
+def test_statistical_acceptance_matches_overlap():
+    """Empirical acceptance over many positions converges to the overlap
+    integral ``sum(min(p_s, p_d))`` — the Leviathan et al. rate."""
+    v = 8
+    n = 4096
+    rng = np.random.default_rng(0)
+    p_d = rng.dirichlet(np.ones(v)).astype(np.float32)
+    p_s = rng.dirichlet(np.ones(v)).astype(np.float32)
+    expected = float(np.minimum(p_s, p_d).sum())
+    assert 0.05 < expected < 0.95       # a non-degenerate overlap
+
+    key = request_key(123)
+    positions = jnp.arange(n, dtype=jnp.int32)
+    # drafts drawn from p_d with the device's position-keyed stream — the
+    # same draw sample_tokens would make for a device row with these probs
+    drafts = jax.vmap(
+        lambda p: jax.random.categorical(
+            jax.random.fold_in(key, p), jnp.log(jnp.asarray(p_d))
+        )
+    )(positions).astype(jnp.int32)
+    accept, _ = speculative_accept(
+        key, positions, drafts,
+        jnp.tile(jnp.asarray(p_d), (n, 1)), jnp.tile(jnp.asarray(p_s), (n, 1)),
+    )
+    rate = float(jnp.mean(accept))
+    # 4 sigma of a Bernoulli(expected) mean over n draws
+    tol = 4.0 * float(np.sqrt(expected * (1 - expected) / n))
+    assert abs(rate - expected) < tol, (rate, expected, tol)
+
+
+def test_matched_models_accept_everything():
+    """p_device == p_server: every coin passes (u * p <= p), bit-exactly."""
+    v, k = 16, 32
+    rng = np.random.default_rng(3)
+    p = jnp.asarray(rng.dirichlet(np.ones(v), size=k).astype(np.float32))
+    key = request_key(7)
+    positions = jnp.arange(k, dtype=jnp.int32)
+    drafts = jnp.asarray(rng.integers(0, v, size=k), jnp.int32)
+    accept, _ = speculative_accept(key, positions, drafts, p, p)
+    assert bool(jnp.all(accept))
+    assert int(first_rejection(accept)) == k
+
+
+def test_zero_server_prob_never_accepted():
+    """A draft the server gives zero mass must be rejected even when the
+    accept coin lands exactly on 0.0."""
+    v = 4
+    p_d = jnp.asarray([[0.25, 0.25, 0.25, 0.25]], jnp.float32)
+    p_s = jnp.asarray([[0.0, 0.5, 0.5, 0.0]], jnp.float32)
+    key = request_key(11)
+    accept, corr = speculative_accept(
+        key, jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32), p_d, p_s,
+    )
+    assert not bool(accept[0])
+    assert int(corr[0]) in (1, 2)       # residual only covers server mass
+
+
+def test_greedy_rows_are_one_hot():
+    """sampling_probs for a greedy row is the exact argmax one-hot — the
+    distribution speculative verification scores greedy traffic against."""
+    logits = jnp.asarray([[0.1, 2.0, -1.0, 0.5]], jnp.float32)
+    probs = sampling_probs(None, logits)
+    np.testing.assert_allclose(np.asarray(probs), [[0, 1, 0, 0]], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit-identity + k-invariance (matched models, temperature > 0)
+# ---------------------------------------------------------------------------
+
+
+def test_bit_identical_to_server_only_and_k_invariant(
+        spec_server, draft_engine, srv_params):
+    """Matched draft/verify models at temperature 0.8: the speculative
+    stream equals same-seed server-only generation bit-for-bit, every draft
+    is accepted, and the draft-window size k never changes the stream."""
+    ref = _server_only_stream(srv_params, seed=21)
+    streams = {}
+    for k in (1, 2, 4):
+        got, accepted, scored = _spec_stream(
+            spec_server, draft_engine, seed=21, k=k)
+        assert accepted == scored, (k, accepted, scored)
+        streams[k] = got
+    for k, got in streams.items():
+        assert got == ref, f"k={k} diverged from server-only"
+
+
+def test_rejection_path_stays_server_distributed(spec_server, draft_engine,
+                                                 srv_params):
+    """Corrupting drafts forces the rejection path; the verify verdict must
+    truncate at the first rejection and keep the stream coherent (length,
+    dtype, range) — losslessness under corruption is distributional, so no
+    bit-identity is asserted here (that contract is the matched path)."""
+    srv, dev = spec_server, draft_engine
+    rid = srv.submit(Request(PROMPT.copy(), MAX_NEW, seed=33, sampler=SAMP),
+                     verify=True)
+    srv.run_until(srv.clock + 1e-9)
+    tok0 = srv.pop_events(rid)[0][0]
+    st = dev.open_stream(Request(PROMPT.copy(), MAX_NEW, seed=33,
+                                 sampler=SAMP))
+    st.draft_prefill()
+    st.force_pending(tok0)
+    got = [tok0]
+    saw_rejection = False
+    while not srv.is_finished(rid):
+        w = st.draft_window(4)
+        if w is None:
+            break
+        drafts, dev_probs, _ = w
+        drafts = list(drafts)
+        if len(drafts) >= 2:
+            drafts[1] = int((drafts[1] + 1) % CFG.vocab)  # corrupt draft 2
+        res = srv.verify_step(rid, drafts, dev_probs)
+        if res is None:
+            srv.end_verify(rid)
+            srv.run_to_completion()
+            break
+        if res["accepted"] < res["k"]:
+            # matched models accept the corrupt token itself (ratio = 1);
+            # the divergence shows up in the positions conditioned on it
+            saw_rejection = True
+            assert len(res["tokens"]) == res["accepted"] + 1
+        st.draft_rewind(res["accepted"], res["tokens"][-1])
+        got.extend(res["tokens"])
+        srv.pop_events(rid)
+    st.cancel()
+    assert saw_rejection
+    assert all(0 <= t < CFG.vocab for t in got)
+
+
+# ---------------------------------------------------------------------------
+# driver-level waste accounting
+# ---------------------------------------------------------------------------
+
+
+def _make_spec_disco(dev_engine, srv_params, mode="speculative"):
+    server = BatchedServer(CFG, srv_params, max_slots=2, max_len=96,
+                           decode_chunk=4, speculative=(mode == "speculative"))
+    server.warmup(prompt_len=len(PROMPT))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-4, 6e-4, 900.0, 800.0, exchange_rate=1e-12),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+        budget=0.9,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.01),
+    )
+    return DiSCoServer(
+        sched, DeviceEndpoint(dev_engine),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.05)),
+        rng=np.random.default_rng(7), mode=mode,
+    )
+
+
+def test_wasted_ratio_counts_rejected_drafts(srv_params):
+    """Satellite accounting contract, pinned: for a speculative request,
+    ``wasted == generated - delivered - accepted_drafts`` — a rejected
+    draft is waste TWICE (the device drafted it, the server scored it), an
+    accepted draft is waste NEVER (computed on the device, delivered
+    through the verify round)."""
+    # MISMATCHED drafter (TINY_DEVICE) so rejections actually happen
+    dev_cfg = paper_models.TINY_DEVICE
+    dev = InferenceEngine(dev_cfg, init_params(dev_cfg, jax.random.PRNGKey(0)),
+                          max_len=96, paged=True, speculative=True)
+    dev.warmup(prompt_len=len(PROMPT))
+    disco = _make_spec_disco(dev, srv_params)
+    res = disco.serve_many(
+        [Request(PROMPT.copy(), MAX_NEW, arrival=0.0, seed=5, sampler=SAMP)]
+    )[0]
+    assert disco.spec_requests == 1
+    stats = disco.server.server.pool_stats()
+    accepted = stats["accepted_draft_tokens"]
+    scored = stats["drafts_scored"]
+    assert scored > accepted > 0         # rejections happened, so did accepts
+    assert res.wasted_tokens == (
+        res.generated_tokens - len(res.tokens) - accepted
+    )
+    assert res.wasted_tokens > 0         # the rejected drafts are in there
+
+
+def test_race_mode_wasted_accounting_unchanged(draft_engine, srv_params):
+    """Race-and-cancel keeps the PR-6 ledger: wasted == generated -
+    delivered, no speculative credit."""
+    disco = _make_spec_disco(draft_engine, srv_params, mode="race")
+    res = disco.serve_many(
+        [Request(PROMPT.copy(), MAX_NEW, arrival=0.0, seed=5, sampler=SAMP)]
+    )[0]
+    assert disco.spec_requests == 0
+    assert res.wasted_tokens == res.generated_tokens - len(res.tokens)

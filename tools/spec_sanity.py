@@ -1,0 +1,114 @@
+"""Sanity: device-draft / server-verify round trip on TINY models.
+
+Matched models + same seed must be bit-identical to server-only decode,
+with every draft accepted.
+"""
+import numpy as np
+import jax
+
+from repro.configs.paper_models import TINY_SERVER
+from repro.models import init_params
+from repro.models.sampling import SamplerConfig
+from repro.serving.engine import BatchedServer, InferenceEngine
+from repro.serving.request import Request
+
+cfg = TINY_SERVER
+params = init_params(cfg, jax.random.PRNGKey(0))
+prompt = np.arange(11, dtype=np.int32) % cfg.vocab
+samp = SamplerConfig(temperature=0.8, top_k=0, top_p=1.0)
+MAX_NEW = 24
+SEED = 7
+
+# --- baseline: plain server-only decode -----------------------------------
+srv0 = BatchedServer(cfg, params, max_slots=2, max_len=128, decode_chunk=4)
+srv0.warmup(prompt_len=len(prompt))
+r0 = srv0.submit(Request(prompt, MAX_NEW, seed=SEED, sampler=samp))
+ref = srv0.run_to_completion()[r0]
+print("ref:", ref)
+
+# --- speculative: device drafts, server verifies --------------------------
+srv = BatchedServer(cfg, params, max_slots=2, max_len=128, decode_chunk=4,
+                    speculative=True)
+srv.warmup(prompt_len=len(prompt))
+rid = srv.submit(Request(prompt, MAX_NEW, seed=SEED, sampler=samp),
+                 verify=True)
+srv.run_until(srv.clock + 1e-9)   # admission tick
+ev = srv.pop_events(rid)
+assert len(ev) == 1, ev
+t_s = ev[0][0]
+print("server prefill token:", t_s)
+
+dev = InferenceEngine(cfg, params, max_len=128, paged=True, speculative=True)
+dev.warmup(prompt_len=len(prompt))
+st = dev.open_stream(Request(prompt, MAX_NEW, seed=SEED, sampler=samp))
+tok0, _ = st.draft_prefill()
+print("device prefill token:", tok0, "(match:", tok0 == t_s, ")")
+st.force_pending(t_s)
+
+got = [t_s]
+rounds = accepted = scored = 0
+while not srv.is_finished(rid):
+    w = st.draft_window(4)
+    if w is None:
+        print("device cannot draft; aborting")
+        break
+    drafts, dev_probs, _ = w
+    res = srv.verify_step(rid, drafts, dev_probs)
+    if res is None:
+        print("verify_step -> None; fallback")
+        srv.end_verify(rid)
+        srv.run_to_completion()
+        break
+    st.draft_rewind(res["accepted"], res["tokens"][-1])
+    got.extend(res["tokens"])
+    rounds += 1
+    accepted += res["accepted"]
+    scored += res["k"]
+    for tok, _t in srv.pop_events(rid):
+        pass
+
+print(f"rounds={rounds} accepted={accepted}/{scored}")
+print("got:", got)
+print("bit-identical:", got == ref)
+print("pool_stats:", {k: v for k, v in srv.pool_stats().items()
+                      if "verify" in k or "accept" in k or "draft" in k})
+assert got == ref, "speculative stream diverged from server-only"
+assert accepted == scored, "matched models must accept every draft"
+
+# --- corrupted drafts must still be bit-identical (lossless) -------------
+srv2 = BatchedServer(cfg, params, max_slots=2, max_len=128, decode_chunk=4,
+                     speculative=True)
+srv2.warmup(prompt_len=len(prompt))
+rid2 = srv2.submit(Request(prompt, MAX_NEW, seed=SEED, sampler=samp),
+                   verify=True)
+srv2.run_until(srv2.clock + 1e-9)
+t_s2 = srv2.pop_events(rid2)[0][0]
+dev2 = InferenceEngine(cfg, params, max_len=128, paged=True, speculative=True)
+dev2.warmup(prompt_len=len(prompt))
+st2 = dev2.open_stream(Request(prompt, MAX_NEW, seed=SEED, sampler=samp))
+st2.draft_prefill()
+st2.force_pending(t_s2)
+got2 = [t_s2]
+rng = np.random.default_rng(0)
+acc2 = sc2 = 0
+while not srv2.is_finished(rid2):
+    w = st2.draft_window(4)
+    if w is None:
+        break
+    drafts, dev_probs, _ = w
+    # corrupt the middle draft half the time: rejection path must engage
+    if len(drafts) >= 2 and rng.random() < 0.5:
+        drafts = list(drafts)
+        drafts[1] = int((drafts[1] + 1) % cfg.vocab)
+    res = srv2.verify_step(rid2, drafts, dev_probs)
+    if res is None:
+        srv2.end_verify(rid2)
+        srv2.run_to_completion()
+        break
+    st2.draft_rewind(res["accepted"], res["tokens"][-1])
+    got2.extend(res["tokens"])
+    acc2 += res["accepted"]
+    sc2 += res["k"]
+print(f"corrupted run: accepted={acc2}/{sc2}")
+print("corrupted-but-lossless bit-identical:", got2 == ref)
+print("got2:", got2)
