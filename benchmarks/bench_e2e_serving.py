@@ -58,6 +58,15 @@ not care). Exits non-zero on any mismatch.
 
     PYTHONPATH=src python -m benchmarks.bench_e2e_serving \
         [--smoke] [--temperature T] [--mixed-samplers] [--check-determinism]
+        [--trace-out PATH]
+
+``--trace-out PATH`` additionally replays the top load point through a fully
+traced disco stack (the headline numbers above stay tracer-free) and writes
+Perfetto-loadable Chrome trace JSON: one track per endpoint/server row, one
+async span per request.  The trace must be schema-valid, reconcile exactly
+against the registry-backed ``DiSCoServer.stats()`` snapshot, and project
+back onto the delivered token streams; inspect it with
+``tools/trace_report.py`` or at https://ui.perfetto.dev.
 """
 from __future__ import annotations
 
@@ -83,6 +92,10 @@ from repro.serving import (
     Request,
     SamplerConfig,
     ServerEndpoint,
+    Tracer,
+    reconcile_trace,
+    replay_projection,
+    validate_trace,
 )
 from repro.sim.traces import make_multiturn_trace, make_serving_trace
 
@@ -157,7 +170,7 @@ def _make_scheduler(rng: np.random.Generator) -> DiSCoScheduler:
 
 
 def _build(system: str, dev_engine: InferenceEngine, srv_params,
-           seed: int, admission: str = "edf") -> DiSCoServer:
+           seed: int, admission: str = "edf", tracer=None) -> DiSCoServer:
     server = BatchedServer(
         paper_models.TINY_SERVER, srv_params,
         max_slots=_ROWS, max_len=_MAX_LEN, decode_chunk=4,
@@ -177,6 +190,7 @@ def _build(system: str, dev_engine: InferenceEngine, srv_params,
         # single-endpoint baselines stay pure: no SLO-driven racing
         slo_aware_dispatch=not single,
         mode="speculative" if system == "disco_spec" else "race",
+        tracer=tracer,
     )
     if system == "server_only":
         disco.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
@@ -335,7 +349,7 @@ def _multiturn_point(srv_params, service: float, samplers,
 
 
 def run(smoke: bool = False, temperature: float = 0.0,
-        mixed_samplers: bool = False) -> list[Row]:
+        mixed_samplers: bool = False, trace_out: str | None = None) -> list[Row]:
     dev_cfg = paper_models.TINY_DEVICE
     srv_cfg = paper_models.TINY_SERVER
     if mixed_samplers:
@@ -381,10 +395,9 @@ def run(smoke: bool = False, temperature: float = 0.0,
             results = disco.serve_many(_copies(requests))
             wall_us = (time.perf_counter() - t0) * 1e6
             m = _metrics(results)
-            m.update(disco.server.server.pool_stats())  # memory-pressure accounting
-            if system == "disco_spec":
-                m["spec_requests"] = disco.spec_requests
-                m["spec_fallbacks"] = disco.spec_fallbacks
+            # memory-pressure accounting + driver ledgers, one registry-backed
+            # snapshot (includes spec_requests/spec_fallbacks for disco_spec)
+            m.update(disco.stats())
             point["systems"][system] = m
             rows.append(Row(
                 f"e2e_serving/rho{rho:g}/{system}", wall_us,
@@ -424,7 +437,7 @@ def run(smoke: bool = False, temperature: float = 0.0,
                 agg["slo_attained"] += sum(r.qoe.slo_attained for r in res)
                 agg["qoe_sum"] += sum(r.qoe.qoe_score for r in res)
                 agg["ttfts"] += [r.ttft for r in res]
-                stats = disco.server.server.pool_stats()
+                stats = disco.stats()
                 agg["deadline_reorders"] += stats["deadline_reorders"]
                 agg["server_slo_misses"] += stats["server_slo_misses"]
         for admission, agg in admission_cmp.items():
@@ -443,6 +456,36 @@ def run(smoke: bool = False, temperature: float = 0.0,
             f"reorders={admission_cmp['edf']['deadline_reorders']}",
         ))
         points.append(point)
+
+    if trace_out:
+        # Extra traced pass of the disco stack at the top load point: the
+        # headline numbers above were measured tracer-free, so tracing cost
+        # never taints them.  The trace must be schema-valid, reconcile
+        # exactly against the registry snapshot, and project back onto the
+        # delivered token streams.
+        tracer = Tracer()
+        disco = _build("disco", dev_engine, srv_params, seed=3, tracer=tracer)
+        results = disco.serve_many(_copies(requests))
+        stats = disco.stats()
+        trace = tracer.export()
+        problems = validate_trace(trace) + reconcile_trace(trace, stats)
+        proj = replay_projection(trace)
+        for r in results:
+            if proj.get(r.rid, {}).get("tokens") != r.tokens:
+                problems.append(
+                    f"request {r.rid}: trace tokens != delivered stream")
+        if problems:
+            raise SystemExit(
+                "traced e2e pass FAILED:\n  " + "\n  ".join(problems))
+        tracer.save(trace_out, metadata={
+            "bench": "e2e_serving", "system": "disco", "rho": loads[-1],
+            "n_requests": n_req, "stats": stats,
+        })
+        rows.append(Row(
+            f"e2e_serving/rho{loads[-1]:g}/trace", 0.0,
+            f"events={len(trace['traceEvents'])};"
+            f"requests={len(results)};reconciled=1",
+        ))
 
     # shared-prefix / multi-turn point: prefix cache vs cold-cache control
     mt = _multiturn_point(srv_params, service, samplers,
@@ -541,6 +584,9 @@ def run(smoke: bool = False, temperature: float = 0.0,
             "max_new": _MAX_NEW,
             "service_time_s": service,
             "arrival_process": "poisson",
+            # headline numbers are always measured with telemetry disabled;
+            # --trace-out adds a separate traced pass that never feeds them
+            "telemetry": "off",
             "slo": {
                 "interactive_fraction": _INTERACTIVE_FRACTION,
                 "tight_ttft_deadline_s": _TIGHT_DEADLINE_X * service,
@@ -562,7 +608,12 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     migration points, and preemptions between the runs — the delivered
     streams must be bit-identical anyway, and equal to the no-race
     single-engine generation with the same per-request (seed, sampler)
-    (the driver seeds requests by rid = arrival index)."""
+    (the driver seeds requests by rid = arrival index).
+
+    Both stacks run fully traced: the traces must each be schema-valid and
+    their :func:`replay_projection` — per-request delivered tokens + terminal
+    outcome — must be identical (timestamps legitimately differ: compute is
+    measured wall-clock, so race winners and migration points can move)."""
     cfg = paper_models.TINY_DEVICE
     params = init_params(cfg, jax.random.PRNGKey(0))
     samplers = [
@@ -574,7 +625,7 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
     dev_engine = InferenceEngine(cfg, params, max_len=_MAX_LEN)
     dev_engine.warmup(prompt_lens=(12,))
 
-    def build():
+    def build(tracer=None):
         server = BatchedServer(
             cfg, params, max_slots=2, max_len=_MAX_LEN, decode_chunk=4,
             block_size=_BLOCK_SIZE, num_blocks=_NUM_BLOCKS,
@@ -597,6 +648,7 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
             sched, DeviceEndpoint(dev_engine),
             ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
             rng=np.random.default_rng(4),
+            tracer=tracer,
         )
 
     rng = np.random.default_rng(9)
@@ -612,14 +664,32 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
                             sampler=samplers[i % len(samplers)]).tokens
         for i, p in enumerate(prompts)
     ]
-    run1 = build().serve_many(_copies(reqs))
-    run2 = build().serve_many(_copies(reqs))
+    tr1, tr2 = Tracer(), Tracer()
+    run1 = build(tr1).serve_many(_copies(reqs))
+    run2 = build(tr2).serve_many(_copies(reqs))
     failures = []
     for i, (r1, r2, base) in enumerate(zip(run1, run2, baseline)):
         if r1.tokens != r2.tokens:
             failures.append(f"request {i}: run1 != run2")
         if r1.tokens != base:
             failures.append(f"request {i}: delivered != same-seed baseline")
+    # trace-level determinism: schema-valid traces whose replay projections
+    # (delivered tokens + outcomes, NOT timestamps) are bit-identical
+    for label, tr in (("run1", tr1), ("run2", tr2)):
+        for p in validate_trace(tr.export()):
+            failures.append(f"{label} trace invalid: {p}")
+    proj1 = replay_projection(tr1.export())
+    proj2 = replay_projection(tr2.export())
+    if proj1 != proj2:
+        diff = [str(rid) for rid in proj1 if proj1[rid] != proj2.get(rid)]
+        failures.append(
+            "trace replay projections differ (requests: "
+            + ", ".join(diff or ["<id sets>"]) + ")"
+        )
+    for r in run1:
+        if proj1.get(r.rid, {}).get("tokens") != r.tokens:
+            failures.append(
+                f"request {r.rid}: trace projection != delivered stream")
     if failures:
         raise SystemExit(
             "seed-determinism FAILED (temperature="
@@ -629,7 +699,8 @@ def check_determinism(temperature: float = 0.8, n_requests: int = 4) -> None:
         f"seed-determinism OK: {n_requests} requests x 2 runs bit-identical "
         f"(mixed per-request samplers, base temperature={temperature}, "
         f"migrations run1/run2: {sum(r.migrated for r in run1)}/"
-        f"{sum(r.migrated for r in run2)})"
+        f"{sum(r.migrated for r in run2)}; trace replay projections "
+        f"identical across {len(tr1.events)}/{len(tr2.events)}-event traces)"
     )
 
 
@@ -681,7 +752,7 @@ def check_speculative(temperature: float = 0.8, n_requests: int = 6) -> None:
 
     spec = build("speculative")
     res_spec = spec.serve_many(_copies(reqs))
-    stats = spec.server.server.pool_stats()
+    stats = spec.stats()
     res_race = build("race").serve_many(_copies(reqs))
     single = InferenceEngine(cfg, params, max_len=_MAX_LEN)
     single.warmup(prompt_lens=(16, 32))
@@ -778,7 +849,15 @@ if __name__ == "__main__":
                          "per-row sampling in one fused batch; never "
                          "overwrites the greedy trajectory JSON")
     ap.add_argument("--check-determinism", action="store_true",
-                    help="run the seed-determinism gate instead of the bench")
+                    help="run the seed-determinism gate instead of the bench "
+                         "(also diffs the replay projections of two same-"
+                         "seed traces)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="run an EXTRA fully-traced disco pass at the top "
+                         "load point and write Perfetto-loadable Chrome "
+                         "trace JSON there (headline numbers stay "
+                         "tracer-free); the trace must validate and "
+                         "reconcile against the stats registry")
     ap.add_argument("--check-prefix", action="store_true",
                     help="run the prefix-cache gate instead of the bench: "
                          "multi-turn trace, prefix_hit_rate > 0, streams "
@@ -814,5 +893,6 @@ if __name__ == "__main__":
     else:
         print("name,us_per_call,derived")
         for row in run(smoke=args.smoke, temperature=args.temperature or 0.0,
-                       mixed_samplers=args.mixed_samplers):
+                       mixed_samplers=args.mixed_samplers,
+                       trace_out=args.trace_out):
             print(row.csv(), flush=True)

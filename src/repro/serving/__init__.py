@@ -44,6 +44,17 @@ network = sampled RTT, queueing = emergent contention):
   cancellation, token-ID migration into the same contended scheduler
   (§4.3), paced delivery + QoE/cost/waste accounting per request.
 
+Observability (``serving.telemetry``): every stat above is backed by one
+:class:`MetricsRegistry` — ``BatchedServer.pool_stats()`` and
+``DiSCoServer.stats()`` are registry *snapshots*, no number computed twice —
+and a :class:`Tracer` (attach via ``DiSCoServer(..., tracer=...)`` or
+``set_tracer``) records the full request lifecycle (dispatch, queueing,
+prefill, decode chunks, preemption, cancel issue→land, migration, prefix
+hits, block alloc/free/CoW, draft→verify rounds) on the shared virtual
+timeline as Chrome trace-event JSON — open it at https://ui.perfetto.dev, or
+run ``tools/trace_report.py`` for per-request TTFT attribution.  With no
+tracer attached every hook is a :data:`NULL_TRACER` no-op.
+
 Sampling is **per request**: ``Request.sampler`` (greedy argmax default, or
 temperature/top-k/top-p) is stacked into per-row ``SamplerOperands`` — (B,)
 runtime arrays threaded through the jitted step functions, never baked into
@@ -86,6 +97,19 @@ from .kv_pool import (
     blocks_for_tokens,
 )
 from .request import NO_SLO, SLO, QoEReport, Request, RequestResult
+from .telemetry import (
+    NULL_TRACER,
+    MetricsRegistry,
+    NullTracer,
+    Tracer,
+    reconcile_trace,
+    replay_projection,
+    request_records,
+    trace_instants,
+    trace_spans,
+    ttft_attribution,
+    validate_trace,
+)
 
 
 def __getattr__(name: str):
@@ -107,4 +131,7 @@ __all__ = [
     "blocks_for_tokens",
     "GREEDY", "SamplerConfig", "SamplerOperands", "request_key",
     "sampler_operands",
+    "Tracer", "NullTracer", "NULL_TRACER", "MetricsRegistry",
+    "validate_trace", "replay_projection", "reconcile_trace",
+    "request_records", "trace_spans", "trace_instants", "ttft_attribution",
 ]

@@ -42,9 +42,12 @@ redundancy: a cancelled server-side loser RELEASES its sealed prompt blocks
 into the radix prefix index, so the later migration replay of ``prompt +
 generated ids`` — submitted to the same contended scheduler — admits as a
 prefix HIT and recomputes only the unsealed tail instead of the whole
-conversation. ``pool_stats()`` (a passthrough to the shared server) reports
-``prefix_hit_rate`` / ``blocks_saved`` / ``copy_ops`` / ``clone_fallbacks``
-alongside the memory-pressure counters.
+conversation. ``stats()`` (one registry-backed surface over the shared
+server and the driver ledgers) reports ``prefix_hit_rate`` /
+``blocks_saved`` / ``copy_ops`` / ``clone_fallbacks`` alongside the
+memory-pressure counters; ``set_tracer`` (or the ``tracer=`` ctor argument)
+attaches a ``telemetry.Tracer`` that records the full request lifecycle on
+the shared virtual timeline as a Perfetto-loadable trace.
 """
 from __future__ import annotations
 
@@ -66,6 +69,7 @@ from repro.core.dispatch import DispatchDecision
 from .engine import SPEC_K_MAX
 from .endpoint import DeviceEndpoint, ServerEndpoint
 from .request import QoEReport, Request, RequestResult
+from .telemetry import NULL_TRACER, MetricsRegistry, metric_attr
 
 __all__ = ["ServedRequest", "DiSCoServer"]
 
@@ -146,11 +150,14 @@ class _SpecSession:
     COLLAPSE_AT = 0.125
     COLLAPSE_MIN_ROUNDS = 3
 
-    def __init__(self, dev, srv_stream, k_init: int = 4):
+    def __init__(self, dev, srv_stream, k_init: int = 4,
+                 tracer=NULL_TRACER, drv_rid: Optional[int] = None):
         self.dev = dev                      # DeviceDraftSession
         self.srv = srv_stream               # ServerTokenStream (verify rid)
         self.server = srv_stream.server     # shared BatchedServer
         self.rid = srv_stream.rid
+        self.tracer = tracer
+        self.drv_rid = drv_rid              # driver-level rid (trace join key)
         self.k = max(1, min(int(k_init), SPEC_K_MAX))
         self.state = "init"     # init -> wait_first -> ready -> done|fallback
         self.rounds = 0
@@ -183,7 +190,7 @@ class _SpecSession:
             self.state = "done"
             return
         self.dev.force_pending(self._first_tok)
-        self.dev.t = max(self.dev.t, self._first_t)
+        self.dev.wait_until(self._first_t)
         self.state = "ready"
 
     def run_round(self, rng) -> None:
@@ -233,8 +240,14 @@ class _SpecSession:
             self.k = min(self.k * 2, SPEC_K_MAX)
         elif self.accept_ema < self.SHRINK_AT:
             self.k = max(self.k // 2, 1)
+        if self.tracer.enabled and self.drv_rid is not None:
+            self.tracer.request_instant(
+                self.drv_rid, "spec_round", res["t_end"],
+                args={"k": res["k"], "accepted": res["accepted"],
+                      "ema": round(self.accept_ema, 4)},
+            )
         # the verdict crosses the downlink before the next window can start
-        self.dev.t = max(self.dev.t, res["t_end"] + self.srv.downlink)
+        self.dev.wait_until(res["t_end"] + self.srv.downlink)
         if self.server.is_finished(self.rid):
             self.state = "done"
         elif (self.rounds >= self.COLLAPSE_MIN_ROUNDS
@@ -247,6 +260,11 @@ class _SpecSession:
         sampling) and the device stops drafting."""
         self.fell_back = True
         self.state = "fallback"
+        if self.tracer.enabled and self.drv_rid is not None:
+            self.tracer.request_instant(
+                self.drv_rid, "spec_fallback", self.dev.t,
+                args={"rounds": self.rounds, "ema": round(self.accept_ema, 4)},
+            )
         self.server.end_verify(self.rid)
         self.dev.cancel()
 
@@ -272,6 +290,12 @@ class DiSCoServer:
     one request).
     """
 
+    # driver ledgers live in the registry too (the single backing store);
+    # the descriptors keep attribute reads/increments working unchanged
+    slo_dispatch_overrides = metric_attr("slo_dispatch_overrides")
+    spec_requests = metric_attr("spec_requests")
+    spec_fallbacks = metric_attr("spec_fallbacks")
+
     def __init__(
         self,
         scheduler: DiSCoScheduler,
@@ -283,6 +307,7 @@ class DiSCoServer:
         slo_aware_dispatch: bool = True,
         mode: str = "race",
         spec_k_init: int = 4,
+        tracer=None,
     ):
         if mode not in ("race", "speculative"):
             raise ValueError(f"mode must be 'race' or 'speculative' (got {mode!r})")
@@ -296,6 +321,7 @@ class DiSCoServer:
         # consult req.slo when racing endpoints (False pins the pure
         # cost-policy dispatch — the single-endpoint benchmark baselines)
         self.slo_aware_dispatch = slo_aware_dispatch
+        self.metrics = MetricsRegistry()         # driver-level ledger store
         self.slo_dispatch_overrides = 0
         # "speculative": requests the dispatch policy sends to BOTH
         # endpoints run device-draft / server-verify rounds instead of the
@@ -307,17 +333,44 @@ class DiSCoServer:
         self.spec_fallbacks = 0      # sessions that reverted to plain decode
         self._frontier = 0.0
         self._next_rid = 0
+        self.tracer = NULL_TRACER
+        self.set_tracer(tracer)
 
     # -- public API --------------------------------------------------------
 
-    def pool_stats(self) -> dict:
-        """Memory-pressure + prefix-cache accounting of the SHARED batched
-        server (the contended resource in every benchmark): block pool
-        occupancy, queueing/preemption counters and — with the prefix cache
-        on — ``prefix_hit_rate``/``blocks_saved``/``copy_ops``/
-        ``clone_fallbacks``. Device engines hold per-request state only and
+    def set_tracer(self, tracer) -> None:
+        """Attach one telemetry tracer to EVERY layer of the stack — the
+        driver, both endpoints (device/network spans), the shared batched
+        server, and its paged KV manager — so all events land on one shared
+        virtual timeline. Pass None to detach."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.device.tracer = self.tracer
+        self.server.tracer = self.tracer
+        self.server.server.set_tracer(tracer)
+
+    def stats(self) -> dict:
+        """The one documented stats surface for the whole stack: the shared
+        batched server's registry snapshot (memory pressure, SLO accounting,
+        prefix cache, speculative verify — see
+        :meth:`~repro.serving.engine.BatchedServer.pool_stats`) merged with
+        the driver's own ledgers (``slo_dispatch_overrides``,
+        ``spec_requests``, ``spec_fallbacks``). Every value is
+        registry-backed; ``telemetry.reconcile_trace`` cross-checks a trace
+        against this dict. Device engines hold per-request state only and
         have nothing to aggregate."""
-        return self.server.server.pool_stats()
+        out = self.server.server.pool_stats()
+        out.update(self.metrics.snapshot())
+        return out
+
+    def pool_stats(self) -> dict:
+        """Deprecated alias of :meth:`stats` (it used to passthrough to the
+        shared server only; ``stats()`` additionally includes the driver
+        ledgers)."""
+        warnings.warn(
+            "DiSCoServer.pool_stats() is deprecated; use DiSCoServer.stats()",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.stats()
 
     def serve(self, prompt, max_new: Optional[int] = None, **req_kwargs
               ) -> RequestResult:
@@ -492,11 +545,22 @@ class DiSCoServer:
             rid=rid if req.rid is None else req.rid,
             seed=rid if req.seed is None else req.seed,
         )
-        decision = self._consult_slo(
-            req, self.sched.plan_request(req.prompt_len, self.rng)
-        )
+        base = self.sched.plan_request(req.prompt_len, self.rng)
+        decision = self._consult_slo(req, base)
         self.sched.observe_prompt_length(req.prompt_len)
         r = _Req(rid=rid, req=req, decision=decision)
+        if self.tracer.enabled:
+            d = req.slo.ttft_deadline
+            self.tracer.begin_request(
+                rid, req.arrival,
+                args={
+                    "prompt_tokens": int(req.prompt_len),
+                    "max_new": int(req.max_new),
+                    "ttft_deadline_s": float(d) if math.isfinite(d) else None,
+                    "priority": int(req.priority),
+                    "seed": int(req.seed),
+                },
+            )
         if self._speculative_eligible(decision):
             # device-draft / server-verify replaces the race: ONE delivery
             # stream (the server's), the device drafts instead of decoding
@@ -510,19 +574,49 @@ class DiSCoServer:
                 req, self.rng, start_at=req.arrival
             )
             r.all_streams.append(dev)
-            r.spec = _SpecSession(dev, st, k_init=self.spec_k_init)
+            r.spec = _SpecSession(
+                dev, st, k_init=self.spec_k_init,
+                tracer=self.tracer, drv_rid=rid,
+            )
+            self._trace_dispatch(r, decision is not base, srv_rid=st.rid,
+                                 spec=True)
             return r
+        srv_rid = None
         if decision.use_server:
             st = self.server.open_stream(req, self.rng, start_at=req.arrival)
             r.streams[Endpoint.SERVER] = st
             r.all_streams.append(st)
+            srv_rid = st.rid
         if decision.use_device and math.isfinite(decision.device_wait):
             st = self.device.open_stream(
                 req, self.rng, start_at=req.arrival + decision.device_wait,
             )
             r.streams[Endpoint.DEVICE] = st
             r.all_streams.append(st)
+        self._trace_dispatch(r, decision is not base, srv_rid=srv_rid)
         return r
+
+    def _trace_dispatch(self, r: _Req, slo_override: bool,
+                        srv_rid: Optional[int] = None,
+                        spec: bool = False) -> None:
+        """Record the dispatch decision (and which signal drove it) on the
+        request's async span. ``srv_rid`` joins the driver-level request to
+        its server-side lifecycle in trace analysis."""
+        if not self.tracer.enabled:
+            return
+        d = r.decision
+        wait = d.device_wait
+        self.tracer.request_instant(
+            r.rid, "dispatch", r.req.arrival,
+            args={
+                "use_server": bool(d.use_server),
+                "use_device": bool(d.use_device),
+                "device_wait_s": float(wait) if math.isfinite(wait) else None,
+                "slo_override": bool(slo_override),
+                "mode": "speculative" if spec else "race",
+                "srv_rid": srv_rid,
+            },
+        )
 
     def _speculative_eligible(self, decision: DispatchDecision) -> bool:
         """A request runs draft/verify only when the dispatch policy would
@@ -570,6 +664,12 @@ class DiSCoServer:
                 self.sched.migration_controller.config.consumption_rate, ev.t
             )
             r.tokens = [ev.token]
+            if self.tracer.enabled:
+                self.tracer.request_instant(
+                    r.rid, "first_token", ev.t,
+                    args={"winner": st.kind.name.lower(),
+                          "ttft_s": ev.t - r.arrival},
+                )
             if r.spec is not None:
                 # resync the device drafter onto the server's committed
                 # token: the next window drafts continuations of ev.token
@@ -581,6 +681,11 @@ class DiSCoServer:
                         # side loser is reached one uplink RTT later, so a
                         # queued loser can still slip into prefill meanwhile
                         other.cancel(at=ev.t)
+                        if self.tracer.enabled:
+                            self.tracer.request_instant(
+                                r.rid, "cancel_issued", ev.t,
+                                args={"target": other.kind.name.lower()},
+                            )
             if len(r.tokens) >= r.max_new:
                 r.done = True
                 return
@@ -611,6 +716,11 @@ class DiSCoServer:
                 if self.cancel_losers:
                     r.delivery.cancel(at=ev.t)
                 r.delivery = st
+                if self.tracer.enabled:
+                    self.tracer.request_instant(
+                        r.rid, "handoff_done", ev.t,
+                        args={"skipped": r.mig_skip},
+                    )
             if r.mig_skip > 0:
                 r.mig_skip -= 1
                 return
@@ -641,6 +751,12 @@ class DiSCoServer:
         r.migrated = True     # hand-off initiated (the source may still finish
                               # first if the remaining stream is short)
         r.mig_prefix = len(r.tokens)
+        if self.tracer.enabled:
+            self.tracer.request_instant(
+                r.rid, "migration_start", t,
+                args={"target": r.plan.target.name.lower(),
+                      "delivered": r.mig_prefix},
+            )
         r.mig_stream = target_ep.open_replay_stream(
             r.req, list(r.tokens), self.rng, start_at=t,
         )
@@ -693,7 +809,7 @@ class DiSCoServer:
         qoe = QoEReport.from_timeline(
             r.arrival, delivery_times, r.req.slo, rid=r.rid
         )
-        return RequestResult(
+        result = RequestResult(
             request=r.req,
             tokens=list(r.tokens),
             ttft=(r.first_t - r.arrival) if r.winner is not None else math.inf,
@@ -706,3 +822,25 @@ class DiSCoServer:
             wasted_tokens=generated - useful,
             qoe=qoe,
         )
+        if self.tracer.enabled:
+            # the delivered token list is the trace's replay-identity payload
+            # (telemetry.replay_projection): same-seed runs must match it
+            # bit-for-bit even though virtual timestamps legitimately differ
+            self.tracer.end_request(
+                r.rid, max(self._frontier, r.arrival),
+                args={
+                    "outcome": "finished",
+                    "tokens": [int(t) for t in r.tokens],
+                    "delivered": delivered,
+                    "generated": int(generated),
+                    "wasted": int(generated - useful),
+                    "winner": winner.name.lower(),
+                    "migrated": bool(r.migrated),
+                    "ttft_s": (
+                        result.ttft if math.isfinite(result.ttft) else None
+                    ),
+                    "cost": float(result.cost),
+                    "qoe_score": float(qoe.qoe_score),
+                },
+            )
+        return result

@@ -36,6 +36,7 @@ from repro.core.cost import Endpoint
 
 from .engine import BatchedServer, EngineStream, InferenceEngine
 from .request import Request
+from .telemetry import NULL_TRACER
 
 __all__ = [
     "NetworkModel",
@@ -80,11 +81,17 @@ class DeviceTokenStream:
 
     pull_driven = True
 
-    def __init__(self, source: EngineStream, start_at: float, kind: Endpoint):
+    def __init__(self, source: EngineStream, start_at: float, kind: Endpoint,
+                 tracer=NULL_TRACER, track: str = "device/req?",
+                 rid: Optional[int] = None):
         self._src = source
         self.start_at = float(start_at)
         self.kind = kind
         self._buf: deque[TokenEvent] = deque()
+        self.tracer = tracer
+        self._track = track               # e.g. device/req3, device/req3:replay
+        self._rid = rid                   # driver-level rid (trace join key)
+        self._t_mark = 0.0                # last traced chunk end (relative)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -110,10 +117,19 @@ class DeviceTokenStream:
 
     def _fill(self) -> None:
         while not self._buf and not self._src.done:
+            was_prefilled = self._src.prefilled
             nxt = self._src.next_chunk()
             if nxt is None:
                 return
             tokens, times = nxt
+            if self.tracer.enabled and len(times):
+                self.tracer.span(
+                    self._track,
+                    "decode" if was_prefilled else "prefill",
+                    self.start_at + self._t_mark, self.start_at + times[-1],
+                    cat="device", args={"rid": self._rid, "tokens": len(tokens)},
+                )
+                self._t_mark = times[-1]
             for tok, t in zip(tokens, times):
                 self._buf.append(TokenEvent(tok, self.start_at + t, self.kind))
 
@@ -171,10 +187,14 @@ class DeviceDraftSession:
 
     kind = Endpoint.DEVICE
 
-    def __init__(self, source: EngineStream, start_at: float):
+    def __init__(self, source: EngineStream, start_at: float,
+                 tracer=NULL_TRACER, rid: Optional[int] = None):
         self._src = source
         self.t = float(start_at)          # device-local virtual frontier
         self.prefill_s: Optional[float] = None
+        self.tracer = tracer
+        self._rid = rid
+        self._track = f"device/req{rid}" if rid is not None else "device/draft"
 
     def prefill(self) -> tuple[int, float]:
         """Dispatch the draft-mode prefill. Returns ``(token, t_done)`` —
@@ -182,7 +202,13 @@ class DeviceDraftSession:
         :meth:`force_pending`) and the virtual completion time."""
         tok0, dur = self._src.draft_prefill()
         self.prefill_s = dur
+        t0 = self.t
         self.t += dur
+        if self.tracer.enabled:
+            self.tracer.span(
+                self._track, "draft_prefill", t0, self.t, cat="device",
+                args={"rid": self._rid},
+            )
         return tok0, self.t
 
     def force_pending(self, tok: int) -> None:
@@ -195,13 +221,31 @@ class DeviceDraftSession:
         and the virtual time the window's compute finishes — or ``None``
         when the device cannot draft (saturated / pool exhausted)."""
         if not_before is not None:
-            self.t = max(self.t, float(not_before))
+            self.wait_until(float(not_before))
         w = self._src.draft_window(k)
         if w is None:
             return None
         drafts, probs, dur = w
+        t0 = self.t
         self.t += dur
+        if self.tracer.enabled:
+            self.tracer.span(
+                self._track, "draft", t0, self.t, cat="device",
+                args={"rid": self._rid, "k": len(drafts)},
+            )
         return drafts, probs, self.t
+
+    def wait_until(self, t: float) -> None:
+        """Advance the device frontier to ``t`` (the driver's round-trip
+        bound: the previous verdict's downlink arrival). The idle gap is the
+        draft-stall component of TTFT attribution."""
+        if t > self.t:
+            if self.tracer.enabled:
+                self.tracer.span(
+                    self._track, "await_verdict", self.t, t, cat="device",
+                    args={"rid": self._rid},
+                )
+            self.t = t
 
     def draft_rewind(self, accepted: int, token: int) -> list:
         """Apply the server verdict (instant host bookkeeping)."""
@@ -259,7 +303,8 @@ class ServerTokenStream:
     kind = Endpoint.SERVER
 
     def __init__(self, server: BatchedServer, rid: int, start_at: float,
-                 downlink: float, prefill_tokens: int, uplink: float = 0.0):
+                 downlink: float, prefill_tokens: int, uplink: float = 0.0,
+                 tracer=NULL_TRACER, req_rid: Optional[int] = None):
         self.server = server
         self.rid = rid
         self.start_at = float(start_at)
@@ -269,6 +314,9 @@ class ServerTokenStream:
         self._buf: deque[TokenEvent] = deque()
         self._cancelled = False
         self._emitted_seen = 0
+        self.tracer = tracer
+        self._req_rid = req_rid           # driver-level rid (trace join key)
+        self._first_drained = False
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -303,6 +351,18 @@ class ServerTokenStream:
         if self._cancelled:
             return
         for tok, t in self.server.pop_events(self.rid):
+            if self.tracer.enabled and not self._first_drained:
+                # one downlink span for the first token: the network leg of
+                # this request's TTFT (later tokens pipeline behind it)
+                self._first_drained = True
+                rid = self._req_rid if self._req_rid is not None else self.rid
+                # lane is per server stream: a migration re-open's transfer
+                # legitimately overlaps the original stream's in-flight leg
+                self.tracer.span(
+                    f"network/req{rid}.s{self.rid}", "downlink",
+                    t, t + self.downlink,
+                    cat="network", args={"rid": rid, "srv_rid": self.rid},
+                )
             self._buf.append(TokenEvent(tok, t + self.downlink, Endpoint.SERVER))
 
     def candidate_time(self) -> Optional[float]:
@@ -371,12 +431,18 @@ class DeviceEndpoint:
     kind = Endpoint.DEVICE
 
     def __init__(self, engine: InferenceEngine, energy_per_prefill_token: float = 1.0,
-                 energy_per_decode_token: float = 1.0):
+                 energy_per_decode_token: float = 1.0, tracer=None):
         self.engine = engine
         self.energy_per_prefill_token = energy_per_prefill_token
         self.energy_per_decode_token = energy_per_decode_token
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._auto_seed = 0    # distinct default stream per request, matching
                                # the server endpoint's rid-derived default
+
+    def _track(self, req: Request, suffix: str = "") -> tuple:
+        rid = getattr(req, "rid", None)
+        lane = f"req{rid}" if rid is not None else "req?"
+        return f"device/{lane}{suffix}", rid
 
     def _resolve(self, req: Request) -> Request:
         """Default sampling seed: distinct per opened stream. Callers racing
@@ -391,8 +457,10 @@ class DeviceEndpoint:
     def open_stream(self, req: Request,
                     rng: Optional[np.random.Generator] = None,
                     start_at: float = 0.0) -> DeviceTokenStream:
+        track, rid = self._track(req)
         return DeviceTokenStream(
             self.engine.open_stream(self._resolve(req)), start_at, self.kind,
+            tracer=self.tracer, track=track, rid=rid,
         )
 
     def open_replay_stream(self, req: Request, generated,
@@ -405,9 +473,10 @@ class DeviceEndpoint:
         host-buffered bursts). ``req`` must carry the source's seed and
         sampler so a temperature > 0 replay resumes the source's
         per-position sampling stream bit-identically."""
+        track, rid = self._track(req, suffix=":replay")
         return DeviceTokenStream(
             self.engine.open_replay(self._resolve(req), generated),
-            start_at, self.kind,
+            start_at, self.kind, tracer=self.tracer, track=track, rid=rid,
         )
 
     @property
@@ -424,6 +493,7 @@ class DeviceEndpoint:
         server verification share one sampling stream."""
         return DeviceDraftSession(
             self.engine.open_stream(self._resolve(req)), start_at,
+            tracer=self.tracer, rid=getattr(req, "rid", None),
         )
 
 
@@ -438,19 +508,32 @@ class ServerEndpoint:
 
     kind = Endpoint.SERVER
 
-    def __init__(self, server: BatchedServer, network: Optional[NetworkModel] = None):
+    def __init__(self, server: BatchedServer, network: Optional[NetworkModel] = None,
+                 tracer=None):
         self.server = server
         # one NetworkModel per endpoint instance: a shared default instance
         # would alias link parameters across every endpoint in the process
         self.network = network if network is not None else NetworkModel()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def _open(self, req: Request, rng: np.random.Generator,
               start_at: float, verify: bool = False) -> ServerTokenStream:
         rtt = self.network.sample_rtt(rng)
         rid = self.server.submit(req, at=start_at + rtt / 2.0, verify=verify)
+        req_rid = getattr(req, "rid", None)
+        if self.tracer.enabled:
+            lane = req_rid if req_rid is not None else rid
+            # one lane per server stream (not per driver request): a
+            # migration re-open's uplink can overlap the race stream's
+            self.tracer.span(
+                f"network/req{lane}.s{rid}", "uplink",
+                start_at, start_at + rtt / 2.0,
+                cat="network", args={"rid": lane, "srv_rid": rid},
+            )
         return ServerTokenStream(
             self.server, rid, start_at, downlink=rtt / 2.0,
             prefill_tokens=req.prompt_len, uplink=rtt / 2.0,
+            tracer=self.tracer, req_rid=req_rid,
         )
 
     def open_stream(self, req: Request, rng: np.random.Generator,

@@ -65,6 +65,7 @@ from repro.models.config import ModelConfig
 
 from .kv_pool import KVPoolManager
 from .request import Request
+from .telemetry import NULL_TRACER, MetricsRegistry, metric_attr
 
 __all__ = ["InferenceEngine", "GenerationResult", "EngineStream", "BatchedServer"]
 
@@ -1273,6 +1274,15 @@ class BatchedServer:
     running each alone.
     """
 
+    # every scalar counter lives in the metrics registry (the single backing
+    # store behind pool_stats()); these descriptors keep `self.x += 1` sites
+    # and test reads working unchanged while the registry holds the number
+    cancel_lag_tokens = metric_attr("cancel_lag_tokens")
+    slo_misses = metric_attr("server_slo_misses")
+    deadline_reorders = metric_attr("deadline_reorders")
+    prefill_tokens_computed = metric_attr("prefill_tokens_computed")
+    prefill_tokens_admitted = metric_attr("prefill_tokens_admitted")
+
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  max_len: int = 256, decode_chunk: int = 4,
                  paged: Optional[bool] = None, block_size: int = 16,
@@ -1281,7 +1291,8 @@ class BatchedServer:
                  sampler: Optional[SamplerConfig] = None,
                  admission: str = "edf",
                  prefix_cache: bool = False,
-                 speculative: bool = False):
+                 speculative: bool = False,
+                 tracer=None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
         self.params = _cast_params(params, cfg.dtype)
@@ -1294,6 +1305,13 @@ class BatchedServer:
         if admission not in ("edf", "fifo"):
             raise ValueError(f"admission must be 'edf' or 'fifo' (got {admission!r})")
         self.admission = admission
+        # registry first: the metric_attr counter initialisations below (and
+        # the KVPoolManager, which shares this registry) write through to it
+        self.metrics = MetricsRegistry()
+        for _k in ("cancel_lag_tokens", "server_slo_misses", "deadline_reorders"):
+            self.metrics.counter(_k)
+        self.metrics.view("admission", lambda: self.admission)
+        self.tracer = NULL_TRACER
         if paged is None:
             self.paged = supports_paged(cfg)
         elif paged and not supports_paged(cfg):
@@ -1313,8 +1331,12 @@ class BatchedServer:
             num_blocks = max(int(num_blocks), self.max_blocks_per_row + 1)
             self.kv = KVPoolManager(
                 num_blocks, self.block_size, max_slots, self.max_blocks_per_row,
-                prefix_cache=prefix_cache,
+                prefix_cache=prefix_cache, metrics=self.metrics,
             )
+            self.metrics.view("prefill_compute_per_admitted_token", lambda: (
+                self.prefill_tokens_computed / self.prefill_tokens_admitted
+                if self.prefill_tokens_admitted else 0.0
+            ))
             self.pages = init_paged_pages(cfg, num_blocks, self.block_size)
             self.block_tables = np.zeros(
                 (max_slots, self.max_blocks_per_row), np.int32
@@ -1400,6 +1422,31 @@ class BatchedServer:
         self.verify_positions: dict[int, int] = {}  # scored positions per rid
         self.verify_rounds: dict[int, int] = {}
         self.accepted_tokens: dict[int, int] = {}   # accepted drafts per rid
+        if self.speculative:
+            def _rounds():
+                return sum(self.verify_rounds.values())
+
+            def _scored():
+                return sum(self.verify_positions.values()) - _rounds()
+
+            def _accepted():
+                return sum(self.accepted_tokens.values())
+
+            self.metrics.view("verify_rounds", lambda: int(_rounds()))
+            self.metrics.view("drafts_scored", lambda: int(_scored()))
+            self.metrics.view("accepted_draft_tokens", lambda: int(_accepted()))
+            self.metrics.view("acceptance_rate", lambda: (
+                _accepted() / _scored() if _scored() else 0.0
+            ))
+        self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach (or detach, with None) a telemetry tracer; the paged KV
+        manager shares it and stamps its events on this server's virtual
+        clock."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.paged:
+            self.kv.set_telemetry(self.tracer, lambda: self.clock)
 
     @property
     def free_rows(self) -> list:
@@ -1529,6 +1576,16 @@ class BatchedServer:
         self.submit_time[rid] = arrive
         self.events[rid] = deque()
         self.generated[rid] = 0
+        if self.tracer.enabled:
+            self.tracer.begin_request(
+                rid, arrive, cat="server_request",
+                args={"prompt_tokens": int(np.asarray(req.prompt).shape[0]),
+                      "max_new": int(req.max_new), "verify": bool(verify)},
+            )
+            self.tracer.instant(
+                "server/queue", "enqueue", arrive, cat="server",
+                args={"rid": rid},
+            )
         return rid
 
     def cancel(self, rid: int, at: Optional[float] = None) -> None:
@@ -1545,6 +1602,11 @@ class BatchedServer:
             return
         if at is not None and at > self.clock:
             self._cancel_due[rid] = min(float(at), self._cancel_due.get(rid, math.inf))
+            if self.tracer.enabled:
+                self.tracer.request_instant(
+                    rid, "cancel_scheduled", self.clock, cat="server_request",
+                    args={"due": float(at)},
+                )
             return
         self._cancel_due.pop(rid, None)
         self.cancelled.add(rid)
@@ -1560,11 +1622,23 @@ class BatchedServer:
             else:
                 self._free_rows.append(row)
             self.completed[rid] = slot.tokens
+            if self.tracer.enabled:
+                self.tracer.end_request(
+                    rid, self.clock, cat="server_request",
+                    args={"outcome": "cancelled",
+                          "generated": self.generated.get(rid, 0)},
+                )
             return
         for item in self.queue:
             if item.rid == rid:
                 self.queue.remove(item)
                 self.completed[rid] = list(item.tokens)
+                if self.tracer.enabled:
+                    self.tracer.end_request(
+                        rid, self.clock, cat="server_request",
+                        args={"outcome": "cancelled",
+                              "generated": self.generated.get(rid, 0)},
+                    )
                 return
 
     def _apply_due_cancels(self) -> None:
@@ -1624,6 +1698,12 @@ class BatchedServer:
             # an in-flight cancel for a finished request is moot: expunge it
             # so cancel_pending() cannot wedge the driver's finalize wait
             self._cancel_due.pop(rid, None)
+            if self.tracer.enabled:
+                self.tracer.end_request(
+                    rid, self.clock, cat="server_request",
+                    args={"outcome": "finished",
+                          "generated": self.generated.get(rid, 0)},
+                )
 
     def _queued_tokens(self, item: _Queued) -> np.ndarray:
         """The token sequence an admission of ``item`` prefills: the original
@@ -1704,6 +1784,11 @@ class BatchedServer:
         assert item is not None               # guarded by _admissible
         if reordered:
             self.deadline_reorders += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "deadline_reorder", self.clock,
+                    cat="server", args={"rid": item.rid},
+                )
         self.queue.remove(item)
         rid = item.rid
         full = self._queued_tokens(item)
@@ -1714,6 +1799,8 @@ class BatchedServer:
         key = _request_keys([item.seed])      # derived, not timed compute
         ops = sampler_operands([item.sampler])
         first_admission = rid not in self.first_token_time
+        t_admit = self.clock                  # admission start (queue wait end)
+        n_hit = 0
         t0 = time.perf_counter()
         if self.paged:
             sb = int(padded.shape[1])
@@ -1761,10 +1848,42 @@ class BatchedServer:
         self.first_token_time.setdefault(rid, self.clock)  # resume keeps TTFT
         if first_admission and self.clock > item.deadline:
             self.slo_misses += 1              # first token past its deadline
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "slo_miss", self.clock, cat="server",
+                    args={"rid": rid},
+                )
         self.events[rid].append((tok, self.clock))
         self.generated[rid] += 1
         if rid in self._cancel_due:
             self.cancel_lag_tokens += 1       # loser slipped into prefill
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "cancel_lag", self.clock, cat="server",
+                    args={"rid": rid, "n": 1},
+                )
+        self.metrics.histogram("queue_wait_s").observe(
+            t_admit - self.submit_time[rid]
+        )
+        if self.tracer.enabled:
+            self.tracer.span(
+                f"server/row{row}", "prefill", t_admit, self.clock,
+                cat="server",
+                args={
+                    "rid": rid,
+                    "resume": item.resume,
+                    "tokens_admitted": s,
+                    "tokens_computed": int(padded.shape[1]) - n_hit * (
+                        self.block_size if self.paged else 0
+                    ),
+                    "prefix_hit_blocks": n_hit,
+                    "queue_wait_s": t_admit - self.submit_time[rid],
+                },
+            )
+            self.tracer.request_instant(
+                rid, "admitted", self.clock, cat="server_request",
+                args={"row": row, "resume": item.resume},
+            )
         self.admit_seq[rid] = self._admit_counter
         self._admit_counter += 1
         self.slots[rid] = _Slot(
@@ -1798,6 +1917,15 @@ class BatchedServer:
         self._verify_requested.discard(rid)
         self.kv.release(rid, cache_tokens=self._slot_cache_tokens(slot, row))
         self.kv.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "server/queue", "preempt", self.clock, cat="server",
+                args={"rid": rid, "generated": self.generated.get(rid, 0)},
+            )
+            self.tracer.request_instant(
+                rid, "preempted", self.clock, cat="server_request",
+                args={"generated": self.generated.get(rid, 0)},
+            )
         self.queue.insert(0, _Queued(
             rid, slot.prompt, slot.remaining, list(slot.tokens),
             seed=slot.seed, sampler=slot.sampler, deadline=slot.deadline,
@@ -1920,7 +2048,17 @@ class BatchedServer:
             self.generated[rid] += n_valid
             if n_valid and rid in self._cancel_due:
                 self.cancel_lag_tokens += n_valid
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "server/queue", "cancel_lag", self.clock, cat="server",
+                        args={"rid": rid, "n": n_valid},
+                    )
             self.decode_dispatches[rid] = self.decode_dispatches.get(rid, 0) + 1
+            if self.tracer.enabled and n_valid:
+                self.tracer.span(
+                    f"server/row{row}", "decode", t_start, self.clock,
+                    cat="server", args={"rid": rid, "tokens": n_valid},
+                )
 
     # -- speculative verify rounds (server half of draft/verify) -----------
 
@@ -2029,6 +2167,17 @@ class BatchedServer:
             self.events[rid].append((tok, t_start + (i + 1) * dur / n_out))
         if rid in self._cancel_due:
             self.cancel_lag_tokens += n_out
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "cancel_lag", self.clock, cat="server",
+                    args={"rid": rid, "n": n_out},
+                )
+        if self.tracer.enabled:
+            self.tracer.span(
+                f"server/row{row}", "verify", t_start, self.clock,
+                cat="server",
+                args={"rid": rid, "k": k, "accepted": a, "tokens": n_out},
+            )
         self._retire_done()
         return {"accepted": a, "k": k, "tokens": out,
                 "t_start": t_start, "t_end": self.clock}
@@ -2103,52 +2252,14 @@ class BatchedServer:
         (propagation lag), first tokens that missed their TTFT deadline
         (``server_slo_misses``), and admissions where the deadline-aware
         order differed from FIFO (``deadline_reorders``). Dense servers
-        report the non-paged subset."""
-        stats = {
-            "cancel_lag_tokens": int(self.cancel_lag_tokens),
-            "server_slo_misses": int(self.slo_misses),
-            "deadline_reorders": int(self.deadline_reorders),
-            "admission": self.admission,
-        }
-        if self.paged:
-            stats.update(
-                blocks_in_use_peak=int(self.kv.blocks_in_use_peak),
-                queued_on_memory=len(self.kv.memory_waits),
-                extend_stalls=len(self.kv.extend_stalls),
-                preemptions=int(self.kv.preemptions),
-                num_blocks=int(self.kv.pool.num_blocks),
-                block_size=int(self.block_size),
-                prefix_cache=self.kv.prefix is not None,
-                prefix_queries=int(self.kv.prefix_queries),
-                prefix_hits=int(self.kv.prefix_hits),
-                prefix_hit_rate=(
-                    self.kv.prefix_hits / self.kv.prefix_queries
-                    if self.kv.prefix_queries else 0.0
-                ),
-                prefix_tokens_hit=int(self.kv.prefix_tokens_hit),
-                blocks_saved=int(self.kv.blocks_saved),
-                blocks_cached=int(self.kv.blocks_cached),
-                prefix_evictions=int(self.kv.prefix_evictions),
-                copy_ops=int(self.kv.copy_ops),
-                clone_fallbacks=int(self.kv.clone_fallbacks),
-                prefill_tokens_computed=int(self.prefill_tokens_computed),
-                prefill_tokens_admitted=int(self.prefill_tokens_admitted),
-                prefill_compute_per_admitted_token=(
-                    self.prefill_tokens_computed / self.prefill_tokens_admitted
-                    if self.prefill_tokens_admitted else 0.0
-                ),
-            )
-        if self.speculative:
-            rounds = sum(self.verify_rounds.values())
-            scored = sum(self.verify_positions.values()) - rounds  # drafts
-            accepted = sum(self.accepted_tokens.values())
-            stats.update(
-                verify_rounds=int(rounds),
-                drafts_scored=int(scored),
-                accepted_draft_tokens=int(accepted),
-                acceptance_rate=(accepted / scored if scored else 0.0),
-            )
-        return stats
+        report the non-paged subset.
+
+        Implementation: one :class:`~repro.serving.telemetry.MetricsRegistry`
+        snapshot — every number here is registry-backed (counters written at
+        the event sites, derived values as views), so no stat is computed
+        twice and trace-derived sums can be reconciled against this dict
+        exactly (``telemetry.reconcile_trace``)."""
+        return self.metrics.snapshot()
 
     def ttft(self, rid: int) -> Optional[float]:
         """Virtual-time TTFT. ``None`` for a request that was never admitted

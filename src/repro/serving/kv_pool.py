@@ -44,6 +44,7 @@ from typing import Iterable, Optional, Sequence
 # functions route frozen-row writes there and the kernel DMA-reads it for
 # padded table slots, so allocator and compute must agree on it
 from repro.models.paged import NULL_BLOCK
+from repro.serving.telemetry import NULL_TRACER, MetricsRegistry, metric_attr
 
 __all__ = [
     "BlockPool",
@@ -313,8 +314,23 @@ class KVPoolManager:
     fail, so the cache never steals capacity from live requests.
     """
 
+    # counters live in the registry (the single backing store for every
+    # stats surface); these descriptors keep every `self.x += 1` site and
+    # every test that reads `kv.x` working unchanged
+    preemptions = metric_attr("preemptions")
+    prefix_queries = metric_attr("prefix_queries")
+    prefix_hits = metric_attr("prefix_hits")
+    prefix_tokens_hit = metric_attr("prefix_tokens_hit")
+    blocks_saved = metric_attr("blocks_saved")
+    copy_ops = metric_attr("copy_ops")
+    clone_fallbacks = metric_attr("clone_fallbacks")
+
     def __init__(self, num_blocks: int, block_size: int, rows: int,
-                 max_blocks_per_row: int, prefix_cache: bool = False):
+                 max_blocks_per_row: int, prefix_cache: bool = False,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = NULL_TRACER
+        self._now = None                    # zero-arg virtual-clock callable
         self.pool = BlockPool(num_blocks)
         self.block_size = int(block_size)
         self.rows = int(rows)
@@ -342,6 +358,33 @@ class KVPoolManager:
         self.blocks_saved = 0
         self.copy_ops = 0
         self.clone_fallbacks = 0
+        # derived numbers are registry views: evaluated at snapshot time so
+        # they can never drift from their inputs
+        m = self.metrics
+        m.view("blocks_in_use_peak", lambda: int(self.pool.peak_in_use))
+        m.view("queued_on_memory", lambda: len(self.memory_waits))
+        m.view("extend_stalls", lambda: len(self.extend_stalls))
+        m.view("num_blocks", lambda: int(self.pool.num_blocks))
+        m.view("block_size", lambda: int(self.block_size))
+        m.view("prefix_cache", lambda: self.prefix is not None)
+        m.view("prefix_hit_rate", lambda: (
+            self.prefix_hits / self.prefix_queries if self.prefix_queries else 0.0
+        ))
+        m.view("blocks_cached", lambda: int(self.blocks_cached))
+        m.view("prefix_evictions", lambda: int(self.prefix_evictions))
+        m.view("blocks_in_use", lambda: int(self.pool.num_in_use))
+
+    def set_telemetry(self, tracer, clock) -> None:
+        """Attach a tracer and the owning engine's virtual clock (a zero-arg
+        callable); kv events are stamped on that shared timeline."""
+        self.tracer = tracer
+        self._now = clock
+
+    def _trace(self, name: str, **args) -> None:
+        """Emit one kv instant + refresh the blocks_in_use counter track."""
+        t = self._now()
+        self.tracer.instant("kv/pool", name, t, cat="kv", args=args)
+        self.tracer.value("kv/pool", "blocks_in_use", t, self.pool.num_in_use)
 
     # -- capacity queries ---------------------------------------------------
 
@@ -399,6 +442,12 @@ class KVPoolManager:
                 self.prefix_hits += 1
                 self.prefix_tokens_hit += len(blocks) * self.block_size
                 self.blocks_saved += len(blocks)
+                if self.tracer.enabled and self._now is not None:
+                    self._trace(
+                        "prefix_hit",
+                        blocks=len(blocks),
+                        tokens=len(blocks) * self.block_size,
+                    )
         return blocks
 
     def can_admit(self, demand_blocks: int, rid: int | None = None,
@@ -418,6 +467,8 @@ class KVPoolManager:
         if demand_blocks > headroom:
             if rid is not None:
                 self.memory_waits.add(rid)
+                if self.tracer.enabled and self._now is not None:
+                    self._trace("memory_wait", rid=rid, demand=demand_blocks)
             return False
         return True
 
@@ -425,9 +476,13 @@ class KVPoolManager:
                      exclude: frozenset | set = frozenset()) -> list[int] | None:
         """Pool alloc that evicts LRU cached prefixes to make room."""
         got = self.pool.alloc(n)
+        evicted = 0
         while got is None and self.prefix is not None \
                 and self.prefix.evict_one(exclude=exclude):
+            evicted += 1
             got = self.pool.alloc(n)
+        if evicted and self.tracer.enabled and self._now is not None:
+            self._trace("prefix_evict", n=evicted)
         return got
 
     # -- lifecycle ----------------------------------------------------------
@@ -461,6 +516,10 @@ class KVPoolManager:
             num_prefix=len(prefix_blocks),
         )
         self.tables[rid] = table
+        if self.tracer.enabled and self._now is not None:
+            self._trace(
+                "alloc", rid=rid, blocks=len(got), prefix=len(prefix_blocks)
+            )
         return table
 
     def extend(self, rid: int, target_tokens: int) -> bool:
@@ -477,8 +536,12 @@ class KVPoolManager:
         got = self._alloc_evict(extra)
         if got is None:
             self.extend_stalls.add(rid)
+            if self.tracer.enabled and self._now is not None:
+                self._trace("extend_stall", rid=rid, blocks=extra)
             return False
         table.blocks.extend(got)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("extend", rid=rid, blocks=extra)
         return True
 
     def shrink(self, rid: int, target_tokens: int) -> int:
@@ -500,6 +563,8 @@ class KVPoolManager:
             return 0
         del table.blocks[keep:]
         self.pool.free(tail)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("shrink", rid=rid, blocks=len(tail))
         return len(tail)
 
     def release(self, rid: int, cache_tokens=None) -> None:
@@ -519,6 +584,8 @@ class KVPoolManager:
                 self.prefix.insert(cache_tokens, table.blocks[:n_full])
         self.pool.free(table.blocks)
         self._free_rows.append(table.row)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("free", rid=rid, blocks=len(table.blocks))
 
     def clone(self, src_rid: int, dst_rid: int) -> tuple[PageTable, list[tuple[int, int]]] | None:
         """Alias-on-migration (copy-on-write): ``dst_rid``'s table shares the
@@ -553,6 +620,13 @@ class KVPoolManager:
             num_prefix=n_full,
         )
         self.tables[dst_rid] = dst
+        if self.tracer.enabled and self._now is not None:
+            self._trace(
+                "clone", src=src_rid, dst=dst_rid,
+                shared=len(shared), fresh=len(fresh),
+            )
+            if pairs:
+                self._trace("cow_copy", n=len(pairs))
         return dst, pairs
 
     def flush_prefix_cache(self) -> None:

@@ -1,0 +1,722 @@
+"""Unified telemetry: virtual-timeline tracing + a metrics registry.
+
+This module is the single observability substrate for the serving stack:
+
+* :class:`MetricsRegistry` — counters / gauges / histograms that back every
+  existing stats surface.  ``BatchedServer.pool_stats()`` and the DiSCo
+  driver ledgers are *views* over one registry, so no number is computed
+  twice and trace-derived aggregates can be reconciled against it exactly.
+* :class:`Tracer` — records spans and instant events on the shared virtual
+  timeline (seconds) and exports Chrome trace-event JSON that loads directly
+  in Perfetto (https://ui.perfetto.dev).  Tracks map to processes/threads:
+  a track name ``"server/row0"`` becomes process ``server``, thread ``row0``.
+  Each request is one async span (``ph: b/n/e``) keyed by its request id.
+* :class:`NullTracer` / :data:`NULL_TRACER` — the disabled path.  Every
+  method is a no-op ``pass``; instrumentation call sites additionally guard
+  args-dict construction behind ``if tracer.enabled`` so the overhead with
+  telemetry off is a single attribute check + no-op call, far below the
+  <2% budget asserted by ``bench_decode_throughput``.
+
+Trace helpers (:func:`validate_trace`, :func:`replay_projection`,
+:func:`reconcile_trace`, :func:`request_records`) are used by the tests, the
+determinism gate in ``bench_e2e_serving`` and ``tools/trace_report.py``.
+
+Why ``replay_projection`` instead of timestamp equality: virtual time is
+advanced by *measured wall-clock* of the real JAX engines, so two same-seed
+runs produce identical token streams but not identical timestamps.  The
+replay-identity check therefore compares the projection of a trace onto
+per-request delivered token streams, which must be bit-identical.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Callable
+
+_US = 1e6  # virtual seconds -> trace microseconds
+
+
+def _jsonable(o: Any) -> Any:
+    """json.dump fallback: numpy scalars/arrays -> python numbers/lists."""
+    if hasattr(o, "item"):
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    return str(o)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class Counter:
+    """Monotonic (by convention) integer counter."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def set(self, v: int) -> None:
+        self.value = int(v)
+
+
+class Gauge:
+    """Point-in-time numeric value (e.g. blocks currently in use)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Streaming summary of observations (count/total/min/max)."""
+
+    __slots__ = ("name", "count", "total", "min", "max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def summary(self) -> dict:
+        if self.count == 0:
+            return {"count": 0, "total": 0.0, "mean": 0.0, "min": 0.0, "max": 0.0}
+        return {
+            "count": self.count,
+            "total": self.total,
+            "mean": self.total / self.count,
+            "min": self.min,
+            "max": self.max,
+        }
+
+
+class _View:
+    __slots__ = ("name", "fn")
+
+    def __init__(self, name: str, fn: Callable[[], Any]):
+        self.name = name
+        self.fn = fn
+
+
+class MetricsRegistry:
+    """Named metrics store; ``snapshot()`` renders every stats dict.
+
+    Metrics are get-or-create by name; asking for an existing name with a
+    different kind raises ``TypeError`` (one name, one meaning).  A *view*
+    is a zero-arg callable evaluated at snapshot time — used for derived
+    numbers (rates, set sizes, config echoes) so they are never stored and
+    can never drift from their inputs.
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, Any] = {}
+
+    def _get(self, name: str, kind: type):
+        m = self._metrics.get(name)
+        if m is None:
+            m = kind(name)
+            self._metrics[name] = m
+        elif not isinstance(m, kind):
+            raise TypeError(
+                f"metric {name!r} is {type(m).__name__}, requested {kind.__name__}"
+            )
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def view(self, name: str, fn: Callable[[], Any]) -> None:
+        self._metrics[name] = _View(name, fn)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def value(self, name: str) -> Any:
+        m = self._metrics[name]
+        if isinstance(m, _View):
+            return m.fn()
+        if isinstance(m, Histogram):
+            return m.summary()
+        return m.value
+
+    def snapshot(self) -> dict:
+        return {name: self.value(name) for name in self._metrics}
+
+
+class metric_attr:
+    """Data descriptor exposing a registry counter as a plain int attribute.
+
+    ``self.preemptions += 1`` keeps working at every existing call site (and
+    in every existing test) while the number itself lives in the registry —
+    the registry is the single backing store, the attribute is a view.
+    """
+
+    __slots__ = ("metric", "registry_attr")
+
+    def __init__(self, metric: str, registry_attr: str = "metrics"):
+        self.metric = metric
+        self.registry_attr = registry_attr
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return getattr(obj, self.registry_attr).counter(self.metric).value
+
+    def __set__(self, obj, value) -> None:
+        getattr(obj, self.registry_attr).counter(self.metric).set(value)
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+class NullTracer:
+    """Disabled tracer: every method is a no-op.
+
+    Call sites keep a reference to this singleton-ish object and guard any
+    non-trivial argument construction behind ``if tracer.enabled``.
+    """
+
+    __slots__ = ()
+    enabled = False
+
+    def span(self, track, name, t0, t1, cat="span", args=None) -> None:
+        pass
+
+    def instant(self, track, name, t, cat="instant", args=None) -> None:
+        pass
+
+    def value(self, track, name, t, v) -> None:
+        pass
+
+    def begin_request(self, rid, t, cat="request", name=None, args=None) -> None:
+        pass
+
+    def request_instant(self, rid, name, t, cat="request", args=None) -> None:
+        pass
+
+    def end_request(self, rid, t, cat="request", args=None) -> None:
+        pass
+
+    def export(self) -> dict:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    def save(self, path, metadata=None) -> None:
+        raise RuntimeError("cannot save a NullTracer trace; pass a Tracer()")
+
+
+NULL_TRACER = NullTracer()
+
+
+class Tracer(NullTracer):
+    """Records events on the virtual timeline; exports Chrome trace JSON.
+
+    Track naming: ``"group/lane"`` -> process ``group`` / thread ``lane``
+    (e.g. ``server/row0``, ``device/req3``, ``network/req3``, ``kv/pool``).
+    Request lifecycles are async spans (``ph`` b/n/e) keyed by ``(cat, id)``
+    so driver-level requests (cat ``request``) and server-side requests
+    (cat ``server_request``, distinct id space) never collide.
+    """
+
+    __slots__ = ("events", "_pids", "_tids", "_open_async")
+    enabled = True
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self._pids: dict[str, int] = {}
+        self._tids: dict[str, tuple[int, int]] = {}
+        self._open_async: dict[tuple, list[str]] = defaultdict(list)
+
+    # -- track bookkeeping --------------------------------------------------
+
+    def _ids(self, track: str) -> tuple[int, int]:
+        ids = self._tids.get(track)
+        if ids is not None:
+            return ids
+        group, _, lane = track.partition("/")
+        pid = self._pids.get(group)
+        if pid is None:
+            pid = len(self._pids) + 1
+            self._pids[group] = pid
+            self.events.append(
+                {
+                    "ph": "M",
+                    "name": "process_name",
+                    "pid": pid,
+                    "tid": 0,
+                    "args": {"name": group},
+                }
+            )
+        tid = sum(1 for t in self._tids.values() if t[0] == pid) + 1
+        ids = (pid, tid)
+        self._tids[track] = ids
+        self.events.append(
+            {
+                "ph": "M",
+                "name": "thread_name",
+                "pid": pid,
+                "tid": tid,
+                "args": {"name": lane or group},
+            }
+        )
+        return ids
+
+    # -- synchronous events -------------------------------------------------
+
+    def span(self, track, name, t0, t1, cat="span", args=None) -> None:
+        pid, tid = self._ids(track)
+        ev = {
+            "ph": "X",
+            "name": name,
+            "cat": cat,
+            "pid": pid,
+            "tid": tid,
+            "ts": t0 * _US,
+            "dur": max(0.0, (t1 - t0) * _US),
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def instant(self, track, name, t, cat="instant", args=None) -> None:
+        pid, tid = self._ids(track)
+        ev = {
+            "ph": "i",
+            "name": name,
+            "cat": cat,
+            "pid": pid,
+            "tid": tid,
+            "ts": t * _US,
+            "s": "t",
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def value(self, track, name, t, v) -> None:
+        pid, tid = self._ids(track)
+        self.events.append(
+            {
+                "ph": "C",
+                "name": name,
+                "pid": pid,
+                "tid": tid,
+                "ts": t * _US,
+                "args": {name: v},
+            }
+        )
+
+    # -- async (per-request) spans ------------------------------------------
+
+    def begin_request(self, rid, t, cat="request", name=None, args=None) -> None:
+        name = name or f"req{rid}"
+        pid, tid = self._ids(cat)
+        ev = {
+            "ph": "b",
+            "name": name,
+            "cat": cat,
+            "id": rid,
+            "pid": pid,
+            "tid": tid,
+            "ts": t * _US,
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+        self._open_async[(cat, rid)].append(name)
+
+    def request_instant(self, rid, name, t, cat="request", args=None) -> None:
+        open_names = self._open_async.get((cat, rid))
+        span_name = open_names[-1] if open_names else f"req{rid}"
+        pid, tid = self._ids(cat)
+        ev = {
+            "ph": "n",
+            "name": span_name,
+            "cat": cat,
+            "id": rid,
+            "pid": pid,
+            "tid": tid,
+            "ts": t * _US,
+            "args": {"event": name, **(args or {})},
+        }
+        self.events.append(ev)
+
+    def end_request(self, rid, t, cat="request", args=None) -> None:
+        open_names = self._open_async.get((cat, rid))
+        name = open_names.pop() if open_names else f"req{rid}"
+        pid, tid = self._ids(cat)
+        ev = {
+            "ph": "e",
+            "name": name,
+            "cat": cat,
+            "id": rid,
+            "pid": pid,
+            "tid": tid,
+            "ts": t * _US,
+        }
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # -- export -------------------------------------------------------------
+
+    def export(self) -> dict:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def save(self, path, metadata=None) -> None:
+        trace = self.export()
+        if metadata:
+            trace["otherData"] = metadata
+        with open(path, "w") as f:
+            json.dump(trace, f, default=_jsonable)
+
+
+# ---------------------------------------------------------------------------
+# Trace analysis helpers
+# ---------------------------------------------------------------------------
+
+
+def _events(trace: dict | list) -> list[dict]:
+    if isinstance(trace, dict):
+        return trace.get("traceEvents", [])
+    return list(trace)
+
+
+def trace_spans(trace, cat: str | None = None, name: str | None = None) -> list[dict]:
+    """All complete (``ph: X``) spans, optionally filtered by cat / name."""
+    out = []
+    for ev in _events(trace):
+        if ev.get("ph") != "X":
+            continue
+        if cat is not None and ev.get("cat") != cat:
+            continue
+        if name is not None and ev.get("name") != name:
+            continue
+        out.append(ev)
+    return out
+
+
+def trace_instants(trace, cat: str | None = None, name: str | None = None) -> list[dict]:
+    """All instant (``ph: i``) events, optionally filtered by cat / name."""
+    out = []
+    for ev in _events(trace):
+        if ev.get("ph") != "i":
+            continue
+        if cat is not None and ev.get("cat") != cat:
+            continue
+        if name is not None and ev.get("name") != name:
+            continue
+        out.append(ev)
+    return out
+
+
+def validate_trace(trace) -> list[str]:
+    """Schema invariants; returns a list of human-readable problems.
+
+    Checks: required fields per phase, non-negative ts/dur, every async
+    ``b`` matched by exactly one ``e`` (per ``(cat, id)``), and proper
+    nesting of complete spans within each (pid, tid) lane — a span must
+    either contain or be disjoint from every other span on its lane.
+    """
+    problems: list[str] = []
+    events = _events(trace)
+    async_open: dict[tuple, int] = defaultdict(int)
+    lanes: dict[tuple, list[tuple[float, float, str]]] = defaultdict(list)
+
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None:
+            problems.append(f"event {i}: missing ph")
+            continue
+        if ph == "M":
+            continue
+        if "ts" not in ev:
+            problems.append(f"event {i} ({ph} {ev.get('name')}): missing ts")
+            continue
+        if ev["ts"] < 0:
+            problems.append(f"event {i} ({ph} {ev.get('name')}): negative ts")
+        if "name" not in ev:
+            problems.append(f"event {i}: missing name")
+        if ph == "X":
+            dur = ev.get("dur")
+            if dur is None:
+                problems.append(f"event {i} (X {ev.get('name')}): missing dur")
+            elif dur < 0:
+                problems.append(f"event {i} (X {ev.get('name')}): negative dur")
+            else:
+                lanes[(ev.get("pid"), ev.get("tid"))].append(
+                    (ev["ts"], dur, str(ev.get("name")))
+                )
+        elif ph in ("b", "n", "e"):
+            key = (ev.get("cat"), ev.get("id"))
+            if ev.get("id") is None:
+                problems.append(f"event {i} ({ph} {ev.get('name')}): missing id")
+                continue
+            if ph == "b":
+                async_open[key] += 1
+            elif ph == "e":
+                async_open[key] -= 1
+                if async_open[key] < 0:
+                    problems.append(f"async end without begin: {key}")
+            elif ph == "n" and async_open[key] <= 0:
+                problems.append(f"async instant outside open span: {key}")
+
+    for key, n in async_open.items():
+        if n > 0:
+            problems.append(f"async span never closed: {key} ({n} open)")
+
+    eps = 0.5  # µs slack: virtual times are floats rounded through 1e6
+    for lane, spans in lanes.items():
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack: list[tuple[float, float, str]] = []
+        for ts, dur, name in spans:
+            while stack and ts >= stack[-1][0] + stack[-1][1] - eps:
+                stack.pop()
+            if stack:
+                p_ts, p_dur, p_name = stack[-1]
+                if ts + dur > p_ts + p_dur + eps:
+                    problems.append(
+                        f"lane {lane}: span {name!r} [{ts:.1f},{ts + dur:.1f}] "
+                        f"overlaps parent {p_name!r} [{p_ts:.1f},{p_ts + p_dur:.1f}]"
+                    )
+            stack.append((ts, dur, name))
+    return problems
+
+
+def request_records(trace, cat: str = "request") -> dict:
+    """Per-request async lifecycle: ``{id: {begin, end, instants: [...]}}``."""
+    recs: dict[Any, dict] = {}
+    for ev in _events(trace):
+        if ev.get("cat") != cat or ev.get("ph") not in ("b", "n", "e"):
+            continue
+        rec = recs.setdefault(ev["id"], {"begin": None, "end": None, "instants": []})
+        if ev["ph"] == "b":
+            rec["begin"] = ev
+        elif ev["ph"] == "e":
+            rec["end"] = ev
+        else:
+            rec["instants"].append(ev)
+    return recs
+
+
+def replay_projection(trace) -> dict:
+    """Project a trace onto per-request delivered token streams.
+
+    This is the replay-identity invariant for the determinism gate: virtual
+    timestamps legitimately differ across same-seed runs (compute time is
+    *measured*, so race winners / migrations / preemption points can move),
+    but the delivered tokens, their count, and each request's terminal
+    outcome must be identical.  Returns ``{rid: {tokens, outcome, delivered}}``.
+    """
+    out = {}
+    for rid, rec in sorted(request_records(trace).items()):
+        end = rec["end"]
+        args = (end or {}).get("args", {})
+        out[rid] = {
+            "tokens": list(args.get("tokens", [])),
+            "outcome": args.get("outcome"),
+            "delivered": args.get("delivered"),
+        }
+    return out
+
+
+# (trace instant/span name, args key) -> stats key; used by reconcile_trace.
+_RECONCILE_INSTANTS = [
+    ("preempt", None, "preemptions"),
+    ("deadline_reorder", None, "deadline_reorders"),
+    ("slo_miss", None, "server_slo_misses"),
+    ("cancel_lag", "n", "cancel_lag_tokens"),
+    ("prefix_hit", None, "prefix_hits"),
+    ("prefix_hit", "blocks", "blocks_saved"),
+    ("prefix_evict", "n", "prefix_evictions"),
+    ("cow_copy", "n", "copy_ops"),
+]
+
+
+def reconcile_trace(trace, stats: dict) -> list[str]:
+    """Cross-check span/instant-derived sums against registry counters.
+
+    For every stats key with a trace-derivable definition, recompute it from
+    the trace and compare; returns a list of mismatch descriptions (empty
+    means the trace reconciles exactly).  Only keys present in ``stats`` are
+    checked, so dense (non-paged) or non-speculative stacks skip the
+    inapplicable ones.
+    """
+    problems: list[str] = []
+    instants = trace_instants(trace)
+
+    def check(key, derived):
+        if key in stats and stats[key] != derived:
+            problems.append(f"{key}: stats={stats[key]} trace={derived}")
+
+    for ev_name, args_key, stats_key in _RECONCILE_INSTANTS:
+        matching = [ev for ev in instants if ev.get("name") == ev_name]
+        if args_key is None:
+            derived = len(matching)
+        else:
+            derived = sum(ev.get("args", {}).get(args_key, 0) for ev in matching)
+        check(stats_key, derived)
+
+    verify = trace_spans(trace, name="verify")
+    if verify:
+        check("verify_rounds", len(verify))
+        check(
+            "accepted_draft_tokens",
+            sum(ev["args"].get("accepted", 0) for ev in verify if "args" in ev),
+        )
+        check(
+            "drafts_scored",
+            sum(ev["args"].get("k", 0) for ev in verify if "args" in ev),
+        )
+
+    prefill = trace_spans(trace, name="prefill", cat="server")
+    if prefill:
+        check(
+            "prefill_tokens_admitted",
+            sum(ev["args"].get("tokens_admitted", 0) for ev in prefill if "args" in ev),
+        )
+        check(
+            "prefill_tokens_computed",
+            sum(ev["args"].get("tokens_computed", 0) for ev in prefill if "args" in ev),
+        )
+    return problems
+
+
+def ttft_attribution(trace) -> list[dict]:
+    """Per-request TTFT breakdown: queue / prefill / network / draft-stall.
+
+    Joins driver-level request records (cat ``request``) with server-side
+    spans via the ``srv_rid`` recorded on the dispatch instant, and with
+    network/device tracks via the driver rid.  Returns one dict per request
+    with the component seconds; components that do not apply are 0.0.
+    """
+    recs = request_records(trace, cat="request")
+    spans = trace_spans(trace)
+
+    # Index server prefill spans by server rid, network spans by driver rid.
+    prefill_by_srv: dict[Any, dict] = {}
+    for ev in spans:
+        if ev.get("cat") == "server" and ev.get("name") == "prefill":
+            rid = ev.get("args", {}).get("rid")
+            if rid is not None and rid not in prefill_by_srv:
+                prefill_by_srv[rid] = ev
+    net_by_rid: dict[Any, list[dict]] = defaultdict(list)
+    dev_prefill_by_rid: dict[Any, dict] = {}
+    stall_by_rid: dict[Any, list[dict]] = defaultdict(list)
+    for ev in spans:
+        cat, name = ev.get("cat"), ev.get("name")
+        args = ev.get("args", {})
+        rid = args.get("rid")
+        if rid is None:
+            continue
+        if cat == "network":
+            net_by_rid[rid].append(ev)
+        elif cat == "device" and name in ("prefill", "draft_prefill"):
+            if rid not in dev_prefill_by_rid:
+                dev_prefill_by_rid[rid] = ev
+        elif cat == "device" and name == "await_verdict":
+            stall_by_rid[rid].append(ev)
+
+    def _before(ev, horizon) -> float:
+        """Portion of a span (seconds) that lies before the TTFT horizon —
+        a span can straddle the first token (e.g. an uplink still in flight
+        when the device wins the race); only the pre-TTFT part attributes."""
+        ts, dur = ev["ts"], ev.get("dur", 0.0)
+        if ts >= horizon:
+            return 0.0
+        return (min(ts + dur, horizon) - ts) / _US
+
+    rows = []
+    for rid, rec in sorted(recs.items()):
+        begin, end = rec["begin"], rec["end"]
+        if begin is None:
+            continue
+        t0 = begin["ts"]
+        info = {
+            "rid": rid,
+            "arrival_s": t0 / _US,
+            "queue_s": 0.0,
+            "prefill_s": 0.0,
+            "network_s": 0.0,
+            "draft_stall_s": 0.0,
+            "ttft_s": None,
+            "outcome": (end or {}).get("args", {}).get("outcome"),
+            "winner": (end or {}).get("args", {}).get("winner"),
+        }
+        srv_rid = None
+        first_token_ts = None
+        for n in rec["instants"]:
+            args = n.get("args", {})
+            if args.get("event") == "dispatch":
+                srv_rid = args.get("srv_rid")
+            elif args.get("event") == "first_token" and first_token_ts is None:
+                first_token_ts = n["ts"]
+                if args.get("ttft_s") is not None:
+                    info["ttft_s"] = args["ttft_s"]
+        if info["ttft_s"] is None and first_token_ts is not None:
+            info["ttft_s"] = (first_token_ts - t0) / _US
+
+        horizon = first_token_ts if first_token_ts is not None else float("inf")
+        sp = prefill_by_srv.get(srv_rid)
+        if sp is not None and sp["ts"] < horizon:
+            info["prefill_s"] = _before(sp, horizon)
+            qw = sp.get("args", {}).get("queue_wait_s")
+            if qw is not None:
+                info["queue_s"] = qw
+        dp = dev_prefill_by_rid.get(rid)
+        if dp is not None:
+            info["prefill_s"] = max(info["prefill_s"], _before(dp, horizon))
+        for ev in net_by_rid.get(rid, []):
+            info["network_s"] += _before(ev, horizon)
+        for ev in stall_by_rid.get(rid, []):
+            info["draft_stall_s"] += _before(ev, horizon)
+        rows.append(info)
+    return rows
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "metric_attr",
+    "NullTracer",
+    "NULL_TRACER",
+    "Tracer",
+    "trace_spans",
+    "trace_instants",
+    "validate_trace",
+    "request_records",
+    "replay_projection",
+    "reconcile_trace",
+    "ttft_attribution",
+]

@@ -1,0 +1,442 @@
+"""Unified telemetry tests: the metrics registry as the SINGLE backing
+store behind every stats dict (``pool_stats()``/``stats()`` are snapshots,
+counter attributes are registry views), Chrome-trace schema invariants
+(every span closes, spans nest, async instants live inside open spans),
+per-request trace lifecycles reconciling exactly against ``RequestResult``
+outcomes and registry counters, replay-projection determinism across
+same-seed runs, TTFT attribution, and ``QoEReport.from_timeline`` zero- and
+one-token edge cases."""
+import math
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import paper_models
+from repro.core import CostModel, DiSCoScheduler, MigrationConfig
+from repro.models import init_params
+from repro.serving import (
+    NULL_TRACER,
+    SLO,
+    BatchedServer,
+    DeviceEndpoint,
+    DiSCoServer,
+    InferenceEngine,
+    MetricsRegistry,
+    NetworkModel,
+    QoEReport,
+    Request,
+    ServerEndpoint,
+    Tracer,
+    reconcile_trace,
+    replay_projection,
+    request_records,
+    trace_instants,
+    trace_spans,
+    ttft_attribution,
+    validate_trace,
+)
+from repro.serving.kv_pool import KVPoolManager
+from repro.serving.telemetry import metric_attr
+
+CFG = paper_models.TINY_DEVICE
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def dev_engine(params):
+    eng = InferenceEngine(CFG, params, max_len=96)
+    eng.warmup(prompt_lens=(12,))
+    return eng
+
+
+def _make_disco(dev_engine, params, tracer=None):
+    """Device-constrained pricing so the driver migrates mid-stream: the
+    traced lifecycle covers race + cancel + migration, not just a race."""
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96,
+                           decode_chunk=4)
+    server.warmup(prompt_lens=(12,))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-7, 6e-7, 900.0, 800.0, exchange_rate=5e-6),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+        budget=0.5,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.005),
+    )
+    return DiSCoServer(
+        sched, DeviceEndpoint(dev_engine),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.01, rtt_jitter=0.0)),
+        rng=np.random.default_rng(7),
+        tracer=tracer,
+    )
+
+
+def _requests(n=3, max_new=16):
+    rng = np.random.default_rng(9)
+    return [
+        Request(rng.integers(0, CFG.vocab, size=12).astype(np.int32),
+                max_new, arrival=0.002 * i)
+        for i in range(n)
+    ]
+
+
+@pytest.fixture(scope="module")
+def traced_runs(dev_engine, params):
+    """Two same-seed traced runs of the full disco stack (race + cancel +
+    migration), shared by the lifecycle / reconciliation / determinism /
+    attribution tests."""
+    out = []
+    for _ in range(2):
+        tracer = Tracer()
+        disco = _make_disco(dev_engine, params, tracer=tracer)
+        results = disco.serve_many(_requests())
+        out.append((tracer.export(), results, disco))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram_view():
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(4)
+    reg.gauge("g").set(2.5)
+    h = reg.histogram("h")
+    for v in (1.0, 3.0):
+        h.observe(v)
+    state = {"xs": [1, 2, 3]}
+    reg.view("derived", lambda: len(state["xs"]))
+
+    assert "c" in reg and "missing" not in reg
+    assert reg.value("c") == 5
+    assert reg.value("g") == 2.5
+    assert reg.value("h") == {"count": 2, "total": 4.0, "mean": 2.0,
+                              "min": 1.0, "max": 3.0}
+    # views are evaluated at snapshot time — they can never drift
+    state["xs"].append(4)
+    snap = reg.snapshot()
+    assert snap["derived"] == 4
+    assert set(snap) == {"c", "g", "h", "derived"}
+    # empty histogram renders all-zero, not inf
+    assert reg.histogram("h2").summary() == {
+        "count": 0, "total": 0.0, "mean": 0.0, "min": 0.0, "max": 0.0}
+
+
+def test_registry_kind_clash_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError, match="x"):
+        reg.gauge("x")
+    with pytest.raises(TypeError, match="x"):
+        reg.histogram("x")
+
+
+def test_metric_attr_write_through():
+    class Holder:
+        hits = metric_attr("hits")
+
+        def __init__(self):
+            self.metrics = MetricsRegistry()
+            self.hits = 0
+
+    h = Holder()
+    h.hits += 1
+    h.hits += 2
+    # the attribute is a view; the registry is the single backing store
+    assert h.hits == 3
+    assert h.metrics.counter("hits").value == 3
+    h.metrics.counter("hits").inc()
+    assert h.hits == 4
+
+
+# ---------------------------------------------------------------------------
+# Tracer / NullTracer
+# ---------------------------------------------------------------------------
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.span("t", "n", 0.0, 1.0) is None
+    assert NULL_TRACER.instant("t", "n", 0.0) is None
+    assert NULL_TRACER.value("t", "n", 0.0, 1) is None
+    assert NULL_TRACER.begin_request(0, 0.0) is None
+    assert NULL_TRACER.request_instant(0, "e", 0.0) is None
+    assert NULL_TRACER.end_request(0, 0.0) is None
+    assert NULL_TRACER.export() == {"traceEvents": [], "displayTimeUnit": "ms"}
+    with pytest.raises(RuntimeError, match="NullTracer"):
+        NULL_TRACER.save("/dev/null")
+
+
+def test_tracer_tracks_and_async_roundtrip():
+    tr = Tracer()
+    assert tr.enabled is True
+    tr.span("server/row0", "prefill", 0.0, 0.5, cat="server",
+            args={"rid": 1})
+    tr.span("server/row0", "decode", 0.5, 0.7, cat="server")
+    tr.instant("server/queue", "enqueue", 0.1, cat="server")
+    tr.value("kv/pool", "blocks_in_use", 0.2, 3)
+    tr.begin_request(7, 0.0, args={"prompt_tokens": 12})
+    tr.request_instant(7, "first_token", 0.4, args={"ttft_s": 0.4})
+    tr.end_request(7, 0.9, args={"outcome": "finished", "tokens": [1, 2]})
+    trace = tr.export()
+
+    assert validate_trace(trace) == []
+    # "group/lane" naming -> one pid per group, metadata events present
+    meta = [e for e in trace["traceEvents"] if e["ph"] == "M"]
+    procs = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+    assert {"server", "kv", "request"} <= procs
+    row0 = trace_spans(trace, cat="server")
+    assert {e["name"] for e in row0} == {"prefill", "decode"}
+    recs = request_records(trace)
+    assert recs[7]["begin"]["args"] == {"prompt_tokens": 12}
+    assert [n["args"]["event"] for n in recs[7]["instants"]] == ["first_token"]
+    assert replay_projection(trace) == {
+        7: {"tokens": [1, 2], "outcome": "finished", "delivered": None}}
+
+
+def test_validate_trace_catches_violations():
+    tr = Tracer()
+    tr.begin_request(1, 0.0)                       # never closed
+    tr.request_instant(9, "orphan", 0.1)           # instant outside any span
+    tr.span("a/b", "outer", 0.0, 1.0)
+    tr.span("a/b", "straddles", 0.5, 1.5)          # overlaps, not nested
+    problems = validate_trace(tr.export())
+    assert any("never closed" in p for p in problems)
+    assert any("outside open span" in p for p in problems)
+    assert any("overlaps" in p for p in problems)
+    # hand-broken event: negative duration
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "n", "pid": 1, "tid": 1, "ts": 0.0, "dur": -1.0}]}
+    assert any("negative dur" in p for p in validate_trace(bad))
+
+
+# ---------------------------------------------------------------------------
+# Registry-backed stats surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_kv_pool_stats_are_registry_views():
+    kv = KVPoolManager(num_blocks=9, block_size=8, rows=2,
+                       max_blocks_per_row=6, prefix_cache=True)
+    tr = Tracer()
+    clock = [0.0]
+    kv.set_telemetry(tr, lambda: clock[0])
+    toks = list(range(1, 17))                     # 2 full blocks
+    assert kv.admit(0, 3, num_tokens=16) is not None
+    clock[0] = 1.0
+    kv.release(0, cache_tokens=toks)              # seed the radix cache
+    matched = kv.prefix_match(toks + [99])        # 2-block hit
+    assert len(matched) == 2
+    assert kv.admit(1, 3 - len(matched), num_tokens=17,
+                    prefix_blocks=matched) is not None
+    kv.release(1)
+
+    snap = kv.metrics.snapshot()
+    # attributes and registry report the same numbers (one backing store)
+    assert snap["prefix_hits"] == kv.prefix_hits == 1
+    assert snap["blocks_saved"] == kv.blocks_saved == 2
+    assert snap["preemptions"] == kv.preemptions == 0
+    # the 2 sealed prefix blocks stay referenced by the radix cache
+    assert snap["blocks_in_use"] == 2 and snap["blocks_cached"] == 2
+    assert snap["num_blocks"] == 9 and snap["block_size"] == 8
+    # the trace reconciles against the same registry snapshot
+    assert validate_trace(tr.export()) == []
+    assert reconcile_trace(tr.export(), snap) == []
+    hits = trace_instants(tr.export(), name="prefix_hit")
+    assert len(hits) == 1 and hits[0]["args"]["blocks"] == 2
+
+
+def test_server_pool_stats_is_registry_snapshot(params):
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9)
+    assert server.pool_stats() == server.metrics.snapshot()
+    # the descriptor attributes read through to the same counters
+    server.slo_misses += 2
+    assert server.pool_stats()["server_slo_misses"] == 2
+    assert server.metrics.counter("server_slo_misses").value == 2
+
+
+def test_preemption_trace_reconciles_exactly(params, dev_engine):
+    """Two requests outgrow a tiny pool mid-decode: the preemption shows up
+    as trace instants whose count equals the registry counter, streams stay
+    lossless, and every server-side request span closes as finished."""
+    tracer = Tracer()
+    server = BatchedServer(CFG, params, max_slots=2, max_len=48,
+                           block_size=8, num_blocks=9, tracer=tracer)
+    prompts = [np.arange(4, dtype=np.int32),
+               np.asarray([7, 3, 11, 2], np.int32)]
+    expected = [dev_engine.generate(p, 40).tokens for p in prompts]
+    rids = [server.submit(Request(p, 40)) for p in prompts]
+    done = server.run_to_completion()
+    for rid, exp in zip(rids, expected):
+        assert done[rid] == exp
+
+    stats = server.pool_stats()
+    trace = tracer.export()
+    assert stats["preemptions"] >= 1
+    assert validate_trace(trace) == []
+    assert reconcile_trace(trace, stats) == []
+    assert len(trace_instants(trace, name="preempt")) == stats["preemptions"]
+    recs = request_records(trace, cat="server_request")
+    assert set(recs) == set(rids)
+    for rid in rids:
+        assert recs[rid]["end"] is not None
+        assert recs[rid]["end"]["args"]["outcome"] == "finished"
+    # a preempted request re-prefills: more prefill spans than requests
+    assert len(trace_spans(trace, cat="server", name="prefill")) > len(rids)
+
+
+# ---------------------------------------------------------------------------
+# Full driver lifecycle traces
+# ---------------------------------------------------------------------------
+
+
+def test_driver_trace_matches_request_results(traced_runs):
+    trace, results, disco = traced_runs[0]
+    assert validate_trace(trace) == []
+    assert reconcile_trace(trace, disco.stats()) == []
+    recs = request_records(trace)
+    assert set(recs) == {r.rid for r in results}
+    proj = replay_projection(trace)
+    for r in results:
+        rec = recs[r.rid]
+        assert rec["begin"] is not None and rec["end"] is not None
+        end_args = rec["end"]["args"]
+        assert end_args["outcome"] == "finished"
+        assert end_args["migrated"] == r.migrated
+        assert end_args["wasted"] == r.wasted_tokens
+        assert proj[r.rid]["tokens"] == r.tokens
+        assert proj[r.rid]["delivered"] == len(r.tokens)
+        events = [n["args"]["event"] for n in rec["instants"]]
+        assert events[0] == "dispatch"
+        assert "first_token" in events
+        # migrated marks hand-off INITIATION; the source may finish before
+        # the target takes over, so handoff_done is the stronger signal
+        if r.migrated:
+            assert "migration_start" in events
+        if "handoff_done" in events:
+            assert r.migrated
+
+
+def test_replay_projection_identical_across_same_seed_runs(traced_runs):
+    (tr1, run1, _), (tr2, run2, _) = traced_runs
+    # timestamps legitimately differ (compute is measured wall-clock);
+    # the projection onto delivered streams + outcomes must not
+    assert replay_projection(tr1) == replay_projection(tr2)
+    assert [r.tokens for r in run1] == [r.tokens for r in run2]
+
+
+def test_ttft_attribution_rows(traced_runs):
+    trace, results, _ = traced_runs[0]
+    rows = {row["rid"]: row for row in ttft_attribution(trace)}
+    assert set(rows) == {r.rid for r in results}
+    for r in results:
+        row = rows[r.rid]
+        assert row["ttft_s"] == pytest.approx(r.ttft, rel=1e-6)
+        assert row["outcome"] == "finished"
+        for comp in ("queue_s", "prefill_s", "network_s", "draft_stall_s"):
+            assert row[comp] >= 0.0
+    # the race always pays real prefill compute somewhere before TTFT
+    assert any(row["prefill_s"] > 0 for row in rows.values())
+
+
+def test_stats_merges_driver_and_server(traced_runs):
+    _, _, disco = traced_runs[0]
+    stats = disco.stats()
+    # one documented surface: server registry + driver ledgers, no double-hop
+    assert "slo_dispatch_overrides" in stats
+    assert "cancel_lag_tokens" in stats
+    assert stats["spec_requests"] == 0
+    with pytest.warns(DeprecationWarning, match="stats"):
+        legacy = disco.pool_stats()
+    assert legacy == stats
+
+
+# ---------------------------------------------------------------------------
+# Speculative draft/verify traces
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_trace_verify_spans(params, dev_engine):
+    tracer = Tracer()
+    server = BatchedServer(CFG, params, max_slots=2, max_len=96,
+                           decode_chunk=4, speculative=True, tracer=tracer)
+    server.warmup(prompt_lens=(12,))
+    draft = InferenceEngine(CFG, params, max_len=96, paged=True,
+                            speculative=True)
+    draft.warmup(prompt_lens=(12,))
+    rng = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        CostModel(1e-4, 6e-4, 900.0, 800.0, exchange_rate=1e-12),
+        server_ttft_samples=rng.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+        budget=0.9,
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.01),
+    )
+    disco = DiSCoServer(
+        sched, DeviceEndpoint(draft),
+        ServerEndpoint(server, NetworkModel(rtt_mean=0.05)),
+        rng=np.random.default_rng(7), mode="speculative",
+    )
+    disco.set_tracer(tracer)                   # post-ctor attach path
+    results = disco.serve_many(_requests(n=2, max_new=10))
+    assert disco.spec_requests > 0
+
+    stats = disco.stats()
+    trace = tracer.export()
+    assert validate_trace(trace) == []
+    assert reconcile_trace(trace, stats) == []
+    verify = trace_spans(trace, name="verify")
+    assert len(verify) == stats["verify_rounds"] > 0
+    assert sum(s["args"]["accepted"] for s in verify) == \
+        stats["accepted_draft_tokens"]
+    # device draft spans + spec_round lifecycle instants are present
+    assert trace_spans(trace, cat="device", name="draft")
+    recs = request_records(trace)
+    for r in results:
+        events = [n["args"]["event"] for n in recs[r.rid]["instants"]]
+        assert "spec_round" in events or "spec_fallback" in events
+        assert replay_projection(trace)[r.rid]["tokens"] == r.tokens
+
+
+# ---------------------------------------------------------------------------
+# QoEReport.from_timeline edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_qoe_zero_tokens_delivered():
+    q = QoEReport.from_timeline(1.0, [], SLO(ttft_deadline=0.5), rid=3)
+    assert q.rid == 3 and q.tokens_delivered == 0
+    assert q.ttft == math.inf
+    assert q.tbt_mean == 0.0 and q.late_tokens == 0
+    assert q.qoe_score == 0.0
+    assert not q.slo_attained and not q.ttft_attained
+
+
+def test_qoe_one_token_has_no_tbt():
+    slo = SLO(ttft_deadline=0.5, tbt_target=0.1)
+    q = QoEReport.from_timeline(1.0, [1.2], slo)
+    assert q.tokens_delivered == 1
+    assert q.ttft == pytest.approx(0.2)
+    assert q.tbt_mean == 0.0                   # no gaps to average
+    assert q.ttft_attained and q.slo_attained
+    assert q.qoe_score == pytest.approx(1.0)
+
+
+def test_null_default_leaves_no_trace(params):
+    server = BatchedServer(CFG, params, max_slots=1, max_len=48)
+    assert server.tracer is NULL_TRACER
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # no hidden DeprecationWarning
+        server.pool_stats()

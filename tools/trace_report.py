@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""TTFT attribution report for a serving trace.
+
+Reads a Chrome trace-event JSON produced by ``repro.serving.telemetry.Tracer``
+(e.g. ``bench_e2e_serving --trace-out trace.json``) and prints:
+
+* a per-request TTFT attribution table — how much of each request's
+  time-to-first-token went to server queueing, prefill compute, network
+  propagation, and draft-verdict stalls — with the p99-TTFT request marked;
+* ASCII waterfalls for the tail (slowest-TTFT) requests, showing where the
+  first token's latency actually accrued on the virtual timeline.
+
+``--check`` turns the report into a CI gate: the trace must be schema-valid
+(``validate_trace`` returns no problems), contain at least one complete span
+and one request record, and every request record must close.  Exits non-zero
+on any violation.
+
+    PYTHONPATH=src python tools/trace_report.py trace.json [--check] [--tail N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+try:
+    from repro.serving.telemetry import (
+        request_records,
+        trace_spans,
+        ttft_attribution,
+        validate_trace,
+    )
+except ImportError:  # running without PYTHONPATH=src
+    import pathlib
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from repro.serving.telemetry import (
+        request_records,
+        trace_spans,
+        ttft_attribution,
+        validate_trace,
+    )
+
+_COMPONENTS = ("queue_s", "prefill_s", "network_s", "draft_stall_s")
+_BAR_WIDTH = 48
+
+
+def _fmt_ms(v) -> str:
+    return "-" if v is None else f"{v * 1e3:9.2f}"
+
+
+def _p99_rid(rows: list[dict]):
+    timed = [r for r in rows if r["ttft_s"] is not None]
+    if not timed:
+        return None
+    timed.sort(key=lambda r: r["ttft_s"])
+    idx = min(len(timed) - 1, int(round(0.99 * (len(timed) - 1))))
+    return timed[idx]["rid"]
+
+
+def print_attribution(rows: list[dict]) -> None:
+    p99 = _p99_rid(rows)
+    print(
+        f"{'rid':>4} {'ttft_ms':>9} {'queue_ms':>9} {'prefill_ms':>10} "
+        f"{'network_ms':>10} {'draft_ms':>9} {'winner':>8} {'outcome':>10}"
+    )
+    for r in rows:
+        mark = "  <-- p99" if r["rid"] == p99 else ""
+        print(
+            f"{r['rid']:>4} {_fmt_ms(r['ttft_s']):>9} {_fmt_ms(r['queue_s']):>9} "
+            f"{_fmt_ms(r['prefill_s']):>10} {_fmt_ms(r['network_s']):>10} "
+            f"{_fmt_ms(r['draft_stall_s']):>9} "
+            f"{str(r['winner'] or '-'):>8} {str(r['outcome'] or '-'):>10}{mark}"
+        )
+
+
+def print_waterfalls(rows: list[dict], tail: int) -> None:
+    timed = sorted(
+        (r for r in rows if r["ttft_s"] is not None),
+        key=lambda r: r["ttft_s"],
+        reverse=True,
+    )[:tail]
+    if not timed:
+        return
+    scale = max(r["ttft_s"] for r in timed) or 1e-9
+    print(f"\ntail waterfalls (slowest {len(timed)} by TTFT):")
+    glyphs = {"queue_s": "q", "prefill_s": "p", "network_s": "n",
+              "draft_stall_s": "d"}
+    for r in timed:
+        accounted = sum(r[c] for c in _COMPONENTS)
+        other = max(0.0, r["ttft_s"] - accounted)
+        bar = ""
+        for comp in _COMPONENTS + ("other",):
+            v = other if comp == "other" else r[comp]
+            bar += glyphs.get(comp, ".") * int(round(v / scale * _BAR_WIDTH))
+        # components may overlap in wall-time (network in flight during
+        # prefill), so the stacked bar can exceed the TTFT width — clip it
+        bar = bar[:_BAR_WIDTH]
+        print(f"  req{r['rid']:<4} |{bar:<{_BAR_WIDTH}}| "
+              f"ttft={r['ttft_s'] * 1e3:.2f}ms")
+    print("  legend: q=queue p=prefill n=network d=draft-stall .=other")
+
+
+def check(trace: dict, rows: list[dict]) -> list[str]:
+    failures = list(validate_trace(trace))
+    if not trace_spans(trace):
+        failures.append("trace has no complete (ph=X) spans")
+    recs = request_records(trace)
+    if not recs:
+        failures.append("trace has no driver request records (cat=request)")
+    for rid, rec in recs.items():
+        if rec["end"] is None:
+            failures.append(f"request {rid}: async span never closed")
+    if not rows:
+        failures.append("ttft_attribution produced no rows")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--tail", type=int, default=3,
+                    help="number of slowest-TTFT waterfalls to print")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: exit non-zero unless the trace is "
+                         "schema-valid with non-empty spans and records")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        trace = json.load(f)
+    rows = ttft_attribution(trace)
+
+    n_events = len(trace.get("traceEvents", []))
+    print(f"trace: {args.trace} ({n_events} events, {len(rows)} requests)")
+    meta = trace.get("otherData")
+    if meta:
+        keys = ", ".join(f"{k}={v}" for k, v in meta.items()
+                         if not isinstance(v, (dict, list)))
+        if keys:
+            print(f"metadata: {keys}")
+    print()
+    print_attribution(rows)
+    print_waterfalls(rows, args.tail)
+
+    if args.check:
+        failures = check(trace, rows)
+        if failures:
+            print("\ntrace check FAILED:", file=sys.stderr)
+            for p in failures:
+                print(f"  {p}", file=sys.stderr)
+            return 1
+        print(f"\ntrace check OK: {n_events} events, {len(rows)} request "
+              "records, schema valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
