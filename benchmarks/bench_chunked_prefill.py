@@ -1,0 +1,305 @@
+"""Chunked prefill vs monolithic under mixed-length interference load.
+
+The interference workload (``make_interference_trace``): a steady stream of
+short-prompt decode-heavy background requests with a max-length prompt
+injected every Nth arrival. A monolithic server freezes every streaming row
+for the whole long prefill, so the background requests' TBT series grows a
+prompt-sized stall on each long admission; chunked prefill
+(``BatchedServer(prefill_chunk=...)``) splits the prompt into
+piece-budget-bounded dispatches interleaved 1:1 with decode ticks, bounding
+each stall to ONE piece.
+
+Measured, per mode (monolithic + a sweep of piece budgets):
+
+* ``tbt_stall_p99_s`` — p99 over background requests' WORST TBT gap, minus
+  the pooled p50 pace: each streamer's worst interruption is the stall a
+  long prefill injected (pooled-p99 would drown it in scheduling noise —
+  a handful of prompt-sized gaps among hundreds of ordinary ticks), and
+  subtracting the undisturbed pace isolates the stall component;
+* ``decode_stall_max_s`` / ``decode_stall_total_s`` — the server's own
+  ``decode_stall_s`` histogram: wall-clock prefill work that ran while
+  decodable rows sat frozen (max = the worst single stall, the quantity
+  chunking bounds);
+* ``ttft_*`` + ``ttft_slo_attainment`` — chunking must not trade the TBT
+  win for TTFT regressions (pieces run in the same virtual-time budget, and
+  the EDF starvation bound runs pieces back-to-back when a deadline nears);
+* ``streams_identical`` — delivered token streams bit-identical to the
+  monolithic run under MIXED temperature>0 samplers (piecewise prefill
+  computes bitwise-identical logits; scheduling must be invisible).
+
+Headline: ``tbt_stall_p99_reduction`` (monolithic / chunked at the default
+piece budget) — the ISSUE gate wants >= 3x on CPU — with
+``ttft_slo_attainment`` no worse than monolithic beyond noise and
+``streams_identical`` = 1. Emits ``BENCH_chunked_prefill.json`` at the repo
+root plus CSV rows for ``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.bench_chunked_prefill [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import init_params
+from repro.serving import BatchedServer, Request, SamplerConfig, SLO
+from repro.sim.traces import make_interference_trace
+
+from .common import Row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_chunked_prefill.json"
+
+_ROWS = 4
+_BLOCK_SIZE = 16
+_NUM_BLOCKS = 96             # roomy: interference is compute, not memory
+_MAX_LEN = 1088
+_DECODE_CHUNK = 4
+_SHORT_PROMPT = 8            # background: decode-heavy streamers
+_SHORT_NEW = 24
+# 1024-token interfering prompts: long enough that a monolithic prefill costs
+# many decode ticks (a 32-64 token piece is dispatch-overhead-bound on CPU,
+# so short "long" prompts would hide the stall contrast the bench measures;
+# the headline ratio is bounded by prompt/piece, so the prompt must dwarf
+# the headline piece budget)
+_LONG_PROMPT = 1024
+_LONG_NEW = 8
+_LONG_EVERY = 4
+_N_REQUESTS = 24
+_RHO = 0.8                   # backgrounds keep streaming while longs arrive
+_PIECES = (32, 64, 128)      # swept piece budgets (tokens per piece)
+# 128 balances the trade: small pieces bound each stall tighter but stretch
+# the long prompt's own TTFT (more dispatch overhead per prompt); 128 keeps
+# SLO attainment at the monolithic level while still cutting the stall tail
+_HEADLINE_PIECE = 128
+_TTFT_DEADLINE_X = 6.0       # deadline in background service times
+
+# mixed per-request samplers: bit-identity must hold under stochastic
+# sampling, not just greedy argmax
+_SAMPLERS = (
+    None,
+    SamplerConfig(temperature=0.8, top_p=0.95),
+    SamplerConfig(temperature=0.7, top_k=50),
+)
+
+
+def _estimate_service_time(params) -> float:
+    """Virtual service time of one background request (calibrates arrivals)."""
+    srv = BatchedServer(
+        paper_models.TINY_SERVER, params, max_slots=1, max_len=_MAX_LEN,
+        decode_chunk=_DECODE_CHUNK, block_size=_BLOCK_SIZE,
+    )
+    srv.warmup(prompt_lens=(_SHORT_PROMPT,))
+    rng = np.random.default_rng(0)
+    n = 3
+    for _ in range(n):
+        srv.submit(Request(
+            rng.integers(1, 1024, size=_SHORT_PROMPT).astype(np.int32),
+            _SHORT_NEW,
+        ))
+    srv.run_to_completion()
+    return srv.clock / n
+
+
+def _drive(params, trace, service: float, prefill_chunk: int):
+    """Replay the interference trace through one BatchedServer; returns
+    (streams, metrics). TBTs come from the retained per-request event
+    times (nothing drains them in a direct drive)."""
+    srv = BatchedServer(
+        paper_models.TINY_SERVER, params, max_slots=_ROWS, max_len=_MAX_LEN,
+        decode_chunk=_DECODE_CHUNK, block_size=_BLOCK_SIZE,
+        num_blocks=_NUM_BLOCKS, prefill_chunk=prefill_chunk or None,
+    )
+    srv.warmup(prompt_lens=(_SHORT_PROMPT, _LONG_PROMPT))
+    prompt_rng = np.random.default_rng(7)
+    rids, kinds = [], []
+    deadline = _TTFT_DEADLINE_X * service
+    for i, (a, length, m) in enumerate(trace):
+        rids.append(srv.submit(Request(
+            prompt_rng.integers(1, 1024, size=length).astype(np.int32), m,
+            arrival=a, sampler=_SAMPLERS[i % len(_SAMPLERS)],
+            slo=SLO(ttft_deadline=deadline), seed=100 + i,
+        )))
+        kinds.append("long" if length == _LONG_PROMPT else "short")
+    done = srv.run_to_completion()
+
+    bg_tbts = []
+    for rid, kind in zip(rids, kinds):
+        if kind != "short":
+            continue
+        times = [t for _, t in srv.events[rid]]
+        if len(times) > 1:
+            bg_tbts.append(np.diff(times))
+    tbts = np.concatenate(bg_tbts) if bg_tbts else np.array([0.0])
+    # per-streamer worst gap: the stall each background user actually saw
+    worst = (np.array([g.max() for g in bg_tbts]) if bg_tbts
+             else np.array([0.0]))
+    pace = float(np.percentile(tbts, 50))
+    rel_ttfts = np.array([srv.ttft(r) for r in rids])   # arrival-relative
+    stall = srv.metrics.histogram("decode_stall_s").summary()
+    metrics = {
+        "prefill_chunk": prefill_chunk,
+        "tbt_p50_s": pace,
+        "tbt_p99_s": float(np.percentile(tbts, 99)),
+        "tbt_stall_p99_s": float(np.percentile(worst, 99) - pace),
+        "ttft_mean_s": float(rel_ttfts.mean()),
+        "ttft_p99_s": float(np.percentile(rel_ttfts, 99)),
+        "ttft_slo_attainment": float(np.mean(rel_ttfts <= deadline)),
+        "decode_stall_events": stall["count"],
+        "decode_stall_total_s": stall["total"],
+        "decode_stall_max_s": stall["max"] if stall["count"] else 0.0,
+        "prefill_tokens_computed":
+            srv.pool_stats()["prefill_tokens_computed"],
+        "preemptions": srv.kv.preemptions,
+    }
+    return [done[r] for r in rids], metrics
+
+
+def run(smoke: bool = False) -> list[Row]:
+    params = init_params(paper_models.TINY_SERVER, jax.random.PRNGKey(1))
+    service = _estimate_service_time(params)
+    n_req = 10 if smoke else _N_REQUESTS
+    trace = make_interference_trace(
+        np.random.default_rng(42), n_req, service_time=service,
+        slots=_ROWS, rho=_RHO, short_prompt=_SHORT_PROMPT,
+        short_new=_SHORT_NEW, long_prompt=_LONG_PROMPT,
+        long_every=_LONG_EVERY, long_new=_LONG_NEW,
+    )
+
+    rows: list[Row] = []
+    t0 = time.perf_counter()
+    mono_streams, mono = _drive(params, trace, service, prefill_chunk=0)
+    mono_wall = (time.perf_counter() - t0) * 1e6
+    rows.append(Row(
+        "chunked_prefill/monolithic", mono_wall,
+        f"tbt_stall_p99_ms={mono['tbt_stall_p99_s']*1e3:.2f};"
+        f"stall_max_ms={mono['decode_stall_max_s']*1e3:.2f};"
+        f"ttft_slo_att={mono['ttft_slo_attainment']:.2f}",
+    ))
+
+    sweep = {}
+    pieces = (_HEADLINE_PIECE,) if smoke else _PIECES
+    identical = True
+    for piece in pieces:
+        t0 = time.perf_counter()
+        streams, m = _drive(params, trace, service, prefill_chunk=piece)
+        wall = (time.perf_counter() - t0) * 1e6
+        same = streams == mono_streams
+        identical = identical and same
+        m["streams_identical"] = int(same)
+        m["tbt_stall_p99_reduction"] = mono["tbt_stall_p99_s"] / max(
+            m["tbt_stall_p99_s"], 1e-9
+        )
+        m["decode_stall_max_reduction"] = mono["decode_stall_max_s"] / max(
+            m["decode_stall_max_s"], 1e-9
+        )
+        sweep[piece] = m
+        rows.append(Row(
+            f"chunked_prefill/piece{piece}", wall,
+            f"tbt_stall_p99_ms={m['tbt_stall_p99_s']*1e3:.2f};"
+            f"stall_reduction_x={m['tbt_stall_p99_reduction']:.1f};"
+            f"stall_max_ms={m['decode_stall_max_s']*1e3:.2f};"
+            f"ttft_slo_att={m['ttft_slo_attainment']:.2f};"
+            f"identical={m['streams_identical']}",
+        ))
+
+    pick = sweep[_HEADLINE_PIECE if _HEADLINE_PIECE in sweep else pieces[0]]
+    headline = {
+        "piece_budget": pick["prefill_chunk"],
+        "tbt_stall_p99_reduction": pick["tbt_stall_p99_reduction"],
+        "decode_stall_max_reduction": pick["decode_stall_max_reduction"],
+        "ttft_slo_attainment_chunked": pick["ttft_slo_attainment"],
+        "ttft_slo_attainment_monolithic": mono["ttft_slo_attainment"],
+        "streams_identical": int(identical),
+    }
+    rows.append(Row(
+        "chunked_prefill/headline", 0.0,
+        f"stall_reduction_x={headline['tbt_stall_p99_reduction']:.1f};"
+        f"slo_att={headline['ttft_slo_attainment_chunked']:.2f}"
+        f"(mono={headline['ttft_slo_attainment_monolithic']:.2f});"
+        f"identical={headline['streams_identical']}",
+    ))
+
+    if not smoke:
+        _JSON_PATH.write_text(json.dumps({
+            "bench": "chunked_prefill",
+            "server_rows": _ROWS,
+            "block_size": _BLOCK_SIZE,
+            "num_blocks": _NUM_BLOCKS,
+            "decode_chunk": _DECODE_CHUNK,
+            "max_len": _MAX_LEN,
+            "trace": {
+                "kind": "interference",
+                "n_requests": n_req,
+                "rho": _RHO,
+                "short_prompt": _SHORT_PROMPT,
+                "short_new": _SHORT_NEW,
+                "long_prompt": _LONG_PROMPT,
+                "long_every": _LONG_EVERY,
+                "long_new": _LONG_NEW,
+                "service_time_s": service,
+            },
+            "samplers": "mixed greedy/top-p/top-k (temperature > 0)",
+            "monolithic": mono,
+            "sweep": {str(k): v for k, v in sweep.items()},
+            "headline": headline,
+        }, indent=2) + "\n")
+    return rows
+
+
+def check(min_reduction: float = 1.0) -> None:
+    """CI gate: chunked streams bit-identical to monolithic under mixed
+    temperature>0 samplers AND a real TBT-stall reduction. Exits non-zero
+    on any violation."""
+    params = init_params(paper_models.TINY_SERVER, jax.random.PRNGKey(1))
+    service = _estimate_service_time(params)
+    trace = make_interference_trace(
+        np.random.default_rng(42), 12, service_time=service, slots=_ROWS,
+        rho=_RHO, short_prompt=_SHORT_PROMPT, short_new=_SHORT_NEW,
+        long_prompt=_LONG_PROMPT, long_every=_LONG_EVERY, long_new=_LONG_NEW,
+    )
+    mono_streams, mono = _drive(params, trace, service, prefill_chunk=0)
+    chk_streams, chk = _drive(
+        params, trace, service, prefill_chunk=_HEADLINE_PIECE
+    )
+    failures = []
+    if chk_streams != mono_streams:
+        bad = [i for i, (a, b) in enumerate(zip(mono_streams, chk_streams))
+               if a != b]
+        failures.append(f"streams differ (requests {bad})")
+    reduction = mono["tbt_stall_p99_s"] / max(chk["tbt_stall_p99_s"], 1e-9)
+    if not reduction > min_reduction:
+        failures.append(
+            f"tbt_stall_p99 reduction {reduction:.2f}x <= {min_reduction}x "
+            f"(mono={mono['tbt_stall_p99_s']:.4f}s "
+            f"chunked={chk['tbt_stall_p99_s']:.4f}s)"
+        )
+    if failures:
+        raise SystemExit("chunked-prefill gate FAILED:\n  "
+                         + "\n  ".join(failures))
+    print(
+        f"chunked-prefill OK: {len(trace)} requests bit-identical to "
+        f"monolithic (mixed samplers), tbt_stall_p99 reduction "
+        f"{reduction:.1f}x, stall_max {mono['decode_stall_max_s']*1e3:.1f}ms "
+        f"-> {chk['decode_stall_max_s']*1e3:.1f}ms"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one piece budget, short trace, no JSON emission")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: bit-identical streams + stall reduction")
+    args = ap.parse_args()
+    if args.check:
+        check()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(smoke=args.smoke):
+            print(row.csv(), flush=True)

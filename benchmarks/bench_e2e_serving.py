@@ -48,6 +48,15 @@ prefill-compute reductions (``multiturn`` in the JSON). ``--check-prefix``
 gates it for CI: the cache must fire and every delivered stream must be
 bit-identical to the cold run.
 
+A mixed-length interference point (``make_interference_trace``: steady
+short-prompt streamers + a max-length prompt every Nth arrival) compares
+chunked prefill (``prefill_chunk``) against the monolithic control at the
+same offered load (``interference`` in the JSON; the full piece-budget
+sweep is ``bench_chunked_prefill`` / ``BENCH_chunked_prefill.json``).
+``--check-chunked`` gates it for CI: chunked streams must be bit-identical
+to the monolithic run under mixed temperature>0 samplers with a real
+TBT-stall reduction.
+
 ``--check-determinism`` instead runs a seed-determinism gate: identical
 models on both endpoints, MIXED per-request sampler configs, the same trace
 replayed through two independently-built stacks — every delivered stream
@@ -97,7 +106,11 @@ from repro.serving import (
     replay_projection,
     validate_trace,
 )
-from repro.sim.traces import make_multiturn_trace, make_serving_trace
+from repro.sim.traces import (
+    make_interference_trace,
+    make_multiturn_trace,
+    make_serving_trace,
+)
 
 from .common import Row
 
@@ -348,6 +361,42 @@ def _multiturn_point(srv_params, service: float, samplers,
     }
 
 
+def _interference_point(srv_params, n_req: int) -> dict:
+    """Mixed-length interference: chunked prefill vs monolithic on the SAME
+    trace at the SAME offered load. Steady short-prompt streamers with a
+    max-length prompt injected every Nth arrival — the workload where a
+    monolithic server's fused prefill freezes every streaming row for a
+    whole prompt. Delegates to ``bench_chunked_prefill`` (the full piece-
+    budget sweep and the emitted JSON live there)."""
+    from . import bench_chunked_prefill as cp
+
+    service = cp._estimate_service_time(srv_params)
+    trace = make_interference_trace(
+        np.random.default_rng(42), n_req, service_time=service,
+        slots=cp._ROWS, rho=cp._RHO, short_prompt=cp._SHORT_PROMPT,
+        short_new=cp._SHORT_NEW, long_prompt=cp._LONG_PROMPT,
+        long_every=cp._LONG_EVERY, long_new=cp._LONG_NEW,
+    )
+    mono_streams, mono = cp._drive(srv_params, trace, service, 0)
+    chk_streams, chk = cp._drive(
+        srv_params, trace, service, cp._HEADLINE_PIECE)
+    return {
+        "rho": cp._RHO,
+        "trace": "interference_mixed_length",
+        "n_requests": n_req,
+        "long_prompt": cp._LONG_PROMPT,
+        "long_every": cp._LONG_EVERY,
+        "piece_budget": cp._HEADLINE_PIECE,
+        "streams_identical": chk_streams == mono_streams,
+        "monolithic": mono,
+        "chunked": chk,
+        "tbt_stall_p99_reduction": mono["tbt_stall_p99_s"]
+        / max(chk["tbt_stall_p99_s"], 1e-9),
+        "decode_stall_max_reduction": mono["decode_stall_max_s"]
+        / max(chk["decode_stall_max_s"], 1e-9),
+    }
+
+
 def run(smoke: bool = False, temperature: float = 0.0,
         mixed_samplers: bool = False, trace_out: str | None = None) -> list[Row]:
     dev_cfg = paper_models.TINY_DEVICE
@@ -499,6 +548,19 @@ def run(smoke: bool = False, temperature: float = 0.0,
         f"identical={int(mt['streams_identical'])}",
     ))
 
+    # mixed-length interference point: chunked prefill vs the monolithic
+    # control on the same trace (the full piece sweep is BENCH_chunked_prefill)
+    ip = _interference_point(srv_params, n_req=8 if smoke else 16)
+    rows.append(Row(
+        f"e2e_serving/interference_rho{ip['rho']:g}/chunked_prefill", 0.0,
+        f"stall_reduction_x={ip['tbt_stall_p99_reduction']:.1f};"
+        f"stall_max_ms={ip['monolithic']['decode_stall_max_s']*1e3:.1f}"
+        f"->{ip['chunked']['decode_stall_max_s']*1e3:.1f};"
+        f"slo_att={ip['chunked']['ttft_slo_attainment']:.2f}"
+        f"(mono={ip['monolithic']['ttft_slo_attainment']:.2f});"
+        f"identical={int(ip['streams_identical'])}",
+    ))
+
     # headline: contention point (highest load). The reduction denominator is
     # floored at "one wasted token" so a perfectly clean disco run reports a
     # finite, token-count-scaled reduction instead of dividing by zero.
@@ -531,6 +593,12 @@ def run(smoke: bool = False, temperature: float = 0.0,
         "prefix_blocks_saved_multiturn": mt["warm"]["blocks_saved"],
         "prefix_ttft_mean_reduction": mt["ttft_mean_reduction"],
         "prefix_prefill_compute_reduction": mt["prefill_compute_reduction"],
+        # chunked prefill under mixed-length interference: bounded decode
+        # stalls with the stream bit-identical to the monolithic schedule
+        "chunked_tbt_stall_p99_reduction": ip["tbt_stall_p99_reduction"],
+        "chunked_decode_stall_max_reduction":
+            ip["decode_stall_max_reduction"],
+        "chunked_streams_identical": int(ip["streams_identical"]),
         # device-draft / server-verify on the same traces. Two honest
         # comparisons, reported at the relaxed load point (points[0]):
         #  * vs race-and-cancel — spec converts the race's wasted loser
@@ -595,6 +663,7 @@ def run(smoke: bool = False, temperature: float = 0.0,
             },
             "points": points,
             "multiturn": mt,
+            "interference": ip,
             "headline": headline,
         }, indent=2) + "\n")
     return rows
@@ -862,6 +931,11 @@ if __name__ == "__main__":
                     help="run the prefix-cache gate instead of the bench: "
                          "multi-turn trace, prefix_hit_rate > 0, streams "
                          "bit-identical to a cold-cache run")
+    ap.add_argument("--check-chunked", action="store_true",
+                    help="run the chunked-prefill gate instead of the bench: "
+                         "interference trace under mixed temperature>0 "
+                         "samplers, chunked streams bit-identical to the "
+                         "monolithic run and a real TBT-stall reduction")
     ap.add_argument("--check-speculative", action="store_true",
                     help="run the speculative-decoding gate instead of the "
                          "bench: matched models, drafts must be accepted "
@@ -869,7 +943,13 @@ if __name__ == "__main__":
                          "bit-identical to the race run and the same-seed "
                          "single-engine baseline")
     args = ap.parse_args()
-    if args.check_speculative:
+    if args.check_chunked:
+        if args.smoke:
+            ap.error("--smoke does not apply to --check-chunked")
+        from .bench_chunked_prefill import check as _check_chunked
+
+        _check_chunked()
+    elif args.check_speculative:
         t = 0.8 if args.temperature is None else args.temperature
         if t <= 0:
             ap.error("--check-speculative requires --temperature > 0")

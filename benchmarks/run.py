@@ -9,6 +9,7 @@ import sys
 import time
 
 from . import (
+    bench_chunked_prefill,
     bench_decode_throughput,
     bench_e2e_serving,
     bench_paged_decode,
@@ -45,6 +46,7 @@ MODULES = {
     "table4": bench_table4_coldstart,
     "decode": bench_decode_throughput,
     "e2e_serving": bench_e2e_serving,
+    "chunked_prefill": bench_chunked_prefill,
     "speculative": bench_speculative,
     "prefill": bench_prefill_throughput,
     "paged_decode": bench_paged_decode,

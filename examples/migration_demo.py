@@ -24,6 +24,7 @@ def real_runtime_migration() -> None:
     """Drive an actual migration end-to-end: device wins the prefill race,
     decode migrates onto the (cheaper) server mid-stream."""
     from repro.launch.serve import build_stack
+    from repro.serving import Request
 
     disco, dev_engine, server = build_stack("device", budget=0.5)
     rng = np.random.default_rng(1)
@@ -31,7 +32,7 @@ def real_runtime_migration() -> None:
     # race, and — being the expensive decoder here — migrates decode onto
     # the server once the delivery buffer can mask the hand-off
     prompt = rng.integers(0, 1024, size=10).astype(np.int32)
-    r = disco.serve(prompt, max_new=32)
+    r = disco.serve_many([Request(prompt, 32)])[0]
     print("\n--- same protocol, real engines (event-driven runtime) ---")
     print(f"winner={r.winner.value} migrated={r.migrated} "
           f"tokens={len(r.tokens)} generated={r.generated_tokens} "

@@ -11,6 +11,12 @@ semantics on a real TPU). GQA is expressed in the K/V index_map
 Block shapes default to (block_q, head_dim) × (block_k, head_dim) with
 MXU-aligned 128-multiples where the head_dim allows.
 
+``q_offset`` (static) shifts the query positions for chunked prefill: a
+piece of ``Sq`` queries at absolute positions ``q_offset + arange(Sq)``
+attends causally over the full ``Sk`` key axis (all prior pieces plus its
+own), matching the XLA paths in ``models.attention`` and the piecewise
+write path ``models.paged.paged_piece_prefill``.
+
 TARGET: TPU v5e. Validated with interpret=True on CPU against
 ``ref.mha_reference`` (the CPU backend cannot lower TPU Pallas kernels).
 """
@@ -37,6 +43,7 @@ def _kernel(
     scale: float,
     causal: bool,
     window: int,
+    q_offset: int,
     block_q: int,
     block_k: int,
     n_kv_blocks: int,
@@ -58,7 +65,10 @@ def _kernel(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                     # (bq, bk)
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    q_pos = (
+        q_offset + qi * block_q
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    )
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
     diff = q_pos - k_pos
     ok = jnp.ones((block_q, block_k), jnp.bool_)
@@ -89,7 +99,9 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_k", "interpret"
+    ),
 )
 def flash_prefill(
     q: jnp.ndarray,   # (B, Sq, H, D)
@@ -98,6 +110,7 @@ def flash_prefill(
     *,
     causal: bool = True,
     window: int = 0,
+    q_offset: int = 0,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool | None = None,
@@ -124,6 +137,7 @@ def flash_prefill(
             scale=1.0 / (d**0.5),
             causal=causal,
             window=window,
+            q_offset=q_offset,
             block_q=block_q,
             block_k=block_k,
             n_kv_blocks=nk,

@@ -26,11 +26,16 @@ __all__ = [
 ]
 
 
-def flash_prefill_op(q, k, v, *, causal=True, window=0,
+def flash_prefill_op(q, k, v, *, causal=True, window=0, q_offset=0,
                      block_q=128, block_k=128, interpret=None):
-    """Fused causal/sliding-window GQA attention. (B,Sq,H,D)x(B,Sk,K,D)->(B,Sq,H,D)."""
+    """Fused causal/sliding-window GQA attention. (B,Sq,H,D)x(B,Sk,K,D)->(B,Sq,H,D).
+
+    ``q_offset`` shifts the query positions for chunked (piecewise) prefill:
+    a piece's queries sit at absolute positions ``q_offset + arange(Sq)``
+    over the full key axis, so each piece attends causally to every prior
+    piece — the kernel twin of ``models.paged.paged_piece_prefill``."""
     return flash_prefill_kernel(
-        q, k, v, causal=causal, window=window,
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
         block_q=block_q, block_k=block_k, interpret=interpret,
     )
 

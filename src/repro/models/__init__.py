@@ -16,6 +16,7 @@ from .paged import (
     paged_decode_n,
     paged_decode_step,
     paged_draft_n,
+    paged_piece_prefill,
     paged_prefill,
     paged_suffix_prefill,
     paged_verify_n,
@@ -51,8 +52,8 @@ __all__ = [
     "init_cache", "init_params", "param_shapes", "prefill", "verify_n",
     "window_vector",
     "init_paged_pages", "paged_decode_n", "paged_decode_step",
-    "paged_draft_n", "paged_prefill", "paged_suffix_prefill",
-    "paged_verify_n", "supports_paged",
+    "paged_draft_n", "paged_piece_prefill", "paged_prefill",
+    "paged_suffix_prefill", "paged_verify_n", "supports_paged",
     "GREEDY", "SamplerConfig", "SamplerOperands", "first_rejection",
     "request_key", "sample_tokens", "sampler_operands", "sampling_probs",
     "speculative_accept",

@@ -54,6 +54,7 @@ __all__ = [
     "init_paged_pages",
     "paged_prefill",
     "paged_suffix_prefill",
+    "paged_piece_prefill",
     "paged_decode_step",
     "paged_decode_n",
     "paged_draft_n",
@@ -196,6 +197,96 @@ def paged_suffix_prefill(
     new_pages = dict(pages)
     for key in ("k", "v"):
         arr = kv[key][:, 0]                          # (L, S', K, D)
+        l, _, kh, d = arr.shape
+        blocks = arr.reshape(l, nb, bs, kh, d).transpose(0, 1, 3, 2, 4)
+        new_pages[key] = pages[key].at[:, block_ids].set(
+            blocks.astype(pages[key].dtype)
+        )
+    return sample_tokens(sampler, last, keys, lengths), new_pages
+
+
+def paged_piece_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    pages: Cache,
+    tokens: jnp.ndarray,      # (1, P) one piece of the bucket-padded prompt
+    lengths: jnp.ndarray,     # (1,) true TOTAL prompt length
+    full_bt: jnp.ndarray,     # (1, NB) ALL reserved blocks of the bucket
+    n_pre: jnp.ndarray,       # () int32 tokens already written — TRACED
+    block_ids: jnp.ndarray,   # (P // block_size,) physical blocks of the piece
+    *,
+    sampler=None,    # SamplerConfig | SamplerOperands (per-row runtime arrays)
+    keys: Optional[jnp.ndarray] = None,    # (1, 2) uint32 request key
+):
+    """Chunked (piecewise) prefill: one token-budget-bounded piece of a
+    prompt whose blocks are ALL reserved up front. Unlike
+    ``paged_suffix_prefill`` (static prefix length — shapes key the jit
+    cache per hit size), the already-written length ``n_pre`` rides in as a
+    *traced* operand, so every piece of a bucket shares one compiled
+    dispatch keyed only by (bucket length, piece length).
+
+    Per layer the piece queries — at absolute positions
+    ``n_pre + arange(P)`` — attend over the whole gathered bucket K/V with
+    the fresh piece K/V spliced in at ``n_pre`` (``dynamic_update_slice``).
+    The key axis therefore has exactly the bucket layout the monolithic
+    prefill reduces over: positions below ``n_pre`` hold earlier pieces'
+    sealed K/V (bitwise what the monolithic run computed there, by
+    induction), and positions at or above ``n_pre + P`` hold garbage that
+    the causal mask zeroes *exactly* (the −1e30 bias rounds the logit to
+    −1e30 in f32 and exp underflows to 0.0 — the same invariant the
+    prefix-hit path relies on), so piecewise logits are bitwise-identical
+    to the whole-prompt prefill. Only the piece's blocks are scattered.
+
+    The sampled token is meaningful only on the final piece (position
+    ``lengths`` falls inside it); earlier pieces sample a clamped position
+    and the caller discards the result. The position-keyed sampler draws at
+    the same absolute position either way, so no randomness is consumed.
+
+    Returns (token (1,) int32, pages).
+    """
+    s2 = tokens.shape[1]
+    bs = pages["k"].shape[3]
+    assert s2 % bs == 0 and s2 > 0, (s2, bs)
+    nb = s2 // bs
+    assert block_ids.shape[0] == nb, (block_ids.shape, nb)
+    n_pre = jnp.asarray(n_pre, jnp.int32)
+    positions = n_pre + jnp.arange(s2)
+    h0 = _embed(params, cfg, tokens)
+
+    def body(x, xs):
+        lp, window, pg = xs                # pg: per-layer (N, K, bs, D)
+        h = rms_norm(x, lp["mixer_norm"])
+        q, k, v = _qkv(cfg, lp, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        # (1, K, S, D) head-major -> (1, S, K, D) seq-major, S = bucket len
+        kc = paged_gather_kv(pg["k"], full_bt).transpose(0, 2, 1, 3)
+        vc = paged_gather_kv(pg["v"], full_bt).transpose(0, 2, 1, 3)
+        k_full = jax.lax.dynamic_update_slice(
+            kc.astype(k.dtype), k, (0, n_pre, 0, 0)
+        )
+        v_full = jax.lax.dynamic_update_slice(
+            vc.astype(v.dtype), v, (0, n_pre, 0, 0)
+        )
+        o = attention(
+            q, k_full, v_full, causal=cfg.causal, window=window, q_offset=n_pre
+        )
+        out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        x = x + out.astype(x.dtype)
+        if cfg.has_ffn:
+            f, _ = ffn_apply(cfg, lp, rms_norm(x, lp["ffn_norm"]))
+            x = x + f.astype(x.dtype)
+        return x, {"k": k, "v": v}
+
+    h, kv = jax.lax.scan(
+        body, h0, (params["layers"], window_vector(cfg), pages)
+    )
+    idx = jnp.clip(lengths - 1 - n_pre, 0, s2 - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)   # (1,1,d)
+    last = _logits(params, cfg, h_last)[:, 0]
+    new_pages = dict(pages)
+    for key in ("k", "v"):
+        arr = kv[key][:, 0]                          # (L, P, K, D)
         l, _, kh, d = arr.shape
         blocks = arr.reshape(l, nb, bs, kh, d).transpose(0, 1, 3, 2, 4)
         new_pages[key] = pages[key].at[:, block_ids].set(

@@ -50,6 +50,7 @@ from repro.models import (
     init_paged_pages,
     paged_decode_n,
     paged_draft_n,
+    paged_piece_prefill,
     paged_prefill,
     paged_suffix_prefill,
     paged_verify_n,
@@ -145,6 +146,34 @@ def _tail_sizes(chunk: int) -> list[int]:
     return sorted({_tail_steps(n, chunk) for n in range(1, chunk + 1)})
 
 
+def _check_prefill_chunk(chunk: int, block_size: int) -> int:
+    """Normalize a chunked-prefill piece budget: floored to a power of two
+    (a power of two always divides the power-of-two prefill buckets, so
+    every piece of a bucket has the same shape) and at least ``block_size``
+    (pieces scatter whole blocks). The compile budget follows: a bucket
+    dispatches at most ONE distinct piece shape (plus the monolithic bucket
+    shape for prompts at or under the budget) — see ``_piece_steps``."""
+    c = int(chunk)
+    if c < block_size:
+        raise ValueError(
+            f"prefill_chunk must be >= block_size={block_size} (got {chunk})"
+        )
+    return 1 << (c.bit_length() - 1)
+
+
+def _piece_steps(sb: int, piece: int) -> list[int]:
+    """Per-dispatch piece lengths an admission of bucket ``sb`` issues under
+    piece budget ``piece`` (0 = chunking off): equal power-of-two pieces
+    when the bucket exceeds the budget, else one monolithic dispatch. The
+    distinct compiled prefill shapes per bucket are therefore <=
+    log2(chunk)+1 for ANY budget sweep — a single piece size per bucket,
+    same bound as ``_tail_sizes`` gives the decode scan."""
+    if piece <= 0 or sb <= piece:
+        return [sb]
+    assert sb % piece == 0, (sb, piece)
+    return [piece] * (sb // piece)
+
+
 # Speculative draft-window sizes are powers of two: the verify scan length is
 # k+1 and the device draft scan length is k or k+1 (one-token resync after a
 # fully accepted window), so restricting k to powers of two bounds the
@@ -229,6 +258,19 @@ def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
             sampler=ops, keys=keys,
         )
 
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def piece_fn(params, pages, tokens, lengths, full_bt, n_pre, block_ids,
+                 keys, ops):
+        """Chunked-prefill piece: one token-budget-bounded slice of a prompt
+        whose blocks are all reserved, appended at absolute positions over
+        the row's page table. ``n_pre`` (tokens already written) is a traced
+        operand, so every piece of a bucket shares ONE compile keyed by
+        (bucket, piece) shapes only."""
+        return paged_piece_prefill(
+            params, cfg, pages, tokens, lengths, full_bt, n_pre, block_ids,
+            sampler=ops, keys=keys,
+        )
+
     @functools.partial(jax.jit, donate_argnums=(1,), static_argnames=("num_steps",))
     def decode_fn(params, pages, bt, lengths, tokens, active, keys, ops, num_steps):
         """Fused multi-token paged decode; inactive/saturated rows write the
@@ -264,18 +306,22 @@ def _make_paged_step_fns(cfg: ModelConfig, max_len: int, use_kernel: bool):
             sampler=ops, keys=keys,
         )
 
-    return prefill_fn, suffix_fn, decode_fn, draft_fn, verify_fn
+    return prefill_fn, suffix_fn, piece_fn, decode_fn, draft_fn, verify_fn
 
 
 def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
                        buckets, block_size, rows, max_blocks_per_row,
-                       decode_chunk, num_blocks, suffix_fn=None):
+                       decode_chunk, num_blocks, suffix_fn=None,
+                       piece_fn=None, prefill_chunk=0):
     """Precompile the paged prefill bucket(s) and decode tail lengths, then
     return a pristine pool (warmup scribbles on low block ids, never through
     the allocator). When ``suffix_fn`` is given (prefix cache enabled),
     every (matched blocks × suffix length) combination a bucket can produce
     is precompiled too, so a first prefix hit never pays an XLA compile
-    inside a virtual-time-measured admission tick."""
+    inside a virtual-time-measured admission tick. When ``piece_fn`` /
+    ``prefill_chunk`` are given (chunked prefill), the single piece shape
+    each long bucket dispatches is precompiled (``n_pre`` is traced, so one
+    compile covers every piece of the bucket)."""
     for s in buckets:
         nb = s // block_size
         _, pages = prefill_fn(
@@ -284,6 +330,15 @@ def _warmup_paged_pool(prefill_fn, decode_fn, params, cfg, pages, *,
             jnp.arange(1, nb + 1, dtype=jnp.int32),
             _zero_keys(1), _greedy_ops(1),
         )
+        if piece_fn is not None and 0 < prefill_chunk < s:
+            _, pages = piece_fn(
+                params, pages, jnp.zeros((1, prefill_chunk), jnp.int32),
+                jnp.asarray([s], jnp.int32),
+                jnp.arange(1, nb + 1, dtype=jnp.int32)[None, :],
+                jnp.asarray(0, jnp.int32),
+                jnp.arange(1, prefill_chunk // block_size + 1, dtype=jnp.int32),
+                _zero_keys(1), _greedy_ops(1),
+            )
         if suffix_fn is None:
             continue
         for n_hit in range(1, nb):
@@ -393,9 +448,9 @@ class InferenceEngine:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             (self._paged_prefill_fn, self._paged_suffix_fn,
-             self._paged_decode_fn, self._paged_draft_fn,
-             self._paged_verify_fn) = _make_paged_step_fns(
-                cfg, max_len, self.use_kernel
+             self._paged_piece_fn, self._paged_decode_fn,
+             self._paged_draft_fn, self._paged_verify_fn) = (
+                _make_paged_step_fns(cfg, max_len, self.use_kernel)
             )
 
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -1221,6 +1276,29 @@ class _Queued:
     resume: bool = False
 
 
+@dataclasses.dataclass
+class _Partial:
+    """A half-prefilled prompt under chunked admission: the row and ALL its
+    blocks are reserved (same memory dynamics as a monolithic admission —
+    ``_admissible`` tested the full demand), but the prompt's K/V is
+    computed piecewise, one token-budget-bounded dispatch per piece tick,
+    interleaved with decode chunks. ``item`` keeps the original queue entry
+    so cancellation / preemption mid-prefill can requeue or retire it
+    losslessly (no token has been sampled before the final piece)."""
+
+    item: _Queued
+    row: int
+    table: object                 # kv_pool.BlockTable — all blocks reserved
+    padded: np.ndarray            # (1, sb) bucket-padded prompt (+ resume)
+    lengths: np.ndarray           # (1,) true total length
+    s: int                        # true total length (host int)
+    sb: int                       # bucket length
+    n_done: int = 0               # tokens whose K/V is written
+    key: Optional[np.ndarray] = None   # (1, 2) uint32 request key
+    ops: object = None
+    t_admit: float = 0.0          # virtual time the admission began
+
+
 class BatchedServer:
     """Event-driven continuous-batching scheduler on a *virtual* timeline.
 
@@ -1292,6 +1370,7 @@ class BatchedServer:
                  admission: str = "edf",
                  prefix_cache: bool = False,
                  speculative: bool = False,
+                 prefill_chunk: Optional[int] = None,
                  tracer=None):
         cfg = _engine_compute_cfg(cfg)
         self.cfg = cfg
@@ -1345,12 +1424,17 @@ class BatchedServer:
                 use_kernel = on_tpu() and not _paged_windowed(cfg)
             self.use_kernel = bool(use_kernel)
             (self._prefill_row_paged, self._suffix_row_paged,
-             self._decode_chunk_paged, self._draft_row_paged,
-             self._verify_row_paged) = (
+             self._piece_row_paged, self._decode_chunk_paged,
+             self._draft_row_paged, self._verify_row_paged) = (
                 _make_paged_step_fns(cfg, max_len, self.use_kernel)
             )
         elif prefix_cache:
             raise ValueError("prefix_cache requires a paged server")
+        elif prefill_chunk:
+            raise ValueError(
+                "prefill_chunk (chunked prefill) requires a paged server: "
+                "pieces append K/V into already-reserved pool blocks"
+            )
         else:
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _prefill_row(params, batched_cache, tokens, lengths, row, keys,
@@ -1381,6 +1465,29 @@ class BatchedServer:
             self._decode_chunk = _decode_chunk
             self.cache = init_cache(cfg, max_slots, max_len)
             self._free_rows = list(range(max_slots))
+        # chunked prefill (Sarathi-style): long-prompt admissions split into
+        # token-budget-bounded pieces interleaved with decode ticks, so one
+        # admission stalls running rows by ONE piece, not one prompt.
+        # ``"auto"`` sizes the budget at decode_chunk tokens per batch row —
+        # a piece costs roughly what the decode chunk it displaces costs.
+        if not prefill_chunk:
+            self.prefill_chunk = 0
+        else:
+            if prefill_chunk == "auto":
+                prefill_chunk = max(
+                    self.decode_chunk * max_slots, self.block_size
+                )
+            self.prefill_chunk = _check_prefill_chunk(
+                prefill_chunk, self.block_size
+            )
+        self._partial: dict[int, _Partial] = {}   # rid -> half-prefilled state
+        self._piece_turn = False      # alternation: piece next (vs decode)?
+        self._piece_ewma: Optional[float] = None  # smoothed piece seconds
+        # decode-interference ledger: seconds decodable rows spent stalled
+        # behind prefill dispatches (count = stall events, max = worst
+        # single stall — the quantity chunking bounds)
+        self.metrics.histogram("decode_stall_s")
+        self.metrics.view("prefill_chunk", lambda: self.prefill_chunk)
         self._warm = False
         self.clock = 0.0                    # virtual seconds
         self.queue: list[_Queued] = []      # admission-ordered by _pick()
@@ -1476,6 +1583,8 @@ class BatchedServer:
                 suffix_fn=(
                     self._suffix_row_paged if self.kv.prefix is not None else None
                 ),
+                piece_fn=self._piece_row_paged if self.prefill_chunk else None,
+                prefill_chunk=self.prefill_chunk,
             )
             if self.speculative:
                 self._warmup_verify()
@@ -1622,6 +1731,22 @@ class BatchedServer:
             else:
                 self._free_rows.append(row)
             self.completed[rid] = slot.tokens
+            if self.tracer.enabled:
+                self.tracer.end_request(
+                    rid, self.clock, cat="server_request",
+                    args={"outcome": "cancelled",
+                          "generated": self.generated.get(rid, 0)},
+                )
+            return
+        if rid in self._partial:
+            # cancelled mid-prefill: no token was emitted yet, so the
+            # delivered stream is just the input echo; the half-written
+            # blocks are NOT registered in the prefix cache (their content
+            # covers only the computed pieces)
+            p = self._partial.pop(rid)
+            self.rows.pop(rid)
+            self.kv.release(rid)
+            self.completed[rid] = list(p.item.tokens)
             if self.tracer.enabled:
                 self.tracer.end_request(
                     rid, self.clock, cat="server_request",
@@ -1801,6 +1926,33 @@ class BatchedServer:
         first_admission = rid not in self.first_token_time
         t_admit = self.clock                  # admission start (queue wait end)
         n_hit = 0
+        stalled = bool(self._decodable())     # rows this prefill will stall
+        if self.paged and self.prefill_chunk:
+            sb = int(padded.shape[1])
+            # prefix-hit admissions keep the monolithic suffix path (the hit
+            # already shrinks the work and its suffix length is not piece-
+            # aligned); cold long prompts go piecewise
+            if sb > self.prefill_chunk and not self.kv.prefix_match(
+                full, record=False
+            ):
+                table = self.kv.admit(
+                    rid, self.kv.prefill_demand(sb, s), num_tokens=s,
+                    prefix_blocks=[],
+                )
+                assert table is not None      # guarded by _admissible
+                self.block_tables[table.row] = table.padded(
+                    self.max_blocks_per_row
+                )
+                self.rows[rid] = table.row
+                self.admit_seq[rid] = self._admit_counter
+                self._admit_counter += 1
+                self._partial[rid] = _Partial(
+                    item=item, row=table.row, table=table, padded=padded,
+                    lengths=lengths, s=s, sb=sb, key=key, ops=ops,
+                    t_admit=t_admit,
+                )
+                self._piece_tick(rid)         # first piece, same tick
+                return
         t0 = time.perf_counter()
         if self.paged:
             sb = int(padded.shape[1])
@@ -1844,7 +1996,12 @@ class BatchedServer:
                 jnp.asarray(lengths), row, jnp.asarray(key), ops,
             )
             tok = int(jax.block_until_ready(tok))
-        self.clock += time.perf_counter() - t0
+        dur = time.perf_counter() - t0
+        self.clock += dur
+        if stalled:
+            # decode-ready rows sat frozen for the whole monolithic prefill:
+            # this is exactly the interference chunked prefill bounds
+            self.metrics.histogram("decode_stall_s").observe(dur)
         self.first_token_time.setdefault(rid, self.clock)  # resume keeps TTFT
         if first_admission and self.clock > item.deadline:
             self.slo_misses += 1              # first token past its deadline
@@ -1878,6 +2035,7 @@ class BatchedServer:
                     ),
                     "prefix_hit_blocks": n_hit,
                     "queue_wait_s": t_admit - self.submit_time[rid],
+                    "decode_stall_s": dur if stalled else 0.0,
                 },
             )
             self.tracer.request_instant(
@@ -1895,6 +2053,169 @@ class BatchedServer:
         self.row_len[row] = s
         if rid in self._verify_requested:
             self.verify_rids.add(rid)
+
+    # -- chunked prefill (piece ticks between decode chunks) ---------------
+
+    def _piece_pick(self) -> int:
+        """EDF over half-prefilled prompts: earliest unexpired TTFT deadline
+        first (expired deadlines demote to inf — same overload rule as
+        ``_edf_key``), admission order as the tie-break."""
+        def key(rid):
+            d = self._partial[rid].item.deadline
+            return (d if d >= self.clock else math.inf, self.admit_seq[rid])
+        return min(self._partial, key=key)
+
+    def _partial_urgent(self) -> bool:
+        """Starvation bound for interleaved pieces: True when the most
+        urgent partial could miss its TTFT deadline unless its remaining
+        pieces run consecutively from now on. Estimated with the running
+        piece-duration EWMA plus one piece of slack; chunking then degrades
+        to back-to-back pieces — exactly the monolithic schedule — so EDF
+        admission never loses a deadline it would have met unchunked."""
+        if not self._partial:
+            return False
+        p = self._partial[self._piece_pick()]
+        d = p.item.deadline
+        if not (self.clock <= d < math.inf):
+            return False
+        remaining = -(-(p.s - p.n_done) // self.prefill_chunk)
+        return self.clock + (remaining + 1) * (self._piece_ewma or 0.0) >= d
+
+    def _piece_due(self) -> bool:
+        """A piece runs next when the last tick was a decode chunk (strict
+        1:1 interleave keeps decode TBT bounded by ONE piece) or a partial
+        is about to miss its deadline."""
+        return self._piece_turn or self._partial_urgent()
+
+    def _piece_tick(self, rid: Optional[int] = None) -> None:
+        """Run ONE prefill piece for a half-prefilled prompt: an
+        incremental dispatch at absolute positions ``n_done ..
+        n_done + prefill_chunk`` appending K/V into the prompt's reserved
+        blocks (``paged_piece_prefill``). The final piece samples the first
+        token — logits are bitwise-identical to a monolithic prefill, so
+        chunking is invisible to the stream — and promotes the partial to a
+        decode slot."""
+        if rid is None:
+            rid = self._piece_pick()
+        p = self._partial[rid]
+        piece = self.prefill_chunk
+        n_pre = p.n_done
+        idx = n_pre // piece
+        stalled = bool(self._decodable())     # rows frozen for this piece
+        nb = p.sb // self.block_size
+        t_start = self.clock
+        t0 = time.perf_counter()
+        tok, self.pages = self._piece_row_paged(
+            self.params, self.pages,
+            jnp.asarray(p.padded[:, n_pre:n_pre + piece], jnp.int32),
+            jnp.asarray(p.lengths),
+            jnp.asarray([p.table.blocks[:nb]], jnp.int32),
+            jnp.asarray(n_pre, jnp.int32),
+            jnp.asarray(
+                p.table.blocks[
+                    n_pre // self.block_size:(n_pre + piece) // self.block_size
+                ],
+                jnp.int32,
+            ),
+            jnp.asarray(p.key), p.ops,
+        )
+        tok = int(np.asarray(jax.block_until_ready(tok))[0])
+        dur = time.perf_counter() - t0
+        self.clock = t_start + dur
+        self._piece_turn = False
+        self._piece_ewma = (
+            dur if self._piece_ewma is None
+            else 0.5 * (self._piece_ewma + dur)
+        )
+        p.n_done += piece
+        # stop at the piece containing the true last position s-1: bucket
+        # padding beyond it is never attended (the decode write path
+        # overwrites those positions before any query can reach them), so
+        # pure-padding pieces are skipped — chunked prefill computes
+        # ceil(s/piece)*piece tokens where monolithic computes the bucket
+        final = p.n_done >= p.s
+        self.prefill_tokens_computed += piece
+        if stalled:
+            self.metrics.histogram("decode_stall_s").observe(dur)
+        if idx == 0:
+            self.metrics.histogram("queue_wait_s").observe(
+                p.t_admit - self.submit_time[rid]
+            )
+        if self.tracer.enabled:
+            args = {
+                "rid": rid,
+                "resume": p.item.resume,
+                "piece": idx,
+                "n_pieces": -(-p.s // piece),
+                "tokens_admitted": p.s if final else 0,
+                "tokens_computed": piece,
+                "prefix_hit_blocks": 0,
+                "decode_stall_s": dur if stalled else 0.0,
+            }
+            if idx == 0:
+                args["queue_wait_s"] = p.t_admit - self.submit_time[rid]
+            self.tracer.span(
+                f"server/row{p.row}", "prefill", t_start, self.clock,
+                cat="server", args=args,
+            )
+        if not final:
+            return
+        # final piece: first token lands now — promote to a decode slot
+        del self._partial[rid]
+        self.prefill_tokens_admitted += p.s
+        first_admission = rid not in self.first_token_time
+        self.first_token_time.setdefault(rid, self.clock)
+        if first_admission and self.clock > p.item.deadline:
+            self.slo_misses += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "slo_miss", self.clock, cat="server",
+                    args={"rid": rid},
+                )
+        self.events[rid].append((tok, self.clock))
+        self.generated[rid] += 1
+        if rid in self._cancel_due:
+            self.cancel_lag_tokens += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "server/queue", "cancel_lag", self.clock, cat="server",
+                    args={"rid": rid, "n": 1},
+                )
+        if self.tracer.enabled:
+            self.tracer.request_instant(
+                rid, "admitted", self.clock, cat="server_request",
+                args={"row": p.row, "resume": p.item.resume},
+            )
+        self.slots[rid] = _Slot(
+            rid, p.item.max_new - 1, list(p.item.tokens) + [tok],
+            prompt=p.item.prompt, seed=p.item.seed, key=p.key[0],
+            sampler=p.item.sampler, deadline=p.item.deadline,
+        )
+        self.row_len[p.row] = p.s
+        if rid in self._verify_requested:
+            self.verify_rids.add(rid)
+
+    def _preempt_partial(self, rid: int) -> None:
+        """Recompute preemption of a half-prefilled prompt: free its blocks
+        and requeue it as a resume entry. Lossless by construction — no
+        token was sampled yet, so the requeued item is the original request
+        and re-admission simply prefills from scratch (possibly hitting the
+        prefix cache on other requests' sealed blocks)."""
+        p = self._partial.pop(rid)
+        self.rows.pop(rid)
+        self.kv.release(rid)              # partial content: never registered
+        self.kv.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "server/queue", "preempt", self.clock, cat="server",
+                args={"rid": rid, "generated": self.generated.get(rid, 0)},
+            )
+            self.tracer.request_instant(
+                rid, "preempted", self.clock, cat="server_request",
+                args={"generated": self.generated.get(rid, 0)},
+            )
+        p.item.resume = True
+        self.queue.insert(0, p.item)
 
     # -- paged capacity (extend-on-decode + recompute preemption) ----------
 
@@ -1938,10 +2259,14 @@ class BatchedServer:
         admission as the tie-break. With no deadlines in play every row ties
         at inf and this degrades exactly to the old newest-admitted-first
         policy; with deadlines, a tight-deadline row survives pool pressure
-        that evicts a relaxed one."""
-        return max(
-            self.slots, key=lambda r: (self.slots[r].deadline, self.admit_seq[r])
-        )
+        that evicts a relaxed one. Half-prefilled prompts compete under the
+        same key (their preemption is the cheapest of all: no sampled token
+        to replay)."""
+        def key(r):
+            if r in self.slots:
+                return (self.slots[r].deadline, self.admit_seq[r])
+            return (self._partial[r].item.deadline, self.admit_seq[r])
+        return max(list(self.slots) + list(self._partial), key=key)
 
     def _ensure_block_capacity(self, need: dict) -> None:
         """Extend every active row's page table to cover its share of the
@@ -1955,7 +2280,10 @@ class BatchedServer:
             while not self.kv.extend(rid, self.row_len[row] + need[rid]):
                 victim = self._preempt_victim()
                 if victim != rid:
-                    self._preempt(victim)
+                    if victim in self._partial:
+                        self._preempt_partial(victim)
+                    else:
+                        self._preempt(victim)
                     continue
                 if len(self.slots) > 1:
                     self._preempt(rid)        # rid itself is the most relaxed
@@ -2033,6 +2361,7 @@ class BatchedServer:
         toks = np.asarray(jax.block_until_ready(toks))   # (num_steps, max_slots)
         dur = time.perf_counter() - t0
         self.clock = t_start + dur
+        self._piece_turn = True          # 1:1 interleave with prefill pieces
         for rid in need:
             slot = self.slots[rid]
             row = self.rows[rid]
@@ -2202,6 +2531,9 @@ class BatchedServer:
             if head is not None and head <= self.clock and self._admissible():
                 self._admit_one()        # one row per tick, between chunks
                 continue
+            if self._partial and (self._piece_due() or not self._decodable()):
+                self._piece_tick()       # one prefill piece between chunks
+                continue
             if self._decodable():
                 self._decode_tick()
                 continue
@@ -2223,16 +2555,18 @@ class BatchedServer:
         self._apply_due_cancels()
         self._retire_done()
         head = self._head_arrival()
-        if not self.slots and head is not None:
+        if not self.slots and not self._partial and head is not None:
             self.clock = max(self.clock, head)   # idle gap: jump to arrival
             self._apply_due_cancels()
             head = self._head_arrival()          # a due cancel may drop the head
         if head is not None and head <= self.clock and self._admissible():
             self._admit_one()
+        elif self._partial and (self._piece_due() or not self._decodable()):
+            self._piece_tick()
         elif self._decodable():
             self._decode_tick()
         self._retire_done()
-        return bool(self.slots or self.queue)
+        return bool(self.slots or self.queue or self._partial)
 
     def run_to_completion(self) -> dict[int, list[int]]:
         self.run_until(math.inf)

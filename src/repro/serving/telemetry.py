@@ -612,23 +612,33 @@ def reconcile_trace(trace, stats: dict) -> list[str]:
 
 
 def ttft_attribution(trace) -> list[dict]:
-    """Per-request TTFT breakdown: queue / prefill / network / draft-stall.
+    """Per-request TTFT breakdown: queue / prefill / network / draft-stall,
+    plus post-first-token ``decode_stall_s`` interference.
 
     Joins driver-level request records (cat ``request``) with server-side
     spans via the ``srv_rid`` recorded on the dispatch instant, and with
     network/device tracks via the driver rid.  Returns one dict per request
     with the component seconds; components that do not apply are 0.0.
+
+    A chunked prefill emits one server span per PIECE: all of a request's
+    prefill spans sum into ``prefill_s`` and the queue wait rides on the
+    first piece only, so the breakdown is exact in both modes.
+    ``decode_stall_s`` is the overlap of OTHER requests' server prefill
+    spans with this request's post-first-token lifetime — the decode
+    interference that chunked prefill bounds (watch it collapse in
+    ``tools/trace_report.py`` when ``prefill_chunk`` is on).
     """
     recs = request_records(trace, cat="request")
     spans = trace_spans(trace)
 
-    # Index server prefill spans by server rid, network spans by driver rid.
-    prefill_by_srv: dict[Any, dict] = {}
+    # Index server prefill spans by server rid (ALL spans: a chunked
+    # prefill emits one per piece), network spans by driver rid.
+    prefill_by_srv: dict[Any, list[dict]] = defaultdict(list)
     for ev in spans:
         if ev.get("cat") == "server" and ev.get("name") == "prefill":
             rid = ev.get("args", {}).get("rid")
-            if rid is not None and rid not in prefill_by_srv:
-                prefill_by_srv[rid] = ev
+            if rid is not None:
+                prefill_by_srv[rid].append(ev)
     net_by_rid: dict[Any, list[dict]] = defaultdict(list)
     dev_prefill_by_rid: dict[Any, dict] = {}
     stall_by_rid: dict[Any, list[dict]] = defaultdict(list)
@@ -668,6 +678,7 @@ def ttft_attribution(trace) -> list[dict]:
             "prefill_s": 0.0,
             "network_s": 0.0,
             "draft_stall_s": 0.0,
+            "decode_stall_s": 0.0,
             "ttft_s": None,
             "outcome": (end or {}).get("args", {}).get("outcome"),
             "winner": (end or {}).get("args", {}).get("winner"),
@@ -686,12 +697,26 @@ def ttft_attribution(trace) -> list[dict]:
             info["ttft_s"] = (first_token_ts - t0) / _US
 
         horizon = first_token_ts if first_token_ts is not None else float("inf")
-        sp = prefill_by_srv.get(srv_rid)
-        if sp is not None and sp["ts"] < horizon:
-            info["prefill_s"] = _before(sp, horizon)
+        own = sorted(prefill_by_srv.get(srv_rid, []), key=lambda e: e["ts"])
+        for sp in own:
+            info["prefill_s"] += _before(sp, horizon)
+        for sp in own:
             qw = sp.get("args", {}).get("queue_wait_s")
             if qw is not None:
                 info["queue_s"] = qw
+                break
+        if first_token_ts is not None and srv_rid is not None:
+            # decode interference: other requests' prefill work overlapping
+            # this request's streaming phase (first token -> request end)
+            t_end = end["ts"] if end is not None else float("inf")
+            for other, evs in prefill_by_srv.items():
+                if other == srv_rid:
+                    continue
+                for ev in evs:
+                    lo = max(ev["ts"], first_token_ts)
+                    hi = min(ev["ts"] + ev.get("dur", 0.0), t_end)
+                    if hi > lo:
+                        info["decode_stall_s"] += (hi - lo) / _US
         dp = dev_prefill_by_rid.get(rid)
         if dp is not None:
             info["prefill_s"] = max(info["prefill_s"], _before(dp, horizon))

@@ -38,6 +38,7 @@ __all__ = [
     "load_point_arrivals",
     "make_requests",
     "make_serving_trace",
+    "make_interference_trace",
     "make_multiturn_trace",
 ]
 
@@ -170,6 +171,48 @@ def make_serving_trace(rng: np.random.Generator, n: int, *,
     if long_fraction > 0.0:
         lengths = np.where(rng.random(n) < long_fraction, max_prompt, lengths)
     return [(float(a), int(l), int(max_new)) for a, l in zip(arrivals, lengths)]
+
+
+def make_interference_trace(rng: np.random.Generator, n: int, *,
+                            service_time: float, slots: int, rho: float,
+                            short_prompt: int = 8, short_new: int = 24,
+                            long_prompt: int = 128, long_every: int = 8,
+                            long_new: int = 8, jitter: float = 0.0) -> list:
+    """(arrival, prompt_len, max_new) tuples for the prefill/decode
+    INTERFERENCE load point: a steady background of short-prompt,
+    decode-heavy requests with a max-length prompt injected every
+    ``long_every``-th arrival.
+
+    This is the workload where monolithic prefill hurts most — each long
+    admission freezes every streaming row for a whole prompt's prefill, so
+    the background requests' TBT series grows prompt-sized stalls. Chunked
+    prefill (``BatchedServer(prefill_chunk=...)``) bounds each stall to one
+    piece; ``benchmarks/bench_chunked_prefill.py`` measures the p99 TBT
+    stall on exactly this trace, chunked vs monolithic.
+
+    Arrivals are Poisson at offered load ``rho`` over the BACKGROUND
+    service time (:func:`load_point_arrivals`); the long prompts ride the
+    same process (deterministic every-Nth positions so the interference
+    cadence is controlled, with optional ``jitter`` fraction of positions
+    resampled uniformly). Background requests are decode-heavy
+    (``short_new >> short_prompt``) so a long prefill has streams to stall.
+    """
+    if long_every < 2:
+        raise ValueError(f"long_every must be >= 2 (got {long_every})")
+    arrivals = load_point_arrivals(
+        rng, n, service_time=service_time, slots=slots, rho=rho
+    )
+    is_long = np.arange(n) % long_every == long_every - 1
+    if jitter > 0.0:
+        flips = rng.random(n) < jitter
+        is_long = np.where(flips, rng.random(n) < 1.0 / long_every, is_long)
+    out = []
+    for a, lng in zip(arrivals, is_long):
+        if lng:
+            out.append((float(a), int(long_prompt), int(long_new)))
+        else:
+            out.append((float(a), int(short_prompt), int(short_new)))
+    return out
 
 
 def make_multiturn_trace(rng: np.random.Generator, n: int, *,

@@ -1,0 +1,360 @@
+"""Chunked (piecewise) prefill: the load-bearing acceptance properties.
+
+  * piecewise prefill is BITWISE-identical to whole-prompt prefill — pages
+    and sampled token — at the model layer (``paged_piece_prefill``),
+    including the padding-piece-skip case where the true last position lands
+    before the final bucket piece, under temperature > 0 samplers;
+  * the chunk-offset causal mask agrees between the Pallas kernel
+    (interpret=True), the XLA reference, and a slice of the full-prompt run;
+  * a chunked ``BatchedServer`` delivers streams bit-identical to the
+    monolithic server under mixed samplers, cancels, and pool-pressure
+    preemption of a half-prefilled prompt;
+  * the piece-size bucketing keeps the compile budget bounded:
+    <= log2(chunk)+1 distinct prefill shapes for any budget sweep, one
+    piece shape per bucket (same bound ``_tail_sizes`` gives decode);
+  * ``make_interference_trace`` emits the advertised mixed-length workload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import paper_models
+from repro.kernels.ops import flash_prefill_op
+from repro.kernels.ref import mha_reference
+from repro.models import init_params
+from repro.models.attention import attention_blockwise, attention_dense
+from repro.models.paged import (
+    init_paged_pages,
+    paged_piece_prefill,
+    paged_prefill,
+)
+from repro.models.sampling import SamplerConfig
+from repro.serving import BatchedServer, Request, SLO
+from repro.serving.engine import (
+    _check_prefill_chunk,
+    _piece_steps,
+    _tail_sizes,
+    _tail_steps,
+)
+from repro.sim.traces import make_interference_trace
+
+CFG = paper_models.TINY_DEVICE
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Model layer: piecewise == monolithic, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _piecewise(params, pages, padded, s, piece, sampler, keys, block_ids):
+    """Issue the prompt piece by piece, engine-style: stop at the piece
+    containing the true last position (pure-padding pieces never run)."""
+    full_bt = jnp.asarray([block_ids], jnp.int32)
+    tok, n = None, 0
+    while n < s:
+        ids = jnp.asarray(block_ids[n // BS:(n + piece) // BS], jnp.int32)
+        tok, pages = paged_piece_prefill(
+            params, CFG, pages,
+            jnp.asarray(padded[:, n:n + piece], jnp.int32),
+            jnp.asarray([s], jnp.int32), full_bt,
+            jnp.asarray(n, jnp.int32), ids, sampler=sampler, keys=keys,
+        )
+        n += piece
+    return tok, pages, n
+
+
+@pytest.mark.parametrize("piece", [16, 32])
+@pytest.mark.parametrize(
+    "sampler", [None, SamplerConfig(temperature=0.8, top_p=0.95)]
+)
+def test_piecewise_prefill_bitwise_matches_monolithic(params, piece, sampler):
+    # s=37 in a 64-bucket: position 36 sits in the 16-token piece [32, 48),
+    # so with piece=16 the last bucket piece [48, 64) is pure padding and
+    # must be SKIPPED (the engine's `final = n_done >= s` path)
+    rng = np.random.default_rng(5)
+    s, sb = 37, 64
+    padded = np.zeros((1, sb), np.int64)
+    padded[0, :s] = rng.integers(1, CFG.vocab, size=s)
+    block_ids = np.asarray([3, 1, 4, 2], np.int32)     # non-contiguous
+    keys = jnp.asarray([[123, 456]], jnp.uint32)
+
+    tok_m, pages_m = paged_prefill(
+        params, CFG, init_paged_pages(CFG, 8, BS),
+        jnp.asarray(padded, jnp.int32), jnp.asarray([s], jnp.int32),
+        jnp.asarray(block_ids), sampler=sampler, keys=keys,
+    )
+    tok_p, pages_p, n_done = _piecewise(
+        params, init_paged_pages(CFG, 8, BS), padded, s, piece,
+        sampler, keys, block_ids,
+    )
+    if piece == 16:
+        assert n_done == 48 < sb                       # padding piece skipped
+    assert int(np.asarray(tok_m)[0]) == int(np.asarray(tok_p)[0])
+    # every block a piece wrote matches the monolithic pages bitwise (the
+    # skipped padding piece's blocks stay zero — masked at read time, and
+    # overwritten by decode before any query reaches them)
+    written = block_ids[: n_done // BS]
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(pages_m[key][:, written]),
+            np.asarray(pages_p[key][:, written]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Kernel layer: chunk-offset causal mask parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("offset", [0, 32, 96])
+def test_flash_prefill_q_offset_interpret_parity(offset):
+    """Kernel (interpret), XLA reference, and a slice of the full-prompt
+    run agree: a piece of queries at absolute positions offset+arange."""
+    rng = np.random.default_rng(2)
+    s, h, kh, d, piece = 128, 4, 2, 64, 32
+    q = jnp.asarray(rng.normal(size=(1, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, kh, d)), jnp.float32)
+    qp = q[:, offset:offset + piece]
+    out = flash_prefill_op(qp, k, v, causal=True, q_offset=offset,
+                           block_q=32, block_k=64, interpret=True)
+    ref = mha_reference(qp, k, v, causal=True, q_offset=offset)
+    full = mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(full[:, offset:offset + piece]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_q_offset_blockwise_matches_dense():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 64, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    a = attention_blockwise(q, k, v, q_offset=64, block_q=32, block_k=64)
+    b = attention_dense(q, k, v, q_offset=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Server layer: chunked scheduling is invisible in the streams
+# ---------------------------------------------------------------------------
+
+
+def _serve(params, prefill_chunk, *, cancel_idx=None):
+    srv = BatchedServer(CFG, params, max_slots=3, max_len=128, paged=True,
+                        block_size=BS, num_blocks=40,
+                        prefill_chunk=prefill_chunk)
+    rng = np.random.default_rng(11)
+    samplers = [None, SamplerConfig(temperature=0.8, top_k=20),
+                SamplerConfig(temperature=0.7, top_p=0.9)]
+    rids = [srv.submit(Request(
+        rng.integers(1, CFG.vocab, size=n).astype(np.int32), 10,
+        arrival=0.01 * i, sampler=samplers[i % 3], seed=100 + i,
+        slo=SLO(ttft_deadline=5.0),
+    )) for i, n in enumerate((70, 9, 90, 12, 50))]
+    if cancel_idx is not None:
+        srv.cancel(rids[cancel_idx])
+    done = dict(srv.run_to_completion())
+    return [done[r] for r in rids], srv
+
+
+def test_server_chunked_streams_identical(params):
+    mono, _ = _serve(params, None)
+    chunked, srv = _serve(params, 32)
+    assert chunked == mono                  # bitwise, sampled rows included
+    assert srv.pool_stats()["prefill_chunk"] == 32
+    # the long prompts really were split (70->3 pieces, 90->3 pieces)
+    assert srv.pool_stats()["prefill_tokens_computed"] > 0
+
+
+def test_server_chunked_cancel_matches_monolithic(params):
+    mono, _ = _serve(params, None, cancel_idx=2)
+    chunked, _ = _serve(params, 32, cancel_idx=2)
+    assert chunked == mono
+
+
+def test_server_chunked_preemption_lossless(params):
+    """Pool pressure mid-run: the newest admission is preempted and
+    replayed; streams still match the monolithic run.
+
+    Deterministic collision: 36 usable blocks, r1 (20-token prompt, 60 new)
+    grows 2 -> 5 blocks while r2 (512-token prompt) holds 33 — the pool runs
+    dry regardless of wall-clock. Under chunking r2's prefill is 16 pieces
+    interleaved 1:1 with decode, so the preemption lands on a HALF-PREFILLED
+    partial (the ``_preempt_partial`` path); monolithic preempts it
+    mid-decode. Both must replay losslessly."""
+    def run(chunk):
+        srv = BatchedServer(CFG, params, max_slots=2, max_len=544, paged=True,
+                            block_size=BS, num_blocks=37, prefill_chunk=chunk)
+        rng = np.random.default_rng(3)
+        r1 = srv.submit(Request(
+            rng.integers(1, CFG.vocab, size=20).astype(np.int32), 60,
+            seed=1, sampler=SamplerConfig(temperature=0.9, top_p=0.9),
+        ))
+        r2 = srv.submit(Request(
+            rng.integers(1, CFG.vocab, size=512).astype(np.int32), 32,
+            seed=2, sampler=SamplerConfig(temperature=0.8, top_k=40),
+        ))
+        done = dict(srv.run_to_completion())
+        return [done[r1], done[r2]], srv.kv.preemptions
+    mono, pre_m = run(None)
+    chunked, pre_c = run(32)
+    assert chunked == mono
+    assert pre_m >= 1 and pre_c >= 1        # the pool actually ran dry
+
+
+def test_prefill_chunk_requires_paged_and_block_multiple(params):
+    with pytest.raises(ValueError):
+        BatchedServer(CFG, params, max_slots=2, max_len=64, paged=False,
+                      prefill_chunk=32)
+    with pytest.raises(ValueError):
+        BatchedServer(CFG, params, max_slots=2, max_len=64, paged=True,
+                      block_size=BS, prefill_chunk=8)   # < block_size
+
+
+# ---------------------------------------------------------------------------
+# Piece bucketing: compile budget stays bounded
+# ---------------------------------------------------------------------------
+
+
+def test_tail_steps_properties():
+    for chunk in (1, 2, 4, 8, 16):
+        for n in range(1, chunk + 1):
+            t = _tail_steps(n, chunk)
+            assert n <= t <= chunk
+            assert t & (t - 1) == 0                    # power of two
+        sizes = _tail_sizes(chunk)
+        assert sizes == sorted(set(sizes))
+        assert len(sizes) == chunk.bit_length()        # log2(chunk)+1
+    assert _tail_sizes(8) == [1, 2, 4, 8]
+
+
+def test_check_prefill_chunk_normalization():
+    assert _check_prefill_chunk(16, 16) == 16
+    assert _check_prefill_chunk(48, 16) == 32          # floored to pow2
+    assert _check_prefill_chunk(129, 16) == 128
+    with pytest.raises(ValueError):
+        _check_prefill_chunk(8, 16)                    # below block_size
+
+
+def test_piece_steps_compile_budget():
+    chunk = 64
+    shapes = set()
+    for sb in (16, 32, 64, 128, 256, 512):             # pow2 buckets
+        steps = _piece_steps(sb, chunk)
+        assert len(set(steps)) == 1                    # ONE shape per bucket
+        if sb <= chunk:
+            assert steps == [sb]                       # monolithic dispatch
+        else:
+            assert steps == [chunk] * (sb // chunk)
+            assert sum(steps) == sb                    # nothing dropped
+        shapes |= set(steps)
+    # any budget sweep compiles at most log2(chunk)+1 distinct piece shapes
+    assert len(shapes) <= chunk.bit_length()
+    assert _piece_steps(64, 0) == [64]                 # chunking off
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: per-piece spans sum into prefill_s; decode_stall_s attributes
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_attribution_sums_pieces_and_decode_stall():
+    """A chunked prefill emits one server span per piece: all pieces sum
+    into prefill_s (queue wait rides the first piece only), and OTHER
+    requests' prefill overlapping a request's streaming phase lands in
+    decode_stall_s."""
+    from repro.serving.telemetry import ttft_attribution
+
+    us = 1e6
+
+    def span(srv_rid, ts, dur, **extra):
+        return {"ph": "X", "cat": "server", "name": "prefill", "pid": 1,
+                "tid": 1, "ts": ts * us, "dur": dur * us,
+                "args": {"rid": srv_rid, **extra}}
+
+    trace = {"traceEvents": [
+        # request A: first token at 1.0s, ends at 3.0s
+        {"ph": "b", "cat": "request", "id": 1, "ts": 0.0, "name": "req"},
+        {"ph": "n", "cat": "request", "id": 1, "ts": 0.0, "name": "req",
+         "args": {"event": "dispatch", "srv_rid": 10}},
+        {"ph": "n", "cat": "request", "id": 1, "ts": 1.0 * us, "name": "req",
+         "args": {"event": "first_token", "ttft_s": 1.0}},
+        {"ph": "e", "cat": "request", "id": 1, "ts": 3.0 * us, "name": "req",
+         "args": {"outcome": "completed"}},
+        # request B: first token at 2.6s
+        {"ph": "b", "cat": "request", "id": 2, "ts": 0.5 * us, "name": "req"},
+        {"ph": "n", "cat": "request", "id": 2, "ts": 0.5 * us, "name": "req",
+         "args": {"event": "dispatch", "srv_rid": 20}},
+        {"ph": "n", "cat": "request", "id": 2, "ts": 2.6 * us, "name": "req",
+         "args": {"event": "first_token", "ttft_s": 2.1}},
+        {"ph": "e", "cat": "request", "id": 2, "ts": 3.0 * us, "name": "req",
+         "args": {"outcome": "completed"}},
+        # A's prefill: two pieces, queue wait on the first only
+        span(10, 0.1, 0.2, piece=0, queue_wait_s=0.05),
+        span(10, 0.4, 0.1, piece=1),
+        # B's prefill: 1.5s-2.5s — entirely inside A's streaming phase
+        span(20, 1.5, 1.0, queue_wait_s=0.0),
+    ]}
+    rows = {r["rid"]: r for r in ttft_attribution(trace)}
+    a, b = rows[1], rows[2]
+    assert a["prefill_s"] == pytest.approx(0.3)      # pieces sum
+    assert a["queue_s"] == pytest.approx(0.05)       # first piece only
+    assert a["decode_stall_s"] == pytest.approx(1.0)  # B's prefill overlap
+    assert b["prefill_s"] == pytest.approx(1.0)
+    assert b["decode_stall_s"] == pytest.approx(0.0)  # A prefilled earlier
+
+
+# ---------------------------------------------------------------------------
+# Interference trace generator
+# ---------------------------------------------------------------------------
+
+
+def test_interference_trace_statistics():
+    n = 32
+    tr = make_interference_trace(
+        np.random.default_rng(0), n, service_time=0.5, slots=4, rho=0.8,
+        short_prompt=8, short_new=24, long_prompt=128, long_every=8,
+        long_new=8,
+    )
+    assert len(tr) == n
+    arrivals = [a for a, _, _ in tr]
+    assert arrivals == sorted(arrivals) and arrivals[0] >= 0.0
+    for i, (_, plen, mnew) in enumerate(tr):
+        if i % 8 == 7:                                 # every 8th is long
+            assert (plen, mnew) == (128, 8)
+        else:
+            assert (plen, mnew) == (8, 24)
+    assert sum(p == 128 for _, p, _ in tr) == n // 8
+
+
+def test_interference_trace_jitter_randomizes_cadence():
+    """Jitter resamples positions (rate-preserving in expectation, not in
+    count): every entry is still one of the two request shapes and both
+    kinds survive."""
+    n = 48
+    tr = make_interference_trace(
+        np.random.default_rng(1), n, service_time=0.5, slots=4, rho=0.8,
+        long_prompt=128, long_every=6, jitter=0.5,
+    )
+    assert len(tr) == n
+    assert {(p, m) for _, p, m in tr} <= {(128, 8), (8, 24)}
+    n_long = sum(p == 128 for _, p, _ in tr)
+    assert 0 < n_long < n
+
+
+def test_interference_trace_rejects_degenerate_cadence():
+    with pytest.raises(ValueError):
+        make_interference_trace(np.random.default_rng(0), 8,
+                                service_time=0.1, slots=2, rho=0.5,
+                                long_every=1)

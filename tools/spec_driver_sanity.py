@@ -63,7 +63,7 @@ for n in rng.integers(6, 30, size=6):
 spec = make_disco("speculative")
 res_s = spec.serve_many([r for r in reqs])
 print(f"spec_requests={spec.spec_requests} fallbacks={spec.spec_fallbacks}")
-stats = spec.server.server.pool_stats()
+stats = spec.stats()
 print({k: v for k, v in stats.items() if "verify" in k or "accept" in k})
 
 race = make_disco("race")

@@ -6,7 +6,11 @@ Reads a Chrome trace-event JSON produced by ``repro.serving.telemetry.Tracer``
 
 * a per-request TTFT attribution table — how much of each request's
   time-to-first-token went to server queueing, prefill compute, network
-  propagation, and draft-verdict stalls — with the p99-TTFT request marked;
+  propagation, and draft-verdict stalls — with the p99-TTFT request marked.
+  The ``stall_ms`` column is post-first-token decode interference: other
+  requests' prefill work overlapping this request's streaming phase. A
+  monolithic server shows prompt-sized stalls here under mixed-length load;
+  chunked prefill (``prefill_chunk``) bounds each to one piece;
 * ASCII waterfalls for the tail (slowest-TTFT) requests, showing where the
   first token's latency actually accrued on the virtual timeline.
 
@@ -62,7 +66,8 @@ def print_attribution(rows: list[dict]) -> None:
     p99 = _p99_rid(rows)
     print(
         f"{'rid':>4} {'ttft_ms':>9} {'queue_ms':>9} {'prefill_ms':>10} "
-        f"{'network_ms':>10} {'draft_ms':>9} {'winner':>8} {'outcome':>10}"
+        f"{'network_ms':>10} {'draft_ms':>9} {'stall_ms':>9} "
+        f"{'winner':>8} {'outcome':>10}"
     )
     for r in rows:
         mark = "  <-- p99" if r["rid"] == p99 else ""
@@ -70,6 +75,7 @@ def print_attribution(rows: list[dict]) -> None:
             f"{r['rid']:>4} {_fmt_ms(r['ttft_s']):>9} {_fmt_ms(r['queue_s']):>9} "
             f"{_fmt_ms(r['prefill_s']):>10} {_fmt_ms(r['network_s']):>10} "
             f"{_fmt_ms(r['draft_stall_s']):>9} "
+            f"{_fmt_ms(r.get('decode_stall_s', 0.0)):>9} "
             f"{str(r['winner'] or '-'):>8} {str(r['outcome'] or '-'):>10}{mark}"
         )
 
@@ -99,6 +105,8 @@ def print_waterfalls(rows: list[dict], tail: int) -> None:
         print(f"  req{r['rid']:<4} |{bar:<{_BAR_WIDTH}}| "
               f"ttft={r['ttft_s'] * 1e3:.2f}ms")
     print("  legend: q=queue p=prefill n=network d=draft-stall .=other")
+    print("  (stall_ms in the table is post-TTFT decode interference — "
+          "not part of the TTFT waterfall)")
 
 
 def check(trace: dict, rows: list[dict]) -> list[str]:
