@@ -1,0 +1,420 @@
+"""Disaggregated prefill/decode cluster: replica scaling + interference.
+
+Two experiments over ``src/repro/serving/cluster.py``:
+
+1. **Replica scaling** — a :class:`ClusterServer` of N disaggregated
+   replicas driven by ``make_cluster_load_trace``: request count AND
+   offered load grow with N while per-replica load stays fixed.  The
+   router spreads by queue depth / pool pressure / EDF headroom, so p99
+   TTFT should stay ~FLAT as the fleet and the load scale together — the
+   acceptance property.  Streams are compared bitwise against a monolithic
+   ``BatchedServer`` fed the same requests (mixed temperature>0 samplers):
+   placement and hand-off must never leak into content.
+
+2. **Interference** — the ``make_interference_trace`` workload (steady
+   short-prompt streamers + a long prompt every Nth arrival) at EQUAL
+   hardware on both sides: two boxes of ``2*_ROWS`` total rows.  The
+   monolithic side spends them symmetrically — two replicas behind the
+   cluster router, plain and with chunked prefill — the disaggregated
+   side asymmetrically (a small prefill worker + a wide decode worker).
+   Long prefills run on the prefill worker while streamers decode
+   undisturbed, so the prompt-sized TBT stalls a monolithic server
+   injects REPEATEDLY (once per long, or once per chunked piece) drop to
+   a single bounded hand-off seam — about one in-flight decode chunk —
+   after which the stream is clean.
+
+Measured per mode: ``tbt_stall_p99_s`` (p99 over streamers' worst TBT gap
+minus the pooled p50 pace — for disaggregation this is the one-time
+hand-off seam), ``tbt_recurring_stall_p99_s`` (same over the SECOND-worst
+gap — the interference that keeps re-hitting a stream; ~0 for
+disaggregation, large for chunked longs), TTFT stats, hand-off counters
+(transfers, blocks, bytes, fallbacks, stall).  Headline:
+``p99_ttft_flat_x`` (largest-fleet p99 over single-replica p99) and the
+recurring stalls.  Emits ``BENCH_cluster.json`` at the repo root on full
+runs plus CSV rows for ``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.bench_cluster [--smoke | --check-cluster]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import init_params
+from repro.serving import (
+    BatchedServer,
+    ClusterServer,
+    DisaggregatedServer,
+    InterconnectModel,
+    Request,
+    SamplerConfig,
+    SLO,
+)
+from repro.sim.traces import make_cluster_load_trace, make_interference_trace
+
+from .common import Row
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_cluster.json"
+
+_CFG = paper_models.TINY_SERVER
+_ROWS = 4                    # per worker; monolithic baselines get 2x
+_BLOCK_SIZE = 16
+_MAX_LEN = 576
+_DECODE_CHUNK = 4
+_RHO = 0.7                   # per-replica offered load, held fixed in the sweep
+_REPLICAS = (1, 2, 4)
+_N_PER_REPLICA = 14
+_SHORT_PROMPT = 8
+_SHORT_NEW = 24
+_LONG_PROMPT = 512           # long enough that a monolithic prefill stalls
+_LONG_NEW = 8                # streamers for many decode ticks
+_LONG_EVERY = 4
+_N_INTERFERENCE = 24
+_CHUNK_PIECE = 128           # monolithic-with-chunking comparison point
+_TTFT_DEADLINE_X = 6.0
+# interference: equal hardware on both sides — two boxes, 2*_ROWS rows
+# total.  The monolithic side spends them symmetrically (two _ROWS-row
+# replicas behind the router); the disaggregated side asymmetrically
+# (prefill admission needs few rows, the decode worker carries EVERY
+# stream so it gets the rest).
+_P_SLOTS = 2
+_D_SLOTS = 2 * _ROWS - _P_SLOTS
+_IRHO = 0.5                  # interference offered load (of one box's rows)
+
+# bit-identity must hold under stochastic sampling, not just greedy argmax
+_SAMPLERS = (
+    None,
+    SamplerConfig(temperature=0.8, top_p=0.95),
+    SamplerConfig(temperature=0.7, top_k=50),
+)
+
+
+def _estimate_service_time(params) -> float:
+    srv = BatchedServer(
+        _CFG, params, max_slots=1, max_len=_MAX_LEN,
+        decode_chunk=_DECODE_CHUNK, block_size=_BLOCK_SIZE,
+    )
+    srv.warmup(prompt_lens=(_SHORT_PROMPT,))
+    rng = np.random.default_rng(0)
+    n = 3
+    for _ in range(n):
+        srv.submit(Request(
+            rng.integers(1, 1024, size=_SHORT_PROMPT).astype(np.int32),
+            _SHORT_NEW,
+        ))
+    srv.run_to_completion()
+    return srv.clock / n
+
+
+def _requests(trace, service: float) -> list[Request]:
+    prompt_rng = np.random.default_rng(7)
+    deadline = _TTFT_DEADLINE_X * service
+    return [
+        Request(
+            prompt_rng.integers(1, 1024, size=length).astype(np.int32), m,
+            arrival=a, sampler=_SAMPLERS[i % len(_SAMPLERS)],
+            slo=SLO(ttft_deadline=deadline), seed=100 + i,
+        )
+        for i, (a, length, m) in enumerate(trace)
+    ]
+
+
+def _drive(srv, reqs, warm_lens):
+    """Submit every request and run to completion; works identically for
+    BatchedServer, DisaggregatedServer and ClusterServer.  Returns
+    (streams, event-times, rel_ttfts, deadline_attainment)."""
+    srv.warmup(prompt_lens=warm_lens)
+    rids = [srv.submit(r, at=r.arrival) for r in reqs]
+    srv.run_to_completion()
+    events = [srv.pop_events(r) for r in rids]
+    streams = [[t for t, _ in ev] for ev in events]
+    times = [[ts for _, ts in ev] for ev in events]
+    ttfts = np.array([srv.ttft(r) for r in rids], dtype=float)
+    deadline = reqs[0].slo.ttft_deadline
+    return streams, times, ttfts, float(np.mean(ttfts <= deadline))
+
+
+def _replica(params, **kw) -> DisaggregatedServer:
+    return DisaggregatedServer(
+        _CFG, params, max_slots=_ROWS, max_len=_MAX_LEN,
+        decode_chunk=_DECODE_CHUNK, block_size=_BLOCK_SIZE,
+        interconnect=InterconnectModel(), **kw,
+    )
+
+
+def _mono(params, rows_x: int = 1, prefill_chunk=None) -> BatchedServer:
+    return BatchedServer(
+        _CFG, params, paged=True, max_slots=_ROWS * rows_x,
+        max_len=_MAX_LEN, decode_chunk=_DECODE_CHUNK,
+        block_size=_BLOCK_SIZE, prefill_chunk=prefill_chunk,
+    )
+
+
+def _stall_metrics(kinds, times):
+    """(worst_stall, recurring_stall, pace) over the short streamers.
+
+    ``worst``: p99 of each streamer's single worst TBT gap minus the pooled
+    p50 pace (see bench_chunked_prefill: pooled percentiles drown the stall
+    in noise).  ``recurring``: same over each streamer's SECOND-worst gap —
+    a one-time hiccup (the disaggregated hand-off seam, a single long
+    prefill) drops out, while interference that keeps re-hitting the stream
+    (every piece of a chunked long prefill) stays.  The recurring stall is
+    the interference property the cluster gate asserts on."""
+    gaps = [np.diff(ts) for k, ts in zip(kinds, times)
+            if k == "short" and len(ts) > 2]
+    if not gaps:
+        return 0.0, 0.0, 0.0
+    pooled = np.concatenate(gaps)
+    pace = float(np.percentile(pooled, 50))
+    worst = np.array([np.sort(g)[-1] for g in gaps])
+    second = np.array([np.sort(g)[-2] for g in gaps])
+    return (float(np.percentile(worst, 99) - pace),
+            float(np.percentile(second, 99) - pace), pace)
+
+
+def _handoff_stats(stats: dict) -> dict:
+    return {
+        "handoffs": stats.get("handoffs", 0),
+        "handoff_blocks": stats.get("handoff_blocks", 0),
+        "handoff_fallbacks": stats.get("handoff_fallbacks", 0),
+        "handoff_bytes": stats.get("handoff_bytes", 0),
+        "handoff_stall_mean_s": stats.get(
+            "handoff_stall_s", {"count": 0, "mean": 0.0})["mean"],
+    }
+
+
+def _sweep_point(params, service, n_replicas: int, n_per_replica: int,
+                 with_identity: bool):
+    trace = make_cluster_load_trace(
+        np.random.default_rng(42), n_per_replica, service_time=service,
+        slots_per_replica=_ROWS, replicas=n_replicas, rho=_RHO,
+    )
+    reqs = _requests(trace, service)
+    cluster = ClusterServer([_replica(params) for _ in range(n_replicas)])
+    streams, _, ttfts, slo_att = _drive(cluster, reqs, (_SHORT_PROMPT, 48))
+    stats = cluster.pool_stats()
+    point = {
+        "replicas": n_replicas,
+        "n_requests": len(reqs),
+        "ttft_mean_s": float(ttfts.mean()),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        "ttft_slo_attainment": slo_att,
+        "routed_per_replica": list(cluster.routed),
+        **_handoff_stats(stats),
+    }
+    if with_identity:
+        mono = _mono(params, rows_x=max(1, n_replicas))
+        m_streams, _, _, _ = _drive(mono, reqs, (_SHORT_PROMPT, 48))
+        point["streams_identical"] = int(streams == m_streams)
+    return point
+
+
+def _two_box_mono(params, prefill_chunk=None) -> ClusterServer:
+    return ClusterServer([
+        _mono(params, prefill_chunk=prefill_chunk) for _ in range(2)
+    ])
+
+
+def _split(params) -> DisaggregatedServer:
+    return DisaggregatedServer(
+        _CFG, params, max_slots=_ROWS, max_len=_MAX_LEN,
+        prefill_slots=_P_SLOTS, decode_slots=_D_SLOTS,
+        decode_chunk=_DECODE_CHUNK, block_size=_BLOCK_SIZE,
+        interconnect=InterconnectModel(),
+    )
+
+
+def _interference_point(params, service, n: int):
+    trace = make_interference_trace(
+        np.random.default_rng(43), n, service_time=service, slots=_ROWS,
+        rho=_IRHO, short_prompt=_SHORT_PROMPT, short_new=_SHORT_NEW,
+        long_prompt=_LONG_PROMPT, long_every=_LONG_EVERY, long_new=_LONG_NEW,
+    )
+    reqs = _requests(trace, service)
+    kinds = ["long" if len(r.prompt) == _LONG_PROMPT else "short"
+             for r in reqs]
+    warm = (_SHORT_PROMPT, _LONG_PROMPT)
+
+    out = {}
+    streams = {}
+    for mode, srv in (
+        ("monolithic", _two_box_mono(params)),
+        ("mono_chunked", _two_box_mono(params, prefill_chunk=_CHUNK_PIECE)),
+        ("disaggregated", _split(params)),
+    ):
+        s, times, ttfts, slo_att = _drive(srv, reqs, warm)
+        stall, recurring, pace = _stall_metrics(kinds, times)
+        streams[mode] = s
+        out[mode] = {
+            "tbt_stall_p99_s": stall,
+            "tbt_recurring_stall_p99_s": recurring,
+            "tbt_p50_s": pace,
+            "ttft_p99_s": float(np.percentile(ttfts, 99)),
+            "ttft_slo_attainment": slo_att,
+        }
+        if mode == "disaggregated":
+            out[mode].update(_handoff_stats(srv.pool_stats()))
+    out["streams_identical"] = int(
+        streams["disaggregated"] == streams["monolithic"]
+        and streams["mono_chunked"] == streams["monolithic"]
+    )
+    return out
+
+
+def run(smoke: bool = False) -> list[Row]:
+    params = init_params(_CFG, jax.random.PRNGKey(1))
+    service = _estimate_service_time(params)
+    replicas = (1, 2) if smoke else _REPLICAS
+    n_per = 6 if smoke else _N_PER_REPLICA
+
+    rows: list[Row] = []
+    sweep = {}
+    for n_rep in replicas:
+        t0 = time.perf_counter()
+        point = _sweep_point(
+            params, service, n_rep, n_per,
+            with_identity=(n_rep == replicas[-1]),
+        )
+        wall = (time.perf_counter() - t0) * 1e6
+        sweep[n_rep] = point
+        extra = (f";identical={point['streams_identical']}"
+                 if "streams_identical" in point else "")
+        rows.append(Row(
+            f"cluster/replicas{n_rep}", wall,
+            f"n={point['n_requests']};"
+            f"ttft_p99_ms={point['ttft_p99_s']*1e3:.1f};"
+            f"slo_att={point['ttft_slo_attainment']:.2f};"
+            f"handoffs={point['handoffs']}"
+            f"{extra}",
+        ))
+
+    flat_x = sweep[replicas[-1]]["ttft_p99_s"] / max(
+        sweep[replicas[0]]["ttft_p99_s"], 1e-9)
+
+    t0 = time.perf_counter()
+    interference = _interference_point(
+        params, service, 12 if smoke else _N_INTERFERENCE)
+    wall = (time.perf_counter() - t0) * 1e6
+    dis = interference["disaggregated"]
+    mono = interference["monolithic"]
+    chk = interference["mono_chunked"]
+    rows.append(Row(
+        "cluster/interference", wall,
+        f"recur_mono_ms={mono['tbt_recurring_stall_p99_s']*1e3:.2f};"
+        f"recur_chunked_ms={chk['tbt_recurring_stall_p99_s']*1e3:.2f};"
+        f"recur_disagg_ms={dis['tbt_recurring_stall_p99_s']*1e3:.2f};"
+        f"seam_disagg_ms={dis['tbt_stall_p99_s']*1e3:.2f};"
+        f"identical={interference['streams_identical']}",
+    ))
+    rows.append(Row(
+        "cluster/headline", 0.0,
+        f"p99_ttft_flat_x={flat_x:.2f}(r{replicas[0]}->r{replicas[-1]});"
+        f"recur_disagg_ms={dis['tbt_recurring_stall_p99_s']*1e3:.2f}"
+        f"(chunked={chk['tbt_recurring_stall_p99_s']*1e3:.2f});"
+        f"identical={interference['streams_identical']}",
+    ))
+
+    if not smoke:
+        _JSON_PATH.write_text(json.dumps({
+            "bench": "cluster",
+            "rows_per_worker": _ROWS,
+            "block_size": _BLOCK_SIZE,
+            "max_len": _MAX_LEN,
+            "decode_chunk": _DECODE_CHUNK,
+            "rho_per_replica": _RHO,
+            "interconnect": {"latency_s": InterconnectModel().latency_s,
+                             "bytes_per_s": InterconnectModel().bytes_per_s},
+            "service_time_s": service,
+            "samplers": "mixed greedy/top-p/top-k (temperature > 0)",
+            "replica_sweep": {str(k): v for k, v in sweep.items()},
+            "interference": interference,
+            "headline": {
+                "p99_ttft_flat_x": flat_x,
+                "recurring_stall_disagg_s": dis["tbt_recurring_stall_p99_s"],
+                "recurring_stall_chunked_s": chk["tbt_recurring_stall_p99_s"],
+                "recurring_stall_mono_s": mono["tbt_recurring_stall_p99_s"],
+                "handoff_seam_stall_s": dis["tbt_stall_p99_s"],
+                "streams_identical": interference["streams_identical"],
+            },
+        }, indent=2) + "\n")
+    return rows
+
+
+def check(max_flat_x: float = 2.0, stall_tol_x: float = 1.5,
+          stall_floor_s: float = 0.02) -> None:
+    """CI gate (``--check-cluster``): disaggregated/cluster streams
+    bit-identical to monolithic under mixed temperature>0 samplers, p99
+    TTFT ~flat as offered load scales with replicas, and interference-trace
+    streamer RECURRING TBT stall ~0 — at monolithic-with-chunking level or
+    better — with the one-time hand-off seam bounded by the plain
+    monolithic server's prefill stall.  Exits non-zero on any violation."""
+    params = init_params(_CFG, jax.random.PRNGKey(1))
+    service = _estimate_service_time(params)
+    failures = []
+
+    p1 = _sweep_point(params, service, 1, 8, with_identity=False)
+    p2 = _sweep_point(params, service, 2, 8, with_identity=True)
+    if not p2["streams_identical"]:
+        failures.append("cluster streams differ from monolithic")
+    flat_x = p2["ttft_p99_s"] / max(p1["ttft_p99_s"], 1e-9)
+    # generous bound: p99 may wiggle with measured dispatch times, but a
+    # broken router degrades super-linearly with the fleet
+    if flat_x > max_flat_x and p2["ttft_p99_s"] - p1["ttft_p99_s"] > 0.05:
+        failures.append(
+            f"p99 TTFT not flat with replicas: {p1['ttft_p99_s']:.4f}s -> "
+            f"{p2['ttft_p99_s']:.4f}s ({flat_x:.2f}x > {max_flat_x}x)")
+    if p2["handoffs"] + p2["handoff_fallbacks"] == 0:
+        failures.append("no KV hand-offs happened in the cluster sweep")
+
+    inter = _interference_point(params, service, 16)
+    if not inter["streams_identical"]:
+        failures.append("interference streams differ from monolithic")
+    dis_rec = inter["disaggregated"]["tbt_recurring_stall_p99_s"]
+    chk_rec = inter["mono_chunked"]["tbt_recurring_stall_p99_s"]
+    dis_seam = inter["disaggregated"]["tbt_stall_p99_s"]
+    mono_worst = inter["monolithic"]["tbt_stall_p99_s"]
+    if dis_rec > max(stall_tol_x * chk_rec, stall_floor_s):
+        failures.append(
+            f"disaggregated recurring TBT stall {dis_rec:.4f}s worse than "
+            f"chunked monolithic {chk_rec:.4f}s (tol {stall_tol_x}x, "
+            f"floor {stall_floor_s}s)")
+    if dis_seam > max(stall_tol_x * mono_worst, 3 * stall_floor_s):
+        failures.append(
+            f"hand-off seam stall {dis_seam:.4f}s worse than the plain "
+            f"monolithic prefill stall {mono_worst:.4f}s it replaces "
+            f"(tol {stall_tol_x}x)")
+
+    if failures:
+        raise SystemExit("cluster gate FAILED:\n  " + "\n  ".join(failures))
+    print(
+        f"cluster OK: streams bit-identical (mixed samplers), p99 TTFT "
+        f"{p1['ttft_p99_s']*1e3:.1f}ms -> {p2['ttft_p99_s']*1e3:.1f}ms "
+        f"(1->2 replicas, 2x load, {flat_x:.2f}x), recurring stall "
+        f"mono {inter['monolithic']['tbt_recurring_stall_p99_s']*1e3:.1f}ms /"
+        f" chunked {chk_rec*1e3:.1f}ms / disagg {dis_rec*1e3:.1f}ms, "
+        f"seam {dis_seam*1e3:.1f}ms (mono worst {mono_worst*1e3:.1f}ms)"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two replica points, short traces, no JSON emission")
+    ap.add_argument("--check", "--check-cluster", action="store_true",
+                    dest="check",
+                    help="CI gate: bit-identical streams + p99-flat + stall")
+    args = ap.parse_args()
+    if args.check:
+        check()
+    else:
+        print("name,us_per_call,derived")
+        for row in run(smoke=args.smoke):
+            print(row.csv(), flush=True)

@@ -15,7 +15,12 @@ residual resample). This bench measures the protocol itself, engine level
   the distributions separate;
 * per-committed-token latency (TBT) and unified cost vs plain server
   decode on the same request — verify positions are batch-scored
-  (prefill-priced), not sequentially decoded.
+  (prefill-priced), not sequentially decoded;
+* full-stack race-vs-speculative unified cost across uplink RTTs
+  (``spec_cost_vs_race``): which strategy is cheaper depends on WHO wins
+  the race — under the paper's device-favoured exchange rate the device
+  wins, racing is near-free, and draft/verify's fixed overdraft overhead
+  shows up as a >1 ratio that the sweep quantifies per RTT point.
 
 Matched models + equal temperatures must be bit-identical to the plain
 server-only stream with the same seed AND accept every draft — asserted
@@ -36,13 +41,22 @@ import jax
 import numpy as np
 
 from repro.configs import paper_models
-from repro.core import CostModel, Endpoint
+from repro.core import (
+    CostModel,
+    DiSCoScheduler,
+    Endpoint,
+    MigrationConfig,
+)
 from repro.models import init_params
 from repro.serving import (
     BatchedServer,
+    DeviceEndpoint,
+    DiSCoServer,
     InferenceEngine,
+    NetworkModel,
     Request,
     SamplerConfig,
+    ServerEndpoint,
 )
 
 from .common import Row
@@ -118,6 +132,95 @@ def _run_spec(srv: BatchedServer, dev: InferenceEngine, seed: int,
         "verify_s": verify_s,
         "verify_positions": scored + rounds,   # k+1 per round
     }
+
+
+_RTTS = (0.01, 0.05, 0.15)   # uplink RTT axis for the spec-vs-race economics
+_RTT_N_REQ = 6
+
+
+def _build_stack(params, mode: str, rtt: float, n_requests: int) -> DiSCoServer:
+    """Full driver stack (device endpoint + batched server behind an uplink
+    of ``rtt``) in ``race`` or ``speculative`` mode — the same matched-model
+    configuration the CI speculative gate uses."""
+    cfg = paper_models.TINY_SERVER
+    server = BatchedServer(cfg, params, max_slots=2, max_len=_MAX_LEN,
+                           decode_chunk=4,
+                           speculative=(mode == "speculative"))
+    server.warmup(prompt_lens=(16, 32))
+    dev = InferenceEngine(cfg, params, max_len=_MAX_LEN, paged=True,
+                          kv_rows=n_requests,
+                          speculative=(mode == "speculative"))
+    dev.warmup(prompt_lens=(16, 32))
+    rng0 = np.random.default_rng(0)
+    sched = DiSCoScheduler(
+        _COST,
+        server_ttft_samples=rng0.lognormal(np.log(0.3), 0.5, 400),
+        prompt_length_samples=np.clip(
+            rng0.lognormal(2.5, 0.8, 400), 1, 64).astype(int),
+        budget=0.9,       # most requests race -> most take the spec path
+        migration=MigrationConfig(consumption_rate=30.0, network_rtt=0.01),
+    )
+    return DiSCoServer(
+        sched, DeviceEndpoint(dev),
+        ServerEndpoint(server, NetworkModel(rtt_mean=rtt, rtt_jitter=0.0)),
+        rng=np.random.default_rng(7), mode=mode,
+    )
+
+
+def _rtt_sweep(params, rtts, n_requests: int) -> list[dict]:
+    """Race-vs-speculative unified cost across uplink RTTs.
+
+    The race pays the loser's wasted server tokens plus one cancel
+    round-trip per win; draft/verify replaces the second stream with
+    batch-scored verify dispatches but overdrafts ~k tokens past every
+    accept boundary.  Which side wins depends on WHO wins the race: under
+    the paper's device-favoured exchange rate the device wins, the
+    server-side waste window is short (and SHRINKS with RTT — a slower
+    uplink delays the server stream's start more than the cancel), so
+    ``spec_cost_vs_race`` sits above 1 and the sweep records how far, per
+    RTT point, alongside the TTFT price speculative pays as every verify
+    round crosses the slower uplink.  The ratio is the regime marker, not
+    a one-sided claim — a server-favoured deployment flips it."""
+    cfg = paper_models.TINY_SERVER
+    rng = np.random.default_rng(3)
+    samp = SamplerConfig(temperature=_T_VERIFY)
+    prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(8, 32, size=n_requests)]
+
+    def fresh_reqs():
+        return [Request(p, _MAX_NEW, arrival=0.1 * i, seed=50 + i,
+                        sampler=samp)
+                for i, p in enumerate(prompts)]
+
+    points = []
+    for rtt in rtts:
+        spec = _build_stack(params, "speculative", rtt, n_requests)
+        res_spec = spec.serve_many(fresh_reqs())
+        stats = spec.stats()
+        race = _build_stack(params, "race", rtt, n_requests)
+        res_race = race.serve_many(fresh_reqs())
+
+        cost_spec = float(np.mean([r.cost for r in res_spec]))
+        cost_race = float(np.mean([r.cost for r in res_race]))
+        waste = lambda rs: (sum(r.wasted_tokens for r in rs)
+                            / max(sum(r.generated_tokens for r in rs), 1))
+        points.append({
+            "rtt_s": rtt,
+            "spec_cost_vs_race": cost_spec / max(cost_race, 1e-12),
+            "cost_mean_speculative": cost_spec,
+            "cost_mean_race": cost_race,
+            "wasted_ratio_speculative": waste(res_spec),
+            "wasted_ratio_race": waste(res_race),
+            "ttft_p50_speculative_s": float(np.percentile(
+                [r.ttft for r in res_spec], 50)),
+            "ttft_p50_race_s": float(np.percentile(
+                [r.ttft for r in res_race], 50)),
+            "spec_requests": spec.spec_requests,
+            "acceptance_rate": stats.get("acceptance_rate", 0.0),
+            "streams_identical": int(all(
+                a.tokens == b.tokens for a, b in zip(res_spec, res_race))),
+        })
+    return points
 
 
 def _server_only(srv: BatchedServer, seed: int, t_verify: float,
@@ -244,6 +347,21 @@ def run(smoke: bool = False) -> list[Row]:
         f"cost_reduction={headline['cost_reduction_vs_server_decode']:.2f}",
     ))
 
+    # uplink-RTT axis: the full-stack race-vs-speculative economics
+    rtts = _RTTS[1:2] if smoke else _RTTS
+    rtt_sweep = _rtt_sweep(srv_params, rtts, 3 if smoke else _RTT_N_REQ)
+    for p in rtt_sweep:
+        rows.append(Row(
+            f"speculative/rtt{p['rtt_s']:g}", 0.0,
+            f"spec_cost_vs_race={p['spec_cost_vs_race']:.3f};"
+            f"waste_race={p['wasted_ratio_race']:.3f};"
+            f"waste_spec={p['wasted_ratio_speculative']:.3f};"
+            f"identical={p['streams_identical']}",
+        ))
+    headline["spec_cost_vs_race"] = {
+        str(p["rtt_s"]): p["spec_cost_vs_race"] for p in rtt_sweep
+    }
+
     if not smoke:
         _JSON_PATH.write_text(json.dumps({
             "bench": "speculative",
@@ -253,6 +371,7 @@ def run(smoke: bool = False) -> list[Row]:
             "prompt_len": _PROMPT_LEN,
             "n_seeds": _N_SEEDS,
             "temperature_sweep": sweep,
+            "rtt_sweep": rtt_sweep,
             "headline": headline,
         }, indent=2) + "\n")
     return rows

@@ -10,6 +10,7 @@ import time
 
 from . import (
     bench_chunked_prefill,
+    bench_cluster,
     bench_decode_throughput,
     bench_e2e_serving,
     bench_paged_decode,
@@ -47,6 +48,7 @@ MODULES = {
     "decode": bench_decode_throughput,
     "e2e_serving": bench_e2e_serving,
     "chunked_prefill": bench_chunked_prefill,
+    "cluster": bench_cluster,
     "speculative": bench_speculative,
     "prefill": bench_prefill_throughput,
     "paged_decode": bench_paged_decode,

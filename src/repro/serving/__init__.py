@@ -43,6 +43,14 @@ network = sampled RTT, queueing = emergent contention):
   deadline pulls the device into the race and caps the wait policy), loser
   cancellation, token-ID migration into the same contended scheduler
   (§4.3), paced delivery + QoE/cost/waste accounting per request.
+* ``cluster``  — the server tier scaled out: a
+  :class:`DisaggregatedServer` splits one logical server into a prefill
+  worker and a decode worker whose pools exchange finished KV state over a
+  modeled :class:`InterconnectModel` (cross-pool ``detach``/``receive``
+  block copy, lossless recompute fallback when the target pool is full),
+  and a :class:`ClusterEndpoint` puts N replicas behind the ordinary
+  ``ServerEndpoint`` surface — ``DiSCoServer`` races device-vs-FLEET
+  unchanged, with load- and prefix-aware (sticky) routing per request.
 
 Observability (``serving.telemetry``): every stat above is backed by one
 :class:`MetricsRegistry` — ``BatchedServer.pool_stats()`` and
@@ -78,6 +86,12 @@ from repro.models.sampling import (
     sampler_operands,
 )
 
+from .cluster import (
+    ClusterEndpoint,
+    ClusterServer,
+    DisaggregatedServer,
+    InterconnectModel,
+)
 from .disco_driver import DiSCoServer
 from .endpoint import (
     DeviceDraftSession,
@@ -125,6 +139,8 @@ __all__ = [
     "Request", "SLO", "NO_SLO", "QoEReport", "RequestResult",
     "DiSCoServer", "ServedRequest",
     "DeviceEndpoint", "NetworkModel", "ServerEndpoint", "TokenEvent",
+    "ClusterEndpoint", "ClusterServer", "DisaggregatedServer",
+    "InterconnectModel",
     "DeviceDraftSession", "DeviceTokenStream", "ServerTokenStream",
     "BatchedServer", "EngineStream", "GenerationResult", "InferenceEngine",
     "BlockPool", "KVPoolManager", "PageTable", "PrefixIndex",

@@ -1,0 +1,773 @@
+"""Disaggregated prefill/decode serving and the device-vs-fleet cluster router.
+
+Three layers, bottom-up:
+
+- :class:`DisaggregatedServer` — one logical server built from TWO
+  :class:`~repro.serving.engine.BatchedServer` workers: a *prefill worker*
+  that runs admission + (chunked) prefill and emits exactly the first token,
+  and a *decode worker* that continues the stream.  The finished KV state
+  crosses between their pools via the cross-pool extension of
+  ``KVPoolManager.clone`` (``detach`` → ``receive`` → ``release_detached``):
+  the device half is a real gather/scatter block copy between page arrays,
+  the time cost is a modeled :class:`InterconnectModel` delay on the virtual
+  timeline.  When the decode-side pool cannot take the blocks, the hand-off
+  falls back LOSSLESSLY to recompute-on-decode-worker (a replay-resume
+  admission regenerates the identical continuation), so the delivered stream
+  is bitwise-identical to a monolithic ``BatchedServer`` run either way.
+
+- :class:`ClusterServer` / :class:`ClusterEndpoint` — N server replicas
+  (monolithic or disaggregated) behind the existing
+  :class:`~repro.serving.endpoint.ServerEndpoint` surface, so
+  ``DiSCoServer`` races device-vs-fleet unchanged.  Routing consults
+  per-replica load snapshots (queue depth, free blocks, EDF headroom) and
+  per-replica radix prefix indexes: a replica holding a warm shared prefix
+  gets a sticky bonus proportional to the matched fraction.  Sampling seeds
+  are pinned BEFORE routing, so delivered content never depends on
+  placement — the bitwise gate survives any routing policy.
+
+- Observability — every worker/replica traces into its own scoped lane
+  group (``r0.prefill.server/…``), hand-off spans carry bytes moved and
+  decode-side stall time on per-request ``xfer`` lanes, and the hand-off
+  counters reconcile against ``pool_stats()`` via ``reconcile_trace``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .endpoint import ServerEndpoint
+from .engine import BatchedServer
+from .kv_pool import blocks_for_tokens
+from .telemetry import NULL_TRACER, MetricsRegistry
+
+__all__ = [
+    "ClusterEndpoint",
+    "ClusterServer",
+    "DisaggregatedServer",
+    "InterconnectModel",
+]
+
+# rid-collision guard for trace scoping: an unmapped worker-local rid is
+# offset by its worker's stride so async trace ids never collide with the
+# stream-global ids (or another worker's)
+_RID_STRIDE = 1_000_000
+
+
+@dataclasses.dataclass
+class InterconnectModel:
+    """Modeled prefill→decode KV link on the virtual timeline.
+
+    ``delay(nbytes) = latency_s + nbytes / bytes_per_s`` — a fixed hop
+    latency plus a bandwidth term, the same modeled-network convention as
+    :class:`~repro.serving.endpoint.NetworkModel` (compute is measured,
+    wires are modeled).  Defaults approximate a commodity datacenter NIC
+    (~2 ms hop, 16 GB/s effective)."""
+
+    latency_s: float = 0.002
+    bytes_per_s: float = 16e9
+
+    def delay(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bytes_per_s
+
+
+class _ScopedTracer:
+    """Scoping shim over a shared :class:`~repro.serving.telemetry.Tracer`.
+
+    Workers and replicas all trace into ONE tracer; this wrapper keeps their
+    lanes and request ids from colliding:
+
+    - track names gain a ``scope.`` prefix (``server/row0`` →
+      ``prefill.server/row0``), giving each worker/replica its own process
+      group in the Perfetto view; wrappers nest (``r0.prefill.server/…``);
+    - async request ids rewrite through ``rid_map`` (worker-local rid →
+      stream-global rid), so one request's prefill-worker span and
+      decode-worker span land on the SAME async id, and ``args["rid"]``
+      rewrites with it — ``ttft_attribution``'s dispatch↔prefill join keeps
+      working across workers; unmapped rids offset by ``base``;
+    - a ``replica`` arg is stamped on spans/instants (outer scopes prefix
+      inner ones), which ``trace_report`` uses for per-replica attribution.
+    """
+
+    __slots__ = ("inner", "scope", "base", "rid_map")
+
+    def __init__(self, inner, scope: str, base: int = 0, rid_map=None):
+        self.inner = inner
+        self.scope = scope
+        self.base = int(base)
+        self.rid_map = {} if rid_map is None else rid_map
+
+    @property
+    def enabled(self) -> bool:
+        return self.inner.enabled
+
+    def _rid(self, rid: int) -> int:
+        return self.rid_map.get(rid, rid + self.base)
+
+    def _args(self, args):
+        out = dict(args) if args else {}
+        rid = out.get("rid")
+        if isinstance(rid, (int, np.integer)):
+            out["rid"] = self.rid_map.get(int(rid), int(rid) + self.base)
+        prev = out.get("replica")
+        out["replica"] = self.scope if prev is None else f"{self.scope}.{prev}"
+        return out
+
+    def span(self, track, name, t0, t1, cat="span", args=None):
+        self.inner.span(f"{self.scope}.{track}", name, t0, t1, cat=cat,
+                        args=self._args(args))
+
+    def instant(self, track, name, t, cat="instant", args=None):
+        self.inner.instant(f"{self.scope}.{track}", name, t, cat=cat,
+                           args=self._args(args))
+
+    def value(self, track, name, t, v):
+        self.inner.value(f"{self.scope}.{track}", name, t, v)
+
+    def begin_request(self, rid, t, cat="request", name=None, args=None):
+        self.inner.begin_request(self._rid(rid), t, cat=cat, name=name,
+                                 args=self._args(args))
+
+    def request_instant(self, rid, name, t, cat="request", args=None):
+        self.inner.request_instant(self._rid(rid), name, t, cat=cat,
+                                   args=self._args(args))
+
+    def end_request(self, rid, t, cat="request", args=None):
+        self.inner.end_request(self._rid(rid), t, cat=cat,
+                               args=self._args(args))
+
+
+def _merge_hist(a: dict, b: dict) -> dict:
+    count = a["count"] + b["count"]
+    total = a["total"] + b["total"]
+    return {
+        "count": count,
+        "total": total,
+        "mean": total / count if count else 0.0,
+        "min": min(a["min"], b["min"]) if count else 0.0,
+        "max": max(a["max"], b["max"]) if count else 0.0,
+    }
+
+
+# pool_stats() merge rule: trace instants from every worker/replica land in
+# ONE tracer, so reconcile_trace compares them against the SUM of the
+# per-worker counters; config echoes keep the first value, booleans OR
+_CONFIG_KEYS = frozenset({"block_size", "admission", "prefill_chunk"})
+
+
+def _merge_stats(snaps: Sequence[dict]) -> dict:
+    out: dict = {}
+    for snap in snaps:
+        for k, v in snap.items():
+            if k not in out:
+                out[k] = v
+            elif k in _CONFIG_KEYS or isinstance(v, str):
+                pass
+            elif isinstance(v, bool):
+                out[k] = bool(out[k]) or v
+            elif isinstance(v, dict) and "count" in v and "total" in v:
+                out[k] = _merge_hist(out[k], v)
+            elif isinstance(v, (int, float)):
+                out[k] = out[k] + v
+    return out
+
+
+@dataclasses.dataclass
+class _Handoff:
+    """Per-request hand-off plan: the façade's state machine entry.
+
+    ``prefill`` → (prefill worker owns the request, first token pending)
+    ``transfer`` → (KV crossing the interconnect, arrives at ``arrive``)
+    ``decode`` → (decode worker owns the continuation as ``d_rid``)
+    ``done`` → (no decode phase: finished, cancelled, or max_new == 1)
+    """
+
+    gid: int
+    prompt: np.ndarray
+    max_new: int                      # original request total
+    seed: int
+    sampler: object
+    priority: int
+    deadline: float
+    state: str = "prefill"
+    tokens: list = dataclasses.field(default_factory=list)
+    d_rid: Optional[int] = None
+    t_sent: float = 0.0               # transfer departure (first-token time)
+    arrive: float = 0.0               # transfer arrival on the decode worker
+    nbytes: int = 0
+    cancel_at: Optional[float] = None
+
+
+class _MergedCounts:
+    """dict-like view summing a per-request value across the two workers."""
+
+    __slots__ = ("srv", "attr")
+
+    def __init__(self, srv: "DisaggregatedServer", attr: str):
+        self.srv = srv
+        self.attr = attr
+
+    def get(self, gid, default=None):
+        plan = self.srv._plans.get(gid)
+        if plan is None:
+            return default
+        total = getattr(self.srv.prefill, self.attr).get(gid, 0)
+        if plan.d_rid is not None:
+            total += getattr(self.srv.decode, self.attr).get(plan.d_rid, 0)
+        return total
+
+    def __contains__(self, gid) -> bool:
+        return gid in self.srv._plans
+
+    def __getitem__(self, gid):
+        got = self.get(gid)
+        if got is None:
+            raise KeyError(gid)
+        return got
+
+
+class DisaggregatedServer:
+    """Prefill worker + decode worker behind one ``BatchedServer`` surface.
+
+    The prefill worker admits every request with ``max_new=1`` — admission
+    policy, chunked prefill, preemption and the prefix cache all run there
+    unchanged — and holds the finished KV blocks (``kv_hold``) past
+    retirement while they cross the :class:`InterconnectModel`.  On arrival
+    the decode worker ``adopt``-s the stream: blocks device-copy into its
+    pool (``KVPoolManager.receive``) and decoding continues at the exact
+    sampling position the prefill worker stopped at.  If the decode pool
+    cannot take the blocks, adoption falls back to a replay-resume
+    admission — same tokens, later.  Either way the delivered stream is
+    bitwise-identical to a monolithic run, because token content depends
+    only on (seed, sampler, position, logits), never on which worker runs
+    the math.
+
+    Speculative verify mode is not supported (the draft/verify loop needs
+    one worker owning the whole stream); ``submit(verify=True)`` raises.
+    """
+
+    speculative = False
+
+    def __init__(self, cfg, params, *, max_slots: int = 4, max_len: int = 256,
+                 decode_chunk: int = 4, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_blocks: Optional[int] = None,
+                 decode_blocks: Optional[int] = None,
+                 prefill_slots: Optional[int] = None,
+                 decode_slots: Optional[int] = None,
+                 use_kernel: Optional[bool] = None, sampler=None,
+                 admission: str = "edf", prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None,
+                 interconnect: Optional[InterconnectModel] = None,
+                 tracer=None):
+        # workers size independently: the decode worker typically wants the
+        # wider batch (it carries EVERY stream), the prefill worker only
+        # bounds admission concurrency
+        prefill_slots = max_slots if prefill_slots is None else prefill_slots
+        decode_slots = max_slots if decode_slots is None else decode_slots
+        self.prefill = BatchedServer(
+            cfg, params, max_slots=prefill_slots, max_len=max_len,
+            decode_chunk=decode_chunk, paged=True, block_size=block_size,
+            num_blocks=prefill_blocks if prefill_blocks is not None else num_blocks,
+            use_kernel=use_kernel, sampler=sampler, admission=admission,
+            prefix_cache=prefix_cache, prefill_chunk=prefill_chunk,
+        )
+        self.decode = BatchedServer(
+            cfg, params, max_slots=decode_slots, max_len=max_len,
+            decode_chunk=decode_chunk, paged=True, block_size=block_size,
+            num_blocks=decode_blocks if decode_blocks is not None else num_blocks,
+            use_kernel=use_kernel, sampler=sampler, admission=admission,
+        )
+        self.interconnect = interconnect if interconnect is not None else InterconnectModel()
+        self.default_sampler = sampler
+        self.block_size = self.prefill.block_size
+        # payload of one transferred block: its slice of every page array
+        # (k and v, all layers) — shape (L, N, H, bs, D) contributes
+        # size/N bytes per block
+        self._block_bytes = int(sum(
+            (np.prod(a.shape) // a.shape[1]) * a.dtype.itemsize
+            for a in self.decode.pages.values()
+        ))
+        self.metrics = MetricsRegistry()
+        for k in ("handoff_bytes", "handoffs_cancelled"):
+            self.metrics.counter(k)
+        for k in ("handoff_delay_s", "handoff_stall_s"):
+            self.metrics.histogram(k)
+        self._plans: dict[int, _Handoff] = {}
+        self.next_id = 0              # == prefill.next_id (lockstep)
+        # worker-local rid → stream-global rid, shared with the scoped
+        # tracers so both workers' trace records join on one async id
+        self._p_map: dict[int, int] = {}
+        self._d_map: dict[int, int] = {}
+        self.first_token_time = self.prefill.first_token_time   # gid == p_rid
+        self.generated = _MergedCounts(self, "generated")
+        self.decode_dispatches = _MergedCounts(self, "decode_dispatches")
+        self.tracer = NULL_TRACER
+        self.set_tracer(tracer)
+
+    # -- plumbing ----------------------------------------------------------
+
+    def set_tracer(self, tracer) -> None:
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is None:
+            self.prefill.set_tracer(None)
+            self.decode.set_tracer(None)
+            return
+        self.prefill.set_tracer(_ScopedTracer(
+            tracer, "prefill", base=_RID_STRIDE, rid_map=self._p_map))
+        self.decode.set_tracer(_ScopedTracer(
+            tracer, "decode", base=2 * _RID_STRIDE, rid_map=self._d_map))
+
+    def warmup(self, prompt_len: int = 8, prompt_lens: tuple = ()) -> None:
+        self.prefill.warmup(prompt_len=prompt_len, prompt_lens=prompt_lens)
+        self.decode.warmup(prompt_len=prompt_len, prompt_lens=prompt_lens)
+
+    @property
+    def clock(self) -> float:
+        return max(self.prefill.clock, self.decode.clock)
+
+    # -- request surface ---------------------------------------------------
+
+    def submit(self, req, at: Optional[float] = None,
+               verify: bool = False) -> int:
+        """Admit a request to the prefill worker; returns the stream-global
+        rid.  The request's seed pins before the split, so the decode-worker
+        continuation (and any recompute fallback) replays the exact same
+        sampling stream."""
+        if verify:
+            raise ValueError(
+                "disaggregated servers do not support verify mode")
+        gid = self.next_id
+        if req.seed is None:
+            req = dataclasses.replace(req, seed=gid)
+        self._p_map[self.prefill.next_id] = gid
+        p_rid = self.prefill.submit(
+            dataclasses.replace(req, max_new=1), at=at)
+        assert p_rid == gid, "prefill worker rid out of lockstep"
+        self.next_id = self.prefill.next_id
+        if req.max_new > 1:
+            # hold the finished KV past retirement: the blocks must stay
+            # referenced while the transfer is in flight
+            self.prefill.kv_hold.add(p_rid)
+        item = self.prefill.queue[-1]     # the entry submit just appended
+        self._plans[gid] = _Handoff(
+            gid=gid, prompt=np.asarray(req.prompt, np.int32),
+            max_new=int(req.max_new), seed=int(item.seed),
+            sampler=item.sampler, priority=int(item.priority),
+            deadline=float(item.deadline),
+        )
+        return gid
+
+    def run_until(self, t_limit: float = math.inf) -> None:
+        """Advance the virtual timeline: transfers are delivered to the
+        decode worker strictly in arrival order, ONE at a time — each
+        delivery releases held source blocks, which can unblock a
+        capacity-stalled prefill whose hand-off arrives EARLIER than the
+        next already-harvested transfer.  Running the prefill worker and
+        re-harvesting between deliveries keeps the decode worker's clock
+        causally behind every undelivered arrival; only when no transfer
+        can land inside the window does the decode worker run to the
+        horizon."""
+        while True:
+            self.prefill.run_until(t_limit)
+            self._harvest()
+            pending = [p for p in self._plans.values()
+                       if p.state == "transfer" and p.arrive <= t_limit]
+            if not pending:
+                break
+            plan = min(pending, key=lambda p: (p.arrive, p.gid))
+            self.decode.run_until(plan.arrive)
+            self._deliver(plan)
+        self.decode.run_until(t_limit)
+
+    def run_to_completion(self) -> dict[int, list[int]]:
+        for _ in range(1 + len(self._plans)):
+            self.run_until(math.inf)
+            if all(p.state in ("decode", "done") for p in self._plans.values()):
+                break
+        return self.completed
+
+    def _harvest(self) -> None:
+        """Turn freshly finished prefills into in-flight transfers."""
+        p = self.prefill
+        for plan in self._plans.values():
+            if plan.state != "prefill" or plan.gid not in p.completed:
+                continue
+            if plan.gid in p.cancelled or plan.max_new <= 1:
+                # no decode phase: cancelled while prefilling, or the one
+                # prefill token was the whole request
+                p.release_held(plan.gid)
+                plan.state = "done"
+                continue
+            plan.tokens = list(p.completed[plan.gid])
+            if not plan.tokens:
+                p.release_held(plan.gid)
+                plan.state = "done"
+                continue
+            held = p.held_tables.get(plan.gid)
+            blocks = 0
+            if held is not None:
+                table = held[0]
+                blocks = min(
+                    blocks_for_tokens(table.num_tokens, p.block_size),
+                    len(table.blocks),
+                )
+            plan.nbytes = blocks * self._block_bytes
+            plan.t_sent = p.first_token_time.get(plan.gid, p.clock)
+            plan.arrive = plan.t_sent + self.interconnect.delay(plan.nbytes)
+            plan.state = "transfer"
+
+    def _deliver(self, plan: _Handoff) -> None:
+        """One transfer arrival: adopt on the decode worker (device block
+        copy into its pool, or lossless recompute fallback), free the held
+        source blocks, trace the hand-off span."""
+        p, d = self.prefill, self.decode
+        if plan.cancel_at is not None and plan.cancel_at <= plan.arrive:
+            # cancelled mid-transfer: drop the payload; the delivered stream
+            # is exactly what the prefill worker emitted
+            p.release_held(plan.gid)
+            plan.state = "done"
+            self.metrics.counter("handoffs_cancelled").inc()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    f"xfer/req{plan.gid}", "handoff_cancelled",
+                    max(plan.cancel_at, plan.t_sent), cat="server",
+                    args={"rid": plan.gid},
+                )
+            return
+        held = p.held_tables.get(plan.gid)
+        src_table = held[0] if held is not None else None
+        self._d_map[d.next_id] = plan.gid
+        d_rid, adopted = d.adopt(
+            plan.prompt, plan.tokens, plan.max_new - len(plan.tokens),
+            seed=plan.seed, sampler=plan.sampler, priority=plan.priority,
+            deadline=plan.deadline,
+            first_token_at=p.first_token_time.get(plan.gid),
+            at=plan.arrive,
+            src_pages=p.pages if src_table is not None else None,
+            src_table=src_table,
+            num_tokens=src_table.num_tokens if src_table is not None else None,
+        )
+        plan.d_rid = d_rid
+        plan.state = "decode"
+        # the held source blocks free on BOTH outcomes: adopted means the
+        # copy landed, fallback means the decode worker recomputes
+        p.release_held(plan.gid)
+        stall = max(0.0, d.clock - plan.arrive) if adopted else 0.0
+        self.metrics.counter("handoff_bytes").inc(plan.nbytes)
+        self.metrics.histogram("handoff_delay_s").observe(
+            plan.arrive - plan.t_sent)
+        self.metrics.histogram("handoff_stall_s").observe(stall)
+        if self.tracer.enabled:
+            self.tracer.span(
+                f"xfer/req{plan.gid}", "handoff", plan.t_sent, plan.arrive,
+                cat="server",
+                args={"rid": plan.gid,
+                      "bytes": plan.nbytes,
+                      "blocks": plan.nbytes // max(1, self._block_bytes),
+                      "stall_s": stall, "adopted": bool(adopted)},
+            )
+        if plan.cancel_at is not None:
+            d.cancel(d_rid, at=plan.cancel_at)
+
+    def cancel(self, gid: int, at: Optional[float] = None) -> None:
+        plan = self._plans.get(gid)
+        if plan is None:
+            raise ValueError(f"unknown request id {gid}")
+        if plan.state == "decode":
+            self.decode.cancel(plan.d_rid, at=at)
+            return
+        if plan.state == "done":
+            return
+        # still prefilling or mid-transfer: stop the prefill side (no-op if
+        # it already finished) and remember the due time for delivery
+        self.prefill.cancel(gid, at=at)
+        t = float(at) if at is not None else max(
+            self.prefill.clock, self.decode.clock)
+        plan.cancel_at = t if plan.cancel_at is None else min(plan.cancel_at, t)
+
+    def cancel_pending(self, gid: int) -> bool:
+        plan = self._plans[gid]
+        if plan.state == "decode":
+            return self.decode.cancel_pending(plan.d_rid)
+        if plan.state == "done":
+            return False
+        return self.prefill.cancel_pending(gid) or plan.cancel_at is not None
+
+    def pop_events(self, gid: int) -> list:
+        out = self.prefill.pop_events(gid)
+        plan = self._plans[gid]
+        if plan.d_rid is not None:
+            out += self.decode.pop_events(plan.d_rid)
+        return out
+
+    def is_finished(self, gid: int) -> bool:
+        plan = self._plans.get(gid)
+        if plan is None:
+            raise ValueError(f"unknown request id {gid}")
+        if plan.state in ("prefill", "transfer"):
+            return False
+        if plan.state == "decode":
+            return (self.decode.is_finished(plan.d_rid)
+                    and not self.prefill.events[gid])
+        return self.prefill.is_finished(gid)
+
+    def ttft(self, gid: int) -> Optional[float]:
+        return self.prefill.ttft(gid)
+
+    @property
+    def completed(self) -> dict[int, list[int]]:
+        """Stream-global view of finished requests (prefill + decode halves
+        concatenated) — same shape as ``BatchedServer.completed``."""
+        out: dict[int, list[int]] = {}
+        for gid, plan in self._plans.items():
+            if gid not in self.prefill.completed:
+                continue
+            if plan.state == "done":
+                out[gid] = list(self.prefill.completed[gid])
+            elif plan.d_rid is not None and plan.d_rid in self.decode.completed:
+                # the decode worker's token list re-carries the handed-off
+                # tokens (its slot seeds from them) — drop that prefix
+                out[gid] = (list(self.prefill.completed[gid])
+                            + list(self.decode.completed[plan.d_rid])[
+                                len(plan.tokens):])
+        return out
+
+    # -- router signals ----------------------------------------------------
+
+    def load_snapshot(self) -> dict:
+        p = self.prefill.load_snapshot()
+        d = self.decode.load_snapshot()
+        return {
+            "queue_depth": p["queue_depth"] + d["queue_depth"],
+            "active": p["active"] + d["active"],
+            "free_rows": min(p["free_rows"], d["free_rows"]),
+            "free_blocks": min(p["free_blocks"], d["free_blocks"]),
+            "total_blocks": min(p["total_blocks"], d["total_blocks"]),
+            "edf_headroom": min(p["edf_headroom"], d["edf_headroom"]),
+        }
+
+    def prefix_probe(self, tokens) -> int:
+        return self.prefill.prefix_probe(tokens)
+
+    def pool_stats(self) -> dict:
+        return _merge_stats([
+            self.prefill.pool_stats(),
+            self.decode.pool_stats(),
+            self.metrics.snapshot(),
+        ])
+
+
+class _ClusterView:
+    """dict-like view translating cluster-global rids to replica-local."""
+
+    __slots__ = ("srv", "attr")
+
+    def __init__(self, srv: "ClusterServer", attr: str):
+        self.srv = srv
+        self.attr = attr
+
+    def _map(self, gid):
+        where = self.srv._where.get(gid)
+        if where is None:
+            return None
+        idx, local = where
+        return getattr(self.srv.replicas[idx], self.attr), local
+
+    def get(self, gid, default=None):
+        got = self._map(gid)
+        if got is None:
+            return default
+        d, local = got
+        return d.get(local, default)
+
+    def __contains__(self, gid) -> bool:
+        got = self._map(gid)
+        return got is not None and got[1] in got[0]
+
+    def __getitem__(self, gid):
+        got = self._map(gid)
+        if got is None:
+            raise KeyError(gid)
+        return got[0][got[1]]
+
+
+class ClusterServer:
+    """N server replicas behind one ``BatchedServer`` surface.
+
+    Replicas are :class:`~repro.serving.engine.BatchedServer` or
+    :class:`DisaggregatedServer` instances (anything speaking the submit /
+    run_until / pop_events protocol plus ``load_snapshot`` /
+    ``prefix_probe``).  Routing is a per-request argmin over replica
+    pressure — queue depth + active slots, minus a free-block credit, plus
+    an urgency penalty when a replica already has deadline-tight work —
+    less a sticky bonus for replicas whose radix prefix index already holds
+    a warm prefix of the prompt (cross-replica prefix placement).  Ties
+    break to the lowest replica index, so routing is deterministic."""
+
+    speculative = False
+
+    def __init__(self, replicas: Sequence, *, sticky_weight: float = 2.0,
+                 tracer=None):
+        if not replicas:
+            raise ValueError("ClusterServer needs at least one replica")
+        self.replicas = list(replicas)
+        self.sticky_weight = float(sticky_weight)
+        self.next_id = 0
+        self._where: dict[int, tuple[int, int]] = {}
+        self._rid_maps: list[dict] = [dict() for _ in self.replicas]
+        self.metrics = MetricsRegistry()
+        for k in ("cluster_requests", "sticky_routes"):
+            self.metrics.counter(k)
+        self.routed = [0] * len(self.replicas)
+        self.metrics.view("routed_per_replica", lambda: list(self.routed))
+        self.metrics.view("cluster_replicas", lambda: len(self.replicas))
+        self.first_token_time = _ClusterView(self, "first_token_time")
+        self.generated = _ClusterView(self, "generated")
+        self.decode_dispatches = _ClusterView(self, "decode_dispatches")
+        self.tracer = NULL_TRACER
+        self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        for i, r in enumerate(self.replicas):
+            r.set_tracer(None if tracer is None else _ScopedTracer(
+                tracer, f"r{i}", base=(i + 1) * 10 * _RID_STRIDE,
+                rid_map=self._rid_maps[i],
+            ))
+
+    def warmup(self, prompt_len: int = 8, prompt_lens: tuple = ()) -> None:
+        for r in self.replicas:
+            r.warmup(prompt_len=prompt_len, prompt_lens=prompt_lens)
+
+    @property
+    def clock(self) -> float:
+        return max(r.clock for r in self.replicas)
+
+    def _route(self, req) -> int:
+        prompt = np.asarray(req.prompt)
+        n_tok = max(1, int(prompt.shape[0]))
+        best_score = best_pressure = math.inf
+        best_i = base_i = 0
+        for i, r in enumerate(self.replicas):
+            snap = r.load_snapshot()
+            pressure = (
+                snap["queue_depth"] + snap["active"]
+                - snap["free_blocks"] / max(1, snap["total_blocks"])
+            )
+            if math.isfinite(snap["edf_headroom"]):
+                # deadline-tight work already waits here: deprioritize
+                pressure += 0.5
+            hit = r.prefix_probe(prompt) / n_tok
+            score = pressure - self.sticky_weight * hit
+            if score < best_score:
+                best_score, best_i = score, i
+            if pressure < best_pressure:
+                best_pressure, base_i = pressure, i
+        if best_i != base_i:
+            self.metrics.counter("sticky_routes").inc()
+        return best_i
+
+    def submit(self, req, at: Optional[float] = None,
+               verify: bool = False) -> int:
+        if verify:
+            raise ValueError("cluster servers do not support verify mode")
+        gid = self.next_id
+        self.next_id += 1
+        if req.seed is None:
+            # pin the sampling seed BEFORE routing: replica-local default
+            # seeds would make delivered content depend on placement
+            req = dataclasses.replace(req, seed=gid)
+        idx = self._route(req)
+        replica = self.replicas[idx]
+        self._rid_maps[idx][replica.next_id] = gid
+        local = replica.submit(req, at=at)
+        self._where[gid] = (idx, local)
+        self.routed[idx] += 1
+        self.metrics.counter("cluster_requests").inc()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "cluster/router", "route",
+                float(at) if at is not None else replica.clock,
+                cat="server", args={"rid": gid, "replica": idx},
+            )
+        return gid
+
+    def run_until(self, t_limit: float = math.inf) -> None:
+        for r in self.replicas:
+            r.run_until(t_limit)
+
+    def run_to_completion(self) -> dict[int, list[int]]:
+        for r in self.replicas:
+            r.run_to_completion()
+        return self.completed
+
+    def _local(self, gid: int):
+        where = self._where.get(gid)
+        if where is None:
+            raise ValueError(f"unknown request id {gid}")
+        return self.replicas[where[0]], where[1]
+
+    def cancel(self, gid: int, at: Optional[float] = None) -> None:
+        r, local = self._local(gid)
+        r.cancel(local, at=at)
+
+    def cancel_pending(self, gid: int) -> bool:
+        r, local = self._local(gid)
+        return r.cancel_pending(local)
+
+    def pop_events(self, gid: int) -> list:
+        r, local = self._local(gid)
+        return r.pop_events(local)
+
+    def is_finished(self, gid: int) -> bool:
+        r, local = self._local(gid)
+        return r.is_finished(local)
+
+    def ttft(self, gid: int) -> Optional[float]:
+        r, local = self._local(gid)
+        return r.ttft(local)
+
+    @property
+    def completed(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {}
+        for gid, (idx, local) in self._where.items():
+            done = self.replicas[idx].completed
+            if local in done:
+                out[gid] = list(done[local])
+        return out
+
+    def load_snapshot(self) -> dict:
+        snaps = [r.load_snapshot() for r in self.replicas]
+        return {
+            "queue_depth": sum(s["queue_depth"] for s in snaps),
+            "active": sum(s["active"] for s in snaps),
+            "free_rows": sum(s["free_rows"] for s in snaps),
+            "free_blocks": sum(s["free_blocks"] for s in snaps),
+            "total_blocks": sum(s["total_blocks"] for s in snaps),
+            "edf_headroom": min(s["edf_headroom"] for s in snaps),
+        }
+
+    def pool_stats(self) -> dict:
+        return _merge_stats(
+            [r.pool_stats() for r in self.replicas] + [self.metrics.snapshot()]
+        )
+
+
+class ClusterEndpoint(ServerEndpoint):
+    """N replicas behind the :class:`ServerEndpoint` surface.
+
+    ``DiSCoServer`` races device-vs-fleet unchanged: it sees one endpoint
+    whose ``server`` happens to be a :class:`ClusterServer`, and every
+    submit routes to the least-pressured (or prefix-warm) replica."""
+
+    def __init__(self, replicas: Sequence, network=None, tracer=None, *,
+                 sticky_weight: float = 2.0):
+        super().__init__(
+            ClusterServer(replicas, sticky_weight=sticky_weight,
+                          tracer=tracer),
+            network=network, tracer=tracer,
+        )

@@ -64,7 +64,7 @@ from repro.models import (
 from repro.kernels.compat import on_tpu
 from repro.models.config import ModelConfig
 
-from .kv_pool import KVPoolManager
+from .kv_pool import NULL_BLOCK, KVPoolManager
 from .request import Request
 from .telemetry import NULL_TRACER, MetricsRegistry, metric_attr
 
@@ -98,6 +98,29 @@ def _require_request(req, method: str) -> Request:
             "slo=...) instead."
         )
     return req
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _xfer_pool_blocks(src_pages, dst_pages, src_ids, dst_ids):
+    """Cross-pool KV block copy: gather ``src_ids`` from one pool's page
+    arrays and scatter them into ``dst_ids`` of another pool's (donated)
+    arrays — the device half of a prefill→decode hand-off. Padding pairs
+    point both sides at the trash block, so bucketing the pair count to a
+    power of two (bounded compile count) writes only garbage into garbage."""
+    return {
+        k: dst_pages[k].at[:, dst_ids].set(src_pages[k][:, src_ids])
+        for k in dst_pages
+    }
+
+
+def _pad_copy_pairs(pairs):
+    """(src_ids, dst_ids) int32 arrays padded to a power-of-two length with
+    trash-block self-copies (see ``_xfer_pool_blocks``)."""
+    n = 1 << max(0, len(pairs) - 1).bit_length()
+    pad = n - len(pairs)
+    src = [p[0] for p in pairs] + [NULL_BLOCK] * pad
+    dst = [p[1] for p in pairs] + [NULL_BLOCK] * pad
+    return jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
 
 
 _MIN_BUCKET = 16
@@ -1505,6 +1528,11 @@ class BatchedServer:
         self.admit_seq: dict[int, int] = {}          # admission order (preemption)
         self._admit_counter = 0
         self._cancel_due: dict[int, float] = {}      # in-flight cancels (uplink RTT)
+        # disaggregated hand-off hold: rids in ``kv_hold`` keep their KV
+        # blocks referenced past retirement (detached into ``held_tables``)
+        # until the cross-pool transfer completes — see cluster.py
+        self.kv_hold: set[int] = set()
+        self.held_tables: dict[int, tuple] = {}      # rid -> (PageTable, cache_tokens)
         self.cancel_lag_tokens = 0   # tokens generated after their cancel was issued
         self.slo_misses = 0          # first tokens that landed past their deadline
         self.deadline_reorders = 0   # EDF picks that differed from FIFO order
@@ -1721,6 +1749,7 @@ class BatchedServer:
         self.cancelled.add(rid)
         self.verify_rids.discard(rid)
         self._verify_requested.discard(rid)
+        self.kv_hold.discard(rid)         # cancelled: nothing left to hand off
         if rid in self.slots:
             slot = self.slots.pop(rid)
             row = self.rows.pop(rid)
@@ -1813,11 +1842,21 @@ class BatchedServer:
             self._verify_requested.discard(rid)
             row = self.rows.pop(rid)
             if self.paged:
-                # blocks back to the pool; sealed blocks stay warm for the
-                # next shared-prefix admission
-                self.kv.release(
-                    rid, cache_tokens=self._slot_cache_tokens(slot, row)
-                )
+                if rid in self.kv_hold:
+                    # hand-off hold: the row frees for the next admission,
+                    # but the blocks stay referenced until release_held —
+                    # their contents are still crossing the interconnect
+                    self.kv_hold.discard(rid)
+                    self.held_tables[rid] = (
+                        self.kv.detach(rid),
+                        self._slot_cache_tokens(slot, row),
+                    )
+                else:
+                    # blocks back to the pool; sealed blocks stay warm for
+                    # the next shared-prefix admission
+                    self.kv.release(
+                        rid, cache_tokens=self._slot_cache_tokens(slot, row)
+                    )
             else:
                 self._free_rows.append(row)
             # an in-flight cancel for a finished request is moot: expunge it
@@ -2578,6 +2617,143 @@ class BatchedServer:
         """True while an issued cancel for ``rid`` is still crossing the
         uplink (the request may still generate — and waste — tokens)."""
         return rid in self._cancel_due
+
+    def release_held(self, rid: int, register_prefix: bool = True) -> None:
+        """Drop a hand-off hold taken via ``kv_hold``: the detached table's
+        blocks return to the pool (transfer landed, or the hand-off was
+        cancelled mid-flight). ``register_prefix`` keeps the transferred
+        prompt's sealed blocks warm in this worker's prefix index so sticky
+        routing of shared-prefix requests keeps hitting."""
+        held = self.held_tables.pop(rid, None)
+        if held is not None:
+            table, cache_tokens = held
+            self.kv.release_detached(
+                table, cache_tokens=cache_tokens if register_prefix else None
+            )
+
+    def adopt(self, prompt, tokens, max_new: int, *, seed: int,
+              sampler: Optional[SamplerConfig] = None, priority: int = 0,
+              deadline: float = math.inf,
+              first_token_at: Optional[float] = None,
+              at: Optional[float] = None,
+              src_pages=None, src_table=None,
+              num_tokens: Optional[int] = None) -> tuple[int, bool]:
+        """Hand-off entry point for disaggregated prefill/decode serving:
+        take over a request whose prefill (and first token, already
+        delivered) ran on ANOTHER server, continuing its decode here.
+
+        With ``src_pages``/``src_table`` from the prefill worker, the KV
+        state is received into this pool (``KVPoolManager.receive``) and
+        device-copied block-by-block; the request gets a live slot with NO
+        compute — the next decode chunk continues bitwise-identically to a
+        monolithic run, because sampling is position-keyed on ``seed`` and
+        the copied cache covers exactly the prompt positions. When the pool
+        cannot receive (rows or blocks exhausted), the request falls back to
+        a lossless recompute: it queues as a replay-resume entry whose
+        re-prefill of prompt + delivered tokens regenerates the identical
+        continuation.
+
+        ``tokens`` are the already-delivered tokens (not re-emitted here);
+        ``max_new`` counts the tokens still to emit on this server;
+        ``first_token_at`` back-fills ``first_token_time`` so TTFT/SLO
+        accounting stays with the real first token. Returns
+        ``(rid, adopted)`` — ``adopted`` False means the fallback path
+        queued the request instead."""
+        if not self.paged:
+            raise ValueError("adopt requires a paged server")
+        prompt = np.asarray(prompt, np.int32)
+        rid = self.next_id
+        self.next_id += 1
+        arrive = self.clock if at is None else float(at)
+        self.submit_time[rid] = arrive
+        self.events[rid] = deque()
+        self.generated[rid] = 0
+        if first_token_at is not None:
+            self.first_token_time[rid] = float(first_token_at)
+        sampler = sampler if sampler is not None else self.default_sampler
+        if self.tracer.enabled:
+            self.tracer.begin_request(
+                rid, arrive, cat="server_request",
+                args={"prompt_tokens": int(prompt.shape[0]),
+                      "max_new": int(max_new), "handoff": True},
+            )
+        got = None
+        if src_table is not None and src_pages is not None:
+            got = self.kv.receive(rid, src_table, num_tokens=num_tokens)
+        if got is not None:
+            table, pairs = got
+            if pairs:
+                src_ids, dst_ids = _pad_copy_pairs(pairs)
+                self.pages = _xfer_pool_blocks(
+                    src_pages, self.pages, src_ids, dst_ids
+                )
+                # sync here so the copy's host wall-clock is NOT absorbed
+                # into the next decode chunk's measured time: on the
+                # virtual timeline the transfer costs the modeled
+                # interconnect delay (already paid by the caller), not the
+                # simulator's gather/scatter time
+                jax.block_until_ready(self.pages)
+            self.clock = max(self.clock, arrive)
+            row = table.row
+            self.block_tables[row] = table.padded(self.max_blocks_per_row)
+            key = _request_keys([seed])
+            self.slots[rid] = _Slot(
+                rid, max_new, list(tokens), prompt=prompt, seed=int(seed),
+                key=key[0], sampler=sampler, deadline=deadline,
+            )
+            self.rows[rid] = row
+            self.row_len[row] = table.num_tokens
+            self.admit_seq[rid] = self._admit_counter
+            self._admit_counter += 1
+            if self.tracer.enabled:
+                self.tracer.request_instant(
+                    rid, "adopted", self.clock, cat="server_request",
+                    args={"row": row, "blocks": len(pairs)},
+                )
+            return rid, True
+        # recompute fallback: a replay-resume admission regenerates the
+        # identical continuation from prompt + delivered tokens
+        self.queue.append(_Queued(
+            rid, prompt, int(max_new), tokens=list(tokens), seed=int(seed),
+            sampler=sampler, priority=priority, deadline=deadline,
+            resume=True,
+        ))
+        if self.tracer.enabled:
+            self.tracer.request_instant(
+                rid, "handoff_fallback", self.clock, cat="server_request",
+                args={"tokens": len(tokens)},
+            )
+        return rid, False
+
+    def load_snapshot(self) -> dict:
+        """Router-facing load signals (cluster dispatch): queue depth
+        (including half-prefilled prompts), active slots, free rows/blocks,
+        and EDF headroom — the tightest unexpired TTFT-deadline slack among
+        queued requests (``inf`` when nothing urgent is waiting)."""
+        headroom = math.inf
+        for q in self.queue:
+            if q.deadline >= self.clock:
+                headroom = min(headroom, q.deadline - self.clock)
+        free_rows = len(self.kv._free_rows) if self.paged else len(self._free_rows)
+        return {
+            "queue_depth": len(self.queue) + len(self._partial),
+            "active": len(self.slots),
+            "free_rows": free_rows,
+            "free_blocks": self.kv.pool.num_free if self.paged else free_rows,
+            "total_blocks": (
+                self.kv.pool.num_blocks - 1 if self.paged else self.max_slots
+            ),
+            "edf_headroom": headroom,
+        }
+
+    def prefix_probe(self, tokens) -> int:
+        """Cached-prefix tokens this server could skip for ``tokens`` — the
+        cluster router's sticky-placement signal. Side-effect free (no
+        counters, no LRU touch); 0 when the prefix cache is off."""
+        if not self.paged or self.kv.prefix is None:
+            return 0
+        full = np.asarray(tokens, np.int32)
+        return len(self.kv.prefix_match(full, record=False)) * self.block_size
 
     def pool_stats(self) -> dict:
         """Memory-pressure + SLO accounting for the serving benchmark: peak

@@ -324,6 +324,9 @@ class KVPoolManager:
     blocks_saved = metric_attr("blocks_saved")
     copy_ops = metric_attr("copy_ops")
     clone_fallbacks = metric_attr("clone_fallbacks")
+    handoffs = metric_attr("handoffs")
+    handoff_blocks = metric_attr("handoff_blocks")
+    handoff_fallbacks = metric_attr("handoff_fallbacks")
 
     def __init__(self, num_blocks: int, block_size: int, rows: int,
                  max_blocks_per_row: int, prefix_cache: bool = False,
@@ -358,6 +361,13 @@ class KVPoolManager:
         self.blocks_saved = 0
         self.copy_ops = 0
         self.clone_fallbacks = 0
+        # cross-pool hand-off accounting (disaggregated prefill/decode):
+        # transfers received into this pool, blocks device-copied for them,
+        # and receives that failed — the sender falls back to a lossless
+        # recompute on the decode worker
+        self.handoffs = 0
+        self.handoff_blocks = 0
+        self.handoff_fallbacks = 0
         # derived numbers are registry views: evaluated at snapshot time so
         # they can never drift from their inputs
         m = self.metrics
@@ -628,6 +638,76 @@ class KVPoolManager:
             if pairs:
                 self._trace("cow_copy", n=len(pairs))
         return dst, pairs
+
+    def detach(self, rid: int) -> PageTable:
+        """Hand-off hold: remove ``rid``'s table from the live set, returning
+        its batch row to the free list but KEEPING this owner's block
+        references, so the blocks cannot be reallocated (and their device
+        contents overwritten) while a cross-pool transfer is in flight. The
+        caller owns the returned table and must eventually pass it to
+        :meth:`release_detached`."""
+        table = self.tables.pop(rid)
+        self._free_rows.append(table.row)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("detach", rid=rid, blocks=len(table.blocks))
+        return table
+
+    def release_detached(self, table: PageTable, cache_tokens=None) -> None:
+        """Drop a :meth:`detach`-ed table's block references (transfer done,
+        or the hand-off was cancelled mid-flight). ``cache_tokens`` registers
+        the sealed blocks in the prefix index first — a transferred prompt's
+        prefix stays warm on the prefill worker for sticky routing hits."""
+        if self.prefix is not None and cache_tokens is not None:
+            n_full = min(len(cache_tokens) // self.block_size, len(table.blocks))
+            if n_full > 0:
+                self.prefix.insert(cache_tokens, table.blocks[:n_full])
+        self.pool.free(table.blocks)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("free", rid=table.rid, blocks=len(table.blocks))
+
+    def receive(self, rid: int, src_table: PageTable,
+                num_tokens: int | None = None) -> tuple[PageTable, list[tuple[int, int]]] | None:
+        """Cross-pool hand-off (the clone extension for disaggregated P/D
+        serving): materialize ``src_table`` — a table owned by a DIFFERENT
+        pool's manager — into this pool. Unlike :meth:`clone`, nothing can be
+        aliased across pools, so every block covering ``num_tokens`` written
+        entries gets a fresh local block and shows up in the returned
+        ``(src_block, dst_block)`` copy pairs the caller must device-copy.
+        Allocation covers the next decode write too (``num_tokens + 1``).
+        Returns None — and counts a ``handoff_fallback`` — when a row or the
+        blocks are unavailable: the caller recomputes on this worker instead
+        (lossless, via the replay-resume admission path)."""
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already admitted")
+        num_tokens = src_table.num_tokens if num_tokens is None else int(num_tokens)
+        used = min(
+            blocks_for_tokens(num_tokens, self.block_size), len(src_table.blocks)
+        )
+        n_alloc = min(
+            blocks_for_tokens(num_tokens + 1, self.block_size),
+            self.max_blocks_per_row,
+        )
+        n_alloc = max(n_alloc, used)
+        if not self._free_rows:
+            self.handoff_fallbacks += 1
+            if self.tracer.enabled and self._now is not None:
+                self._trace("handoff_fallback", rid=rid, reason="rows")
+            return None
+        got = self._alloc_evict(n_alloc)
+        if got is None:
+            self.handoff_fallbacks += 1
+            self.memory_waits.add(rid)
+            if self.tracer.enabled and self._now is not None:
+                self._trace("handoff_fallback", rid=rid, reason="blocks")
+            return None
+        pairs = list(zip(src_table.blocks[:used], got[:used]))
+        table = PageTable(rid, self._free_rows.pop(), got, num_tokens)
+        self.tables[rid] = table
+        self.handoffs += 1
+        self.handoff_blocks += len(pairs)
+        if self.tracer.enabled and self._now is not None:
+            self._trace("handoff", rid=rid, blocks=len(pairs))
+        return table, pairs
 
     def flush_prefix_cache(self) -> None:
         """Drop every prefix-cache reference (refcount invariant tests and

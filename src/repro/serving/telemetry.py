@@ -559,6 +559,11 @@ _RECONCILE_INSTANTS = [
     ("prefix_hit", "blocks", "blocks_saved"),
     ("prefix_evict", "n", "prefix_evictions"),
     ("cow_copy", "n", "copy_ops"),
+    # cross-pool hand-off (disaggregated prefill/decode, cluster.py): kv
+    # instants on the receiving pool vs the summed worker pool_stats
+    ("handoff", None, "handoffs"),
+    ("handoff", "blocks", "handoff_blocks"),
+    ("handoff_fallback", None, "handoff_fallbacks"),
 ]
 
 
@@ -626,7 +631,11 @@ def ttft_attribution(trace) -> list[dict]:
     ``decode_stall_s`` is the overlap of OTHER requests' server prefill
     spans with this request's post-first-token lifetime — the decode
     interference that chunked prefill bounds (watch it collapse in
-    ``tools/trace_report.py`` when ``prefill_chunk`` is on).
+    ``tools/trace_report.py`` when ``prefill_chunk`` is on).  In a
+    disaggregated/cluster stack (``cluster.py``) spans carry a ``replica``
+    scope tag: it is reported per row, interference counts only spans on
+    the worker the stream decodes on, and ``handoff_s`` is the modeled
+    cross-pool KV transfer time (post-first-token, so not part of TTFT).
     """
     recs = request_records(trace, cat="request")
     spans = trace_spans(trace)
@@ -634,11 +643,16 @@ def ttft_attribution(trace) -> list[dict]:
     # Index server prefill spans by server rid (ALL spans: a chunked
     # prefill emits one per piece), network spans by driver rid.
     prefill_by_srv: dict[Any, list[dict]] = defaultdict(list)
+    handoff_by_srv: dict[Any, list[dict]] = defaultdict(list)
     for ev in spans:
         if ev.get("cat") == "server" and ev.get("name") == "prefill":
             rid = ev.get("args", {}).get("rid")
             if rid is not None:
                 prefill_by_srv[rid].append(ev)
+        elif ev.get("cat") == "server" and ev.get("name") == "handoff":
+            rid = ev.get("args", {}).get("rid")
+            if rid is not None:
+                handoff_by_srv[rid].append(ev)
     net_by_rid: dict[Any, list[dict]] = defaultdict(list)
     dev_prefill_by_rid: dict[Any, dict] = {}
     stall_by_rid: dict[Any, list[dict]] = defaultdict(list)
@@ -679,6 +693,8 @@ def ttft_attribution(trace) -> list[dict]:
             "network_s": 0.0,
             "draft_stall_s": 0.0,
             "decode_stall_s": 0.0,
+            "handoff_s": 0.0,
+            "replica": None,
             "ttft_s": None,
             "outcome": (end or {}).get("args", {}).get("outcome"),
             "winner": (end or {}).get("args", {}).get("winner"),
@@ -705,6 +721,25 @@ def ttft_attribution(trace) -> list[dict]:
             if qw is not None:
                 info["queue_s"] = qw
                 break
+        # worker/replica scope: _ScopedTracer stamps spans with a "replica"
+        # tag ("r1.prefill"); a monolithic stack has none.  In a
+        # disaggregated stack the stream DECODES on the sibling decode
+        # worker, so interference only counts from spans on that worker.
+        own_scope = None
+        for sp in own:
+            own_scope = sp.get("args", {}).get("replica")
+            if own_scope is not None:
+                break
+        info["replica"] = own_scope
+        decode_scope = (
+            own_scope.replace("prefill", "decode")
+            if own_scope is not None else None
+        )
+        # hand-off wire time is post-first-token by construction (the first
+        # token departs WITH the KV), so it is reported unclipped rather
+        # than folded into the TTFT horizon
+        for ev in handoff_by_srv.get(srv_rid, []):
+            info["handoff_s"] += ev.get("dur", 0.0) / _US
         if first_token_ts is not None and srv_rid is not None:
             # decode interference: other requests' prefill work overlapping
             # this request's streaming phase (first token -> request end)
@@ -713,6 +748,8 @@ def ttft_attribution(trace) -> list[dict]:
                 if other == srv_rid:
                     continue
                 for ev in evs:
+                    if ev.get("args", {}).get("replica") != decode_scope:
+                        continue
                     lo = max(ev["ts"], first_token_ts)
                     hi = min(ev["ts"] + ev.get("dur", 0.0), t_end)
                     if hi > lo:

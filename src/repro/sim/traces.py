@@ -173,6 +173,22 @@ def make_serving_trace(rng: np.random.Generator, n: int, *,
     return [(float(a), int(l), int(max_new)) for a, l in zip(arrivals, lengths)]
 
 
+def make_cluster_load_trace(rng: np.random.Generator, n_per_replica: int, *,
+                            service_time: float, slots_per_replica: int,
+                            replicas: int, rho: float, kind: str = "poisson",
+                            max_prompt: int = 48, max_new: int = 16) -> list:
+    """(arrival, prompt_len, max_new) tuples for the replica-scaling sweep:
+    request count AND offered load grow WITH the fleet (``replicas`` ×
+    ``slots_per_replica`` × ``rho``) while per-replica load stays fixed, so
+    a well-routed cluster should hold p99 TTFT ~flat as both scale together
+    — the ``benchmarks/bench_cluster.py`` acceptance."""
+    return make_serving_trace(
+        rng, n_per_replica * max(1, replicas), service_time=service_time,
+        slots=slots_per_replica * max(1, replicas), rho=rho, kind=kind,
+        max_prompt=max_prompt, max_new=max_new,
+    )
+
+
 def make_interference_trace(rng: np.random.Generator, n: int, *,
                             service_time: float, slots: int, rho: float,
                             short_prompt: int = 8, short_new: int = 24,

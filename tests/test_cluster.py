@@ -1,0 +1,298 @@
+"""Disaggregated prefill/decode + cluster router tests: cross-pool KV
+hand-off refcount/free invariants (detach -> receive -> release_detached),
+recompute fallback on decode-pool exhaustion, cancel mid-transfer on both
+the pool and server layers, bitwise stream identity vs a monolithic
+``BatchedServer`` under mixed temperature>0 samplers, and sticky
+prefix-aware cluster routing."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import paper_models
+from repro.models import init_params
+from repro.serving import (
+    BatchedServer,
+    ClusterServer,
+    DisaggregatedServer,
+    InterconnectModel,
+    KVPoolManager,
+    Request,
+    SamplerConfig,
+)
+from repro.serving.telemetry import (
+    Tracer,
+    reconcile_trace,
+    trace_spans,
+    ttft_attribution,
+    validate_trace,
+)
+
+CFG = paper_models.TINY_DEVICE
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _clean(kv: KVPoolManager) -> bool:
+    kv.flush_prefix_cache()
+    return kv.pool.num_free == kv.pool.num_blocks - 1
+
+
+def _mixed_requests(n=10, seed=7, max_new_hi=10):
+    """Heterogeneous workload: greedy + two temperature>0 samplers."""
+    rng = np.random.default_rng(seed)
+    samplers = [
+        None,
+        SamplerConfig(temperature=0.8, top_k=20),
+        SamplerConfig(temperature=1.1, top_p=0.9),
+    ]
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(1, CFG.vocab - 1, size=int(rng.integers(4, 24)))
+        reqs.append(Request(
+            prompt=np.asarray(prompt, np.int32),
+            max_new=int(rng.integers(1, max_new_hi)),
+            arrival=float(i) * 0.003,
+            sampler=samplers[i % len(samplers)],
+            seed=i,                 # pinned: identical streams on any stack
+        ))
+    return reqs
+
+
+def _run(server, reqs):
+    for r in reqs:
+        server.submit(r, at=r.arrival)
+    return server.run_to_completion()
+
+
+# ---------------------------------------------------------------------------
+# KV pool layer: detach / receive / release_detached
+# ---------------------------------------------------------------------------
+
+
+def test_receive_refcounts_and_free_both_pools():
+    src = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
+    dst = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
+    src.admit(1, 3, num_tokens=20)               # 2 sealed + partial tail
+    free_during = src.pool.num_free
+    table = src.detach(1)
+    # detached: the row frees for reuse, the blocks stay referenced
+    assert 1 not in src.tables
+    assert src.pool.num_free == free_during
+    got = dst.receive(5, table)
+    assert got is not None
+    dst_table, pairs = got
+    assert len(pairs) == 3                       # every written block copies
+    assert dst.pool.num_free == 12 - 1 - 3
+    assert dst.handoffs == 1 and dst.handoff_blocks == 3
+    assert dst_table.num_tokens == 20
+    # transfer complete: source side drops its hold
+    src.release_detached(table)
+    assert _clean(src)
+    dst.release(5)
+    assert _clean(dst)
+
+
+def test_receive_fallback_pool_and_rows_exhausted():
+    src = KVPoolManager(num_blocks=12, block_size=8, rows=3, max_blocks_per_row=6)
+    src.admit(1, 4, num_tokens=30)
+    table = src.detach(1)
+
+    full = KVPoolManager(num_blocks=5, block_size=8, rows=3, max_blocks_per_row=4)
+    full.admit(9, 3)                             # 3 of 4 usable blocks gone
+    free_before = full.pool.num_free
+    assert full.receive(5, table) is None        # blocks exhausted
+    assert full.handoff_fallbacks == 1
+    assert full.pool.num_free == free_before     # failed receive took nothing
+    assert 5 not in full.tables
+
+    norows = KVPoolManager(num_blocks=20, block_size=8, rows=1, max_blocks_per_row=6)
+    norows.admit(9, 2)
+    assert norows.receive(5, table) is None      # rows exhausted
+    assert norows.handoff_fallbacks == 1
+
+    src.release_detached(table)
+    assert _clean(src)
+
+
+def test_detach_cancel_mid_transfer_pool_level():
+    kv = KVPoolManager(num_blocks=12, block_size=8, rows=3,
+                       max_blocks_per_row=6, prefix_cache=True)
+    tokens = np.arange(1, 21, dtype=np.int32)
+    kv.admit(1, 3, num_tokens=20)
+    table = kv.detach(1)
+    # cancelled mid-flight: the hold drops, sealed blocks stay warm in the
+    # prefix index (refcounted there), a flush returns the pool to empty
+    kv.release_detached(table, cache_tokens=tokens)
+    assert len(kv.prefix_match(tokens, record=False)) == 2
+    assert _clean(kv)
+
+
+# ---------------------------------------------------------------------------
+# Server layer: disaggregated vs monolithic
+# ---------------------------------------------------------------------------
+
+_KW = dict(max_slots=3, max_len=96, block_size=16, decode_chunk=2)
+
+
+def test_disaggregated_bitwise_identity_mixed_samplers(params):
+    reqs = _mixed_requests()
+    mono = BatchedServer(CFG, params, paged=True, **_KW)
+    mono.warmup()
+    mono_out = _run(mono, reqs)
+
+    tr = Tracer()
+    dis = DisaggregatedServer(CFG, params, tracer=tr, **_KW)
+    dis.warmup()
+    dis_out = _run(dis, reqs)
+
+    assert dis_out == mono_out                   # bitwise, per request
+    stats = dis.pool_stats()
+    assert stats["handoffs"] + stats["handoff_fallbacks"] > 0
+    # pools drain clean on both sides
+    assert _clean(dis.prefill.kv) and _clean(dis.decode.kv)
+    assert not dis.prefill.held_tables and not dis.prefill.kv_hold
+    # trace validates, and hand-off instants reconcile with pool_stats
+    trace = tr.export()
+    assert validate_trace(trace) == []
+    assert reconcile_trace(trace, stats) == []
+    spans = trace_spans(trace, name="handoff")
+    assert len(spans) == stats["handoffs"] + stats["handoff_fallbacks"]
+    assert all(s["args"]["bytes"] >= 0 for s in spans)
+
+
+def test_disaggregated_fallback_decode_pool_exhausted(params):
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(2):
+        prompt = rng.integers(1, CFG.vocab - 1, size=70)
+        reqs.append(Request(
+            prompt=np.asarray(prompt, np.int32), max_new=40,
+            arrival=float(i) * 0.001,
+            sampler=SamplerConfig(temperature=0.9, top_k=32), seed=i,
+        ))
+    mono = BatchedServer(CFG, params, paged=True, **_KW)
+    mono.warmup()
+    mono_out = _run(mono, reqs)
+
+    # decode pool at the floor: one 70-token row fills it, so the second
+    # hand-off MUST take the recompute fallback while the first decodes
+    dis = DisaggregatedServer(CFG, params, decode_blocks=7, **_KW)
+    dis.warmup()
+    dis_out = _run(dis, reqs)
+    assert dis.pool_stats()["handoff_fallbacks"] >= 1
+    assert dis_out == mono_out                   # fallback is lossless
+    assert _clean(dis.prefill.kv) and _clean(dis.decode.kv)
+
+
+def test_disaggregated_cancel_mid_transfer_server_level(params):
+    req = Request(
+        prompt=np.arange(1, 9, dtype=np.int32), max_new=6,
+        sampler=SamplerConfig(temperature=0.7, top_k=16), seed=0,
+    )
+    mono = BatchedServer(CFG, params, paged=True, **_KW)
+    mono.warmup()
+    mono_out = _run(mono, [req])
+
+    dis = DisaggregatedServer(
+        CFG, params, interconnect=InterconnectModel(latency_s=5.0), **_KW)
+    dis.warmup()
+    gid = dis.submit(req, at=0.0)
+    dis.run_until(1.0)                           # prefill done, KV in flight
+    plan = dis._plans[gid]
+    assert plan.state == "transfer"
+    held_blocks = len(dis.prefill.held_tables[gid][0].blocks)
+    # in flight: the retired row is free but its blocks stay referenced
+    assert held_blocks > 0
+    assert (dis.prefill.kv.pool.num_free
+            == dis.prefill.kv.pool.num_blocks - 1 - held_blocks)
+    assert not dis.is_finished(gid)
+
+    dis.cancel(gid)                              # lands before arrival
+    dis.run_until(float("inf"))
+    assert plan.state == "done"
+    assert dis.pool_stats()["handoffs_cancelled"] == 1
+    # the payload never landed: decode pool untouched, source hold freed
+    assert dis.decode.kv.pool.num_free == dis.decode.kv.pool.num_blocks - 1
+    assert not dis.prefill.held_tables
+    assert _clean(dis.prefill.kv)
+    # delivered stream = exactly the prefill worker's first token, which is
+    # bitwise the monolithic stream's first token
+    events = dis.pop_events(gid)
+    assert [t for t, _ in events] == mono_out[0][:1]
+    assert dis.is_finished(gid)
+
+
+def test_disaggregated_rejects_verify(params):
+    dis = DisaggregatedServer(CFG, params, **_KW)
+    with pytest.raises(ValueError, match="verify"):
+        dis.submit(Request(prompt=np.arange(1, 5, dtype=np.int32), max_new=2),
+                   verify=True)
+
+
+# ---------------------------------------------------------------------------
+# Cluster router
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_bitwise_identity_and_spread(params):
+    reqs = _mixed_requests(n=8)
+    mono = BatchedServer(CFG, params, paged=True, **_KW)
+    mono.warmup()
+    mono_out = _run(mono, reqs)
+
+    cluster = ClusterServer([
+        DisaggregatedServer(CFG, params, **_KW),
+        DisaggregatedServer(CFG, params, **_KW),
+    ])
+    cluster.warmup()
+    cl_out = _run(cluster, reqs)
+    assert cl_out == mono_out                    # placement never leaks into content
+    assert sum(cluster.routed) == len(reqs)
+    assert all(n > 0 for n in cluster.routed)    # load actually spreads
+
+
+def test_cluster_sticky_prefix_routing(params):
+    kw = dict(_KW, prefix_cache=True)
+    cluster = ClusterServer([
+        DisaggregatedServer(CFG, params, **kw),
+        DisaggregatedServer(CFG, params, **kw),
+    ], sticky_weight=2.0)
+    cluster.warmup()
+    a = Request(prompt=np.arange(1, 49, dtype=np.int32), max_new=2, seed=0)
+    b = Request(prompt=np.arange(100, 148, dtype=np.int32), max_new=2, seed=1)
+    ga = cluster.submit(a, at=0.0)               # idle tie -> replica 0
+    gb = cluster.submit(b, at=0.0)               # r0 now pressured -> replica 1
+    cluster.run_to_completion()
+    assert cluster._where[ga][0] == 0 and cluster._where[gb][0] == 1
+    # same prefix as b: pressure ties (both idle), but b's prefix is warm on
+    # replica 1 -> sticky routing overrides the lowest-index tie-break
+    gc = cluster.submit(dataclasses.replace(b, seed=2), at=1.0)
+    assert cluster._where[gc][0] == 1
+    assert cluster.pool_stats()["sticky_routes"] >= 1
+    cluster.run_to_completion()
+
+
+def test_cluster_traced_attribution(params):
+    tr = Tracer()
+    reqs = _mixed_requests(n=6)
+    cluster = ClusterServer([
+        DisaggregatedServer(CFG, params, **_KW),
+        DisaggregatedServer(CFG, params, **_KW),
+    ], tracer=tr)
+    cluster.warmup()
+    out = _run(cluster, reqs)
+    assert len(out) == len(reqs)
+    trace = tr.export()
+    assert validate_trace(trace) == []
+    assert reconcile_trace(trace, cluster.pool_stats()) == []
+    # per-replica scoping: both replicas' workers trace into distinct groups
+    spans = trace_spans(trace, name="prefill")
+    scopes = {s["args"].get("replica") for s in spans if "args" in s}
+    assert any(str(sc).startswith("r0.") for sc in scopes)
+    assert any(str(sc).startswith("r1.") for sc in scopes)
+    assert ttft_attribution(trace) == []         # no driver records here

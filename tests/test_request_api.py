@@ -403,6 +403,14 @@ def _make_disco(params, **kw):
     )
 
 
+def _serve_now(disco, prompt, max_new, **req_kwargs):
+    """First-class stand-in for the deprecated ``serve()`` shim: one request
+    arriving at the runtime frontier."""
+    at = max(disco._frontier, disco.server.server.clock)
+    return disco.serve_many([Request(prompt, max_new, arrival=at,
+                                     **req_kwargs)])[0]
+
+
 def test_serve_shim_and_alias_warn_deprecation(params):
     """The PR-5 migration note, enforced: the positional ``serve()`` shim
     and the ``ServedRequest`` alias both emit DeprecationWarning; the
@@ -424,10 +432,13 @@ def test_serve_shim_and_alias_warn_deprecation(params):
     assert isinstance(res[0], RequestResult)
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_serve_monotonic_frontier_arrivals(params):
     """Satellite bugfix pin: repeated serve() calls stamp arrivals at
     max(frontier, server clock) — a monotonic timeline identical to the old
-    tuple API's internal `at` computation — through Request.arrival."""
+    tuple API's internal `at` computation — through Request.arrival.  (The
+    test exercises the deprecated shim on purpose; the warning is filtered,
+    tier-1 otherwise runs with ``-W error::DeprecationWarning``.)"""
     disco = _make_disco(params)
     rng = np.random.default_rng(5)
     arrivals, results = [], []
@@ -453,7 +464,8 @@ def test_serve_monotonic_frontier_arrivals(params):
 def test_results_carry_request_and_qoe(params):
     disco = _make_disco(params)
     slo = SLO(ttft_deadline=30.0, tbt_target=10.0)   # generous: attained
-    r = disco.serve(np.arange(12, dtype=np.int32), 8, slo=slo, cost_weight=2.0)
+    r = _serve_now(disco, np.arange(12, dtype=np.int32), 8, slo=slo,
+                   cost_weight=2.0)
     assert isinstance(r, RequestResult)
     with pytest.warns(DeprecationWarning, match="ServedRequest"):
         from repro.serving import ServedRequest
@@ -463,7 +475,7 @@ def test_results_carry_request_and_qoe(params):
     assert r.qoe.slo_attained and r.slo_attained
     assert r.qoe.ttft == pytest.approx(r.ttft, abs=1e-6)
     # cost_weight scales the unified cost: same request at weight 1 is half
-    r1 = disco.serve(np.arange(12, dtype=np.int32), 8, slo=slo)
+    r1 = _serve_now(disco, np.arange(12, dtype=np.int32), 8, slo=slo)
     assert r.cost == pytest.approx(2.0 * r1.cost, rel=0.2)
 
 
@@ -477,12 +489,12 @@ def test_slo_aware_dispatch_pulls_device_into_race(params):
     tight = SLO(ttft_deadline=0.05)    # server CDF ~lognormal(log .3): miss
     aware = _make_disco(params)
     aware.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
-    r = aware.serve(np.arange(24, dtype=np.int32), 4, slo=tight)
+    r = _serve_now(aware, np.arange(24, dtype=np.int32), 4, slo=tight)
     assert aware.slo_dispatch_overrides >= 1
     assert r.winner is Endpoint.DEVICE           # local prefill beats RTT
     pinned = _make_disco(params, slo_aware_dispatch=False)
     pinned.sched.policy = SingleEndpointPolicy(Endpoint.SERVER)
-    r2 = pinned.serve(np.arange(24, dtype=np.int32), 4, slo=tight)
+    r2 = _serve_now(pinned, np.arange(24, dtype=np.int32), 4, slo=tight)
     assert pinned.slo_dispatch_overrides == 0
     assert r2.winner is Endpoint.SERVER          # baseline stayed pure
 
@@ -498,7 +510,7 @@ def test_request_replace_is_nonmutating(params):
     is never mutated by serving it."""
     disco = _make_disco(params)
     req = Request(np.arange(10, dtype=np.int32), 5)
-    disco.serve(req)
+    disco.serve_many([req])
     assert req.seed is None and req.rid is None
     frozen = dataclasses.replace(req, seed=3)
     assert frozen.seed == 3 and req.seed is None

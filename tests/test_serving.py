@@ -29,6 +29,14 @@ def engines():
     return dev, srv
 
 
+def _serve_now(disco, prompt, max_new, **req_kwargs):
+    """One request arriving at the runtime frontier — the first-class
+    replacement for the deprecated ``serve()`` shim's timeline semantics."""
+    at = max(disco._frontier, disco.server.server.clock)
+    return disco.serve_many([Request(prompt, max_new, arrival=at,
+                                     **req_kwargs)])[0]
+
+
 def test_generate_streams_tokens(engines):
     dev, _ = engines
     prompt = np.arange(10, dtype=np.int32) % dev.cfg.vocab
@@ -348,7 +356,7 @@ def test_disco_server_end_to_end(engines, constraint):
     disco = _make_disco(engines, constraint)
     rng = np.random.default_rng(3)
     results = [
-        disco.serve(rng.integers(0, 1024, size=int(n)).astype(np.int32), max_new=20)
+        _serve_now(disco, rng.integers(0, 1024, size=int(n)).astype(np.int32), 20)
         for n in rng.integers(4, 40, size=8)
     ]
     for r in results:
@@ -390,7 +398,7 @@ def test_race_loser_stops_within_one_chunk_of_cancel_landing(engines):
     server = disco.server.server
     rid_before = server.next_id
     prompt = np.arange(40, dtype=np.int32)    # long: both endpoints race
-    r = disco.serve(prompt, 24)
+    r = _serve_now(disco, prompt, 24)
     assert r.winner is Endpoint.DEVICE        # local prefill beats RTT + queue
     loser_rid = rid_before                    # the request's server submission
     # the cancel has landed by finalize time (the driver waits for it)
@@ -422,7 +430,7 @@ def test_device_never_starts_when_server_wins_first(engines):
     disco = _make_disco(engines, "server")
     disco.sched.policy = _RaceBothPolicy(device_wait=30.0)
     # max_new below min_remaining_tokens: no migration, pure race isolation
-    r = disco.serve(np.arange(12, dtype=np.int32), 4)
+    r = _serve_now(disco, np.arange(12, dtype=np.int32), 4)
     assert r.winner is Endpoint.SERVER
     assert r.generated_tokens == len(r.tokens)
     assert r.wasted_tokens == 0
@@ -451,7 +459,7 @@ def test_disco_migration_happens_when_decode_cost_gap_large(engines):
     disco = _make_disco(engines, "device")  # device decode expensive -> migrate off
     rng = np.random.default_rng(5)
     results = [
-        disco.serve(rng.integers(0, 1024, size=12).astype(np.int32), max_new=24)
+        _serve_now(disco, rng.integers(0, 1024, size=12).astype(np.int32), 24)
         for _ in range(6)
     ]
     assert any(r.migrated for r in results)

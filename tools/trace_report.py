@@ -6,7 +6,11 @@ Reads a Chrome trace-event JSON produced by ``repro.serving.telemetry.Tracer``
 
 * a per-request TTFT attribution table — how much of each request's
   time-to-first-token went to server queueing, prefill compute, network
-  propagation, and draft-verdict stalls — with the p99-TTFT request marked.
+  propagation, draft-verdict stalls, and (on a disaggregated cluster
+  trace) the prefill→decode KV hand-off — with the p99-TTFT request
+  marked.  The ``replica`` column attributes each server-side stream to
+  the replica/worker lane that served its prefill (the stream decodes on
+  the sibling decode worker; ``-`` on monolithic traces).
   The ``stall_ms`` column is post-first-token decode interference: other
   requests' prefill work overlapping this request's streaming phase. A
   monolithic server shows prompt-sized stalls here under mixed-length load;
@@ -45,7 +49,8 @@ except ImportError:  # running without PYTHONPATH=src
         validate_trace,
     )
 
-_COMPONENTS = ("queue_s", "prefill_s", "network_s", "draft_stall_s")
+_COMPONENTS = ("queue_s", "prefill_s", "network_s", "draft_stall_s",
+               "handoff_s")
 _BAR_WIDTH = 48
 
 
@@ -66,8 +71,8 @@ def print_attribution(rows: list[dict]) -> None:
     p99 = _p99_rid(rows)
     print(
         f"{'rid':>4} {'ttft_ms':>9} {'queue_ms':>9} {'prefill_ms':>10} "
-        f"{'network_ms':>10} {'draft_ms':>9} {'stall_ms':>9} "
-        f"{'winner':>8} {'outcome':>10}"
+        f"{'network_ms':>10} {'draft_ms':>9} {'handoff_ms':>10} "
+        f"{'stall_ms':>9} {'replica':>8} {'winner':>8} {'outcome':>10}"
     )
     for r in rows:
         mark = "  <-- p99" if r["rid"] == p99 else ""
@@ -75,7 +80,9 @@ def print_attribution(rows: list[dict]) -> None:
             f"{r['rid']:>4} {_fmt_ms(r['ttft_s']):>9} {_fmt_ms(r['queue_s']):>9} "
             f"{_fmt_ms(r['prefill_s']):>10} {_fmt_ms(r['network_s']):>10} "
             f"{_fmt_ms(r['draft_stall_s']):>9} "
+            f"{_fmt_ms(r.get('handoff_s', 0.0)):>10} "
             f"{_fmt_ms(r.get('decode_stall_s', 0.0)):>9} "
+            f"{str(r.get('replica') or '-'):>8} "
             f"{str(r['winner'] or '-'):>8} {str(r['outcome'] or '-'):>10}{mark}"
         )
 
@@ -91,20 +98,21 @@ def print_waterfalls(rows: list[dict], tail: int) -> None:
     scale = max(r["ttft_s"] for r in timed) or 1e-9
     print(f"\ntail waterfalls (slowest {len(timed)} by TTFT):")
     glyphs = {"queue_s": "q", "prefill_s": "p", "network_s": "n",
-              "draft_stall_s": "d"}
+              "draft_stall_s": "d", "handoff_s": "h"}
     for r in timed:
-        accounted = sum(r[c] for c in _COMPONENTS)
+        accounted = sum(r.get(c, 0.0) for c in _COMPONENTS)
         other = max(0.0, r["ttft_s"] - accounted)
         bar = ""
         for comp in _COMPONENTS + ("other",):
-            v = other if comp == "other" else r[comp]
+            v = other if comp == "other" else r.get(comp, 0.0)
             bar += glyphs.get(comp, ".") * int(round(v / scale * _BAR_WIDTH))
         # components may overlap in wall-time (network in flight during
         # prefill), so the stacked bar can exceed the TTFT width — clip it
         bar = bar[:_BAR_WIDTH]
         print(f"  req{r['rid']:<4} |{bar:<{_BAR_WIDTH}}| "
               f"ttft={r['ttft_s'] * 1e3:.2f}ms")
-    print("  legend: q=queue p=prefill n=network d=draft-stall .=other")
+    print("  legend: q=queue p=prefill n=network d=draft-stall "
+          "h=kv-handoff .=other")
     print("  (stall_ms in the table is post-TTFT decode interference — "
           "not part of the TTFT waterfall)")
 
